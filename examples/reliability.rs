@@ -1,0 +1,56 @@
+//! Reliability of the reprogram operation (paper Fig. 2 / Fig. 6b /
+//! §IV-D1): runs the AOT-compiled JAX/Pallas voltage model through the
+//! PJRT runtime and sweeps process variation × interference, printing
+//! RBER by page kind; falls back to the analytic Rust mirror when the
+//! artifacts haven't been built.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example reliability
+//! ```
+
+use ips::reliability::{model, RberBridge};
+
+fn main() -> anyhow::Result<()> {
+    let sweep = [
+        (0.00f32, 0.00f32),
+        (0.20, 0.01),
+        (0.30, 0.02),
+        (0.30, 0.10),
+        (0.60, 0.02),
+        (0.60, 0.10),
+        (0.80, 0.20),
+    ];
+    println!("{:>6} {:>6}  {:>10} {:>12} {:>12}", "sigma", "alpha", "SLC", "IPS->TLC", "native TLC");
+    match RberBridge::new() {
+        Ok(bridge) => {
+            println!("(source: artifacts/rber.hlo.txt via PJRT — Pallas ISPP kernel)");
+            for (sigma, alpha) in sweep {
+                let r = bridge.run(42, 2, sigma, alpha)?;
+                println!(
+                    "{sigma:>6.2} {alpha:>6.2}  {:>10.6} {:>12.6} {:>12.6}",
+                    r.slc, r.ips_tlc, r.native_tlc
+                );
+            }
+        }
+        Err(e) => {
+            println!("(artifact unavailable: {e}; analytic mirror)");
+            for (sigma, alpha) in sweep {
+                let e = model::estimate(&model::RberParams {
+                    step: 0.25,
+                    sigma: sigma as f64,
+                    alpha: alpha as f64,
+                });
+                println!(
+                    "{sigma:>6.2} {alpha:>6.2}  {:>10.6} {:>12.6} {:>12.6}",
+                    e.slc, e.ips_tlc, e.native_tlc
+                );
+            }
+        }
+    }
+    println!(
+        "\nReadings: SLC's two wide states stay clean long after TLC's eight levels\n\
+         degrade (why the cache is SLC, §IV-D1); the 2-pass reprogram chain tracks\n\
+         native one-shot TLC closely when the restrictions of [7] are respected."
+    );
+    Ok(())
+}

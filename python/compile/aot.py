@@ -1,0 +1,75 @@
+"""AOT lowering: JAX (L2+L1) → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and DESIGN.md.
+
+Artifacts (shapes are fixed at lowering time; the Rust bridge feeds
+exactly these):
+
+  rber.hlo.txt   — ``rber_model`` over a (64 pages × 1024 cells) batch.
+  sweep.hlo.txt  — ``latency_wa_sweep`` over a flat mesh of 256 points.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts``). Python never runs at simulation time.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+RBER_PAGES = 64
+RBER_CELLS = 1024
+SWEEP_POINTS = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_rber() -> str:
+    f32 = jnp.float32
+    shape = (RBER_PAGES, RBER_CELLS)
+    specs = (
+        jax.ShapeDtypeStruct(shape, jnp.int32),   # bits
+        jax.ShapeDtypeStruct(shape, f32),          # noise1
+        jax.ShapeDtypeStruct(shape, f32),          # noise2
+        jax.ShapeDtypeStruct(shape, f32),          # noise3
+        jax.ShapeDtypeStruct((), f32),             # sigma
+        jax.ShapeDtypeStruct((), f32),             # alpha
+    )
+    return to_hlo_text(jax.jit(model.rber_model).lower(*specs))
+
+
+def lower_sweep() -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct((SWEEP_POINTS,), f32)
+    return to_hlo_text(jax.jit(model.latency_wa_sweep).lower(spec, spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in [("rber.hlo.txt", lower_rber()), ("sweep.hlo.txt", lower_sweep())]:
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

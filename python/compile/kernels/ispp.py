@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: ISPP flash-cell programming with cell-to-cell
+interference.
+
+This is the compute hot-spot of the reliability model behind the
+paper's reprogram operation (Fig. 2 / Fig. 6b / §IV-D1): cells are
+driven from their current threshold voltage to a per-cell target with
+incremental step pulses (ISPP), with
+
+* per-cell process variation on the pulse increment (``sigma``),
+* programming overshoot bounded by the step size (the classic
+  step-size-vs-precision tradeoff), and
+* cell-to-cell interference: each neighbour's voltage *delta* couples
+  into a victim cell with strength ``alpha`` (Cai et al. [1]); IPS
+  cells see twice the single-program interference because they are
+  programmed once and reprogrammed twice — the model this kernel feeds
+  quantifies exactly that (§IV-D1).
+
+Layout (the Hardware-Adaptation story in DESIGN.md): cells form a
+``(pages, cells)`` matrix; the ISPP loop is a bounded ``fori_loop``
+with vectorized verify masks (pure VPU work), and the interference
+stencil is two shifted adds along the cell axis — no gathers. Tiles
+keep whole rows (``cells`` axis) so the stencil never crosses a tile
+boundary; at the default (8, 1024) f32 tile the kernel holds
+4 live arrays × 32 KiB = 128 KiB in VMEM, far under the ~16 MiB budget.
+
+``interpret=True`` is mandatory on this CPU-only image (a real TPU
+lowering would emit a Mosaic custom-call the CPU PJRT client cannot
+execute); numerics are validated against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default physical constants of the voltage model (arbitrary units
+# where one TLC level spacing = 1.0).
+MAX_PULSES = 32
+PAGE_TILE = 8
+
+
+def _ispp_body(params_ref, v0_ref, vt_ref, noise_ref, out_ref):
+    """One (page_tile, cells) tile: ISPP then interference.
+
+    ``params_ref`` carries (step, sigma, alpha) — parameters arrive as
+    kernel *inputs* (not captured constants) so the surrounding L2
+    model may trace over them.
+    """
+    step = params_ref[0]
+    sigma = params_ref[1]
+    alpha = params_ref[2]
+    v0 = v0_ref[...]
+    vt = vt_ref[...]
+    noise = noise_ref[...]
+    # Per-cell effective increment: process variation makes some cells
+    # "fast" (overshoot more) and some "slow".
+    inc = step * (1.0 + sigma * (noise - 0.5))
+
+    def pulse(_, v):
+        need = v < vt
+        return v + jnp.where(need, inc, 0.0)
+
+    v = jax.lax.fori_loop(0, MAX_PULSES, pulse, v0)
+    # Cell-to-cell interference: neighbours' programmed deltas couple in.
+    delta = v - v0
+    left = jnp.pad(delta[:, :-1], ((0, 0), (1, 0)))
+    right = jnp.pad(delta[:, 1:], ((0, 0), (0, 1)))
+    out_ref[...] = v + alpha * (left + right)
+
+
+def ispp_program(v0, vt, noise, *, step=0.25, sigma=0.25, alpha=0.02):
+    """Program cells from voltages ``v0`` to targets ``vt``.
+
+    Args:
+      v0:    f32[P, C] current threshold voltages.
+      vt:    f32[P, C] verify targets (monotone: ``vt >= v0`` expected).
+      noise: f32[P, C] per-cell uniform noise in [0, 1).
+      step:  ISPP pulse increment (level spacing = 1.0); may be traced.
+      sigma: relative process variation of the increment; may be traced.
+      alpha: neighbour coupling strength; may be traced.
+
+    Returns f32[P, C] final threshold voltages.
+    """
+    p, c = v0.shape
+    if p % PAGE_TILE != 0:
+        raise ValueError(f"pages ({p}) must be a multiple of {PAGE_TILE}")
+    params = jnp.stack(
+        [
+            jnp.asarray(step, jnp.float32),
+            jnp.asarray(sigma, jnp.float32),
+            jnp.asarray(alpha, jnp.float32),
+        ]
+    )
+    spec = pl.BlockSpec((PAGE_TILE, c), lambda i: (i, 0))
+    param_spec = pl.BlockSpec((3,), lambda i: (0,))
+    return pl.pallas_call(
+        _ispp_body,
+        out_shape=jax.ShapeDtypeStruct((p, c), jnp.float32),
+        grid=(p // PAGE_TILE,),
+        in_specs=[param_spec, spec, spec, spec],
+        out_specs=spec,
+        interpret=True,  # CPU-only image; see module docstring
+    )(params, v0, vt, noise)

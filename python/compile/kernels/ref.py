@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the ISPP kernel — the correctness reference.
+
+Same semantics as ``ispp.ispp_program`` with no Pallas: the pytest
+suite asserts exact (float32) agreement across shapes, parameters and
+random inputs (hypothesis sweeps).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .ispp import MAX_PULSES
+
+
+def ispp_program_ref(v0, vt, noise, *, step=0.25, sigma=0.25, alpha=0.02):
+    """Reference ISPP + interference (see ``ispp.ispp_program``)."""
+    inc = step * (1.0 + sigma * (noise - 0.5))
+
+    def pulse(_, v):
+        return v + jnp.where(v < vt, inc, 0.0)
+
+    v = jax.lax.fori_loop(0, MAX_PULSES, pulse, v0)
+    delta = v - v0
+    left = jnp.pad(delta[:, :-1], ((0, 0), (1, 0)))
+    right = jnp.pad(delta[:, 1:], ((0, 0), (0, 1)))
+    return v + alpha * (left + right)

@@ -1,0 +1,161 @@
+"""L2 JAX models built on the L1 ISPP kernel.
+
+Two build-time computations are AOT-lowered for the Rust coordinator:
+
+``rber_model``
+    The reliability model behind the paper's reprogram operation
+    (§IV-D1). For a batch of word lines it simulates the three IPS
+    programming phases — SLC program (two low thresholds, Fig. 6b),
+    reprogram #1 (adds the CSB), reprogram #2 (adds the MSB) — plus a
+    native one-shot TLC pass for comparison, classifies the resulting
+    threshold voltages against the 8 TLC read levels, and returns raw
+    bit error rates per page type. The Rust reliability bridge audits
+    sampled reprogram batches through this artifact.
+
+``latency_wa_sweep``
+    Closed-form hybrid-SSD latency / write-amplification surfaces over
+    a (cache_fraction, write_volume) grid for the baseline and IPS
+    schemes — the analytic cross-check overlay for the Fig. 10/12
+    reproductions.
+
+Bit-to-voltage coding (monotone under reprogram, matching Fig. 6b):
+with bits (b0, b1, b2) = (LSB, CSB, MSB), level = 4*(1-b0) + 2*(1-b1)
++ (1-b2); SLC programs LSB at spacing 4 (levels 0 / 4 → voltages 0 /
+2.0 on the half-spaced intermediate scale), reprogram #1 refines to 4
+levels at spacing 2, reprogram #2 to the final 8 levels at spacing 1.
+Each phase's verify target is ≥ the previous phase's voltage, so the
+reprogram only ever *raises* thresholds — the device-level restriction
+reprogramming relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ispp import ispp_program
+
+# One TLC level spacing = 1.0 voltage unit; 8 levels at 0..7.
+TLC_DV = 1.0
+READ_LEVELS = 8
+
+
+def _level_from_bits(b0, b1, b2):
+    """TLC level index from (LSB, CSB, MSB); monotone-coding (see module)."""
+    return 4 * (1 - b0) + 2 * (1 - b1) + (1 - b2)
+
+
+def _classify(v):
+    """Read: nearest of the 8 levels."""
+    return jnp.clip(jnp.round(v / TLC_DV), 0, READ_LEVELS - 1).astype(jnp.int32)
+
+
+def _bits_from_level(level):
+    b0 = 1 - (level >> 2 & 1)
+    b1 = 1 - (level >> 1 & 1)
+    b2 = 1 - (level & 1)
+    return b0, b1, b2
+
+
+def rber_model(bits, noise1, noise2, noise3, sigma, alpha):
+    """Per-page RBER of the IPS program/reprogram chain vs native TLC.
+
+    Args:
+      bits:   int32[P, C] data in [0, 8): packed (b0<<2 | b1<<1 | b2).
+      noise1: f32[P, C] per-phase programming noise (uniform [0,1)).
+      noise2: f32[P, C].
+      noise3: f32[P, C].
+      sigma:  f32[] process variation.
+      alpha:  f32[] interference coupling.
+
+    Returns a tuple of
+      rber_ips:    f32[P, 3] bit error rate per page (LSB, CSB, MSB)
+                   after SLC + 2 reprograms,
+      rber_native: f32[P, 3] same for one-shot TLC programming,
+      rber_slc:    f32[P]   LSB error rate read back at the SLC stage.
+    """
+    b0 = bits >> 2 & 1
+    b1 = bits >> 1 & 1
+    b2 = bits & 1
+    level = _level_from_bits(b0, b1, b2).astype(jnp.float32)
+    zeros = jnp.zeros_like(noise1)
+
+    # Phase 1 — SLC: two low thresholds at spacing 2 (Fig. 6b).
+    v_slc_target = (1 - b0).astype(jnp.float32) * 2.0
+    v1 = ispp_program(zeros, v_slc_target, noise1, sigma=sigma, alpha=alpha)
+    slc_read = (v1 > 1.0).astype(jnp.int32)  # threshold between the 2 states
+    rber_slc = jnp.mean((slc_read != (1 - b0)).astype(jnp.float32), axis=1)
+
+    # Phase 2 — reprogram #1: 4 levels at spacing 2.
+    l2 = (2 * (1 - b0) + (1 - b1)).astype(jnp.float32)
+    v2 = ispp_program(v1, l2 * 2.0, noise2, sigma=sigma, alpha=alpha)
+
+    # Phase 3 — reprogram #2: final 8 levels at spacing 1.
+    v3 = ispp_program(v2, level * TLC_DV, noise3, sigma=sigma, alpha=alpha)
+
+    got = _classify(v3)
+    g0, g1, g2 = _bits_from_level(got)
+    rber_ips = jnp.stack(
+        [
+            jnp.mean((g0 != b0).astype(jnp.float32), axis=1),
+            jnp.mean((g1 != b1).astype(jnp.float32), axis=1),
+            jnp.mean((g2 != b2).astype(jnp.float32), axis=1),
+        ],
+        axis=1,
+    )
+
+    # Native TLC: one-shot straight to the final level (uses phase-3
+    # noise so the comparison isolates the extra reprogram passes).
+    vn = ispp_program(zeros, level * TLC_DV, noise3, sigma=sigma, alpha=alpha)
+    gn = _classify(vn)
+    n0, n1, n2 = _bits_from_level(gn)
+    rber_native = jnp.stack(
+        [
+            jnp.mean((n0 != b0).astype(jnp.float32), axis=1),
+            jnp.mean((n1 != b1).astype(jnp.float32), axis=1),
+            jnp.mean((n2 != b2).astype(jnp.float32), axis=1),
+        ],
+        axis=1,
+    )
+    return rber_ips, rber_native, rber_slc
+
+
+# --- analytic latency / WA sweep -------------------------------------
+
+# Table-I latencies in ms.
+T_SLC_W = 0.5
+T_TLC_W = 3.0
+
+
+def latency_wa_sweep(cache_gb, write_gb, update_frac):
+    """Closed-form per-page write cost (ms) and WA for baseline vs IPS.
+
+    All inputs are f32 arrays of the same shape (a mesh of scenario
+    points). Bursty-access model:
+
+      baseline: min(w, c) pages at SLC speed, the rest at TLC speed;
+                WA = 1 (no idle time to migrate).
+      IPS:      min(w, c) at SLC speed; beyond that the steady cycle
+                writes 1/3 of pages at SLC and 2/3 via reprogram at TLC
+                speed; WA = 1.
+
+    Daily-use model:
+
+      baseline: everything at SLC speed (cache always reclaimed in
+                idle); WA = 1 + (1 - update_frac) (valid fraction is
+                migrated once).
+      IPS:      beyond-cache pages pay the reprogram mix on the write
+                path; WA = 1.
+
+    Returns (lat_base_bursty, lat_ips_bursty, wa_base_daily,
+    wa_ips_daily) — per-page ms / ratios.
+    """
+    w = jnp.maximum(write_gb, 1e-6)
+    in_cache = jnp.minimum(w, cache_gb) / w
+    beyond = 1.0 - in_cache
+    ips_cycle = (T_SLC_W + 2.0 * T_TLC_W) / 3.0
+
+    lat_base_bursty = in_cache * T_SLC_W + beyond * T_TLC_W
+    lat_ips_bursty = in_cache * T_SLC_W + beyond * ips_cycle
+
+    wa_base_daily = 1.0 + (1.0 - update_frac) * jnp.minimum(1.0, cache_gb / w)
+    wa_ips_daily = jnp.ones_like(w)
+    return lat_base_bursty, lat_ips_bursty, wa_base_daily, wa_ips_daily

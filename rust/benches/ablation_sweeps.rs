@@ -1,0 +1,40 @@
+//! Bench: ablations over the design choices DESIGN.md calls out —
+//! SLC layer-group width, idle threshold, cache size.
+use ips::config::{Scheme, MS};
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::Scenario;
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for layers in [1u32, 2, 4] {
+        let mut cfg = experiment::exp_config(&opts, Scheme::Ips);
+        cfg.cache.group_layers = layers;
+        h.bench(&format!("ablation/group-layers/{layers}"), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+            black_box(sim.run(&t, Scenario::Daily).unwrap());
+        });
+    }
+    for idle_ms in [10u64, 100, 1000] {
+        let mut cfg = experiment::exp_config(&opts, Scheme::IpsAgc);
+        cfg.cache.idle_threshold = idle_ms * MS;
+        h.bench(&format!("ablation/idle-threshold/{idle_ms}ms"), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+            black_box(sim.run(&t, Scenario::Daily).unwrap());
+        });
+    }
+    for mult in [1u64, 2, 4] {
+        let mut cfg = experiment::exp_config(&opts, Scheme::Baseline);
+        cfg.cache.slc_cache_bytes *= mult;
+        h.bench(&format!("ablation/cache-size/x{mult}"), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+            black_box(sim.run(&t, Scenario::Daily).unwrap());
+        });
+    }
+    h.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 3 end-to-end — bursty sequential fill across the cliff
+//! (baseline vs IPS), per-run timing + simulated-pages throughput.
+use ips::config::Scheme;
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for scheme in [Scheme::Baseline, Scheme::Ips] {
+        let cfg = experiment::exp_config(&opts, scheme);
+        let cache = cfg.cache.slc_cache_bytes;
+        let pages = (cache * 5 / 2) / 4096;
+        h.bench(&format!("fig03/bursty-cliff/{}", scheme.name()), Some(pages), || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let trace = scenario::sequential_fill("b", cache * 5 / 2, sim.logical_bytes());
+            black_box(sim.run(&trace, Scenario::Bursty).unwrap());
+        });
+    }
+    h.finish();
+}

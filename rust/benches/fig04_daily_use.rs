@@ -1,0 +1,22 @@
+//! Bench: Fig. 4 end-to-end — periodic streams with idle reclamation.
+use ips::config::{Scheme, SEC};
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc] {
+        let cfg = experiment::exp_config(&opts, scheme);
+        let stream = ((20u64 << 30) as f64 * opts.volume()) as u64;
+        let pages = 5 * stream / 4096;
+        h.bench(&format!("fig04/daily-streams/{}", scheme.name()), Some(pages), || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = scenario::daily_streams(5, stream, 600 * SEC, sim.logical_bytes());
+            black_box(sim.run(&t, Scenario::Daily).unwrap());
+        });
+    }
+    h.finish();
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 5 end-to-end — breakdown/WA run for one representative
+//! workload per scenario (baseline scheme, as in the paper).
+use ips::config::Scheme;
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for (scen, tag) in [(Scenario::Bursty, "bursty"), (Scenario::Daily, "daily")] {
+        for w in ["HM_0", "PRXY_0"] {
+            let cfg = experiment::exp_config(&opts, Scheme::Baseline);
+            h.bench(&format!("fig05/breakdown/{tag}/{w}"), None, || {
+                let mut sim = Simulator::new(cfg.clone()).unwrap();
+                let daily = experiment::workload_trace(&opts, w, sim.logical_bytes()).unwrap();
+                let t = match scen {
+                    Scenario::Bursty => scenario::to_bursty(&daily, sim.logical_bytes()),
+                    Scenario::Daily => daily,
+                };
+                black_box(sim.run(&t, scen).unwrap());
+            });
+        }
+    }
+    h.finish();
+}

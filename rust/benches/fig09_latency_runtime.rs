@@ -1,0 +1,23 @@
+//! Bench: Fig. 9 end-to-end — runtime latency capture (100k raw
+//! samples) on bursty HM_0, baseline vs IPS.
+use ips::config::Scheme;
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for scheme in [Scheme::Baseline, Scheme::Ips] {
+        let mut cfg = experiment::exp_config(&opts, scheme);
+        cfg.sim.latency_samples = 100_000;
+        h.bench(&format!("fig09/latency-capture/{}", scheme.name()), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let daily = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+            let t = scenario::to_bursty(&daily, sim.logical_bytes());
+            black_box(sim.run(&t, Scenario::Bursty).unwrap());
+        });
+    }
+    h.finish();
+}

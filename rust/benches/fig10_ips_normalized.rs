@@ -1,0 +1,28 @@
+//! Bench: Fig. 10 end-to-end — one (workload × scheme × scenario) cell
+//! of the normalized grid per iteration.
+use ips::config::Scheme;
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for (scen, tag) in [(Scenario::Bursty, "a-bursty"), (Scenario::Daily, "b-daily")] {
+        for scheme in [Scheme::Baseline, Scheme::Ips] {
+            let cfg = experiment::exp_config(&opts, scheme);
+            h.bench(&format!("fig10{tag}/HM_0/{}", scheme.name()), None, || {
+                let mut sim = Simulator::new(cfg.clone()).unwrap();
+                let daily =
+                    experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+                let t = match scen {
+                    Scenario::Bursty => scenario::to_bursty(&daily, sim.logical_bytes()),
+                    Scenario::Daily => daily,
+                };
+                black_box(sim.run(&t, scen).unwrap());
+            });
+        }
+    }
+    h.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 11 end-to-end — daily IPS/agc cell incl. idle-time AGC
+//! reprogramming (the interruptible step machinery).
+use ips::config::Scheme;
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::Scenario;
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc] {
+        let cfg = experiment::exp_config(&opts, scheme);
+        for w in ["HM_0", "USR_0"] {
+            h.bench(&format!("fig11/daily/{w}/{}", scheme.name()), None, || {
+                let mut sim = Simulator::new(cfg.clone()).unwrap();
+                let t = experiment::workload_trace(&opts, w, sim.logical_bytes()).unwrap();
+                black_box(sim.run(&t, Scenario::Daily).unwrap());
+            });
+        }
+    }
+    h.finish();
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 12 end-to-end — cooperative design vs big-cache
+//! baseline, bursty volume point + daily cell.
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+    let coop = experiment::coop_config(&opts);
+    let base = experiment::baseline64_config(&opts);
+    let cache = base.cache.slc_cache_bytes;
+    for (cfg, tag) in [(&coop, "coop"), (&base, "baseline64")] {
+        h.bench(&format!("fig12a/bursty-2x-cache/{tag}"), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = scenario::sequential_fill("f12", cache * 2, sim.logical_bytes());
+            black_box(sim.run(&t, Scenario::Bursty).unwrap());
+        });
+        h.bench(&format!("fig12b/daily-HM_0/{tag}"), None, || {
+            let mut sim = Simulator::new(cfg.clone()).unwrap();
+            let t = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
+            black_box(sim.run(&t, Scenario::Daily).unwrap());
+        });
+    }
+    h.finish();
+}

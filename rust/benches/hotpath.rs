@@ -1,0 +1,90 @@
+//! Bench: the simulator's hot paths in isolation (the §Perf targets):
+//! host TLC page writes (mapping + allocator + timing), SLC cache
+//! writes, reprogram chain, host reads, GC cycles, trace generation.
+use ips::config::{presets, Scheme};
+use ips::flash::Lpn;
+use ips::ftl::Ftl;
+use ips::metrics::Attribution;
+use ips::trace::{profiles, synth};
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let mut cfg = presets::bench_medium();
+    cfg.cache.scheme = Scheme::TlcOnly;
+
+    // host TLC write path, striped over planes
+    {
+        let cfg = cfg.clone();
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        let mut lpn = 0u64;
+        let mut t = 0u64;
+        let lim = ftl.map.lpn_limit();
+        h.bench("hotpath/host_write_tlc", Some(1000), || {
+            for _ in 0..1000 {
+                lpn = (lpn + 1) % lim;
+                let c = ftl.host_write_tlc(Lpn(lpn), t).unwrap();
+                t = c.end;
+            }
+            black_box(&ftl);
+        });
+    }
+
+    // SLC cache program into a scheme block
+    {
+        let cfg = cfg.clone();
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        use ips::flash::{BlockMode, PlaneId};
+        let mut addr = ftl.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        let mut lpn = 0u64;
+        h.bench("hotpath/program_slc", Some(1000), || {
+            for _ in 0..1000 {
+                lpn += 1;
+                if ftl.array.block(addr).slc_free_wls() == 0 {
+                    // recycle: unmap + invalidate everything, then erase
+                    let pibs: Vec<u32> = ftl.array.block(addr).valid_pages().collect();
+                    let g = *ftl.array.geometry();
+                    for pib in pibs {
+                        if let Some(l) = ftl.array.block(addr).lpn_at(pib) {
+                            ftl.map.clear(l).unwrap();
+                        }
+                        ftl.array.invalidate(addr.page(&g, pib / 3, (pib % 3) as u8)).unwrap();
+                    }
+                    ftl.array.erase(addr, 0).unwrap();
+                    ftl.array.push_free(addr).unwrap();
+                    addr = ftl.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+                }
+                ftl.program_slc_into(addr, Lpn(lpn % 100000), Attribution::SlcCacheWrite, 0)
+                    .unwrap();
+            }
+            black_box(&ftl);
+        });
+    }
+
+    // host reads over a populated range
+    {
+        let cfg = cfg.clone();
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        for i in 0..10_000u64 {
+            ftl.host_write_tlc(Lpn(i), 0).unwrap();
+        }
+        let mut i = 0u64;
+        h.bench("hotpath/host_read", Some(1000), || {
+            for _ in 0..1000 {
+                i = (i + 7) % 10_000;
+                black_box(ftl.host_read(Lpn(i), u64::MAX / 2).unwrap());
+            }
+        });
+    }
+
+    // trace generation
+    {
+        let p = profiles::by_name("HM_0").unwrap();
+        let mut seed = 0u64;
+        h.bench("hotpath/synth_trace_1MiB", None, || {
+            seed += 1;
+            black_box(synth::generate_scaled(p, seed, u64::MAX, 1.0 / 20480.0));
+        });
+    }
+    h.finish();
+}

@@ -1,0 +1,460 @@
+//! The traditional SLC cache (paper baseline; Samsung Turbo Write
+//! style [26]).
+//!
+//! A fixed pool of blocks operates in SLC mode (one page per word
+//! line), spread evenly over all planes to exploit parallelism
+//! (paper §V-A). Host writes fill the pool at SLC speed; once the pool
+//! is exhausted, writes fall through to TLC space at TLC speed — the
+//! **performance cliff** of Fig. 3. During idle periods the cache is
+//! reclaimed with **atomic block units**: all valid pages of a used
+//! block are migrated to TLC space (SLC2TLC — pure write
+//! amplification) and the block is erased; a host write arriving
+//! mid-unit waits for the plane (paper §IV-B: "it has to be delayed
+//! until the reclamation process is finished").
+
+use super::CachePolicy;
+use crate::config::{Config, Nanos};
+use crate::flash::array::Completion;
+use crate::flash::{BlockAddr, BlockMode, Lpn, PlaneId};
+use crate::ftl::Ftl;
+use crate::metrics::Attribution;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+
+/// Per-plane cache pool state.
+struct PlanePool {
+    /// Erased cache blocks ready for writes.
+    free: VecDeque<BlockAddr>,
+    /// Block currently receiving SLC writes.
+    active: Option<BlockAddr>,
+    /// Fully written blocks awaiting reclamation (FIFO).
+    used: VecDeque<BlockAddr>,
+}
+
+/// Traditional SLC-cache policy.
+pub struct Baseline {
+    cache_bytes: u64,
+    pools: Vec<PlanePool>,
+    /// Round-robin plane pointer for cache writes.
+    rr: u32,
+    /// Total cache pages (capacity diagnostics).
+    total_slc_pages: u64,
+    /// Dynamic allocation (§IV-C / Turbo-Write-style): blocks are
+    /// claimed from the general pool on demand and *released back* once
+    /// reclaimed, instead of being statically owned. The cooperative
+    /// design requires this — its traditional part plus the IPS part
+    /// would otherwise leave no TLC space for Step-3.2 spills.
+    dynamic: bool,
+    /// Cap on claimed blocks per plane in dynamic mode.
+    max_blocks_per_plane: u32,
+    /// Currently claimed per plane (dynamic mode).
+    claimed: Vec<u32>,
+}
+
+impl Baseline {
+    /// New baseline policy sized from `cfg.cache.slc_cache_bytes`
+    /// (static pool, claimed at init).
+    pub fn new(cfg: &Config) -> Baseline {
+        Baseline {
+            cache_bytes: cfg.cache.slc_cache_bytes,
+            pools: Vec::new(),
+            rr: 0,
+            total_slc_pages: 0,
+            dynamic: false,
+            max_blocks_per_plane: 0,
+            claimed: Vec::new(),
+        }
+    }
+
+    /// Dynamically allocated variant (used by the cooperative design).
+    pub fn new_dynamic(cfg: &Config) -> Baseline {
+        let mut b = Baseline::new(cfg);
+        b.dynamic = true;
+        b
+    }
+
+    fn pool_has_space(&self, ftl: &Ftl, plane: u32) -> bool {
+        let pool = &self.pools[plane as usize];
+        if let Some(a) = pool.active {
+            if ftl.array.block(a).slc_free_wls() > 0 {
+                return true;
+            }
+        }
+        if !pool.free.is_empty() {
+            return true;
+        }
+        self.dynamic
+            && self.claimed[plane as usize] < self.max_blocks_per_plane
+            && ftl.free_blocks(crate::flash::PlaneId(plane)) > 8
+    }
+
+    /// Pick a cache block with space on `plane`, rotating the active
+    /// block when it fills. Dynamic mode claims fresh blocks from the
+    /// general pool on demand (leaving a small reserve).
+    fn writable_block(&mut self, ftl: &mut Ftl, plane: u32) -> Option<BlockAddr> {
+        let pool = &mut self.pools[plane as usize];
+        if let Some(a) = pool.active {
+            if ftl.array.block(a).slc_free_wls() > 0 {
+                return Some(a);
+            }
+            pool.used.push_back(a);
+            pool.active = None;
+        }
+        if let Some(next) = pool.free.pop_front() {
+            pool.active = Some(next);
+            return Some(next);
+        }
+        if self.dynamic
+            && self.claimed[plane as usize] < self.max_blocks_per_plane
+            && ftl.free_blocks(crate::flash::PlaneId(plane)) > 8
+        {
+            if let Ok(next) = ftl.alloc_block(crate::flash::PlaneId(plane), BlockMode::Slc) {
+                self.claimed[plane as usize] += 1;
+                self.pools[plane as usize].active = Some(next);
+                return Some(next);
+            }
+        }
+        None
+    }
+
+    /// Reclaim one used block (atomic unit); returns erase completion.
+    fn reclaim_one(&mut self, ftl: &mut Ftl, plane: u32, now: Nanos) -> Result<Option<Nanos>> {
+        let pool = &mut self.pools[plane as usize];
+        let addr = match pool.used.pop_front() {
+            Some(a) => a,
+            None => return Ok(None),
+        };
+        let done = ftl.reclaim_block(addr, Attribution::Slc2Tlc, now)?;
+        if self.dynamic {
+            // dynamic allocation: return the block to the general pool
+            ftl.array.push_free(addr)?;
+            self.claimed[plane as usize] = self.claimed[plane as usize].saturating_sub(1);
+        } else {
+            // the block stays in the cache pool
+            self.pools[plane as usize].free.push_back(addr);
+        }
+        Ok(Some(done.end))
+    }
+
+    /// Used (awaiting-reclamation) block count across planes.
+    fn used_blocks(&self) -> usize {
+        self.pools.iter().map(|p| p.used.len()).sum()
+    }
+
+    // ---- internals shared with the cooperative design (§IV-C) ----
+
+    /// Any used block awaiting reclamation?
+    pub(crate) fn has_used(&self) -> bool {
+        self.used_blocks() > 0
+    }
+
+    /// Front used block of the first plane that has one.
+    pub(crate) fn used_front(&self) -> Option<(u32, BlockAddr)> {
+        self.pools
+            .iter()
+            .enumerate()
+            .find_map(|(p, pool)| pool.used.front().map(|a| (p as u32, *a)))
+    }
+
+    /// Pop + erase the front used block of `plane` (must hold no valid
+    /// pages) and return it to the pool. Returns the erase end time.
+    pub(crate) fn erase_used_front(
+        &mut self,
+        ftl: &mut Ftl,
+        plane: u32,
+        now: Nanos,
+    ) -> Result<Nanos> {
+        let addr = self.pools[plane as usize]
+            .used
+            .pop_front()
+            .ok_or_else(|| Error::invariant("erase_used_front on empty pool"))?;
+        let done = ftl.array.erase(addr, now)?;
+        if self.dynamic {
+            ftl.array.push_free(addr)?;
+            self.claimed[plane as usize] = self.claimed[plane as usize].saturating_sub(1);
+        } else {
+            self.pools[plane as usize].free.push_back(addr);
+        }
+        Ok(done.end)
+    }
+
+    /// Move partially-written active blocks into the used queues so a
+    /// flush can reclaim them.
+    pub(crate) fn retire_active(&mut self, ftl: &Ftl) {
+        for pool in &mut self.pools {
+            if let Some(a) = pool.active.take() {
+                if ftl.array.block(a).written_count() > 0 {
+                    pool.used.push_back(a);
+                } else {
+                    pool.free.push_back(a);
+                }
+            }
+        }
+    }
+
+    /// Write one page into the pool if space exists (coop Step 2.2).
+    pub(crate) fn write_if_space(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+    ) -> Result<Option<Completion>> {
+        let planes = self.pools.len() as u32;
+        for _ in 0..planes {
+            let plane = self.rr % planes;
+            self.rr = self.rr.wrapping_add(1);
+            if !self.pool_has_space(ftl, plane) {
+                continue;
+            }
+            if let Some(addr) = self.writable_block(ftl, plane) {
+                return Ok(Some(ftl.program_slc_into(
+                    addr,
+                    lpn,
+                    Attribution::SlcCacheWrite,
+                    now,
+                )?));
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl CachePolicy for Baseline {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn init(&mut self, ftl: &mut Ftl) -> Result<()> {
+        let g = *ftl.array.geometry();
+        let slc_pages_per_block = g.wordlines_per_block() as u64;
+        let want_pages = self.cache_bytes / g.page_bytes as u64;
+        let blocks_needed = want_pages.div_ceil(slc_pages_per_block).max(1);
+        let planes = g.planes() as u64;
+        // spread evenly: ceil per plane, stop at the total
+        let per_plane = blocks_needed.div_ceil(planes);
+        self.pools = (0..planes)
+            .map(|_| PlanePool { free: VecDeque::new(), active: None, used: VecDeque::new() })
+            .collect();
+        self.claimed = vec![0; planes as usize];
+        self.max_blocks_per_plane = per_plane.min(u32::MAX as u64) as u32;
+        if self.dynamic {
+            // blocks are claimed lazily on first use and released after
+            // reclamation — the paper's dynamic allocation (§IV-C)
+            self.total_slc_pages = blocks_needed * slc_pages_per_block;
+            return Ok(());
+        }
+        let mut claimed = 0u64;
+        'outer: for round in 0..per_plane {
+            let _ = round;
+            for p in 0..planes {
+                if claimed >= blocks_needed {
+                    break 'outer;
+                }
+                let addr = ftl
+                    .alloc_block(PlaneId(p as u32), BlockMode::Slc)
+                    .map_err(|e| Error::config(format!("cache pool allocation failed: {e}")))?;
+                self.pools[p as usize].free.push_back(addr);
+                claimed += 1;
+            }
+        }
+        self.total_slc_pages = claimed * slc_pages_per_block;
+        Ok(())
+    }
+
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+        // try up to one full rotation of planes for SLC space
+        let planes = self.pools.len() as u32;
+        for _ in 0..planes {
+            let plane = self.rr % planes;
+            self.rr = self.rr.wrapping_add(1);
+            if !self.pool_has_space(ftl, plane) {
+                continue;
+            }
+            if let Some(addr) = self.writable_block(ftl, plane) {
+                return ftl.program_slc_into(addr, lpn, Attribution::SlcCacheWrite, now);
+            }
+        }
+        // cache exhausted → the cliff: straight to TLC
+        ftl.host_write_tlc(lpn, now)
+    }
+
+    fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {
+        // Fully-written active blocks are reclamation candidates too.
+        for pool in &mut self.pools {
+            if let Some(a) = pool.active {
+                if ftl.array.block(a).slc_free_wls() == 0 {
+                    pool.used.push_back(a);
+                    pool.active = None;
+                }
+            }
+        }
+        // Start atomic reclamation units while there is still idle time
+        // at issue; a unit in flight may overrun the deadline.
+        let mut t = now;
+        let planes = self.pools.len() as u32;
+        'outer: while t < deadline {
+            // round-robin planes for the next used block
+            let mut any = false;
+            for p in 0..planes {
+                if t >= deadline {
+                    break 'outer;
+                }
+                if let Some(end) = self.reclaim_one(ftl, p, t)? {
+                    t = t.max(end);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        Ok(t)
+    }
+
+    fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        // Reclaim everything: used blocks AND the partially-written
+        // active blocks (paper §III: at the end of each workload all
+        // cache data is migrated and used blocks erased).
+        let mut t = now;
+        for p in 0..self.pools.len() {
+            if let Some(a) = self.pools[p].active.take() {
+                if ftl.array.block(a).written_count() > 0 {
+                    self.pools[p].used.push_back(a);
+                } else {
+                    self.pools[p].free.push_back(a);
+                }
+            }
+            while let Some(end) = self.reclaim_one(ftl, p as u32, t)? {
+                t = t.max(end);
+            }
+        }
+        Ok(t)
+    }
+
+    fn slc_free_pages(&self, ftl: &Ftl) -> u64 {
+        let g = ftl.array.geometry();
+        let per_block = g.wordlines_per_block() as u64;
+        self.pools
+            .iter()
+            .enumerate()
+            .map(|(pi, pool)| {
+                let active = pool
+                    .active
+                    .map(|a| ftl.array.block(a).slc_free_wls() as u64)
+                    .unwrap_or(0);
+                let claimable = if self.dynamic {
+                    (self.max_blocks_per_plane.saturating_sub(self.claimed[pi])) as u64
+                } else {
+                    0
+                };
+                active + (pool.free.len() as u64 + claimable) * per_block
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::MS;
+
+    fn setup() -> (Ftl, Baseline, Config) {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::Baseline;
+        cfg.cache.slc_cache_bytes = 512 << 10; // 128 SLC pages on small geometry
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        let mut b = Baseline::new(&cfg);
+        b.init(&mut ftl).unwrap();
+        (ftl, b, cfg)
+    }
+
+    #[test]
+    fn writes_hit_slc_until_cliff() {
+        let (mut ftl, mut b, cfg) = setup();
+        let capacity = b.slc_free_pages(&ftl);
+        assert!(capacity >= 128, "pool sized from bytes");
+        // fill the cache: every write at SLC latency
+        for i in 0..capacity {
+            let c = b.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+            assert_eq!(c.end - c.start, cfg.timing.slc_prog, "write {i} at SLC speed");
+        }
+        assert_eq!(b.slc_free_pages(&ftl), 0);
+        // next write falls off the cliff
+        let c = b.host_write_page(&mut ftl, Lpn(999), 0).unwrap();
+        assert_eq!(c.end - c.start, cfg.timing.tlc_prog, "post-cliff at TLC speed");
+        assert_eq!(ftl.ledger.slc_cache_writes, capacity);
+        assert_eq!(ftl.ledger.tlc_direct_writes, 1);
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn idle_reclamation_restores_cache_and_amplifies() {
+        let (mut ftl, mut b, _cfg) = setup();
+        let capacity = b.slc_free_pages(&ftl);
+        let mut t = 0;
+        for i in 0..capacity {
+            ftl.ledger.host_page(); // the engine records the denominator
+            let c = b.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = t.max(c.end);
+        }
+        assert_eq!(b.slc_free_pages(&ftl), 0);
+        // long idle window: everything reclaimed
+        let end = b.idle_work(&mut ftl, t, t + 60_000 * MS).unwrap();
+        assert!(end > t);
+        assert_eq!(b.slc_free_pages(&ftl), capacity, "cache fully restored");
+        assert_eq!(ftl.ledger.slc2tlc_migrations, capacity, "every page migrated");
+        assert!(ftl.ledger.write_amplification() > 1.9, "daily-use WA ~2");
+        // data still readable at its new location
+        for i in 0..capacity {
+            assert!(ftl.map.get(Lpn(i)).is_some());
+        }
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn idle_window_too_short_starts_nothing_extra() {
+        let (mut ftl, mut b, _cfg) = setup();
+        let capacity = b.slc_free_pages(&ftl);
+        let mut t = 0;
+        for i in 0..capacity {
+            let c = b.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = t.max(c.end);
+        }
+        // zero-length window: no reclamation issued
+        let end = b.idle_work(&mut ftl, t, t).unwrap();
+        assert_eq!(end, t);
+        assert_eq!(ftl.ledger.slc2tlc_migrations, 0);
+    }
+
+    #[test]
+    fn flush_reclaims_partial_blocks_too() {
+        let (mut ftl, mut b, _cfg) = setup();
+        // write just 3 pages (active block partially used)
+        for i in 0..3u64 {
+            b.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+        }
+        b.flush(&mut ftl, 1_000_000).unwrap();
+        assert_eq!(ftl.ledger.slc2tlc_migrations, 3);
+        let cap = b.slc_free_pages(&ftl);
+        assert!(cap > 0);
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn invalid_cache_pages_not_migrated() {
+        let (mut ftl, mut b, _cfg) = setup();
+        for i in 0..8u64 {
+            b.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+        }
+        // overwrite 4 of them (still in cache → old pages invalid)
+        for i in 0..4u64 {
+            b.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+        }
+        b.flush(&mut ftl, 0).unwrap();
+        // 8 + 4 = 12 cache writes, but only 8 live pages to migrate
+        assert_eq!(ftl.ledger.slc_cache_writes, 12);
+        assert_eq!(ftl.ledger.slc2tlc_migrations, 8);
+        ftl.audit().unwrap();
+    }
+}

@@ -1,0 +1,309 @@
+//! Cooperative IPS/agc + traditional SLC cache (paper §IV-C, Fig. 8).
+//!
+//! For workloads that want a *large* cache (§V-A: 64 GB total), the
+//! reprogram restrictions cap how much IPS/agc capacity exists, so a
+//! traditional SLC cache supplies the rest. The cooperation rules:
+//!
+//! * **Step 1** — host writes go to the IPS/agc cache first;
+//! * **Step 2.2** — when it is exhausted, subsequent writes go to the
+//!   traditional SLC cache;
+//! * **Step 2.1** — in idle time, AGC valid pages are reprogrammed
+//!   into used IPS word lines (new SLC layers get armed);
+//! * **Step 3.1** — the two caches' migration directions are
+//!   *opposite*, so traditional-cache data is read and reprogrammed
+//!   **into** the IPS window: the traditional block empties while IPS
+//!   word lines convert — one copy serves two reclamations;
+//! * **Step 3.2** — if the IPS cache is fully reprogrammed but used
+//!   traditional blocks remain, their data spills to free TLC space;
+//! * **Step 4** — emptied traditional blocks are erased.
+//!
+//! All idle steps are page-granular and interruptible (built on the
+//! AGC machinery), unlike the baseline's atomic block units.
+
+use super::baseline::Baseline;
+use super::ips::Ips;
+use super::CachePolicy;
+use crate::config::{Config, Nanos};
+use crate::flash::array::Completion;
+use crate::flash::{BlockAddr, Lpn, PlaneId};
+use crate::ftl::agc::AgcEngine;
+use crate::ftl::Ftl;
+use crate::metrics::Attribution;
+use crate::Result;
+
+/// The cooperative policy.
+pub struct Coop {
+    ips: Ips,
+    trad: Baseline,
+    agc: AgcEngine,
+}
+
+impl Coop {
+    /// New cooperative policy; the traditional part is sized from
+    /// `cfg.cache.slc_cache_bytes`, the IPS part from
+    /// `cfg.cache.ips_block_fraction`.
+    pub fn new(cfg: &Config) -> Coop {
+        Coop { ips: Ips::new(cfg), trad: Baseline::new_dynamic(cfg), agc: AgcEngine::new() }
+    }
+
+    /// First valid page of a used traditional block, as (plane, ppa, lpn).
+    fn trad_page(&self, ftl: &Ftl) -> Option<(u32, BlockAddr, crate::flash::Ppa, Lpn)> {
+        let (plane, addr) = self.trad.used_front()?;
+        let g = ftl.array.geometry();
+        let blk = ftl.array.block(addr);
+        let pib = blk.valid_pages().next()?;
+        let ppa = addr.page(g, pib / 3, (pib % 3) as u8);
+        let lpn = blk.lpn_at(pib)?;
+        Some((plane, addr, ppa, lpn))
+    }
+
+    /// One interruptible idle step. Returns its completion time, or
+    /// `None` when no work remains.
+    fn idle_step(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Option<Nanos>> {
+        // Step 4: erase any emptied traditional block.
+        if let Some((plane, addr)) = self.trad.used_front() {
+            if ftl.array.block(addr).valid_count() == 0 {
+                return Ok(Some(self.trad.erase_used_front(ftl, plane, now)?));
+            }
+        }
+        // Steps 3.1 / 3.2: drain the traditional cache.
+        if let Some((_plane, _addr, src, lpn)) = self.trad_page(ftl) {
+            if let Some(dest) = self.ips.any_convertible_plane() {
+                // Step 3.1: read trad page, reprogram into the IPS window.
+                let read_done = ftl.array.read(src, now)?;
+                let done = self
+                    .ips
+                    .reprogram_write(ftl, dest, lpn, Attribution::CoopReprogram, read_done.end)?
+                    .ok_or_else(|| crate::Error::invariant("convertible plane lost target"))?;
+                return Ok(Some(done.end));
+            }
+            // Step 3.2: no reprogram target — spill to free TLC space.
+            let read_done = ftl.migrate_page(src, Attribution::Slc2Tlc, now)?;
+            let g = *ftl.array.geometry();
+            let plane = src.expand(&g).plane;
+            let end = match ftl.flush_migration_plane(plane, read_done.end, Attribution::Slc2Tlc)? {
+                Some(c) => c.end,
+                None => read_done.end,
+            };
+            return Ok(Some(end));
+        }
+        // Step 2.1: AGC feeds the IPS window.
+        if let Some(c) = self.agc.erase_step(ftl, now)? {
+            return Ok(Some(c.end));
+        }
+        let dest = match self.ips.any_convertible_plane() {
+            Some(p) => p,
+            None => return Ok(None),
+        };
+        if self.agc.ensure_victim(ftl).is_none() {
+            match self.ips.steal_agc_victim(ftl) {
+                Some(v) => self.agc.set_victim(v),
+                None => return Ok(None),
+            }
+        }
+        let src = match self.agc.next_page(ftl) {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        let g = *ftl.array.geometry();
+        let pa = src.expand(&g);
+        let lpn = ftl
+            .array
+            .block(BlockAddr { plane: pa.plane, block: pa.block })
+            .lpn_at(pa.page_in_block())
+            .ok_or_else(|| crate::Error::invariant("AGC page without LPN"))?;
+        let read_done = ftl.array.read(src, now)?;
+        let done = self
+            .ips
+            .reprogram_write(ftl, dest, lpn, Attribution::AgcReprogram, read_done.end)?
+            .ok_or_else(|| crate::Error::invariant("convertible plane lost target"))?;
+        self.agc.note_step();
+        Ok(Some(done.end))
+    }
+}
+
+impl CachePolicy for Coop {
+    fn name(&self) -> &'static str {
+        "coop"
+    }
+
+    fn init(&mut self, ftl: &mut Ftl) -> Result<()> {
+        // traditional pool first (it must claim whole blocks), IPS
+        // designation is on demand afterwards.
+        self.trad.init(ftl)?;
+        self.ips.init(ftl)
+    }
+
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+        let n = ftl.planes();
+        // Step 1: IPS window (deterministic plane spread)
+        let start_plane = fastrand(ftl, lpn) % n;
+        if let Some(c) = self.ips.try_slc_write(ftl, start_plane, lpn, now)? {
+            return Ok(c);
+        }
+        // Step 2.2: traditional SLC cache
+        if let Some(c) = self.trad.write_if_space(ftl, lpn, now)? {
+            return Ok(c);
+        }
+        // beyond both caches: host-driven reprogram re-arms IPS
+        if let Some(c) =
+            self.ips.reprogram_write(ftl, start_plane, lpn, Attribution::ReprogramHost, now)?
+        {
+            return Ok(c);
+        }
+        if let Some(p) = self.ips.any_convertible_plane() {
+            if let Some(c) =
+                self.ips.reprogram_write(ftl, p, lpn, Attribution::ReprogramHost, now)?
+            {
+                return Ok(c);
+            }
+        }
+        ftl.host_write_tlc_on(PlaneId(start_plane), lpn, now)
+    }
+
+    fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {
+        let mut t = now;
+        while t < deadline {
+            match self.idle_step(ftl, t)? {
+                Some(end) => t = end,
+                None => break,
+            }
+        }
+        Ok(t)
+    }
+
+    fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        // Reclaim the traditional cache completely; the IPS part stays
+        // in place (that is the point of in-place switch).
+        self.trad.retire_active(ftl);
+        let mut t = now;
+        let mut guard = 0u64;
+        let bound = 4 * ftl.map.lpn_limit() + 1024;
+        while self.trad.has_used() {
+            match self.idle_step(ftl, t)? {
+                Some(end) => t = end,
+                None => break,
+            }
+            guard += 1;
+            if guard > bound {
+                return Err(crate::Error::invariant("coop flush did not converge"));
+            }
+        }
+        Ok(t)
+    }
+
+    fn slc_free_pages(&self, ftl: &Ftl) -> u64 {
+        self.ips.slc_free_pages(ftl) + self.trad.slc_free_pages(ftl)
+    }
+}
+
+/// Cheap deterministic plane spread for the coop write path (keeps the
+/// two sub-policies' round-robins from aliasing).
+#[inline]
+fn fastrand(ftl: &Ftl, lpn: Lpn) -> u32 {
+    let x = lpn.0.wrapping_mul(0x9e3779b97f4a7c15) ^ ftl.ledger.host_pages;
+    (x >> 32) as u32 ^ (x as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, SEC};
+
+    fn setup() -> (Ftl, Coop, crate::config::Config) {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::Coop;
+        cfg.cache.slc_cache_bytes = 1 << 20; // 256 SLC pages traditional
+        cfg.cache.ips_block_fraction = 0.5;
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        let mut p = Coop::new(&cfg);
+        p.init(&mut ftl).unwrap();
+        (ftl, p, cfg)
+    }
+
+    #[test]
+    fn ips_prioritized_then_traditional() {
+        let (mut ftl, mut p, cfg) = setup();
+        // First writes land in the IPS part (SLC latency, counted as
+        // cache writes with *no* traditional block consumption).
+        let c = p.host_write_page(&mut ftl, Lpn(0), 0).unwrap();
+        assert_eq!(c.end - c.start, cfg.timing.slc_prog);
+        // exhaust IPS windows: fraction 0.5 → 32 blocks/plane × 4 pages
+        let mut t = 0;
+        let mut i = 1u64;
+        loop {
+            let c = p.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = c.end;
+            i += 1;
+            if self_ips_free(&p, &ftl) == 0 {
+                break;
+            }
+            assert!(i < 100_000);
+        }
+        // next writes flow into the traditional cache, still SLC speed
+        let before_trad = ftl.ledger.slc_cache_writes;
+        let c = p.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+        assert_eq!(c.end - c.start, cfg.timing.slc_prog, "traditional absorbs overflow");
+        assert_eq!(ftl.ledger.slc_cache_writes, before_trad + 1);
+        ftl.audit().unwrap();
+    }
+
+    fn self_ips_free(p: &Coop, ftl: &Ftl) -> u64 {
+        p.ips.slc_free_pages(ftl)
+    }
+
+    #[test]
+    fn idle_drains_trad_into_ips_window() {
+        let (mut ftl, mut p, _cfg) = setup();
+        // exhaust the IPS part, then put data in the traditional part
+        let mut t = 0;
+        let mut i = 0u64;
+        while self_ips_free(&p, &ftl) > 0 || i == 0 {
+            let c = p.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = c.end;
+            i += 1;
+            assert!(i < 100_000);
+        }
+        // fill some of the traditional cache
+        for j in 0..64u64 {
+            let c = p.host_write_page(&mut ftl, Lpn(10_000 + j), t).unwrap();
+            t = c.end;
+        }
+        p.trad.retire_active(&mut ftl);
+        assert!(p.trad.has_used());
+        // idle: Step 3.1 should reprogram trad data into the IPS window
+        let end = p.idle_work(&mut ftl, t, t + 600 * SEC).unwrap();
+        assert!(end > t);
+        assert!(
+            ftl.ledger.coop_reprogram_writes > 0,
+            "opposite-direction migration happened"
+        );
+        // data still mapped
+        for j in 0..64u64 {
+            assert!(ftl.map.get(Lpn(10_000 + j)).is_some());
+        }
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn flush_empties_traditional_cache() {
+        let (mut ftl, mut p, _cfg) = setup();
+        let mut t = 0;
+        // enough writes to spill into the traditional cache
+        let mut i = 0u64;
+        while self_ips_free(&p, &ftl) > 0 || i == 0 {
+            let c = p.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = c.end;
+            i += 1;
+            assert!(i < 100_000);
+        }
+        for j in 0..32u64 {
+            let c = p.host_write_page(&mut ftl, Lpn(15_000 + j), t).unwrap();
+            t = c.end;
+        }
+        let end = p.flush(&mut ftl, t).unwrap();
+        assert!(end >= t);
+        assert!(!p.trad.has_used(), "traditional cache fully reclaimed");
+        ftl.audit().unwrap();
+    }
+}

@@ -1,0 +1,247 @@
+//! IPS with advanced-GC assistance (paper §IV-B).
+//!
+//! Same write path as [`super::ips::Ips`]; the difference is idle
+//! time: valid pages from advanced-GC victims are read and
+//! **reprogrammed into the used SLC word lines**, so conversion happens
+//! off the critical path and new SLC windows are re-armed before the
+//! next burst. The payoff (paper Fig. 11): write latency 0.75× of
+//! baseline on average (vs 1.3× for plain IPS) while keeping the WA
+//! reduction (0.59×; AGC's premature copies cost +0.07× vs plain IPS
+//! and are charged to the scheme, §V-B2).
+//!
+//! Every idle step is a single page migration (read + reprogram) or a
+//! single erase — interruptible between steps, so an arriving host
+//! write waits at most one flash operation (paper Fig. 7).
+
+use super::ips::Ips;
+use super::CachePolicy;
+use crate::config::{Config, Nanos};
+use crate::flash::array::Completion;
+use crate::flash::Lpn;
+use crate::ftl::agc::AgcEngine;
+use crate::ftl::Ftl;
+use crate::metrics::Attribution;
+use crate::Result;
+
+/// IPS + advanced GC.
+pub struct IpsAgc {
+    ips: Ips,
+    agc: AgcEngine,
+}
+
+impl IpsAgc {
+    /// New policy from config.
+    pub fn new(cfg: &Config) -> IpsAgc {
+        IpsAgc { ips: Ips::new(cfg), agc: AgcEngine::new() }
+    }
+
+    /// One idle step: move one AGC valid page into a used SLC word
+    /// line (read source + reprogram destination), or erase an emptied
+    /// victim. Returns the step completion, or `None` when no work.
+    fn idle_step(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Option<Nanos>> {
+        // erase emptied victims first (frees space, cheap win)
+        if let Some(c) = self.agc.erase_step(ftl, now)? {
+            return Ok(Some(c.end));
+        }
+        // a destination window must exist
+        let plane = match self.ips.any_convertible_plane() {
+            Some(p) => p,
+            None => return Ok(None),
+        };
+        // and a source page: GC victims first, else harvest a used
+        // cache block (§IV-B — AGC collects wherever invalid pages
+        // accumulated, which for small workloads is the cache itself)
+        if self.agc.ensure_victim(ftl).is_none() {
+            match self.ips.steal_agc_victim(ftl) {
+                Some(v) => self.agc.set_victim(v),
+                None => return Ok(None),
+            }
+        }
+        let src = match self.agc.next_page(ftl) {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        let g = *ftl.array.geometry();
+        let pa = src.expand(&g);
+        let lpn = ftl
+            .array
+            .block(crate::flash::BlockAddr { plane: pa.plane, block: pa.block })
+            .lpn_at(pa.page_in_block())
+            .ok_or_else(|| crate::Error::invariant("AGC page without LPN"))?;
+        // read the source page...
+        let read_done = ftl.array.read(src, now)?;
+        // ...and reprogram it into the IPS window (remaps the LPN and
+        // invalidates the source as a side effect of the remap).
+        let done = self
+            .ips
+            .reprogram_write(ftl, plane, lpn, Attribution::AgcReprogram, read_done.end)?
+            .ok_or_else(|| crate::Error::invariant("convertible plane had no target"))?;
+        self.agc.note_step();
+        Ok(Some(done.end))
+    }
+}
+
+impl CachePolicy for IpsAgc {
+    fn name(&self) -> &'static str {
+        "ips/agc"
+    }
+
+    fn init(&mut self, ftl: &mut Ftl) -> Result<()> {
+        self.ips.init(ftl)
+    }
+
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+        self.ips.host_write_page(ftl, lpn, now)
+    }
+
+    fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {
+        let mut t = now;
+        while t < deadline {
+            match self.idle_step(ftl, t)? {
+                Some(end) => t = end,
+                None => break,
+            }
+        }
+        Ok(t)
+    }
+
+    fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        // Drain all available AGC work (bounded by pending reprogram
+        // capacity); used SLC pages that cannot be fed (no invalid data
+        // anywhere) simply remain — in-place switch never copies just
+        // to copy.
+        let mut t = now;
+        let mut guard = 0u64;
+        let bound = 4 * ftl.map.lpn_limit() + 1024;
+        while let Some(end) = self.idle_step(ftl, t)? {
+            t = end;
+            guard += 1;
+            if guard > bound {
+                return Err(crate::Error::invariant("IPS/agc flush did not converge"));
+            }
+        }
+        Ok(t)
+    }
+
+    fn slc_free_pages(&self, ftl: &Ftl) -> u64 {
+        self.ips.slc_free_pages(ftl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::SEC;
+
+    fn setup() -> (Ftl, IpsAgc, crate::config::Config) {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::IpsAgc;
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        let mut p = IpsAgc::new(&cfg);
+        p.init(&mut ftl).unwrap();
+        (ftl, p, cfg)
+    }
+
+    /// Build a GC victim (a closed TLC block, half invalid) and exhaust
+    /// the SLC windows; returns the current sim time.
+    fn prime(ftl: &mut Ftl, p: &mut IpsAgc, cfg: &crate::config::Config) -> u64 {
+        use crate::flash::PlaneId;
+        let mut t = 0;
+        // Fill every SLC window first: write until the first
+        // non-SLC-latency completion (the first host-driven reprogram).
+        // (Doing this first keeps the designation-time GC harvest from
+        // consuming the victim we build next.)
+        let mut lpn = 0u64;
+        loop {
+            let c = p.host_write_page(ftl, Lpn(lpn), t).unwrap();
+            t = c.end;
+            lpn += 1;
+            if c.end - c.start != cfg.timing.slc_prog {
+                break;
+            }
+            assert!(lpn < 1_000_000, "windows must exhaust eventually");
+        }
+        // A closed TLC block on plane 0: 96 pages, then overwrite half
+        // → 48 valid + 48 invalid → a proper AGC victim.
+        let base = 9_000u64;
+        let ppb = cfg.geometry.pages_per_block as u64;
+        for i in 0..ppb {
+            let c = ftl.host_write_tlc_on(PlaneId(0), Lpn(base + i), t).unwrap();
+            t = c.end;
+        }
+        for i in 0..ppb / 2 {
+            let c = ftl.host_write_tlc_on(PlaneId(0), Lpn(base + i), t).unwrap();
+            t = c.end;
+        }
+        t
+    }
+
+    /// Idle time re-arms the windows via AGC-fed reprogram.
+    #[test]
+    fn idle_agc_rearms_windows() {
+        let (mut ftl, mut p, cfg) = setup();
+        let t = prime(&mut ftl, &mut p, &cfg);
+        assert!(p.ips.pending_reprogram_ops(&ftl) > 0, "conversion work queued");
+        let free_before = p.slc_free_pages(&ftl);
+        let reprog_before = ftl.ledger.agc_reprogram_writes;
+        // a long idle window
+        let end = p.idle_work(&mut ftl, t, t + 600 * SEC).unwrap();
+        assert!(end > t, "idle work happened");
+        assert!(
+            ftl.ledger.agc_reprogram_writes > reprog_before,
+            "AGC fed reprograms during idle"
+        );
+        assert!(
+            p.slc_free_pages(&ftl) > free_before,
+            "windows re-armed in idle time"
+        );
+        assert!(p.agc.erases >= 1, "emptied victim erased");
+        ftl.audit().unwrap();
+    }
+
+    /// Interruptibility: a tiny idle window issues at most one step.
+    #[test]
+    fn idle_steps_are_interruptible() {
+        let (mut ftl, mut p, cfg) = setup();
+        let t = prime(&mut ftl, &mut p, &cfg);
+        let ops_before =
+            ftl.array.counters().pages_programmed() + ftl.array.counters().erases;
+        // a 1 ns idle window: at most one step can be issued
+        p.idle_work(&mut ftl, t, t + 1).unwrap();
+        let ops_after =
+            ftl.array.counters().pages_programmed() + ftl.array.counters().erases;
+        assert!(ops_after - ops_before <= 1, "at most one atomic step issued");
+    }
+
+    /// Flush drains every feedable reprogram without diverging.
+    #[test]
+    fn flush_converges_and_audits() {
+        let (mut ftl, mut p, cfg) = setup();
+        let t = prime(&mut ftl, &mut p, &cfg);
+        let end = p.flush(&mut ftl, t).unwrap();
+        assert!(end >= t);
+        // after flush, either no conversion targets or no AGC sources
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn no_agc_without_invalid_data() {
+        // Purely sequential writes (no overwrites): AGC has no victims;
+        // idle must do nothing and writes after exhaustion pay the
+        // reprogram cost on arrival (the STG_0/WDEV_0 effect, §V-B2).
+        let (mut ftl, mut p, _cfg) = setup();
+        let mut t = 0;
+        for i in 0..2_000u64 {
+            let c = p.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = c.end;
+        }
+        let before = ftl.ledger;
+        p.idle_work(&mut ftl, t, t + 600 * SEC).unwrap();
+        assert_eq!(
+            ftl.ledger.agc_reprogram_writes, before.agc_reprogram_writes,
+            "nothing to harvest"
+        );
+        ftl.audit().unwrap();
+    }
+}

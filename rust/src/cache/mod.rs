@@ -1,0 +1,64 @@
+//! SLC-cache schemes: the paper's evaluated designs.
+//!
+//! | Scheme | Paper | Host write routing | Idle-time behaviour |
+//! |---|---|---|---|
+//! | [`tlc_only::TlcOnly`] | (reference) | straight to TLC | nothing |
+//! | [`baseline::Baseline`] | §II-C, Turbo Write [26] | SLC cache → TLC after cliff | **atomic block reclamation** (migrate + erase; host writes arriving mid-unit wait) |
+//! | [`ips::Ips`] | §IV-A | SLC window → host-write-driven **reprogram** | nothing (reprogram happens on the write path) |
+//! | [`ips_agc::IpsAgc`] | §IV-B | like IPS | AGC valid pages **reprogrammed into used SLC word lines**, interruptible per page |
+//! | [`coop::Coop`] | §IV-C | IPS window first, traditional cache second, reprogram third, TLC last | trad-cache pages reprogrammed *into* the IPS window (3.1), spill to TLC (3.2), erase (4), AGC fills gaps |
+//!
+//! All schemes speak to the flash exclusively through [`crate::ftl::Ftl`]
+//! composite operations, so mapping/validity/attribution invariants are
+//! maintained uniformly; the simulator audits them after every run.
+
+pub mod baseline;
+pub mod coop;
+pub mod ips;
+pub mod ips_agc;
+pub mod tlc_only;
+
+use crate::config::{Config, Nanos, Scheme};
+use crate::flash::array::Completion;
+use crate::flash::Lpn;
+use crate::ftl::Ftl;
+use crate::Result;
+
+/// A pluggable SLC-cache policy.
+pub trait CachePolicy: Send {
+    /// Display name.
+    fn name(&self) -> &'static str;
+
+    /// One-time setup: claim cache blocks, set modes, size pools.
+    fn init(&mut self, ftl: &mut Ftl) -> Result<()>;
+
+    /// Route one host page write; returns its service completion.
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion>;
+
+    /// Perform background work inside an idle window `[now, deadline)`.
+    /// Implementations issue atomic steps while their issue time is
+    /// before `deadline`; a step already started may overrun it (that
+    /// overrun is exactly the reclamation-vs-host-write conflict the
+    /// paper analyses). Returns the time the last issued step completes.
+    fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos>;
+
+    /// End-of-workload reclamation (daily scenario; paper §III: "at the
+    /// end of each workload, all data in the SLC cache is migrated to
+    /// the TLC space, and the used blocks are erased" — scheme-specific
+    /// for IPS variants, which reprogram in place instead).
+    fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos>;
+
+    /// Remaining free SLC-cache capacity in pages (diagnostics).
+    fn slc_free_pages(&self, ftl: &Ftl) -> u64;
+}
+
+/// Construct the scheme selected by `cfg.cache.scheme`.
+pub fn build(cfg: &Config) -> Box<dyn CachePolicy> {
+    match cfg.cache.scheme {
+        Scheme::TlcOnly => Box::new(tlc_only::TlcOnly::new()),
+        Scheme::Baseline => Box::new(baseline::Baseline::new(cfg)),
+        Scheme::Ips => Box::new(ips::Ips::new(cfg)),
+        Scheme::IpsAgc => Box::new(ips_agc::IpsAgc::new(cfg)),
+        Scheme::Coop => Box::new(coop::Coop::new(cfg)),
+    }
+}

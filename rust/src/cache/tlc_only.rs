@@ -1,0 +1,68 @@
+//! Reference scheme with no SLC cache: every host write goes straight
+//! to TLC space at TLC latency. Useful as a floor in ablations.
+
+use super::CachePolicy;
+use crate::config::Nanos;
+use crate::flash::array::Completion;
+use crate::flash::Lpn;
+use crate::ftl::Ftl;
+use crate::Result;
+
+/// No-cache policy.
+#[derive(Debug, Default)]
+pub struct TlcOnly;
+
+impl TlcOnly {
+    /// New instance.
+    pub fn new() -> TlcOnly {
+        TlcOnly
+    }
+}
+
+impl CachePolicy for TlcOnly {
+    fn name(&self) -> &'static str {
+        "tlc-only"
+    }
+
+    fn init(&mut self, _ftl: &mut Ftl) -> Result<()> {
+        Ok(())
+    }
+
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+        ftl.host_write_tlc(lpn, now)
+    }
+
+    fn idle_work(&mut self, _ftl: &mut Ftl, now: Nanos, _deadline: Nanos) -> Result<Nanos> {
+        Ok(now)
+    }
+
+    fn flush(&mut self, _ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        Ok(now)
+    }
+
+    fn slc_free_pages(&self, _ftl: &Ftl) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn all_writes_are_tlc_direct() {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        let mut p = TlcOnly::new();
+        p.init(&mut ftl).unwrap();
+        for i in 0..10u64 {
+            let c = p.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+            assert_eq!(c.end - c.start, cfg.timing.tlc_prog);
+        }
+        assert_eq!(ftl.ledger.tlc_direct_writes, 10);
+        assert_eq!(ftl.ledger.slc_cache_writes, 0);
+        ftl.audit().unwrap();
+    }
+}

@@ -1,0 +1,460 @@
+//! Typed configuration tree + TOML loading + presets.
+//!
+//! Everything the simulator, cache schemes, and experiment runner need
+//! is described by [`Config`]; presets mirror the paper's Table I and
+//! the cooperative-design setup, and a scaled-down geometry is provided
+//! for tests/benches.
+
+pub mod presets;
+
+use crate::util::toml::{self, View};
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Nanosecond time alias used across the crate.
+pub type Nanos = u64;
+
+/// One millisecond in [`Nanos`].
+pub const MS: Nanos = 1_000_000;
+/// One microsecond in [`Nanos`].
+pub const US: Nanos = 1_000;
+/// One second in [`Nanos`].
+pub const SEC: Nanos = 1_000_000_000;
+
+/// Physical geometry of the simulated hybrid 3D SSD.
+///
+/// Four levels of parallelism (channel → chip → die → plane) per the
+/// simulator of Hu et al. [12]; blocks are 3D with word lines grouped
+/// into layers (`wordlines_per_layer`), which is what the reprogram
+/// restriction ("within two layers") is expressed against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// Number of channels.
+    pub channels: u32,
+    /// Chips per channel.
+    pub chips_per_channel: u32,
+    /// Dies per chip.
+    pub dies_per_chip: u32,
+    /// Planes per die.
+    pub planes_per_die: u32,
+    /// Blocks per plane.
+    pub blocks_per_plane: u32,
+    /// TLC pages per block (3 per word line).
+    pub pages_per_block: u32,
+    /// Page size in bytes.
+    pub page_bytes: u32,
+    /// Word lines per 3D layer.
+    pub wordlines_per_layer: u32,
+}
+
+impl Geometry {
+    /// Total number of planes.
+    pub fn planes(&self) -> u32 {
+        self.channels * self.chips_per_channel * self.dies_per_chip * self.planes_per_die
+    }
+    /// Total number of blocks.
+    pub fn blocks(&self) -> u64 {
+        self.planes() as u64 * self.blocks_per_plane as u64
+    }
+    /// Word lines per block.
+    pub fn wordlines_per_block(&self) -> u32 {
+        self.pages_per_block / 3
+    }
+    /// Layers per block.
+    pub fn layers_per_block(&self) -> u32 {
+        self.wordlines_per_block() / self.wordlines_per_layer
+    }
+    /// TLC pages per plane.
+    pub fn pages_per_plane(&self) -> u64 {
+        self.blocks_per_plane as u64 * self.pages_per_block as u64
+    }
+    /// Total TLC page count (physical capacity in pages).
+    pub fn total_pages(&self) -> u64 {
+        self.blocks() * self.pages_per_block as u64
+    }
+    /// Total raw capacity in bytes (all cells in TLC mode).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_pages() * self.page_bytes as u64
+    }
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let check = |ok: bool, msg: &str| if ok { Ok(()) } else { Err(Error::config(msg)) };
+        check(self.channels >= 1, "channels must be >= 1")?;
+        check(self.chips_per_channel >= 1, "chips_per_channel must be >= 1")?;
+        check(self.dies_per_chip >= 1, "dies_per_chip must be >= 1")?;
+        check(self.planes_per_die >= 1, "planes_per_die must be >= 1")?;
+        check(self.blocks_per_plane >= 4, "blocks_per_plane must be >= 4")?;
+        check(self.pages_per_block % 3 == 0, "pages_per_block must be divisible by 3")?;
+        check(self.page_bytes >= 512, "page_bytes must be >= 512")?;
+        check(self.wordlines_per_layer >= 1, "wordlines_per_layer must be >= 1")?;
+        check(
+            self.wordlines_per_block() % self.wordlines_per_layer == 0,
+            "wordlines_per_block must be divisible by wordlines_per_layer",
+        )?;
+        check(self.layers_per_block() >= 2, "need at least 2 layers per block")?;
+        Ok(())
+    }
+}
+
+/// Flash operation latencies (paper Table I), in nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timing {
+    /// SLC page read.
+    pub slc_read: Nanos,
+    /// TLC page read.
+    pub tlc_read: Nanos,
+    /// SLC page program.
+    pub slc_prog: Nanos,
+    /// TLC page program (one-shot, per word line, writes 3 pages).
+    pub tlc_prog: Nanos,
+    /// Reprogram step (conservatively = TLC program; paper §IV-B).
+    pub reprogram: Nanos,
+    /// Block erase.
+    pub erase: Nanos,
+}
+
+impl Timing {
+    /// Validate that latencies are sane (SLC faster than TLC, etc).
+    pub fn validate(&self) -> Result<()> {
+        if self.slc_read == 0 || self.slc_prog == 0 || self.erase == 0 {
+            return Err(Error::config("timing values must be non-zero"));
+        }
+        if self.slc_read > self.tlc_read {
+            return Err(Error::config("slc_read must be <= tlc_read"));
+        }
+        if self.slc_prog > self.tlc_prog {
+            return Err(Error::config("slc_prog must be <= tlc_prog"));
+        }
+        Ok(())
+    }
+}
+
+/// Which SLC-cache scheme to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// No SLC cache at all: every host write straight to TLC.
+    TlcOnly,
+    /// Traditional SLC cache with idle-time reclamation (Turbo Write).
+    Baseline,
+    /// In-place switch (paper §IV-A), host-write-driven reprogram.
+    Ips,
+    /// IPS with advanced-GC-assisted idle-time reprogram (paper §IV-B).
+    IpsAgc,
+    /// Cooperative IPS/agc + traditional cache (paper §IV-C).
+    Coop,
+}
+
+impl Scheme {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "tlc" | "tlc-only" | "tlconly" => Ok(Scheme::TlcOnly),
+            "baseline" | "turbo" | "turbowrite" => Ok(Scheme::Baseline),
+            "ips" => Ok(Scheme::Ips),
+            "ips-agc" | "ips/agc" | "ipsagc" => Ok(Scheme::IpsAgc),
+            "coop" | "cooperative" => Ok(Scheme::Coop),
+            other => Err(Error::config(format!(
+                "unknown scheme {other:?} (want tlc-only|baseline|ips|ips-agc|coop)"
+            ))),
+        }
+    }
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::TlcOnly => "tlc-only",
+            Scheme::Baseline => "baseline",
+            Scheme::Ips => "ips",
+            Scheme::IpsAgc => "ips/agc",
+            Scheme::Coop => "coop",
+        }
+    }
+    /// All schemes, in presentation order.
+    pub fn all() -> [Scheme; 5] {
+        [Scheme::TlcOnly, Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop]
+    }
+}
+
+/// SLC-cache configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Active scheme.
+    pub scheme: Scheme,
+    /// Traditional SLC cache capacity in bytes (SLC-mode capacity).
+    /// Used by `Baseline` (whole cache) and `Coop` (traditional part).
+    pub slc_cache_bytes: u64,
+    /// Layers per IPS layer group (paper: 2, the reprogram window).
+    pub group_layers: u32,
+    /// Fraction of blocks carrying IPS layer groups (1.0 for plain
+    /// IPS/IPS-agc; < 1.0 under `Coop` where some blocks host the
+    /// traditional cache).
+    pub ips_block_fraction: f64,
+    /// Max reprograms per word line after its initial program
+    /// (paper/[7]: 2 — SLC → +CSB → +MSB).
+    pub max_reprograms: u32,
+    /// Quiescent time before background work starts.
+    pub idle_threshold: Nanos,
+    /// GC trigger: free-block low watermark per plane (fraction).
+    pub gc_low_watermark: f64,
+    /// GC stop: free-block high watermark per plane (fraction).
+    pub gc_high_watermark: f64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            scheme: Scheme::Baseline,
+            slc_cache_bytes: 4 << 30,
+            group_layers: 2,
+            ips_block_fraction: 1.0,
+            max_reprograms: 2,
+            idle_threshold: 100 * MS,
+            gc_low_watermark: 0.02,
+            gc_high_watermark: 0.05,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Validate settings.
+    pub fn validate(&self) -> Result<()> {
+        if self.group_layers == 0 {
+            return Err(Error::config("group_layers must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.ips_block_fraction) {
+            return Err(Error::config("ips_block_fraction must be in [0,1]"));
+        }
+        if self.gc_low_watermark >= self.gc_high_watermark {
+            return Err(Error::config("gc_low_watermark must be < gc_high_watermark"));
+        }
+        if self.max_reprograms > 4 {
+            return Err(Error::config(
+                "max_reprograms > 4 violates the device study [7] (each TLC \
+                 can be reprogrammed four times at most)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Simulator engine knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// PRNG seed (recorded in reports).
+    pub seed: u64,
+    /// Track per-LPN version stamps and verify reads / final state.
+    /// Memory-heavy; for tests and small geometries.
+    pub verify: bool,
+    /// Keep at most this many raw per-write latency samples
+    /// (for Fig. 9-style runtime curves). 0 disables raw capture.
+    pub latency_samples: usize,
+    /// Bandwidth timeline window.
+    pub bandwidth_window: Nanos,
+    /// Max background steps to run per idle window (safety valve; 0 = unlimited).
+    pub max_idle_steps: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 42,
+            verify: false,
+            latency_samples: 0,
+            bandwidth_window: 100 * MS,
+            max_idle_steps: 0,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// SSD geometry.
+    pub geometry: Geometry,
+    /// Flash timing.
+    pub timing: Timing,
+    /// Cache scheme settings.
+    pub cache: CacheConfig,
+    /// Engine settings.
+    pub sim: SimConfig,
+}
+
+impl Config {
+    /// Validate the whole tree.
+    pub fn validate(&self) -> Result<()> {
+        self.geometry.validate()?;
+        self.timing.validate()?;
+        self.cache.validate()?;
+        // cache must fit: traditional SLC capacity consumes blocks in
+        // SLC mode (1 page per word line).
+        let slc_pages_needed =
+            self.cache.slc_cache_bytes / self.geometry.page_bytes as u64;
+        let slc_pages_per_block = self.geometry.wordlines_per_block() as u64;
+        let blocks_needed = slc_pages_needed.div_ceil(slc_pages_per_block.max(1));
+        if matches!(self.cache.scheme, Scheme::Baseline | Scheme::Coop)
+            && blocks_needed > self.geometry.blocks() / 2
+        {
+            return Err(Error::config(format!(
+                "slc_cache_bytes needs {blocks_needed} SLC-mode blocks, more than half \
+                 of the {} total blocks",
+                self.geometry.blocks()
+            )));
+        }
+        if self.geometry.layers_per_block() < 2 * self.cache.group_layers {
+            return Err(Error::config("need at least two layer groups per block"));
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, starting from `base` defaults.
+    pub fn load(path: &Path, base: Config) -> Result<Config> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&src, base)
+    }
+
+    /// Parse a TOML string over `base` defaults.
+    pub fn from_toml_str(src: &str, base: Config) -> Result<Config> {
+        let table =
+            toml::parse(src).map_err(|e| Error::config(format!("toml: {e}")))?;
+        let v = View::new(&table);
+        let g = &base.geometry;
+        let geometry = Geometry {
+            channels: v.u64_or("ssd.channels", g.channels as u64) as u32,
+            chips_per_channel: v.u64_or("ssd.chips_per_channel", g.chips_per_channel as u64)
+                as u32,
+            dies_per_chip: v.u64_or("ssd.dies_per_chip", g.dies_per_chip as u64) as u32,
+            planes_per_die: v.u64_or("ssd.planes_per_die", g.planes_per_die as u64) as u32,
+            blocks_per_plane: v.u64_or("ssd.blocks_per_plane", g.blocks_per_plane as u64)
+                as u32,
+            pages_per_block: v.u64_or("ssd.pages_per_block", g.pages_per_block as u64) as u32,
+            page_bytes: v.u64_or("ssd.page_bytes", g.page_bytes as u64) as u32,
+            wordlines_per_layer: v
+                .u64_or("ssd.wordlines_per_layer", g.wordlines_per_layer as u64)
+                as u32,
+        };
+        let t = &base.timing;
+        let timing = Timing {
+            slc_read: v.u64_or("timing.slc_read_ns", t.slc_read),
+            tlc_read: v.u64_or("timing.tlc_read_ns", t.tlc_read),
+            slc_prog: v.u64_or("timing.slc_prog_ns", t.slc_prog),
+            tlc_prog: v.u64_or("timing.tlc_prog_ns", t.tlc_prog),
+            reprogram: v.u64_or("timing.reprogram_ns", t.reprogram),
+            erase: v.u64_or("timing.erase_ns", t.erase),
+        };
+        let c = &base.cache;
+        let scheme = match v.lookup("cache.scheme") {
+            Some(crate::util::toml::Value::Str(s)) => Scheme::parse(s)?,
+            _ => c.scheme,
+        };
+        let cache = CacheConfig {
+            scheme,
+            slc_cache_bytes: v.u64_or("cache.slc_cache_bytes", c.slc_cache_bytes),
+            group_layers: v.u64_or("cache.group_layers", c.group_layers as u64) as u32,
+            ips_block_fraction: v.f64_or("cache.ips_block_fraction", c.ips_block_fraction),
+            max_reprograms: v.u64_or("cache.max_reprograms", c.max_reprograms as u64) as u32,
+            idle_threshold: v.u64_or("cache.idle_threshold_ns", c.idle_threshold),
+            gc_low_watermark: v.f64_or("cache.gc_low_watermark", c.gc_low_watermark),
+            gc_high_watermark: v.f64_or("cache.gc_high_watermark", c.gc_high_watermark),
+        };
+        let s = &base.sim;
+        let sim = SimConfig {
+            seed: v.u64_or("sim.seed", s.seed),
+            verify: v.bool_or("sim.verify", s.verify),
+            latency_samples: v.u64_or("sim.latency_samples", s.latency_samples as u64) as usize,
+            bandwidth_window: v.u64_or("sim.bandwidth_window_ns", s.bandwidth_window),
+            max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
+        };
+        let cfg = Config { geometry, timing, cache, sim };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let c = presets::table1();
+        assert_eq!(c.geometry.channels, 8);
+        assert_eq!(c.geometry.chips_per_channel, 4);
+        assert_eq!(c.geometry.dies_per_chip, 2);
+        assert_eq!(c.geometry.planes_per_die, 2);
+        assert_eq!(c.geometry.blocks_per_plane, 2048);
+        assert_eq!(c.geometry.pages_per_block, 384);
+        assert_eq!(c.geometry.page_bytes, 4096);
+        // 384 GiB raw capacity
+        assert_eq!(c.geometry.capacity_bytes(), 384 << 30);
+        // Table I timing
+        assert_eq!(c.timing.slc_read, 20 * US);
+        assert_eq!(c.timing.tlc_read, 66 * US);
+        assert_eq!(c.timing.slc_prog, 500 * US);
+        assert_eq!(c.timing.tlc_prog, 3 * MS);
+        assert_eq!(c.timing.erase, 10 * MS);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn small_preset_valid_and_small() {
+        let c = presets::small();
+        c.validate().unwrap();
+        assert!(c.geometry.capacity_bytes() <= 1 << 30);
+    }
+
+    #[test]
+    fn ips_cache_capacity_is_4gib_on_table1() {
+        // First two layers of ALL blocks in SLC mode: 2 layers × 2 WLs
+        // × 1 page × 4 KiB × 262144 blocks = 4 GiB (matches the paper's
+        // 4 GB SLC cache for IPS).
+        let c = presets::table1();
+        let g = &c.geometry;
+        let slc_pages_per_group =
+            (c.cache.group_layers * g.wordlines_per_layer) as u64;
+        let bytes = g.blocks() * slc_pages_per_group * g.page_bytes as u64;
+        assert_eq!(bytes, 4 << 30);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let base = presets::small();
+        let cfg = Config::from_toml_str(
+            "[cache]\nscheme = \"ips\"\nidle_threshold_ns = 5\n[sim]\nseed = 9",
+            base,
+        )
+        .unwrap();
+        assert_eq!(cfg.cache.scheme, Scheme::Ips);
+        assert_eq!(cfg.cache.idle_threshold, 5);
+        assert_eq!(cfg.sim.seed, 9);
+    }
+
+    #[test]
+    fn bad_scheme_rejected() {
+        let base = presets::small();
+        assert!(Config::from_toml_str("[cache]\nscheme = \"wat\"", base).is_err());
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let mut c = presets::small();
+        c.geometry.pages_per_block = 100; // not divisible by 3
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.timing.slc_prog = c.timing.tlc_prog + 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn oversized_cache_rejected() {
+        let mut c = presets::small();
+        c.cache.scheme = Scheme::Baseline;
+        c.cache.slc_cache_bytes = c.geometry.capacity_bytes(); // absurd
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Configuration presets: the paper's Table I, the cooperative-design
+//! setup (§V-A: 64 GB total SLC cache), and scaled-down geometries for
+//! tests and fast benches.
+
+use super::*;
+
+/// Paper Table I: 384 GB; 8 channels; 4 chips/channel; 2 dies/chip;
+/// 2 planes/die; 2048 blocks/plane; 384 pages/block; 4 KB page.
+/// Timing: 0.02 ms SLC read; 0.066 ms TLC read; 0.5 ms SLC write;
+/// 3 ms TLC write; 10 ms erase. SLC cache 4 GB (Turbo-Write-sized).
+pub fn table1() -> Config {
+    Config {
+        geometry: Geometry {
+            channels: 8,
+            chips_per_channel: 4,
+            dies_per_chip: 2,
+            planes_per_die: 2,
+            blocks_per_plane: 2048,
+            pages_per_block: 384,
+            page_bytes: 4096,
+            // 128 word lines per block, 2 per layer → 64 layers; an IPS
+            // layer group (2 layers) holds 4 SLC pages per block, giving
+            // exactly the paper's 4 GiB IPS cache over all blocks.
+            wordlines_per_layer: 2,
+        },
+        timing: Timing {
+            slc_read: 20 * US,
+            tlc_read: 66 * US,
+            slc_prog: 500 * US,
+            tlc_prog: 3 * MS,
+            reprogram: 3 * MS, // conservatively TLC program (paper §IV-B)
+            erase: 10 * MS,
+        },
+        cache: CacheConfig { slc_cache_bytes: 4 << 30, ..CacheConfig::default() },
+        sim: SimConfig::default(),
+    }
+}
+
+/// Cooperative-design preset (§V-A): total SLC cache raised to ~64 GB —
+/// an IPS/agc part from the first-two-layer groups of the *majority* of
+/// blocks plus a traditional SLC cache part sized to the paper's
+/// 60.875 GB. We allocate the traditional part as whole SLC-mode blocks
+/// and leave IPS layer groups on the rest; the resulting IPS capacity
+/// (~2.1 GiB here) vs the paper's quoted 3.125 GB is a bookkeeping
+/// difference documented in EXPERIMENTS.md.
+pub fn coop64() -> Config {
+    let mut c = table1();
+    c.cache.scheme = Scheme::Coop;
+    // 60.875 GB of SLC-mode capacity for the traditional part.
+    c.cache.slc_cache_bytes = (60.875 * (1u64 << 30) as f64) as u64;
+    // Remaining blocks host IPS layer groups.
+    let g = &c.geometry;
+    let slc_pages_per_block = g.wordlines_per_block() as u64;
+    let trad_blocks =
+        (c.cache.slc_cache_bytes / g.page_bytes as u64).div_ceil(slc_pages_per_block);
+    c.cache.ips_block_fraction = 1.0 - trad_blocks as f64 / g.blocks() as f64;
+    c
+}
+
+/// Small geometry for unit/integration tests: ~96 MiB raw, same shape
+/// (3D blocks, multiple planes/channels) so every code path is hit.
+pub fn small() -> Config {
+    Config {
+        geometry: Geometry {
+            channels: 2,
+            chips_per_channel: 1,
+            dies_per_chip: 1,
+            planes_per_die: 2,
+            blocks_per_plane: 64,
+            pages_per_block: 96, // 32 word lines, 16 layers
+            page_bytes: 4096,
+            wordlines_per_layer: 2,
+        },
+        timing: Timing {
+            slc_read: 20 * US,
+            tlc_read: 66 * US,
+            slc_prog: 500 * US,
+            tlc_prog: 3 * MS,
+            reprogram: 3 * MS,
+            erase: 10 * MS,
+        },
+        cache: CacheConfig {
+            // 1 MiB traditional cache on the small geometry
+            slc_cache_bytes: 1 << 20,
+            idle_threshold: 1 * MS,
+            ..CacheConfig::default()
+        },
+        sim: SimConfig { verify: true, ..SimConfig::default() },
+    }
+}
+
+/// Medium geometry for fast benches: ~6 GiB raw, 128 MiB-class cache;
+/// large enough that SLC-cache pressure and GC behaviour are realistic,
+/// small enough that a full workload runs in well under a second.
+pub fn bench_medium() -> Config {
+    Config {
+        geometry: Geometry {
+            channels: 4,
+            chips_per_channel: 2,
+            dies_per_chip: 1,
+            planes_per_die: 2,
+            blocks_per_plane: 256,
+            pages_per_block: 384,
+            page_bytes: 4096,
+            wordlines_per_layer: 2,
+        },
+        timing: table1().timing,
+        cache: CacheConfig {
+            slc_cache_bytes: 64 << 20,
+            idle_threshold: 10 * MS,
+            ..CacheConfig::default()
+        },
+        sim: SimConfig::default(),
+    }
+}
+
+/// Scale the paper's Table-I geometry down by `factor` (channels and
+/// blocks/plane), keeping timing and relative cache size. Used by
+/// `reproduce --scale N` to trade fidelity for speed.
+pub fn table1_scaled(factor: u32) -> Config {
+    let mut c = table1();
+    let f = factor.max(1);
+    c.geometry.channels = (c.geometry.channels / f).max(1);
+    c.geometry.blocks_per_plane = (c.geometry.blocks_per_plane / f).max(8);
+    // keep cache proportional to capacity
+    let ratio = c.geometry.capacity_bytes() as f64 / table1().geometry.capacity_bytes() as f64;
+    c.cache.slc_cache_bytes = ((4u64 << 30) as f64 * ratio) as u64;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        table1().validate().unwrap();
+        coop64().validate().unwrap();
+        small().validate().unwrap();
+        bench_medium().validate().unwrap();
+        table1_scaled(8).validate().unwrap();
+    }
+
+    #[test]
+    fn coop_fraction_sensible() {
+        let c = coop64();
+        assert!(c.cache.ips_block_fraction > 0.3);
+        assert!(c.cache.ips_block_fraction < 0.8);
+    }
+
+    #[test]
+    fn scaled_capacity_shrinks() {
+        let full = table1();
+        let s = table1_scaled(8);
+        assert!(s.geometry.capacity_bytes() < full.geometry.capacity_bytes() / 32);
+        // cache scales along
+        assert!(s.cache.slc_cache_bytes < full.cache.slc_cache_bytes / 32);
+    }
+}

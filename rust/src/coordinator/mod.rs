@@ -1,0 +1,63 @@
+//! Experiment coordination: figure definitions, the threaded runner,
+//! and paper-style reporting.
+//!
+//! `ips reproduce --fig N` regenerates the data behind every figure of
+//! the paper's evaluation (§V), printing the same rows/series the paper
+//! reports and writing full series to `results/figN_*.csv`. See
+//! DESIGN.md's experiment index for the figure ↔ module map.
+
+pub mod experiment;
+pub mod report;
+pub mod runner;
+
+use std::path::PathBuf;
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Geometry divisor vs the paper's Table I (1 = full scale).
+    pub scale: u32,
+    /// Workload write-volume multiplier; `None` scales volumes with
+    /// capacity (1/scale², preserving cache pressure).
+    pub volume_scale: Option<f64>,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Output directory for CSV series.
+    pub out_dir: PathBuf,
+    /// Worker threads for independent runs.
+    pub threads: usize,
+    /// Restrict to these workloads (None = the paper's 11).
+    pub workloads: Option<Vec<String>>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: 4,
+            volume_scale: None,
+            seed: 42,
+            out_dir: PathBuf::from("results"),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            workloads: None,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Workload names to run.
+    pub fn workload_names(&self) -> Vec<&str> {
+        match &self.workloads {
+            Some(w) => w.iter().map(|s| s.as_str()).collect(),
+            None => crate::trace::profiles::names(),
+        }
+    }
+
+    /// Effective volume multiplier: explicit, or capacity-proportional
+    /// (geometry scale divides channels *and* blocks/plane → capacity
+    /// shrinks by scale², and workload volumes follow to preserve the
+    /// paper's cache-pressure ratios).
+    pub fn volume(&self) -> f64 {
+        self.volume_scale
+            .unwrap_or_else(|| 1.0 / (self.scale as f64 * self.scale as f64))
+    }
+}

@@ -1,0 +1,50 @@
+//! Report rendering: titled tables on stdout, full series as CSV under
+//! the experiment's output directory.
+
+use super::ExpOptions;
+use crate::util::fmt::TextTable;
+use crate::Result;
+
+/// Print a titled table.
+pub fn print_table(title: &str, table: &TextTable) {
+    println!("\n== {title} ==");
+    print!("{}", table.render());
+}
+
+/// Persist a table as `<out_dir>/<name>.csv`.
+pub fn save_csv(opts: &ExpOptions, name: &str, table: &TextTable) -> Result<()> {
+    let path = opts.out_dir.join(format!("{name}.csv"));
+    table.write_csv(&path)?;
+    println!("   -> {}", path.display());
+    Ok(())
+}
+
+/// Arithmetic mean of a slice (reports use it for the paper's
+/// "on average, X reduces Y by Z times" lines).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Format ns as ms with 3 decimals (paper plots are in ms).
+pub fn ms(ns: f64) -> String {
+    format!("{:.3}", ns / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ms_formats() {
+        assert_eq!(ms(3_000_000.0), "3.000");
+    }
+}

@@ -1,0 +1,435 @@
+//! The timed flash array: every plane's blocks plus per-plane service
+//! timelines and raw operation counters.
+//!
+//! The array is the single owner of all [`Block`] state. Callers (FTL,
+//! cache schemes) express *logical* intent (`program_slc`, `reprogram`,
+//! `erase`, …); the array applies the state change, charges the
+//! Table-I latency against the owning plane's timeline, and returns the
+//! `[start, end)` service interval. Planes are the unit of parallelism
+//! (paper §II-A: channel → chip → die → plane; plane is the innermost
+//! level at which flash operations serialize).
+
+use super::block::Block;
+#[cfg(test)]
+use super::block::BlockMode;
+use super::geometry::{BlockAddr, Lpn, PlaneId, Ppa};
+use crate::config::{Config, Geometry, Nanos, Timing};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+
+/// A scheduled flash operation's service interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Completion {
+    /// Service start (≥ issue time; queueing shows up as `start > now`).
+    pub start: Nanos,
+    /// Service end — when the data is durable / the plane frees up.
+    pub end: Nanos,
+}
+
+/// Kinds of raw flash operations (for counters and audits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlashOp {
+    /// SLC page read.
+    ReadSlc,
+    /// TLC page read.
+    ReadTlc,
+    /// SLC page program.
+    ProgSlc,
+    /// One-shot TLC word-line program.
+    ProgTlcWl,
+    /// Reprogram operation (one added page).
+    Reprogram,
+    /// Block erase.
+    Erase,
+}
+
+/// Raw operation counters (monotonic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FlashCounters {
+    /// SLC page reads.
+    pub reads_slc: u64,
+    /// TLC page reads.
+    pub reads_tlc: u64,
+    /// SLC page programs.
+    pub progs_slc: u64,
+    /// One-shot TLC word-line programs.
+    pub progs_tlc_wl: u64,
+    /// Pages written by one-shot TLC programs (≤ 3 per word line).
+    pub progs_tlc_pages: u64,
+    /// Reprogram operations (each adds one page).
+    pub reprograms: u64,
+    /// Block erases.
+    pub erases: u64,
+}
+
+impl FlashCounters {
+    /// Total pages physically programmed (the WA numerator).
+    pub fn pages_programmed(&self) -> u64 {
+        self.progs_slc + self.progs_tlc_pages + self.reprograms
+    }
+}
+
+struct PlaneState {
+    blocks: Vec<Block>,
+    busy_until: Nanos,
+    free_blocks: VecDeque<u32>,
+}
+
+/// The whole back end.
+pub struct FlashArray {
+    geometry: Geometry,
+    timing: Timing,
+    max_reprograms: u32,
+    planes: Vec<PlaneState>,
+    counters: FlashCounters,
+}
+
+impl FlashArray {
+    /// Build a fully erased array from a config.
+    pub fn new(cfg: &Config) -> FlashArray {
+        let g = cfg.geometry;
+        let planes = (0..g.planes())
+            .map(|_| PlaneState {
+                blocks: (0..g.blocks_per_plane)
+                    .map(|_| Block::new(&g, cfg.cache.group_layers))
+                    .collect(),
+                busy_until: 0,
+                free_blocks: (0..g.blocks_per_plane).collect(),
+            })
+            .collect();
+        FlashArray {
+            geometry: g,
+            timing: cfg.timing,
+            max_reprograms: cfg.cache.max_reprograms,
+            planes,
+            counters: FlashCounters::default(),
+        }
+    }
+
+    /// Geometry in force.
+    pub fn geometry(&self) -> &Geometry {
+        &self.geometry
+    }
+    /// Timing in force.
+    pub fn timing(&self) -> &Timing {
+        &self.timing
+    }
+    /// Raw op counters.
+    pub fn counters(&self) -> &FlashCounters {
+        &self.counters
+    }
+
+    /// Immutable block access.
+    pub fn block(&self, addr: BlockAddr) -> &Block {
+        &self.planes[addr.plane.0 as usize].blocks[addr.block as usize]
+    }
+    /// Mutable block access (state-only mutations; timing-neutral).
+    pub fn block_mut(&mut self, addr: BlockAddr) -> &mut Block {
+        &mut self.planes[addr.plane.0 as usize].blocks[addr.block as usize]
+    }
+
+    /// When the plane becomes free.
+    pub fn plane_busy_until(&self, plane: PlaneId) -> Nanos {
+        self.planes[plane.0 as usize].busy_until
+    }
+
+    /// Latest busy-until across all planes (drain point).
+    pub fn all_idle_at(&self) -> Nanos {
+        self.planes.iter().map(|p| p.busy_until).max().unwrap_or(0)
+    }
+
+    /// Free (erased, unassigned) blocks in a plane.
+    pub fn free_block_count(&self, plane: PlaneId) -> usize {
+        self.planes[plane.0 as usize].free_blocks.len()
+    }
+
+    /// Take a free block from a plane (caller assigns its mode).
+    pub fn pop_free(&mut self, plane: PlaneId) -> Option<BlockAddr> {
+        let b = self.planes[plane.0 as usize].free_blocks.pop_front()?;
+        Some(BlockAddr { plane, block: b })
+    }
+
+    /// Take the free block with the lowest erase count among the first
+    /// `window` candidates (wear-levelling allocation, §IV-D2; the
+    /// bounded window keeps allocation O(1)).
+    pub fn pop_free_min_erase(&mut self, plane: PlaneId, window: usize) -> Option<BlockAddr> {
+        let p = &mut self.planes[plane.0 as usize];
+        if p.free_blocks.is_empty() {
+            return None;
+        }
+        let lim = p.free_blocks.len().min(window.max(1));
+        let mut best = 0usize;
+        let mut best_ec = u32::MAX;
+        for i in 0..lim {
+            let b = p.free_blocks[i];
+            let ec = p.blocks[b as usize].erase_count();
+            if ec < best_ec {
+                best_ec = ec;
+                best = i;
+            }
+        }
+        let b = p.free_blocks.remove(best)?;
+        Some(BlockAddr { plane, block: b })
+    }
+
+    /// Return an erased block to the plane's free list.
+    pub fn push_free(&mut self, addr: BlockAddr) -> Result<()> {
+        if !self.block(addr).is_erased() {
+            return Err(Error::invariant("push_free of non-erased block"));
+        }
+        self.planes[addr.plane.0 as usize].free_blocks.push_back(addr.block);
+        Ok(())
+    }
+
+    #[inline]
+    fn occupy(&mut self, plane: PlaneId, now: Nanos, latency: Nanos) -> Completion {
+        let p = &mut self.planes[plane.0 as usize];
+        let start = now.max(p.busy_until);
+        let end = start + latency;
+        p.busy_until = end;
+        Completion { start, end }
+    }
+
+    // --- timed operations -------------------------------------------
+
+    /// Read one page; latency depends on the word line's current kind.
+    pub fn read(&mut self, ppa: Ppa, now: Nanos) -> Result<Completion> {
+        let pa = ppa.expand(&self.geometry);
+        let block = &self.planes[pa.plane.0 as usize].blocks[pa.block as usize];
+        if !block.is_written(pa.page_in_block()) {
+            return Err(Error::Flash(format!("read of unwritten page {ppa:?}")));
+        }
+        let (latency, op) = match block.page_kind(pa.page_in_block()) {
+            super::cell::PageKind::Slc => (self.timing.slc_read, FlashOp::ReadSlc),
+            super::cell::PageKind::Tlc => (self.timing.tlc_read, FlashOp::ReadTlc),
+        };
+        self.count(op, 1);
+        Ok(self.occupy(pa.plane, now, latency))
+    }
+
+    /// Program one SLC page at `addr`'s write pointer.
+    pub fn program_slc(
+        &mut self,
+        addr: BlockAddr,
+        lpn: Lpn,
+        now: Nanos,
+    ) -> Result<(Ppa, Completion)> {
+        let g = self.geometry;
+        let pib = self.block_mut(addr).program_slc(lpn)?;
+        self.count(FlashOp::ProgSlc, 1);
+        let done = self.occupy(addr.plane, now, self.timing.slc_prog);
+        Ok((addr.page(&g, pib / 3, 0), done))
+    }
+
+    /// One-shot TLC program of the next word line with 1..=3 pages.
+    pub fn program_tlc(
+        &mut self,
+        addr: BlockAddr,
+        lpns: &[Lpn],
+        now: Nanos,
+    ) -> Result<(Vec<Ppa>, Completion)> {
+        let g = self.geometry;
+        let slots = self.block_mut(addr).program_tlc_oneshot(lpns)?;
+        self.counters.progs_tlc_wl += 1;
+        self.counters.progs_tlc_pages += slots.len() as u64;
+        let done = self.occupy(addr.plane, now, self.timing.tlc_prog);
+        let ppas = slots.iter().map(|&pib| addr.page(&g, pib / 3, (pib % 3) as u8)).collect();
+        Ok((ppas, done))
+    }
+
+    /// Page-granular TLC program of the next page slot (host path;
+    /// Table I: 3 ms per page).
+    pub fn program_tlc_page(
+        &mut self,
+        addr: BlockAddr,
+        lpn: Lpn,
+        now: Nanos,
+    ) -> Result<(Ppa, Completion)> {
+        let g = self.geometry;
+        let pib = self.block_mut(addr).program_tlc_page(lpn)?;
+        self.counters.progs_tlc_pages += 1;
+        let done = self.occupy(addr.plane, now, self.timing.tlc_prog);
+        Ok((addr.page(&g, pib / 3, (pib % 3) as u8), done))
+    }
+
+    /// One reprogram operation in `addr`'s active IPS window.
+    /// Returns the new page's address, whether the word line is now
+    /// full TLC, and the service interval.
+    pub fn reprogram(
+        &mut self,
+        addr: BlockAddr,
+        lpn: Lpn,
+        now: Nanos,
+    ) -> Result<(Ppa, bool, Completion)> {
+        let g = self.geometry;
+        let max = self.max_reprograms;
+        let (pib, full) = self.block_mut(addr).reprogram_next(lpn, max)?;
+        self.count(FlashOp::Reprogram, 1);
+        let done = self.occupy(addr.plane, now, self.timing.reprogram);
+        Ok((addr.page(&g, pib / 3, (pib % 3) as u8), full, done))
+    }
+
+    /// Erase a block (must hold no valid pages). The block is NOT
+    /// returned to the free list — the owner decides whether it goes
+    /// back to general allocation ([`FlashArray::push_free`]) or stays
+    /// claimed (e.g. as an SLC-cache block awaiting reuse).
+    pub fn erase(&mut self, addr: BlockAddr, now: Nanos) -> Result<Completion> {
+        self.block_mut(addr).erase()?;
+        self.count(FlashOp::Erase, 1);
+        let done = self.occupy(addr.plane, now, self.timing.erase);
+        Ok(done)
+    }
+
+    /// Invalidate a page (timing-neutral metadata update).
+    pub fn invalidate(&mut self, ppa: Ppa) -> Result<()> {
+        let pa = ppa.expand(&self.geometry);
+        self.planes[pa.plane.0 as usize].blocks[pa.block as usize]
+            .invalidate(pa.page_in_block())
+    }
+
+    fn count(&mut self, op: FlashOp, n: u64) {
+        match op {
+            FlashOp::ReadSlc => self.counters.reads_slc += n,
+            FlashOp::ReadTlc => self.counters.reads_tlc += n,
+            FlashOp::ProgSlc => self.counters.progs_slc += n,
+            FlashOp::ProgTlcWl => self.counters.progs_tlc_wl += n,
+            FlashOp::Reprogram => self.counters.reprograms += n,
+            FlashOp::Erase => self.counters.erases += n,
+        }
+    }
+
+    // --- audits -------------------------------------------------------
+
+    /// Recount valid pages across a plane (slow; tests/audits only).
+    pub fn audit_plane(&self, plane: PlaneId) -> Result<()> {
+        for (bi, b) in self.planes[plane.0 as usize].blocks.iter().enumerate() {
+            let recount = b.valid_pages().count() as u32;
+            if recount != b.valid_count() {
+                return Err(Error::invariant(format!(
+                    "plane {} block {bi}: bitmap {recount} != counter {}",
+                    plane.0,
+                    b.valid_count()
+                )));
+            }
+            if b.valid_count() > b.written_count() {
+                return Err(Error::invariant(format!(
+                    "plane {} block {bi}: valid {} > written {}",
+                    plane.0,
+                    b.valid_count(),
+                    b.written_count()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total erase-count spread (wear levelling audit, §IV-D2).
+    pub fn erase_count_spread(&self) -> (u32, u32) {
+        let mut min = u32::MAX;
+        let mut max = 0;
+        for p in &self.planes {
+            for b in &p.blocks {
+                min = min.min(b.erase_count());
+                max = max.max(b.erase_count());
+            }
+        }
+        (if min == u32::MAX { 0 } else { min }, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn array() -> FlashArray {
+        FlashArray::new(&presets::small())
+    }
+
+    #[test]
+    fn free_list_starts_full() {
+        let a = array();
+        let g = *a.geometry();
+        for p in 0..g.planes() {
+            assert_eq!(a.free_block_count(PlaneId(p)), g.blocks_per_plane as usize);
+        }
+    }
+
+    #[test]
+    fn timing_charged_per_plane() {
+        let mut a = array();
+        let t = *a.timing();
+        let b0 = a.pop_free(PlaneId(0)).unwrap();
+        a.block_mut(b0).set_mode(BlockMode::Slc).unwrap();
+        let (_ppa, c1) = a.program_slc(b0, Lpn(1), 0).unwrap();
+        assert_eq!(c1.start, 0);
+        assert_eq!(c1.end, t.slc_prog);
+        // second op on the same plane queues behind the first
+        let (_ppa, c2) = a.program_slc(b0, Lpn(2), 0).unwrap();
+        assert_eq!(c2.start, t.slc_prog);
+        assert_eq!(c2.end, 2 * t.slc_prog);
+        // an op on another plane runs in parallel
+        let b1 = a.pop_free(PlaneId(1)).unwrap();
+        a.block_mut(b1).set_mode(BlockMode::Slc).unwrap();
+        let (_ppa, c3) = a.program_slc(b1, Lpn(3), 0).unwrap();
+        assert_eq!(c3.start, 0);
+    }
+
+    #[test]
+    fn read_latency_tracks_cell_kind() {
+        let mut a = array();
+        let t = *a.timing();
+        let b = a.pop_free(PlaneId(0)).unwrap();
+        a.block_mut(b).set_mode(BlockMode::Ips).unwrap();
+        let (ppa, done) = a.program_slc(b, Lpn(1), 0).unwrap();
+        let c = a.read(ppa, done.end).unwrap();
+        assert_eq!(c.end - c.start, t.slc_read, "SLC page reads at SLC speed");
+        // reprogram the word line to 2 bits → reads become TLC speed
+        let (_p, _f, done) = a.reprogram(b, Lpn(2), c.end).unwrap();
+        let c = a.read(ppa, done.end).unwrap();
+        assert_eq!(c.end - c.start, t.tlc_read, "reprogrammed page reads at TLC speed");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut a = array();
+        let b = a.pop_free(PlaneId(0)).unwrap();
+        a.block_mut(b).set_mode(BlockMode::Tlc).unwrap();
+        a.program_tlc(b, &[Lpn(1), Lpn(2), Lpn(3)], 0).unwrap();
+        a.program_tlc(b, &[Lpn(4)], 0).unwrap();
+        let c = a.counters();
+        assert_eq!(c.progs_tlc_wl, 2);
+        assert_eq!(c.progs_tlc_pages, 4);
+        assert_eq!(c.pages_programmed(), 4);
+    }
+
+    #[test]
+    fn erase_returns_to_free_list() {
+        let mut a = array();
+        let b = a.pop_free(PlaneId(0)).unwrap();
+        let before = a.free_block_count(PlaneId(0));
+        a.block_mut(b).set_mode(BlockMode::Slc).unwrap();
+        a.program_slc(b, Lpn(1), 0).unwrap();
+        let g = *a.geometry();
+        a.invalidate(b.page(&g, 0, 0)).unwrap();
+        a.erase(b, 0).unwrap();
+        assert_eq!(a.free_block_count(PlaneId(0)), before, "erase does not auto-free");
+        a.push_free(b).unwrap();
+        assert_eq!(a.free_block_count(PlaneId(0)), before + 1);
+        assert_eq!(a.counters().erases, 1);
+    }
+
+    #[test]
+    fn unwritten_read_rejected() {
+        let mut a = array();
+        assert!(a.read(Ppa(0), 0).is_err());
+    }
+
+    #[test]
+    fn audit_passes_on_fresh_array() {
+        let a = array();
+        for p in 0..a.geometry().planes() {
+            a.audit_plane(PlaneId(p)).unwrap();
+        }
+    }
+}

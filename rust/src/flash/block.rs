@@ -1,0 +1,683 @@
+//! Block state: word-line states, validity bitmap, sequential write
+//! pointers, and the IPS layer-group window.
+//!
+//! A block operates in one of three modes ([`BlockMode`]):
+//!
+//! * `Tlc` — normal high-density block, one-shot programmed word line
+//!   by word line;
+//! * `Slc` — traditional SLC-cache block: every word line stores one
+//!   page (this is how the baseline/Turbo-Write cache and the
+//!   cooperative design's traditional part are built);
+//! * `Ips` — the paper's in-place-switch block: word lines are first
+//!   SLC-programmed *inside the active layer group* (default two
+//!   layers, the reprogram reliability window of [7]), later
+//!   reprogrammed in place to full TLC, after which the next layer
+//!   group becomes the new SLC window (paper Fig. 6a, Steps 1–3).
+
+use super::cell::{PageKind, WlState};
+use super::geometry::Lpn;
+use crate::config::Geometry;
+use crate::{Error, Result};
+
+/// Operating mode of a block (assigned while erased, sticky until
+/// reassigned).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockMode {
+    /// One-shot TLC block.
+    Tlc,
+    /// Traditional SLC-cache block (1 page / word line over the whole block).
+    Slc,
+    /// IPS block with a moving SLC layer-group window.
+    Ips,
+}
+
+/// Sentinel for "no LPN" in per-page back-pointers.
+pub const NO_LPN: u32 = u32::MAX;
+
+/// One flash block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    mode: BlockMode,
+    /// Per-word-line state.
+    wls: Vec<WlState>,
+    /// Validity bitmap over TLC page slots (`pages_per_block` bits).
+    valid: Vec<u64>,
+    /// Back-pointers: LPN stored in each page slot (for GC); lazily
+    /// allocated on first program to keep untouched blocks cheap.
+    p2l: Vec<u32>,
+    /// Number of currently valid pages.
+    valid_count: u32,
+    /// Number of written (programmed) pages, valid or not.
+    written_count: u32,
+    /// Next word line for an initial program.
+    write_wl: u32,
+    /// `Tlc` mode only: next bit within `write_wl` for page-granular
+    /// programming (0 = LSB, 1 = CSB, 2 = MSB).
+    write_bit: u8,
+    /// IPS: index of the active layer group serving as the SLC window.
+    active_group: u32,
+    /// IPS: next word line (within the active group) to reprogram.
+    reprog_wl: u32,
+    /// Lifetime erase count (wear levelling metric, paper §IV-D2).
+    erase_count: u32,
+    /// Word lines per block (cached from geometry).
+    n_wls: u32,
+    /// Word lines per IPS layer group.
+    group_wls: u32,
+}
+
+impl Block {
+    /// Create an erased block.
+    pub fn new(g: &Geometry, group_layers: u32) -> Block {
+        let n_wls = g.wordlines_per_block();
+        Block {
+            mode: BlockMode::Tlc,
+            wls: vec![WlState::ERASED; n_wls as usize],
+            valid: vec![0u64; (g.pages_per_block as usize + 63) / 64],
+            p2l: Vec::new(),
+            valid_count: 0,
+            written_count: 0,
+            write_wl: 0,
+            write_bit: 0,
+            active_group: 0,
+            reprog_wl: 0,
+            erase_count: 0,
+            n_wls,
+            group_wls: group_layers * g.wordlines_per_layer,
+        }
+    }
+
+    // --- accessors -------------------------------------------------
+
+    /// Current mode.
+    pub fn mode(&self) -> BlockMode {
+        self.mode
+    }
+    /// Valid page count.
+    pub fn valid_count(&self) -> u32 {
+        self.valid_count
+    }
+    /// Written (programmed) page count, valid or not.
+    pub fn written_count(&self) -> u32 {
+        self.written_count
+    }
+    /// Invalid (written but superseded) page count.
+    pub fn invalid_count(&self) -> u32 {
+        self.written_count - self.valid_count
+    }
+    /// Lifetime erases.
+    pub fn erase_count(&self) -> u32 {
+        self.erase_count
+    }
+    /// Is the block completely erased?
+    pub fn is_erased(&self) -> bool {
+        self.written_count == 0
+            && self.write_wl == 0
+            && self.write_bit == 0
+            && self.wls.iter().all(|w| w.is_erased())
+    }
+    /// Word-line state (for audits).
+    pub fn wl(&self, wl: u32) -> WlState {
+        self.wls[wl as usize]
+    }
+    /// IPS active layer group index.
+    pub fn active_group(&self) -> u32 {
+        self.active_group
+    }
+    /// Number of layer groups in this block.
+    pub fn group_count(&self) -> u32 {
+        self.n_wls / self.group_wls
+    }
+
+    /// Page validity.
+    pub fn is_valid(&self, pib: u32) -> bool {
+        self.valid[(pib / 64) as usize] >> (pib % 64) & 1 == 1
+    }
+
+    /// Has the page slot been programmed?
+    pub fn is_written(&self, pib: u32) -> bool {
+        let wl = pib / 3;
+        let bit = (pib % 3) as u8;
+        self.wls[wl as usize].pages() > bit
+    }
+
+    /// LPN stored at a page slot (panics if never programmed).
+    pub fn lpn_at(&self, pib: u32) -> Option<Lpn> {
+        let v = *self.p2l.get(pib as usize)?;
+        if v == NO_LPN {
+            None
+        } else {
+            Some(Lpn(v as u64))
+        }
+    }
+
+    /// Storage kind of a page (drives read latency).
+    ///
+    /// `Slc` blocks always read at SLC speed; `Tlc` blocks at TLC
+    /// speed; `Ips` blocks depend on how far the word line has been
+    /// reprogrammed (an SLC page reads fast until its word line holds
+    /// ≥ 2 bits per cell).
+    pub fn page_kind(&self, pib: u32) -> PageKind {
+        match self.mode {
+            BlockMode::Slc => PageKind::Slc,
+            BlockMode::Tlc => PageKind::Tlc,
+            BlockMode::Ips => self.wls[(pib / 3) as usize].kind(),
+        }
+    }
+
+    /// Iterate valid page slots (ascending).
+    pub fn valid_pages(&self) -> impl Iterator<Item = u32> + '_ {
+        self.valid
+            .iter()
+            .enumerate()
+            .flat_map(|(w, &bits)| BitIter { bits, base: w as u32 * 64 })
+    }
+
+    // --- mode management -------------------------------------------
+
+    /// Assign a mode; only legal while erased.
+    pub fn set_mode(&mut self, mode: BlockMode) -> Result<()> {
+        if !self.is_erased() {
+            return Err(Error::Flash("mode change on non-erased block".into()));
+        }
+        self.mode = mode;
+        Ok(())
+    }
+
+    // --- SLC window / capacity queries ------------------------------
+
+    /// Word lines still available for an initial SLC program.
+    ///
+    /// `Slc` blocks: the rest of the block. `Ips` blocks: the erased
+    /// remainder of the active layer group. `Tlc` blocks: 0.
+    pub fn slc_free_wls(&self) -> u32 {
+        match self.mode {
+            BlockMode::Slc => self.n_wls - self.write_wl,
+            BlockMode::Ips => {
+                let group_end = (self.active_group + 1) * self.group_wls;
+                group_end.saturating_sub(self.write_wl.max(self.active_group * self.group_wls))
+            }
+            BlockMode::Tlc => 0,
+        }
+    }
+
+    /// IPS: word lines in the active group that are programmed but not
+    /// yet full TLC (i.e. reprogram work remaining, in units of word
+    /// lines; each needs up to 2 reprogram operations).
+    pub fn reprogrammable_wls(&self) -> u32 {
+        if self.mode != BlockMode::Ips {
+            return 0;
+        }
+        let group_start = self.active_group * self.group_wls;
+        let group_end = group_start + self.group_wls;
+        (group_start.max(self.reprog_wl)..group_end.min(self.write_wl))
+            .filter(|&wl| !self.wls[wl as usize].is_full() && !self.wls[wl as usize].is_erased())
+            .count() as u32
+    }
+
+    /// IPS: individual reprogram operations remaining in the active group.
+    pub fn reprogram_ops_remaining(&self) -> u32 {
+        if self.mode != BlockMode::Ips {
+            return 0;
+        }
+        let group_start = self.active_group * self.group_wls;
+        let group_end = group_start + self.group_wls;
+        (group_start..group_end.min(self.write_wl))
+            .map(|wl| 3u32.saturating_sub(self.wls[wl as usize].pages() as u32))
+            .sum()
+    }
+
+    /// Free one-shot TLC word lines (for `Tlc` blocks; only whole
+    /// erased word lines count).
+    pub fn tlc_free_wls(&self) -> u32 {
+        match self.mode {
+            BlockMode::Tlc => {
+                let partial = if self.write_bit > 0 { 1 } else { 0 };
+                self.n_wls - self.write_wl - partial
+            }
+            _ => 0,
+        }
+    }
+
+    /// Free page slots for page-granular TLC programming.
+    pub fn tlc_free_pages(&self) -> u32 {
+        match self.mode {
+            BlockMode::Tlc => {
+                (self.n_wls - self.write_wl) * 3 - self.write_bit as u32
+            }
+            _ => 0,
+        }
+    }
+
+    /// IPS: the word line the next reprogram operation will target
+    /// (programmed but not full, inside the active group), if any.
+    pub fn next_reprogram_wl(&self) -> Option<u32> {
+        if self.mode != BlockMode::Ips {
+            return None;
+        }
+        let group_start = self.active_group * self.group_wls;
+        let group_end = group_start + self.group_wls;
+        (group_start.max(self.reprog_wl)..group_end.min(self.write_wl)).find(|&wl| {
+            let s = self.wls[wl as usize];
+            !s.is_erased() && !s.is_full()
+        })
+    }
+
+    /// Does the block have another layer group after the active one?
+    pub fn has_next_group(&self) -> bool {
+        self.mode == BlockMode::Ips && self.active_group + 1 < self.group_count()
+    }
+
+    // --- programming -----------------------------------------------
+
+    fn ensure_p2l(&mut self) {
+        if self.p2l.is_empty() {
+            self.p2l = vec![NO_LPN; self.wls.len() * 3];
+        }
+    }
+
+    fn mark_written(&mut self, pib: u32, lpn: Lpn) {
+        self.ensure_p2l();
+        self.p2l[pib as usize] = lpn.0 as u32;
+        self.valid[(pib / 64) as usize] |= 1 << (pib % 64);
+        self.valid_count += 1;
+        self.written_count += 1;
+    }
+
+    /// Program one SLC page at the write pointer; returns the page slot.
+    ///
+    /// Legal on `Slc` blocks anywhere, on `Ips` blocks only inside the
+    /// active layer group.
+    pub fn program_slc(&mut self, lpn: Lpn) -> Result<u32> {
+        match self.mode {
+            BlockMode::Tlc => {
+                return Err(Error::Flash("SLC program on TLC block".into()));
+            }
+            BlockMode::Ips => {
+                let group_start = self.active_group * self.group_wls;
+                let group_end = group_start + self.group_wls;
+                if self.write_wl < group_start || self.write_wl >= group_end {
+                    return Err(Error::Flash(format!(
+                        "IPS SLC program outside active group (wl {} not in [{},{}))",
+                        self.write_wl, group_start, group_end
+                    )));
+                }
+            }
+            BlockMode::Slc => {}
+        }
+        if self.write_wl >= self.n_wls {
+            return Err(Error::Flash("SLC program past end of block".into()));
+        }
+        let wl = self.write_wl;
+        self.wls[wl as usize] = self.wls[wl as usize].program_slc()?;
+        self.write_wl += 1;
+        let pib = wl * 3;
+        self.mark_written(pib, lpn);
+        Ok(pib)
+    }
+
+    /// One-shot TLC program of the next word line with 1..=3 LPNs;
+    /// unfilled slots are wasted (marked written+invalid is *not*
+    /// needed — they are simply never valid). Returns the page slots
+    /// actually used.
+    pub fn program_tlc_oneshot(&mut self, lpns: &[Lpn]) -> Result<Vec<u32>> {
+        if self.mode != BlockMode::Tlc {
+            return Err(Error::Flash("one-shot TLC program on non-TLC block".into()));
+        }
+        if lpns.is_empty() || lpns.len() > 3 {
+            return Err(Error::Flash("one-shot program needs 1..=3 pages".into()));
+        }
+        if self.write_wl >= self.n_wls {
+            return Err(Error::Flash("TLC program past end of block".into()));
+        }
+        if self.write_bit != 0 {
+            return Err(Error::Flash(
+                "one-shot program on a partially page-programmed word line".into(),
+            ));
+        }
+        let wl = self.write_wl;
+        self.wls[wl as usize] = self.wls[wl as usize].program_tlc_oneshot()?;
+        self.write_wl += 1;
+        let mut slots = Vec::with_capacity(lpns.len());
+        for (i, &lpn) in lpns.iter().enumerate() {
+            let pib = wl * 3 + i as u32;
+            self.mark_written(pib, lpn);
+            slots.push(pib);
+        }
+        // wasted slots still count as written capacity
+        self.written_count += (3 - lpns.len()) as u32;
+        Ok(slots)
+    }
+
+    /// Page-granular TLC program: writes the next page slot (LSB →
+    /// CSB → MSB per word line, sequentially) at TLC-program latency.
+    /// This is the host-write path's TLC programming model (paper
+    /// Table I: "3 ms for TLC write" per page). Returns the page slot.
+    pub fn program_tlc_page(&mut self, lpn: Lpn) -> Result<u32> {
+        if self.mode != BlockMode::Tlc {
+            return Err(Error::Flash("page-granular TLC program on non-TLC block".into()));
+        }
+        if self.write_wl >= self.n_wls {
+            return Err(Error::Flash("TLC program past end of block".into()));
+        }
+        let wl = self.write_wl;
+        self.wls[wl as usize] = self.wls[wl as usize].program_incremental()?;
+        let pib = wl * 3 + self.write_bit as u32;
+        self.write_bit += 1;
+        if self.write_bit == 3 {
+            self.write_bit = 0;
+            self.write_wl += 1;
+        }
+        self.mark_written(pib, lpn);
+        Ok(pib)
+    }
+
+    /// One reprogram operation on the IPS window: adds one page (CSB
+    /// or MSB) to the next not-yet-full word line in the active group,
+    /// sequentially. Returns `(page_slot, wordline_now_full)`.
+    pub fn reprogram_next(&mut self, lpn: Lpn, max_reprograms: u32) -> Result<(u32, bool)> {
+        if self.mode != BlockMode::Ips {
+            return Err(Error::Flash("reprogram on non-IPS block".into()));
+        }
+        let group_start = self.active_group * self.group_wls;
+        let group_end = group_start + self.group_wls;
+        // advance the reprogram pointer past full word lines
+        let mut wl = self.reprog_wl.max(group_start);
+        while wl < group_end && (self.wls[wl as usize].is_full()) {
+            wl += 1;
+        }
+        if wl >= group_end || wl >= self.write_wl {
+            return Err(Error::Flash("no reprogrammable word line in active group".into()));
+        }
+        let state = self.wls[wl as usize];
+        if state.is_erased() {
+            return Err(Error::Flash("reprogram reached an erased word line".into()));
+        }
+        let bit = state.next_bit();
+        self.wls[wl as usize] = state.reprogram(max_reprograms)?;
+        let pib = wl * 3 + bit as u32;
+        self.mark_written(pib, lpn);
+        let full = self.wls[wl as usize].is_full();
+        self.reprog_wl = if full { wl + 1 } else { wl };
+        Ok((pib, full))
+    }
+
+    /// Advance the IPS window to the next layer group once the active
+    /// one is fully reprogrammed (paper Fig. 6a Step 3). Returns the new
+    /// group index.
+    pub fn advance_group(&mut self) -> Result<u32> {
+        if self.mode != BlockMode::Ips {
+            return Err(Error::Flash("advance_group on non-IPS block".into()));
+        }
+        let group_start = self.active_group * self.group_wls;
+        let group_end = group_start + self.group_wls;
+        let all_full =
+            (group_start..group_end).all(|wl| self.wls[wl as usize].is_full());
+        if !all_full {
+            return Err(Error::Flash(
+                "cannot advance: active group not fully reprogrammed".into(),
+            ));
+        }
+        if !self.has_next_group() {
+            return Err(Error::Flash("no next layer group".into()));
+        }
+        self.active_group += 1;
+        self.write_wl = self.active_group * self.group_wls;
+        self.reprog_wl = self.write_wl;
+        Ok(self.active_group)
+    }
+
+    // --- invalidation / erase ---------------------------------------
+
+    /// Invalidate a page slot (its LPN was overwritten or migrated).
+    pub fn invalidate(&mut self, pib: u32) -> Result<()> {
+        if !self.is_valid(pib) {
+            return Err(Error::invariant(format!("double invalidate of page {pib}")));
+        }
+        self.valid[(pib / 64) as usize] &= !(1 << (pib % 64));
+        self.valid_count -= 1;
+        if !self.p2l.is_empty() {
+            self.p2l[pib as usize] = NO_LPN;
+        }
+        Ok(())
+    }
+
+    /// Erase the block. Only legal when no valid pages remain.
+    pub fn erase(&mut self) -> Result<()> {
+        if self.valid_count != 0 {
+            return Err(Error::invariant(format!(
+                "erase of block with {} valid pages",
+                self.valid_count
+            )));
+        }
+        for wl in &mut self.wls {
+            *wl = wl.erase();
+        }
+        for w in &mut self.valid {
+            *w = 0;
+        }
+        self.p2l.clear();
+        self.p2l.shrink_to_fit();
+        self.written_count = 0;
+        self.write_wl = 0;
+        self.write_bit = 0;
+        self.active_group = 0;
+        self.reprog_wl = 0;
+        self.erase_count += 1;
+        Ok(())
+    }
+}
+
+struct BitIter {
+    bits: u64,
+    base: u32,
+}
+
+impl Iterator for BitIter {
+    type Item = u32;
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.bits == 0 {
+            return None;
+        }
+        let tz = self.bits.trailing_zeros();
+        self.bits &= self.bits - 1;
+        Some(self.base + tz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::prop::{self, one_of, vec_of};
+
+    fn small_block() -> (Block, Geometry) {
+        let g = presets::small().geometry;
+        (Block::new(&g, 2), g)
+    }
+
+    #[test]
+    fn slc_block_fills_every_wordline() {
+        let (mut b, g) = small_block();
+        b.set_mode(BlockMode::Slc).unwrap();
+        let n = g.wordlines_per_block();
+        for i in 0..n {
+            let pib = b.program_slc(Lpn(i as u64)).unwrap();
+            assert_eq!(pib, i * 3);
+        }
+        assert_eq!(b.slc_free_wls(), 0);
+        assert!(b.program_slc(Lpn(0)).is_err());
+        assert_eq!(b.valid_count(), n);
+    }
+
+    #[test]
+    fn ips_block_full_cycle() {
+        let (mut b, g) = small_block();
+        b.set_mode(BlockMode::Ips).unwrap();
+        let group_wls = 2 * g.wordlines_per_layer; // 4
+        // Step 1: fill the SLC window
+        for i in 0..group_wls {
+            b.program_slc(Lpn(i as u64)).unwrap();
+        }
+        assert_eq!(b.slc_free_wls(), 0);
+        assert!(b.program_slc(Lpn(99)).is_err(), "window exhausted");
+        // Step 2: reprogram 2 ops per word line
+        assert_eq!(b.reprogram_ops_remaining(), group_wls * 2);
+        let mut added = 0;
+        while b.reprogram_ops_remaining() > 0 {
+            let (_pib, _full) = b.reprogram_next(Lpn(100 + added), 2).unwrap();
+            added += 1;
+        }
+        assert_eq!(added as u32, group_wls * 2);
+        // Step 3: advance to the next group; SLC writes flow again
+        b.advance_group().unwrap();
+        assert_eq!(b.active_group(), 1);
+        assert_eq!(b.slc_free_wls(), group_wls);
+        b.program_slc(Lpn(500)).unwrap();
+        // original SLC data still valid (in-place, no migration)
+        assert!(b.is_valid(0));
+        assert_eq!(b.lpn_at(0), Some(Lpn(0)));
+    }
+
+    #[test]
+    fn ips_reprogram_requires_window() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Ips).unwrap();
+        assert!(b.reprogram_next(Lpn(0), 2).is_err(), "nothing programmed yet");
+        b.program_slc(Lpn(1)).unwrap();
+        let (pib, full) = b.reprogram_next(Lpn(2), 2).unwrap();
+        assert_eq!(pib, 1); // CSB of wl 0
+        assert!(!full);
+        let (pib, full) = b.reprogram_next(Lpn(3), 2).unwrap();
+        assert_eq!(pib, 2); // MSB of wl 0
+        assert!(full);
+        assert!(b.reprogram_next(Lpn(4), 2).is_err(), "wl1 never SLC-programmed");
+    }
+
+    #[test]
+    fn advance_requires_full_group() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Ips).unwrap();
+        b.program_slc(Lpn(1)).unwrap();
+        assert!(b.advance_group().is_err());
+    }
+
+    #[test]
+    fn oneshot_tlc_and_waste_accounting() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Tlc).unwrap();
+        let slots = b.program_tlc_oneshot(&[Lpn(1), Lpn(2), Lpn(3)]).unwrap();
+        assert_eq!(slots, vec![0, 1, 2]);
+        let slots = b.program_tlc_oneshot(&[Lpn(4)]).unwrap();
+        assert_eq!(slots, vec![3]);
+        assert_eq!(b.valid_count(), 4);
+        assert_eq!(b.written_count(), 6); // 2 slots wasted on wl 1
+    }
+
+    #[test]
+    fn page_granular_tlc_fills_sequentially() {
+        let (mut b, g) = small_block();
+        b.set_mode(BlockMode::Tlc).unwrap();
+        let total = g.pages_per_block;
+        for i in 0..total {
+            let pib = b.program_tlc_page(Lpn(i as u64)).unwrap();
+            assert_eq!(pib, i, "slots fill in order");
+        }
+        assert_eq!(b.tlc_free_pages(), 0);
+        assert!(b.program_tlc_page(Lpn(0)).is_err());
+        assert_eq!(b.valid_count(), total);
+        assert_eq!(b.written_count(), total);
+    }
+
+    #[test]
+    fn oneshot_rejected_mid_wordline() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Tlc).unwrap();
+        b.program_tlc_page(Lpn(1)).unwrap(); // wl0 partially programmed
+        assert!(b.program_tlc_oneshot(&[Lpn(2), Lpn(3), Lpn(4)]).is_err());
+        // finish the word line page-granularly, then one-shot works
+        b.program_tlc_page(Lpn(2)).unwrap();
+        b.program_tlc_page(Lpn(3)).unwrap();
+        b.program_tlc_oneshot(&[Lpn(4), Lpn(5), Lpn(6)]).unwrap();
+    }
+
+    #[test]
+    fn erase_rules() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Slc).unwrap();
+        b.program_slc(Lpn(7)).unwrap();
+        assert!(b.erase().is_err(), "valid page present");
+        b.invalidate(0).unwrap();
+        assert!(b.invalidate(0).is_err(), "double invalidate");
+        b.erase().unwrap();
+        assert!(b.is_erased());
+        assert_eq!(b.erase_count(), 1);
+        // mode change now legal
+        b.set_mode(BlockMode::Tlc).unwrap();
+    }
+
+    #[test]
+    fn valid_pages_iterator() {
+        let (mut b, _g) = small_block();
+        b.set_mode(BlockMode::Tlc).unwrap();
+        b.program_tlc_oneshot(&[Lpn(1), Lpn(2), Lpn(3)]).unwrap();
+        b.invalidate(1).unwrap();
+        let v: Vec<u32> = b.valid_pages().collect();
+        assert_eq!(v, vec![0, 2]);
+    }
+
+    /// Property: random legal op sequences keep counts consistent.
+    #[test]
+    fn block_counters_consistent_under_random_ops() {
+        #[derive(Clone, Debug)]
+        enum Op {
+            Slc,
+            Reprog,
+            InvalidateFirst,
+            Advance,
+        }
+        let gen = vec_of(
+            one_of(vec![Op::Slc, Op::Reprog, Op::InvalidateFirst, Op::Advance]),
+            0,
+            64,
+        );
+        prop::check("block counters consistent", 256, gen, |ops| {
+            let g = presets::small().geometry;
+            let mut b = Block::new(&g, 2);
+            b.set_mode(BlockMode::Ips).unwrap();
+            let mut lpn = 0u64;
+            for op in ops {
+                lpn += 1;
+                match op {
+                    Op::Slc => {
+                        let _ = b.program_slc(Lpn(lpn));
+                    }
+                    Op::Reprog => {
+                        let _ = b.reprogram_next(Lpn(lpn), 2);
+                    }
+                    Op::InvalidateFirst => {
+                        let first = b.valid_pages().next();
+                        if let Some(p) = first {
+                            b.invalidate(p).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    Op::Advance => {
+                        let _ = b.advance_group();
+                    }
+                }
+                let recount = b.valid_pages().count() as u32;
+                if recount != b.valid_count() {
+                    return Err(format!(
+                        "bitmap count {recount} != counter {}",
+                        b.valid_count()
+                    ));
+                }
+                if b.valid_count() > b.written_count() {
+                    return Err("valid > written".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,259 @@
+//! Word-line cell state: how many pages a word line currently stores
+//! and how it got there (program vs reprogram).
+//!
+//! A TLC word line stores up to three pages (LSB/CSB/MSB). The paper's
+//! IPS design uses it in three shapes:
+//!
+//! * **TLC one-shot**: erased → 3 pages in one program operation;
+//! * **SLC**: erased → 1 page (two low voltage states, Fig. 6b);
+//! * **IPS reprogram**: SLC word line → +CSB (reprogram #1) → +MSB
+//!   (reprogram #2), each at TLC-program latency.
+//!
+//! [`WlState`] tracks `(pages_programmed, reprogram_count)` in a single
+//! byte; the restrictions of the device study [7] — at most
+//! `max_reprograms` reprograms per word line, reprogramming only inside
+//! the active two-layer window, sequential order — are enforced here
+//! and in [`super::block`].
+
+use crate::{Error, Result};
+
+/// How a page is currently stored — determines read latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageKind {
+    /// Word line holds a single bit per cell: SLC read speed.
+    Slc,
+    /// Word line holds ≥ 2 bits per cell: TLC read speed.
+    Tlc,
+}
+
+/// Per-word-line programming state, packed into one byte:
+/// low nibble = pages programmed (0..=3), high nibble = reprogram count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct WlState(u8);
+
+impl WlState {
+    /// Erased, never programmed.
+    pub const ERASED: WlState = WlState(0);
+
+    /// Pages currently programmed on this word line (0..=3).
+    #[inline]
+    pub fn pages(self) -> u8 {
+        self.0 & 0x0f
+    }
+
+    /// Reprogram operations applied since the initial program.
+    #[inline]
+    pub fn reprograms(self) -> u8 {
+        self.0 >> 4
+    }
+
+    /// Is the word line erased?
+    #[inline]
+    pub fn is_erased(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Current storage kind (valid only if programmed).
+    #[inline]
+    pub fn kind(self) -> PageKind {
+        if self.pages() <= 1 {
+            PageKind::Slc
+        } else {
+            PageKind::Tlc
+        }
+    }
+
+    /// Word line is fully TLC (3 pages).
+    #[inline]
+    pub fn is_full(self) -> bool {
+        self.pages() == 3
+    }
+
+    /// Apply an SLC program (erased → 1 page, bit 0).
+    pub fn program_slc(self) -> Result<WlState> {
+        if !self.is_erased() {
+            return Err(Error::Flash(format!(
+                "SLC program on non-erased word line ({} pages)",
+                self.pages()
+            )));
+        }
+        Ok(WlState(1))
+    }
+
+    /// Apply a TLC one-shot program (erased → 3 pages).
+    pub fn program_tlc_oneshot(self) -> Result<WlState> {
+        if !self.is_erased() {
+            return Err(Error::Flash(format!(
+                "one-shot TLC program on non-erased word line ({} pages)",
+                self.pages()
+            )));
+        }
+        Ok(WlState(3))
+    }
+
+    /// Apply a page-granular (incremental / shadow) TLC program: adds
+    /// one page without consuming reprogram budget. Only legal on
+    /// word lines of `Tlc`-mode blocks (enforced by [`super::block`]);
+    /// this is how the host write path programs TLC space one page at
+    /// a time at the Table-I 3 ms latency.
+    pub fn program_incremental(self) -> Result<WlState> {
+        let pages = self.pages();
+        if pages >= 3 {
+            return Err(Error::Flash("incremental program on full word line".into()));
+        }
+        if self.reprograms() > 0 {
+            return Err(Error::Flash(
+                "incremental program on a reprogrammed word line".into(),
+            ));
+        }
+        Ok(WlState((pages + 1) | (self.0 & 0xf0)))
+    }
+
+    /// Apply one reprogram operation (adds exactly one page).
+    ///
+    /// `max_reprograms` is the per-word-line budget (paper/[7]: IPS uses
+    /// 2; the device tolerates at most 4).
+    pub fn reprogram(self, max_reprograms: u32) -> Result<WlState> {
+        let pages = self.pages();
+        if pages == 0 {
+            return Err(Error::Flash("reprogram on erased word line".into()));
+        }
+        if pages >= 3 {
+            return Err(Error::Flash("reprogram on full TLC word line".into()));
+        }
+        let reps = self.reprograms();
+        if reps as u32 >= max_reprograms {
+            return Err(Error::Flash(format!(
+                "reprogram budget exhausted ({reps}/{max_reprograms})"
+            )));
+        }
+        Ok(WlState((pages + 1) | ((reps + 1) << 4)))
+    }
+
+    /// Erase back to the pristine state.
+    #[inline]
+    pub fn erase(self) -> WlState {
+        WlState::ERASED
+    }
+
+    /// Bit position the *next* reprogram would fill (1 = CSB, 2 = MSB).
+    #[inline]
+    pub fn next_bit(self) -> u8 {
+        self.pages()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, one_of, vec_of};
+
+    #[test]
+    fn slc_then_two_reprograms_reach_tlc() {
+        let wl = WlState::ERASED.program_slc().unwrap();
+        assert_eq!(wl.pages(), 1);
+        assert_eq!(wl.kind(), PageKind::Slc);
+        let wl = wl.reprogram(2).unwrap();
+        assert_eq!(wl.pages(), 2);
+        assert_eq!(wl.kind(), PageKind::Tlc);
+        assert_eq!(wl.reprograms(), 1);
+        let wl = wl.reprogram(2).unwrap();
+        assert!(wl.is_full());
+        assert_eq!(wl.reprograms(), 2);
+        // third reprogram rejected: word line is full
+        assert!(wl.reprogram(4).is_err());
+    }
+
+    #[test]
+    fn oneshot_tlc() {
+        let wl = WlState::ERASED.program_tlc_oneshot().unwrap();
+        assert!(wl.is_full());
+        assert_eq!(wl.reprograms(), 0);
+        assert!(wl.program_slc().is_err());
+        assert!(wl.program_tlc_oneshot().is_err());
+    }
+
+    #[test]
+    fn incremental_tlc_fills_without_budget() {
+        let mut wl = WlState::ERASED;
+        for expect in 1..=3u8 {
+            wl = wl.program_incremental().unwrap();
+            assert_eq!(wl.pages(), expect);
+            assert_eq!(wl.reprograms(), 0);
+        }
+        assert!(wl.program_incremental().is_err());
+        // reprogrammed word lines cannot be incrementally programmed
+        let wl = WlState::ERASED.program_slc().unwrap().reprogram(2).unwrap();
+        assert!(wl.program_incremental().is_err());
+    }
+
+    #[test]
+    fn reprogram_budget_enforced() {
+        let wl = WlState::ERASED.program_slc().unwrap();
+        let wl = wl.reprogram(1).unwrap();
+        assert!(wl.reprogram(1).is_err(), "budget of 1 exhausted");
+        assert!(wl.reprogram(2).is_ok(), "budget of 2 allows the second");
+    }
+
+    #[test]
+    fn erased_cannot_be_reprogrammed() {
+        assert!(WlState::ERASED.reprogram(2).is_err());
+    }
+
+    #[test]
+    fn erase_resets() {
+        let wl = WlState::ERASED.program_slc().unwrap().reprogram(2).unwrap();
+        assert_eq!(wl.erase(), WlState::ERASED);
+    }
+
+    #[test]
+    fn next_bit_tracks_pages() {
+        let wl = WlState::ERASED.program_slc().unwrap();
+        assert_eq!(wl.next_bit(), 1); // CSB next
+        let wl = wl.reprogram(2).unwrap();
+        assert_eq!(wl.next_bit(), 2); // MSB next
+    }
+
+    /// Property: under ANY random op sequence, the invariants hold —
+    /// pages ∈ [0,3]; reprograms never exceed the budget; pages only
+    /// reachable through legal transitions.
+    #[test]
+    fn random_op_sequences_preserve_invariants() {
+        #[derive(Clone, Debug)]
+        enum Op {
+            ProgSlc,
+            ProgTlc,
+            Reprog,
+            Erase,
+        }
+        let gen = vec_of(
+            one_of(vec![Op::ProgSlc, Op::ProgTlc, Op::Reprog, Op::Erase]),
+            0,
+            24,
+        );
+        prop::check("wl state machine closed under ops", 512, gen, |ops| {
+            let mut wl = WlState::ERASED;
+            for op in ops {
+                let next = match op {
+                    Op::ProgSlc => wl.program_slc(),
+                    Op::ProgTlc => wl.program_tlc_oneshot(),
+                    Op::Reprog => wl.reprogram(2),
+                    Op::Erase => Ok(wl.erase()),
+                };
+                if let Ok(n) = next {
+                    wl = n;
+                }
+                if wl.pages() > 3 {
+                    return Err(format!("pages out of range: {wl:?}"));
+                }
+                if wl.reprograms() > 2 {
+                    return Err(format!("budget exceeded: {wl:?}"));
+                }
+                if wl.reprograms() > 0 && wl.pages() <= wl.reprograms() {
+                    return Err(format!("inconsistent counts: {wl:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! Physical addressing: planes, blocks, word lines, layers, pages.
+//!
+//! A physical page address ([`Ppa`]) is a flat `u64` index over the
+//! whole SSD in (plane, block, word line, bit) order; helpers convert
+//! between the flat form and structured [`PageAddr`]. Flat indices keep
+//! the mapping tables dense (`u32`-sized at Table-I scale) and the hot
+//! path free of hashing.
+
+use crate::config::Geometry;
+
+/// Logical page number (host side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Lpn(pub u64);
+
+/// Flat physical page address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ppa(pub u64);
+
+/// Global plane index in `[0, geometry.planes())`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlaneId(pub u32);
+
+/// Block coordinate: plane + block-within-plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockAddr {
+    /// Owning plane.
+    pub plane: PlaneId,
+    /// Block index within the plane.
+    pub block: u32,
+}
+
+/// Fully structured page address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageAddr {
+    /// Owning plane.
+    pub plane: PlaneId,
+    /// Block within plane.
+    pub block: u32,
+    /// Word line within block.
+    pub wordline: u32,
+    /// Bit position on the word line: 0 = LSB, 1 = CSB, 2 = MSB.
+    pub bit: u8,
+}
+
+impl PlaneId {
+    /// Decompose into (channel, chip, die, plane-in-die).
+    pub fn decompose(self, g: &Geometry) -> (u32, u32, u32, u32) {
+        let per_channel = g.chips_per_channel * g.dies_per_chip * g.planes_per_die;
+        let per_chip = g.dies_per_chip * g.planes_per_die;
+        let per_die = g.planes_per_die;
+        let channel = self.0 / per_channel;
+        let rem = self.0 % per_channel;
+        let chip = rem / per_chip;
+        let rem = rem % per_chip;
+        let die = rem / per_die;
+        let plane = rem % per_die;
+        (channel, chip, die, plane)
+    }
+
+    /// Compose from (channel, chip, die, plane-in-die).
+    pub fn compose(g: &Geometry, channel: u32, chip: u32, die: u32, plane: u32) -> PlaneId {
+        let per_channel = g.chips_per_channel * g.dies_per_chip * g.planes_per_die;
+        let per_chip = g.dies_per_chip * g.planes_per_die;
+        let per_die = g.planes_per_die;
+        PlaneId(channel * per_channel + chip * per_chip + die * per_die + plane)
+    }
+
+    /// Channel index of this plane (for bus-level accounting).
+    pub fn channel(self, g: &Geometry) -> u32 {
+        self.decompose(g).0
+    }
+}
+
+impl PageAddr {
+    /// Page index within its block (`wordline * 3 + bit`).
+    pub fn page_in_block(&self) -> u32 {
+        self.wordline * 3 + self.bit as u32
+    }
+
+    /// Layer index of this page's word line.
+    pub fn layer(&self, g: &Geometry) -> u32 {
+        self.wordline / g.wordlines_per_layer
+    }
+
+    /// Flatten to a [`Ppa`].
+    pub fn flatten(&self, g: &Geometry) -> Ppa {
+        let per_plane = g.pages_per_plane();
+        let per_block = g.pages_per_block as u64;
+        Ppa(self.plane.0 as u64 * per_plane
+            + self.block as u64 * per_block
+            + self.page_in_block() as u64)
+    }
+}
+
+impl Ppa {
+    /// Expand a flat address into its structured form.
+    pub fn expand(self, g: &Geometry) -> PageAddr {
+        let per_plane = g.pages_per_plane();
+        let per_block = g.pages_per_block as u64;
+        let plane = (self.0 / per_plane) as u32;
+        let rem = self.0 % per_plane;
+        let block = (rem / per_block) as u32;
+        let pib = (rem % per_block) as u32;
+        PageAddr { plane: PlaneId(plane), block, wordline: pib / 3, bit: (pib % 3) as u8 }
+    }
+
+    /// Owning block.
+    pub fn block(self, g: &Geometry) -> BlockAddr {
+        let pa = self.expand(g);
+        BlockAddr { plane: pa.plane, block: pa.block }
+    }
+}
+
+impl BlockAddr {
+    /// Flat page address of (wordline, bit) in this block.
+    pub fn page(self, g: &Geometry, wordline: u32, bit: u8) -> Ppa {
+        PageAddr { plane: self.plane, block: self.block, wordline, bit }.flatten(g)
+    }
+}
+
+/// Iterate all plane ids in channel-major order.
+pub fn all_planes(g: &Geometry) -> impl Iterator<Item = PlaneId> {
+    (0..g.planes()).map(PlaneId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::prop::{self, tuple2, u64_up_to};
+
+    #[test]
+    fn plane_compose_decompose_roundtrip() {
+        let g = presets::table1().geometry;
+        for id in [0u32, 1, 15, 63, 127] {
+            let p = PlaneId(id);
+            let (ch, chip, die, pl) = p.decompose(&g);
+            assert_eq!(PlaneId::compose(&g, ch, chip, die, pl), p);
+            assert!(ch < g.channels && chip < g.chips_per_channel);
+            assert!(die < g.dies_per_chip && pl < g.planes_per_die);
+        }
+    }
+
+    #[test]
+    fn ppa_roundtrip_property() {
+        let g = presets::table1().geometry;
+        let max = g.total_pages() - 1;
+        prop::check("ppa expand/flatten roundtrip", 512, u64_up_to(max), |&raw| {
+            let ppa = Ppa(raw);
+            let pa = ppa.expand(&g);
+            if pa.flatten(&g) != ppa {
+                return Err(format!("{pa:?} flattened to {:?}", pa.flatten(&g)));
+            }
+            if pa.bit > 2 {
+                return Err("bit out of range".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn page_addr_fields_bounded_property() {
+        let g = presets::small().geometry;
+        let max = g.total_pages() - 1;
+        prop::check(
+            "expanded fields within geometry",
+            512,
+            tuple2(u64_up_to(max), u64_up_to(1)),
+            |&(raw, _)| {
+                let pa = Ppa(raw).expand(&g);
+                if pa.plane.0 >= g.planes() {
+                    return Err("plane out of range".into());
+                }
+                if pa.block >= g.blocks_per_plane {
+                    return Err("block out of range".into());
+                }
+                if pa.wordline >= g.wordlines_per_block() {
+                    return Err("wordline out of range".into());
+                }
+                if pa.layer(&g) >= g.layers_per_block() {
+                    return Err("layer out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn layer_math() {
+        let g = presets::table1().geometry;
+        assert_eq!(g.wordlines_per_block(), 128);
+        assert_eq!(g.layers_per_block(), 64);
+        let pa = PageAddr { plane: PlaneId(0), block: 0, wordline: 5, bit: 2 };
+        assert_eq!(pa.layer(&g), 2); // wl 5, 2 wls/layer
+        assert_eq!(pa.page_in_block(), 17);
+    }
+
+    #[test]
+    fn all_planes_count() {
+        let g = presets::table1().geometry;
+        assert_eq!(all_planes(&g).count() as u32, 128);
+    }
+}

@@ -1,0 +1,29 @@
+//! The flash back end: 3D NAND geometry, word-line/layer cell model,
+//! blocks, planes, and the timed array.
+//!
+//! This is the substrate the paper's FTL and cache schemes sit on. It
+//! enforces the *device-level* rules the paper relies on:
+//!
+//! * blocks are programmed sequentially (word line order);
+//! * TLC word lines are written with **one-shot programming** — three
+//!   pages (LSB/CSB/MSB) per word line in a single program operation
+//!   (paper §II-A, [10]);
+//! * SLC-mode programming stores one bit (the LSB page) per word line;
+//! * **reprogram** adds one page to an already-programmed word line
+//!   (SLC → +CSB → +MSB), at most [`crate::config::CacheConfig::max_reprograms`]
+//!   times, only inside the block's active *layer-group window* and in
+//!   sequential order (the reliability restrictions of [7], §II-B);
+//! * a block may only be erased when it has no valid pages.
+//!
+//! Violations return [`crate::Error::Flash`] / [`crate::Error::Invariant`]
+//! — the property tests drive random command sequences against these.
+
+pub mod array;
+pub mod block;
+pub mod cell;
+pub mod geometry;
+
+pub use array::{FlashArray, FlashCounters, FlashOp};
+pub use block::{Block, BlockMode};
+pub use cell::{PageKind, WlState};
+pub use geometry::{BlockAddr, Lpn, PageAddr, PlaneId, Ppa};

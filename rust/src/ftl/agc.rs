@@ -1,0 +1,186 @@
+//! Advanced garbage collection (paper §IV-B, after Jung et al. [15]).
+//!
+//! AGC decomposes a GC cycle into *atomic steps* — one valid-page
+//! migration, or one erase — that can be scheduled inside idle windows
+//! and **interrupted between steps** when a host write arrives. IPS/agc
+//! uses the migration step's payload differently from normal GC:
+//! instead of copying the valid page to fresh TLC space, the page is
+//! *reprogrammed into a used SLC word line* of the IPS cache, emptying
+//! GC victims and re-arming the SLC window at the same time.
+//!
+//! [`AgcEngine`] owns victim selection and step sequencing; the cache
+//! scheme decides what each yielded page's destination is.
+
+use super::Ftl;
+use crate::config::Nanos;
+use crate::flash::array::Completion;
+use crate::flash::{BlockAddr, PlaneId, Ppa};
+use crate::Result;
+
+/// Idle-time advanced-GC engine.
+#[derive(Debug, Default)]
+pub struct AgcEngine {
+    victim: Option<BlockAddr>,
+    /// Victims fully migrated but not yet erased.
+    pending_erase: Vec<BlockAddr>,
+    /// Steps performed (diagnostics).
+    pub steps: u64,
+    /// Erases performed by AGC.
+    pub erases: u64,
+}
+
+impl AgcEngine {
+    /// New engine.
+    pub fn new() -> AgcEngine {
+        AgcEngine::default()
+    }
+
+    /// Ensure a victim block is selected; picks from the plane with the
+    /// fewest free blocks that has an eligible closed block. Victims
+    /// are removed from the FTL's closed list so inline GC cannot race
+    /// on them.
+    pub fn ensure_victim(&mut self, ftl: &mut Ftl) -> Option<BlockAddr> {
+        if let Some(v) = self.victim {
+            if ftl.array.block(v).valid_count() > 0 {
+                return Some(v);
+            }
+            // fully migrated: queue for erase
+            self.pending_erase.push(v);
+            self.victim = None;
+        }
+        // pressure-first: try the plane with the least free space,
+        // then the rest (linear scans — this runs every idle step)
+        let tightest = (0..ftl.planes())
+            .map(PlaneId)
+            .min_by_key(|p| ftl.free_blocks(*p));
+        if let Some(p) = tightest {
+            if let Some(v) = ftl.pop_victim(p) {
+                self.victim = Some(v);
+                return self.victim;
+            }
+        }
+        for p in (0..ftl.planes()).map(PlaneId) {
+            if let Some(v) = ftl.pop_victim(p) {
+                self.victim = Some(v);
+                return self.victim;
+            }
+        }
+        None
+    }
+
+    /// Install an externally selected victim (e.g. an IPS cache block
+    /// stolen by the scheme). The caller must have removed it from any
+    /// other bookkeeping.
+    pub fn set_victim(&mut self, addr: BlockAddr) {
+        debug_assert!(self.victim.is_none());
+        self.victim = Some(addr);
+    }
+
+    /// Next valid page of the current victim, if any.
+    pub fn next_page(&self, ftl: &Ftl) -> Option<Ppa> {
+        let v = self.victim?;
+        let g = ftl.array.geometry();
+        let blk = ftl.array.block(v);
+        let pib = blk.valid_pages().next()?;
+        Some(v.page(g, pib / 3, (pib % 3) as u8))
+    }
+
+    /// Record that one migration step was performed (bookkeeping).
+    pub fn note_step(&mut self) {
+        self.steps += 1;
+    }
+
+    /// Erase one fully migrated victim if any is pending; returns the
+    /// erase completion. This is AGC's "erase" atomic step.
+    pub fn erase_step(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Option<Completion>> {
+        // re-check the current victim too
+        if let Some(v) = self.victim {
+            if ftl.array.block(v).valid_count() == 0 {
+                self.pending_erase.push(v);
+                self.victim = None;
+            }
+        }
+        match self.pending_erase.pop() {
+            Some(addr) => {
+                let c = ftl.array.erase(addr, now)?;
+                ftl.array.push_free(addr)?;
+                self.erases += 1;
+                Ok(Some(c))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Any work available (victim with valid pages, or pending erase)?
+    pub fn has_work(&self, ftl: &Ftl) -> bool {
+        !self.pending_erase.is_empty()
+            || self
+                .victim
+                .map(|v| ftl.array.block(v).valid_count() > 0)
+                .unwrap_or(false)
+    }
+
+    /// The current victim (diagnostics).
+    pub fn victim(&self) -> Option<BlockAddr> {
+        self.victim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::flash::{BlockMode, Lpn};
+    use crate::metrics::Attribution;
+
+    fn ftl_with_closed_victim() -> (Ftl, BlockAddr) {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+        let mut f = Ftl::new(&cfg).unwrap();
+        let v = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        for i in 0..4u64 {
+            f.program_slc_into(v, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+        }
+        // make one page invalid so the victim is GC-eligible
+        f.host_write_tlc(Lpn(0), 0).unwrap();
+        f.register_closed(v);
+        (f, v)
+    }
+
+    #[test]
+    fn victim_selection_and_page_stream() {
+        let (mut f, v) = ftl_with_closed_victim();
+        let mut agc = AgcEngine::new();
+        assert_eq!(agc.ensure_victim(&mut f), Some(v));
+        // inline GC can no longer see it
+        assert!(f.pop_victim(PlaneId(0)).is_none());
+        let mut moved = 0;
+        while let Some(src) = agc.next_page(&f) {
+            // emulate the scheme: migrate to TLC (destination detail is
+            // the scheme's business; here plain migration suffices)
+            f.migrate_page(src, Attribution::AgcReprogram, 0).unwrap();
+            f.flush_all_migration(0, Attribution::AgcReprogram).unwrap();
+            agc.note_step();
+            moved += 1;
+            assert!(moved <= 4, "terminates");
+        }
+        assert_eq!(moved, 3, "three valid pages");
+        // erase step finishes the victim
+        let c = agc.erase_step(&mut f, 0).unwrap();
+        assert!(c.is_some());
+        assert!(f.array.block(v).is_erased());
+        assert_eq!(agc.erases, 1);
+        f.audit().unwrap();
+    }
+
+    #[test]
+    fn no_work_without_victims() {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+        let mut f = Ftl::new(&cfg).unwrap();
+        let mut agc = AgcEngine::new();
+        assert_eq!(agc.ensure_victim(&mut f), None);
+        assert!(!agc.has_work(&f));
+        assert!(agc.erase_step(&mut f, 0).unwrap().is_none());
+    }
+}

@@ -1,0 +1,214 @@
+//! Page-level address mapping (L2P), chunked for memory efficiency.
+//!
+//! The Table-I SSD has ~100 M physical pages; a dense `Vec<u32>` for
+//! the whole logical space would cost 400 MB even for workloads that
+//! touch a few GB. The table is therefore split into 64 Ki-entry
+//! chunks allocated on first touch. Physical page addresses fit `u32`
+//! at any supported geometry (checked at construction).
+
+use crate::flash::{Lpn, Ppa};
+use crate::{Error, Result};
+
+const CHUNK_BITS: usize = 16;
+const CHUNK: usize = 1 << CHUNK_BITS;
+const NONE: u32 = u32::MAX;
+
+/// Chunked logical→physical page map.
+pub struct Mapping {
+    chunks: Vec<Option<Box<[u32; CHUNK]>>>,
+    lpn_limit: u64,
+    live: u64,
+}
+
+impl Mapping {
+    /// Build a map covering LPNs `[0, lpn_limit)`; `ppa_limit` is the
+    /// number of physical pages (must fit in `u32` minus the sentinel).
+    pub fn new(lpn_limit: u64, ppa_limit: u64) -> Result<Mapping> {
+        if ppa_limit >= NONE as u64 {
+            return Err(Error::config(format!(
+                "geometry has {ppa_limit} physical pages; mapping supports < {NONE}"
+            )));
+        }
+        let n_chunks = (lpn_limit as usize).div_ceil(CHUNK);
+        Ok(Mapping { chunks: (0..n_chunks).map(|_| None).collect(), lpn_limit, live: 0 })
+    }
+
+    /// Highest mappable LPN + 1.
+    pub fn lpn_limit(&self) -> u64 {
+        self.lpn_limit
+    }
+
+    /// Number of currently mapped LPNs.
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    #[inline]
+    fn index(&self, lpn: Lpn) -> Result<(usize, usize)> {
+        if lpn.0 >= self.lpn_limit {
+            return Err(Error::invariant(format!(
+                "LPN {} out of range (limit {})",
+                lpn.0, self.lpn_limit
+            )));
+        }
+        Ok(((lpn.0 >> CHUNK_BITS) as usize, (lpn.0 & (CHUNK as u64 - 1)) as usize))
+    }
+
+    /// Current physical location of `lpn`, if mapped.
+    #[inline]
+    pub fn get(&self, lpn: Lpn) -> Option<Ppa> {
+        let (c, o) = self.index(lpn).ok()?;
+        match &self.chunks[c] {
+            Some(chunk) => {
+                let v = chunk[o];
+                if v == NONE {
+                    None
+                } else {
+                    Some(Ppa(v as u64))
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Map `lpn` → `ppa`; returns the previous location if any.
+    pub fn set(&mut self, lpn: Lpn, ppa: Ppa) -> Result<Option<Ppa>> {
+        let (c, o) = self.index(lpn)?;
+        let chunk = self.chunks[c].get_or_insert_with(|| Box::new([NONE; CHUNK]));
+        let old = chunk[o];
+        chunk[o] = ppa.0 as u32;
+        if old == NONE {
+            self.live += 1;
+            Ok(None)
+        } else {
+            Ok(Some(Ppa(old as u64)))
+        }
+    }
+
+    /// Unmap `lpn`; returns the previous location if any.
+    pub fn clear(&mut self, lpn: Lpn) -> Result<Option<Ppa>> {
+        let (c, o) = self.index(lpn)?;
+        match &mut self.chunks[c] {
+            Some(chunk) => {
+                let old = chunk[o];
+                chunk[o] = NONE;
+                if old == NONE {
+                    Ok(None)
+                } else {
+                    self.live -= 1;
+                    Ok(Some(Ppa(old as u64)))
+                }
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Resident memory estimate in bytes (for reports).
+    pub fn memory_bytes(&self) -> usize {
+        self.chunks.iter().filter(|c| c.is_some()).count() * CHUNK * 4
+            + self.chunks.len() * std::mem::size_of::<Option<Box<[u32; CHUNK]>>>()
+    }
+
+    /// Iterate all mapped (LPN, PPA) pairs — audits only (slow).
+    pub fn iter_mapped(&self) -> impl Iterator<Item = (Lpn, Ppa)> + '_ {
+        self.chunks.iter().enumerate().flat_map(|(ci, chunk)| {
+            chunk
+                .iter()
+                .flat_map(move |c| {
+                    c.iter().enumerate().filter(|(_, &v)| v != NONE).map(move |(o, &v)| {
+                        (Lpn(((ci << CHUNK_BITS) + o) as u64), Ppa(v as u64))
+                    })
+                })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, tuple2, u64_up_to, vec_of};
+
+    #[test]
+    fn set_get_clear() {
+        let mut m = Mapping::new(1 << 20, 1 << 20).unwrap();
+        assert_eq!(m.get(Lpn(5)), None);
+        assert_eq!(m.set(Lpn(5), Ppa(77)).unwrap(), None);
+        assert_eq!(m.get(Lpn(5)), Some(Ppa(77)));
+        assert_eq!(m.live(), 1);
+        assert_eq!(m.set(Lpn(5), Ppa(99)).unwrap(), Some(Ppa(77)));
+        assert_eq!(m.live(), 1);
+        assert_eq!(m.clear(Lpn(5)).unwrap(), Some(Ppa(99)));
+        assert_eq!(m.get(Lpn(5)), None);
+        assert_eq!(m.live(), 0);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut m = Mapping::new(100, 100).unwrap();
+        assert!(m.set(Lpn(100), Ppa(0)).is_err());
+        assert_eq!(m.get(Lpn(100)), None);
+    }
+
+    #[test]
+    fn oversized_ppa_space_rejected() {
+        assert!(Mapping::new(10, u32::MAX as u64).is_err());
+    }
+
+    #[test]
+    fn chunks_lazy() {
+        let mut m = Mapping::new(1 << 24, 1 << 24).unwrap();
+        let empty = m.memory_bytes();
+        m.set(Lpn(0), Ppa(1)).unwrap();
+        m.set(Lpn(1), Ppa(2)).unwrap();
+        let one_chunk = m.memory_bytes();
+        assert!(one_chunk > empty);
+        assert!(one_chunk < empty + 2 * CHUNK * 4, "only one chunk allocated");
+    }
+
+    #[test]
+    fn model_based_property() {
+        // Property: Mapping behaves like a HashMap reference model.
+        use std::collections::HashMap;
+        let gen = vec_of(tuple2(u64_up_to(500), u64_up_to(10_000)), 0, 128);
+        prop::check("mapping matches hashmap model", 128, gen, |ops| {
+            let mut m = Mapping::new(512, 20_000).unwrap();
+            let mut model: HashMap<u64, u64> = HashMap::new();
+            for &(lpn, ppa) in ops {
+                if ppa % 7 == 0 {
+                    let got = m.clear(Lpn(lpn)).map_err(|e| e.to_string())?;
+                    let want = model.remove(&lpn);
+                    if got.map(|p| p.0) != want {
+                        return Err(format!("clear({lpn}): {got:?} != {want:?}"));
+                    }
+                } else {
+                    let got = m.set(Lpn(lpn), Ppa(ppa)).map_err(|e| e.to_string())?;
+                    let want = model.insert(lpn, ppa);
+                    if got.map(|p| p.0) != want {
+                        return Err(format!("set({lpn}): {got:?} != {want:?}"));
+                    }
+                }
+                if m.live() != model.len() as u64 {
+                    return Err(format!("live {} != model {}", m.live(), model.len()));
+                }
+            }
+            // final state equality
+            for (lpn, ppa) in model.iter() {
+                if m.get(Lpn(*lpn)) != Some(Ppa(*ppa)) {
+                    return Err(format!("final mismatch at {lpn}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn iter_mapped_complete() {
+        let mut m = Mapping::new(1 << 17, 1 << 17).unwrap();
+        m.set(Lpn(1), Ppa(10)).unwrap();
+        m.set(Lpn(70_000), Ppa(20)).unwrap(); // second chunk
+        let pairs: Vec<_> = m.iter_mapped().collect();
+        assert_eq!(pairs.len(), 2);
+        assert!(pairs.contains(&(Lpn(1), Ppa(10))));
+        assert!(pairs.contains(&(Lpn(70_000), Ppa(20))));
+    }
+}

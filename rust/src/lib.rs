@@ -1,0 +1,75 @@
+//! `ips` — In-place Switch: reprogramming-based SLC cache design for
+//! hybrid 3D SSDs (Yang, Zheng, Gao; CS.AR 2024).
+//!
+//! This crate is a full reproduction of the paper's system stack:
+//!
+//! * a configurable hybrid 3D SLC/TLC SSD simulator with four levels of
+//!   parallelism (channel → chip → die → plane), a 3D block/word-line/
+//!   layer model, and the Table-I timing parameters ([`flash`], [`sim`]);
+//! * a page-mapping FTL with greedy garbage collection, *advanced* GC
+//!   (idle-time, interruptible atomic steps) and erase-count wear
+//!   levelling ([`ftl`]);
+//! * the four evaluated SLC-cache schemes — Turbo-Write-style baseline,
+//!   IPS, IPS/agc, and the cooperative design ([`cache`]);
+//! * MSR-Cambridge-style trace machinery with the paper's bursty /
+//!   daily-use scenario transforms ([`trace`]);
+//! * metrics (write latency, write amplification, breakdown, bandwidth
+//!   timelines) and paper-style reporting ([`metrics`]);
+//! * a flash-cell reliability model (voltage states, ISPP, reprogram)
+//!   compiled from JAX/Pallas to an XLA artifact and executed natively
+//!   through PJRT ([`reliability`], [`runtime`]);
+//! * an experiment coordinator that regenerates every figure of the
+//!   paper's evaluation ([`coordinator`]).
+//!
+//! The public entry points most users want are
+//! [`config::presets`], [`sim::Simulator`], and
+//! [`coordinator::experiment`].
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod flash;
+pub mod ftl;
+pub mod metrics;
+pub mod reliability;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Trace parsing errors.
+    #[error("trace error: {0}")]
+    Trace(String),
+    /// Simulation invariant violations (these indicate bugs).
+    #[error("simulation invariant violated: {0}")]
+    Invariant(String),
+    /// Flash-array level errors (illegal command sequences).
+    #[error("flash protocol error: {0}")]
+    Flash(String),
+    /// PJRT / artifact errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// IO errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Build a [`Error::Config`] from anything displayable.
+    pub fn config(msg: impl std::fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+    /// Build a [`Error::Invariant`] from anything displayable.
+    pub fn invariant(msg: impl std::fmt::Display) -> Self {
+        Error::Invariant(msg.to_string())
+    }
+}

@@ -1,0 +1,246 @@
+//! `ips` — hybrid 3D SSD simulator and paper-reproduction launcher.
+//!
+//! Subcommands:
+//! * `reproduce` — regenerate the paper's figures (`--fig 3|...|all`);
+//! * `run`       — one simulation: scheme × workload × scenario;
+//! * `sweep`     — ablations (cache size, idle threshold, group width);
+//! * `audit`     — reprogram reliability audit via the PJRT artifact;
+//! * `list`      — workloads, schemes, presets.
+
+use ips::cache;
+use ips::config::{presets, Config, Scheme, MS};
+use ips::coordinator::{experiment, ExpOptions};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::trace::profiles;
+use ips::util::cli::Command;
+use ips::util::fmt::{bytes, nanos, TextTable};
+
+fn cli() -> Command {
+    Command::new("ips", "In-place Switch: reprogramming-based SLC cache for hybrid 3D SSDs")
+        .subcommand(
+            Command::new("reproduce", "regenerate the paper's evaluation figures")
+                .opt("fig", Some('f'), "N", "figure id (2|3|4|5|9|10|11|12|all)", Some("all"))
+                .opt("scale", None, "N", "geometry divisor vs Table I", Some("4"))
+                .opt("volume-scale", None, "F", "workload volume multiplier (default: 1/scale^2)", None)
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt("out", Some('o'), "DIR", "CSV output directory", Some("results"))
+                .opt("threads", Some('j'), "N", "worker threads", None)
+                .opt("workload", Some('w'), "NAME", "restrict to workload (repeatable)", None),
+        )
+        .subcommand(
+            Command::new("run", "run one simulation")
+                .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop", Some("ips"))
+                .opt("workload", Some('w'), "NAME", "workload profile (or 'seq')", Some("HM_0"))
+                .opt("scenario", None, "X", "bursty|daily", Some("daily"))
+                .opt("scale", None, "N", "geometry divisor vs Table I", Some("4"))
+                .opt("volume-scale", None, "F", "volume multiplier (default 1/scale^2)", None)
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt("config", Some('c'), "FILE", "TOML config overriding the preset", None)
+                .flag("verify", None, "run full consistency audits"),
+        )
+        .subcommand(
+            Command::new("sweep", "ablation sweeps")
+                .opt("what", None, "W", "cache-size|idle-threshold|group-layers", Some("cache-size"))
+                .opt("scale", None, "N", "geometry divisor", Some("8"))
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt("workload", Some('w'), "NAME", "workload", Some("HM_0")),
+        )
+        .subcommand(
+            Command::new("audit", "reprogram reliability audit (PJRT artifact)")
+                .opt("sigma", None, "F", "process variation", Some("0.3"))
+                .opt("alpha", None, "F", "interference coupling", Some("0.02"))
+                .opt("batches", None, "N", "batches to average", Some("4"))
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42")),
+        )
+        .subcommand(Command::new("list", "list workloads, schemes and presets"))
+}
+
+fn main() {
+    let parsed = cli().parse_or_exit();
+    let result = match parsed.subcommand {
+        Some("reproduce") => cmd_reproduce(parsed.sub().unwrap()),
+        Some("run") => cmd_run(parsed.sub().unwrap()),
+        Some("sweep") => cmd_sweep(parsed.sub().unwrap()),
+        Some("audit") => cmd_audit(parsed.sub().unwrap()),
+        Some("list") => cmd_list(),
+        _ => {
+            println!("{}", cli().help());
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts_from(p: &ips::util::cli::Parsed) -> ips::Result<ExpOptions> {
+    let mut opts = ExpOptions::default();
+    opts.scale = p.get_u64("scale").map_err(|e| ips::Error::config(e))? as u32;
+    if p.get("volume-scale").is_some() {
+        opts.volume_scale = Some(p.get_f64("volume-scale").map_err(ips::Error::config)?);
+    }
+    opts.seed = p.get_u64("seed").map_err(ips::Error::config)?;
+    if let Some(out) = p.get("out") {
+        opts.out_dir = out.into();
+    }
+    if let Some(t) = p.get("threads") {
+        opts.threads = t.parse().map_err(|_| ips::Error::config("--threads: bad integer"))?;
+    }
+    let w = p.get_all("workload");
+    if !w.is_empty() {
+        opts.workloads = Some(w.to_vec());
+    }
+    Ok(opts)
+}
+
+fn cmd_reproduce(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let opts = opts_from(p)?;
+    let fig = p.get("fig").unwrap_or("all").to_string();
+    println!(
+        "reproducing fig {fig} at scale 1/{} (volume x{:.5}, seed {}, {} threads)",
+        opts.scale,
+        opts.volume(),
+        opts.seed,
+        opts.threads
+    );
+    experiment::run_figure(&fig, &opts)
+}
+
+fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let opts = opts_from(p)?;
+    let scheme = Scheme::parse(p.get("scheme").unwrap_or("ips"))?;
+    let mut cfg = experiment::exp_config(&opts, scheme);
+    if let Some(path) = p.get("config") {
+        cfg = Config::load(std::path::Path::new(path), cfg)?;
+    }
+    if p.flag("verify") {
+        cfg.sim.verify = true;
+    }
+    let scen = Scenario::parse(p.get("scenario").unwrap_or("daily"))?;
+    let workload = p.get("workload").unwrap_or("HM_0").to_string();
+    let mut sim = Simulator::new(cfg.clone())?;
+    let trace = if workload == "seq" {
+        scenario::sequential_fill("seq", cfg.cache.slc_cache_bytes * 2, sim.logical_bytes())
+    } else {
+        let daily = experiment::workload_trace(&opts, &workload, sim.logical_bytes())?;
+        match scen {
+            Scenario::Bursty => scenario::to_bursty(&daily, sim.logical_bytes()),
+            Scenario::Daily => daily,
+        }
+    };
+    println!(
+        "run: scheme={} workload={} scenario={} writes={} ({})",
+        scheme.name(),
+        workload,
+        scen.name(),
+        trace.write_ops(),
+        bytes(trace.total_write_bytes()),
+    );
+    let s = sim.run(&trace, scen)?;
+    let mut t = TextTable::new(&["metric", "value"]);
+    t.row(vec!["scheme".into(), s.scheme.clone()]);
+    t.row(vec!["host_pages".into(), s.ledger.host_pages.to_string()]);
+    t.row(vec!["mean_write_latency".into(), nanos(s.mean_write_latency() as u64)]);
+    t.row(vec!["p95_write_latency".into(), nanos(s.write_latency.percentile(0.95))]);
+    t.row(vec!["write_amplification".into(), format!("{:.4}", s.wa())]);
+    t.row(vec!["avg_bandwidth_mb_s".into(), format!("{:.1}", s.avg_write_bandwidth_mbs())]);
+    t.row(vec!["slc_cache_writes".into(), s.ledger.slc_cache_writes.to_string()]);
+    t.row(vec!["reprogram_host_writes".into(), s.ledger.reprogram_host_writes.to_string()]);
+    t.row(vec!["agc_reprogram_writes".into(), s.ledger.agc_reprogram_writes.to_string()]);
+    t.row(vec!["coop_reprogram_writes".into(), s.ledger.coop_reprogram_writes.to_string()]);
+    t.row(vec!["slc2tlc_migrations".into(), s.ledger.slc2tlc_migrations.to_string()]);
+    t.row(vec!["gc_migrations".into(), s.ledger.gc_migrations.to_string()]);
+    t.row(vec!["sim_end".into(), nanos(s.sim_end)]);
+    t.row(vec!["wall_clock".into(), format!("{:.2?}", s.wall_clock)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let mut opts = ExpOptions::default();
+    opts.scale = p.get_u64("scale").map_err(ips::Error::config)? as u32;
+    opts.seed = p.get_u64("seed").map_err(ips::Error::config)?;
+    let workload = p.get("workload").unwrap_or("HM_0").to_string();
+    let what = p.get("what").unwrap_or("cache-size").to_string();
+    let mut table = TextTable::new(&["point", "scheme", "mean_lat_ms", "wa"]);
+    let mut run_point = |label: String, cfg: Config| -> ips::Result<()> {
+        let mut sim = Simulator::new(cfg)?;
+        let daily = experiment::workload_trace(&opts, &workload, sim.logical_bytes())?;
+        let s = sim.run(&daily, Scenario::Daily)?;
+        table.row(vec![
+            label,
+            s.scheme.clone(),
+            format!("{:.3}", s.mean_write_latency() / 1e6),
+            format!("{:.3}", s.wa()),
+        ]);
+        Ok(())
+    };
+    match what.as_str() {
+        "cache-size" => {
+            for mult in [0.5, 1.0, 2.0, 4.0] {
+                let mut cfg = experiment::exp_config(&opts, Scheme::Baseline);
+                cfg.cache.slc_cache_bytes =
+                    ((cfg.cache.slc_cache_bytes as f64) * mult) as u64;
+                run_point(format!("cache x{mult}"), cfg)?;
+            }
+        }
+        "idle-threshold" => {
+            for ms_th in [10u64, 50, 100, 500, 2000] {
+                let mut cfg = experiment::exp_config(&opts, Scheme::IpsAgc);
+                cfg.cache.idle_threshold = ms_th * MS;
+                run_point(format!("idle {ms_th}ms"), cfg)?;
+            }
+        }
+        "group-layers" => {
+            for layers in [1u32, 2, 4] {
+                let mut cfg = experiment::exp_config(&opts, Scheme::Ips);
+                cfg.cache.group_layers = layers;
+                run_point(format!("{layers} layers"), cfg)?;
+            }
+        }
+        other => return Err(ips::Error::config(format!("unknown sweep {other:?}"))),
+    }
+    println!("\n== ablation: {what} (workload {workload}) ==");
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_audit(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let sigma = p.get_f64("sigma").map_err(ips::Error::config)? as f32;
+    let alpha = p.get_f64("alpha").map_err(ips::Error::config)? as f32;
+    let batches = p.get_u64("batches").map_err(ips::Error::config)? as u32;
+    let seed = p.get_u64("seed").map_err(ips::Error::config)?;
+    let bridge = ips::reliability::RberBridge::new()?;
+    let r = bridge.run(seed, batches, sigma, alpha)?;
+    let mut t = TextTable::new(&["metric", "value"]);
+    t.row(vec!["sigma".into(), format!("{sigma}")]);
+    t.row(vec!["alpha".into(), format!("{alpha}")]);
+    t.row(vec!["batches".into(), r.batches.to_string()]);
+    t.row(vec!["slc_rber".into(), format!("{:.6}", r.slc)]);
+    t.row(vec!["ips_tlc_rber".into(), format!("{:.6}", r.ips_tlc)]);
+    t.row(vec!["native_tlc_rber".into(), format!("{:.6}", r.native_tlc)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_list() -> ips::Result<()> {
+    println!("workloads (MSR Cambridge subset, Fig. 5):");
+    for prof in profiles::ALL {
+        println!(
+            "  {:<8} writes {:>6}  ratio {:.2}  idle-gap {:>6.0} ms",
+            prof.name,
+            bytes(prof.total_write_bytes),
+            prof.write_ratio,
+            prof.idle_gap_ms
+        );
+    }
+    println!("\nschemes:");
+    for s in Scheme::all() {
+        println!("  {}", s.name());
+    }
+    println!("\npresets: table1 (384 GB, Table I), coop64 (64 GB cache), small, bench_medium");
+    let _ = cache::build(&presets::small()); // exercise the factory
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Windowed bandwidth timelines (paper Figs. 3–4: bandwidth vs total
+//! data written / vs time).
+
+use crate::config::Nanos;
+
+/// Accumulates bytes into fixed time windows.
+#[derive(Clone, Debug)]
+pub struct BandwidthTimeline {
+    window: Nanos,
+    /// bytes per window index.
+    bytes: Vec<u64>,
+}
+
+impl BandwidthTimeline {
+    /// New timeline with the given window size.
+    pub fn new(window: Nanos) -> Self {
+        BandwidthTimeline { window: window.max(1), bytes: Vec::new() }
+    }
+
+    /// Record `n` bytes completed at simulated time `at`.
+    pub fn record(&mut self, at: Nanos, n: u64) {
+        let idx = (at / self.window) as usize;
+        if idx >= self.bytes.len() {
+            self.bytes.resize(idx + 1, 0);
+        }
+        self.bytes[idx] += n;
+    }
+
+    /// Window size in ns.
+    pub fn window(&self) -> Nanos {
+        self.window
+    }
+
+    /// Series of (window start time ns, MB/s) points.
+    pub fn series_mbs(&self) -> Vec<(Nanos, f64)> {
+        let secs = self.window as f64 / 1e9;
+        self.bytes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as Nanos * self.window, b as f64 / 1e6 / secs))
+            .collect()
+    }
+
+    /// Series of (cumulative GB written at window end, MB/s) — the
+    /// x-axis of the paper's Fig. 3 (bandwidth vs total written).
+    pub fn series_vs_cumulative_gb(&self) -> Vec<(f64, f64)> {
+        let secs = self.window as f64 / 1e9;
+        let mut cum = 0u64;
+        self.bytes
+            .iter()
+            .map(|&b| {
+                cum += b;
+                (cum as f64 / 1e9, b as f64 / 1e6 / secs)
+            })
+            .collect()
+    }
+
+    /// Total bytes recorded.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SEC;
+
+    #[test]
+    fn windows_accumulate() {
+        let mut t = BandwidthTimeline::new(SEC);
+        t.record(0, 1_000_000);
+        t.record(SEC / 2, 1_000_000);
+        t.record(SEC + 1, 4_000_000);
+        let s = t.series_mbs();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 2.0).abs() < 1e-9, "2 MB in 1 s window");
+        assert!((s[1].1 - 4.0).abs() < 1e-9);
+        assert_eq!(t.total_bytes(), 6_000_000);
+    }
+
+    #[test]
+    fn cumulative_axis_monotone() {
+        let mut t = BandwidthTimeline::new(SEC);
+        for i in 0..10 {
+            t.record(i * SEC, 500_000_000);
+        }
+        let s = t.series_vs_cumulative_gb();
+        for w in s.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!((s.last().unwrap().0 - 5.0).abs() < 1e-9, "5 GB total");
+    }
+
+    #[test]
+    fn empty_timeline() {
+        let t = BandwidthTimeline::new(SEC);
+        assert!(t.series_mbs().is_empty());
+        assert_eq!(t.total_bytes(), 0);
+    }
+}

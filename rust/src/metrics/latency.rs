@@ -1,0 +1,183 @@
+//! Streaming latency statistics with a log-scaled histogram for
+//! percentiles and optional raw-sample capture for runtime curves
+//! (paper Fig. 9 plots per-write latency over the first 100 k writes).
+
+use crate::config::Nanos;
+
+/// Number of log2 buckets (covers 1 ns .. ~584 years).
+const BUCKETS: usize = 64;
+
+/// Streaming latency collector.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    count: u64,
+    sum: u128,
+    max: Nanos,
+    min: Nanos,
+    /// log2 histogram: bucket i counts samples in [2^i, 2^(i+1)).
+    hist: Vec<u64>,
+    /// Raw samples (first `capacity` only).
+    raw: Vec<u32>,
+    raw_capacity: usize,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl LatencyStats {
+    /// Collector keeping up to `raw_capacity` raw samples (µs-resolution
+    /// `u32`s to stay compact at 100 k+ samples).
+    pub fn new(raw_capacity: usize) -> Self {
+        LatencyStats {
+            count: 0,
+            sum: 0,
+            max: 0,
+            min: Nanos::MAX,
+            hist: vec![0; BUCKETS],
+            raw: Vec::new(),
+            raw_capacity,
+        }
+    }
+
+    /// Record one latency sample.
+    #[inline]
+    pub fn record(&mut self, ns: Nanos) {
+        self.count += 1;
+        self.sum += ns as u128;
+        self.max = self.max.max(ns);
+        self.min = self.min.min(ns);
+        let bucket = (64 - ns.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.hist[bucket] += 1;
+        if self.raw.len() < self.raw_capacity {
+            self.raw.push((ns / 1_000).min(u32::MAX as u64) as u32);
+        }
+    }
+
+    /// Sample count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    /// Mean latency (ns).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+    /// Max latency (ns).
+    pub fn max(&self) -> Nanos {
+        self.max
+    }
+    /// Min latency (ns), 0 if empty.
+    pub fn min(&self) -> Nanos {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Approximate percentile (0.0..=1.0) from the log2 histogram:
+    /// returns the upper edge of the bucket containing the quantile
+    /// (within 2× of the true value, enough for report tables).
+    pub fn percentile(&self, q: f64) -> Nanos {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        self.max
+    }
+
+    /// Raw samples captured (µs units), for runtime curves.
+    pub fn raw_us(&self) -> &[u32] {
+        &self.raw
+    }
+
+    /// Merge another collector (raw samples appended up to capacity).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += b;
+        }
+        for &s in &other.raw {
+            if self.raw.len() >= self.raw_capacity {
+                break;
+            }
+            self.raw.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let mut s = LatencyStats::new(0);
+        for v in [100u64, 200, 300] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 200.0).abs() < 1e-9);
+        assert_eq!(s.max(), 300);
+        assert_eq!(s.min(), 100);
+    }
+
+    #[test]
+    fn percentile_monotone_and_bounded() {
+        let mut s = LatencyStats::new(0);
+        for i in 1..=10_000u64 {
+            s.record(i * 1000);
+        }
+        let p50 = s.percentile(0.5);
+        let p99 = s.percentile(0.99);
+        assert!(p50 <= p99);
+        // log2 buckets: within 2x of truth
+        assert!(p50 >= 2_500_000 && p50 <= 20_000_000, "p50={p50}");
+    }
+
+    #[test]
+    fn raw_capture_capped() {
+        let mut s = LatencyStats::new(5);
+        for i in 0..10u64 {
+            s.record(i * 1_000_000);
+        }
+        assert_eq!(s.raw_us().len(), 5);
+        assert_eq!(s.raw_us()[1], 1000); // 1 ms = 1000 µs
+    }
+
+    #[test]
+    fn empty_stats_sane() {
+        let s = LatencyStats::new(0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(0.5), 0);
+        assert_eq!(s.min(), 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyStats::new(10);
+        let mut b = LatencyStats::new(10);
+        a.record(1000);
+        b.record(3000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 2000.0).abs() < 1e-9);
+        assert_eq!(a.max(), 3000);
+    }
+}

@@ -1,0 +1,66 @@
+//! Metrics: write-amplification ledger, latency statistics, bandwidth
+//! timelines, and run summaries.
+//!
+//! Terminology follows the paper's Figure 5: host writes are broken
+//! down into **SLC Writes** (pages written into the SLC cache at SLC
+//! speed), **SLC2TLC** (idle-time migration from the cache into TLC
+//! space — pure amplification), and **TLC Writes** (host pages written
+//! directly to TLC, no amplification). IPS adds **reprogram writes**
+//! (host or AGC data landing in used SLC word lines — in-place, no
+//! extra copies) and AGC adds **AGC migrations** (GC-ahead-of-time
+//! copies, counted into IPS/agc per §V-B2).
+
+pub mod bandwidth;
+pub mod latency;
+pub mod wa;
+
+pub use bandwidth::BandwidthTimeline;
+pub use latency::LatencyStats;
+pub use wa::{Attribution, Ledger};
+
+use crate::config::Nanos;
+
+/// Summary of one simulation run — everything reports need.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Scheme name.
+    pub scheme: String,
+    /// Workload name.
+    pub workload: String,
+    /// Scenario name ("bursty" / "daily").
+    pub scenario: String,
+    /// PRNG seed used.
+    pub seed: u64,
+    /// Host write-request latency statistics.
+    pub write_latency: LatencyStats,
+    /// Host read-request latency statistics.
+    pub read_latency: LatencyStats,
+    /// Write-amplification ledger.
+    pub ledger: Ledger,
+    /// Host write bandwidth timeline.
+    pub bandwidth: BandwidthTimeline,
+    /// Simulated end time.
+    pub sim_end: Nanos,
+    /// Bytes the host wrote.
+    pub host_bytes_written: u64,
+    /// Wall-clock the simulation itself took (host side, for §Perf).
+    pub wall_clock: std::time::Duration,
+}
+
+impl RunSummary {
+    /// Mean write latency in nanoseconds.
+    pub fn mean_write_latency(&self) -> f64 {
+        self.write_latency.mean()
+    }
+    /// Write amplification factor.
+    pub fn wa(&self) -> f64 {
+        self.ledger.write_amplification()
+    }
+    /// Sustained host write bandwidth over the whole run (MB/s).
+    pub fn avg_write_bandwidth_mbs(&self) -> f64 {
+        if self.sim_end == 0 {
+            return 0.0;
+        }
+        self.host_bytes_written as f64 / 1e6 / (self.sim_end as f64 / 1e9)
+    }
+}

@@ -1,0 +1,222 @@
+//! The write-amplification ledger: attributed page-program counters.
+//!
+//! Every page physically programmed is attributed to exactly one
+//! [`Attribution`]; the ledger's total must equal the flash array's raw
+//! `pages_programmed()` counter — an invariant the simulator audits at
+//! the end of every run.
+
+/// Why a page was programmed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Attribution {
+    /// Host page written into the SLC cache (SLC speed).
+    SlcCacheWrite,
+    /// Host page written directly to TLC space.
+    TlcDirectWrite,
+    /// Host page written via an IPS reprogram (cache full; in-place).
+    ReprogramHost,
+    /// Valid page moved from the SLC cache to TLC space
+    /// (traditional reclamation — pure amplification).
+    Slc2Tlc,
+    /// Valid page moved by garbage collection within TLC space.
+    GcMigration,
+    /// Valid page moved by *advanced* GC into a used SLC word line via
+    /// reprogram (IPS/agc; counted into the scheme per §V-B2).
+    AgcReprogram,
+    /// Valid page moved from the traditional cache into the IPS window
+    /// via reprogram (cooperative design Step 3.1).
+    CoopReprogram,
+}
+
+/// Attributed program counters (pages).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ledger {
+    /// Host pages received (WA denominator).
+    pub host_pages: u64,
+    /// Host pages absorbed by the SLC cache.
+    pub slc_cache_writes: u64,
+    /// Host pages written straight to TLC.
+    pub tlc_direct_writes: u64,
+    /// Host pages written through IPS reprogram operations.
+    pub reprogram_host_writes: u64,
+    /// Cache-reclamation migrations (SLC → TLC).
+    pub slc2tlc_migrations: u64,
+    /// Normal GC migrations (TLC → TLC).
+    pub gc_migrations: u64,
+    /// AGC valid pages reprogrammed into used SLC word lines.
+    pub agc_reprogram_writes: u64,
+    /// Traditional-cache pages reprogrammed into the IPS window (coop).
+    pub coop_reprogram_writes: u64,
+    /// Host read requests served (for context).
+    pub host_reads: u64,
+}
+
+impl Ledger {
+    /// Record a host page arrival (denominator).
+    #[inline]
+    pub fn host_page(&mut self) {
+        self.host_pages += 1;
+    }
+
+    /// Record an attributed page program.
+    #[inline]
+    pub fn program(&mut self, a: Attribution) {
+        match a {
+            Attribution::SlcCacheWrite => self.slc_cache_writes += 1,
+            Attribution::TlcDirectWrite => self.tlc_direct_writes += 1,
+            Attribution::ReprogramHost => self.reprogram_host_writes += 1,
+            Attribution::Slc2Tlc => self.slc2tlc_migrations += 1,
+            Attribution::GcMigration => self.gc_migrations += 1,
+            Attribution::AgcReprogram => self.agc_reprogram_writes += 1,
+            Attribution::CoopReprogram => self.coop_reprogram_writes += 1,
+        }
+    }
+
+    /// Total pages programmed according to the ledger (must equal the
+    /// flash array's raw counter).
+    pub fn total_programs(&self) -> u64 {
+        self.slc_cache_writes
+            + self.tlc_direct_writes
+            + self.reprogram_host_writes
+            + self.slc2tlc_migrations
+            + self.gc_migrations
+            + self.agc_reprogram_writes
+            + self.coop_reprogram_writes
+    }
+
+    /// Write amplification = total programs / host pages.
+    ///
+    /// AGC-induced copies count into the numerator (paper §V-B2:
+    /// "write amplification resulted from AGC is counted into
+    /// IPS/agc"). Returns 1.0 when nothing was written.
+    pub fn write_amplification(&self) -> f64 {
+        if self.host_pages == 0 {
+            return 1.0;
+        }
+        self.total_programs() as f64 / self.host_pages as f64
+    }
+
+    /// Figure-5 style breakdown *fractions* of all host-visible writes:
+    /// (SLC writes, SLC2TLC, TLC writes), normalized to their sum.
+    ///
+    /// Reprogram-carried host pages count into the SLC-writes bucket
+    /// when they carry host data into cache word lines? No — the paper
+    /// plots the *conventional* scheme's three categories; for IPS runs
+    /// the reprogram categories are reported separately via
+    /// [`Ledger::reprogram_host_writes`]. Here host-data reprogram
+    /// writes are folded into "TLC writes" (they run at TLC speed into
+    /// TLC-destined word lines) to keep the three-way split exhaustive.
+    pub fn breakdown(&self) -> (f64, f64, f64) {
+        let slc = self.slc_cache_writes as f64;
+        let migr = (self.slc2tlc_migrations + self.coop_reprogram_writes) as f64;
+        let tlc = (self.tlc_direct_writes + self.reprogram_host_writes) as f64;
+        let total = slc + migr + tlc;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (slc / total, migr / total, tlc / total)
+    }
+
+    /// Merge another ledger into this one (parallel shards).
+    pub fn merge(&mut self, other: &Ledger) {
+        self.host_pages += other.host_pages;
+        self.slc_cache_writes += other.slc_cache_writes;
+        self.tlc_direct_writes += other.tlc_direct_writes;
+        self.reprogram_host_writes += other.reprogram_host_writes;
+        self.slc2tlc_migrations += other.slc2tlc_migrations;
+        self.gc_migrations += other.gc_migrations;
+        self.agc_reprogram_writes += other.agc_reprogram_writes;
+        self.coop_reprogram_writes += other.coop_reprogram_writes;
+        self.host_reads += other.host_reads;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, vec_of, usize_in};
+
+    #[test]
+    fn wa_of_pure_host_writes_is_one() {
+        let mut l = Ledger::default();
+        for _ in 0..100 {
+            l.host_page();
+            l.program(Attribution::SlcCacheWrite);
+        }
+        assert!((l.write_amplification() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_amplifies() {
+        let mut l = Ledger::default();
+        for _ in 0..100 {
+            l.host_page();
+            l.program(Attribution::SlcCacheWrite);
+        }
+        for _ in 0..100 {
+            l.program(Attribution::Slc2Tlc);
+        }
+        assert!((l.write_amplification() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reprogram_does_not_amplify() {
+        let mut l = Ledger::default();
+        for _ in 0..60 {
+            l.host_page();
+            l.program(Attribution::SlcCacheWrite);
+        }
+        for _ in 0..40 {
+            l.host_page();
+            l.program(Attribution::ReprogramHost);
+        }
+        assert!((l.write_amplification() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let mut l = Ledger::default();
+        l.host_pages = 10;
+        l.slc_cache_writes = 5;
+        l.slc2tlc_migrations = 3;
+        l.tlc_direct_writes = 5;
+        let (a, b, c) = l.breakdown();
+        assert!((a + b + c - 1.0).abs() < 1e-12);
+        assert!(a > b && a > 0.0);
+    }
+
+    #[test]
+    fn empty_ledger_wa_is_one() {
+        assert_eq!(Ledger::default().write_amplification(), 1.0);
+    }
+
+    #[test]
+    fn merge_is_additive_property() {
+        // Property: merging shards equals counting in one ledger.
+        let attr_of = |i: usize| match i % 7 {
+            0 => Attribution::SlcCacheWrite,
+            1 => Attribution::TlcDirectWrite,
+            2 => Attribution::ReprogramHost,
+            3 => Attribution::Slc2Tlc,
+            4 => Attribution::GcMigration,
+            5 => Attribution::AgcReprogram,
+            _ => Attribution::CoopReprogram,
+        };
+        prop::check("ledger merge additive", 128, vec_of(usize_in(0, 6), 0, 64), |ops| {
+            let mut whole = Ledger::default();
+            let mut a = Ledger::default();
+            let mut b = Ledger::default();
+            for (i, &op) in ops.iter().enumerate() {
+                whole.host_page();
+                whole.program(attr_of(op));
+                let shard = if i % 2 == 0 { &mut a } else { &mut b };
+                shard.host_page();
+                shard.program(attr_of(op));
+            }
+            a.merge(&b);
+            if a != whole {
+                return Err(format!("merged {a:?} != whole {whole:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Structural reliability audit (paper §IV-D1 restrictions, re-derived
+//! independently of the inline enforcement in [`crate::flash::cell`]).
+
+use crate::flash::{BlockAddr, BlockMode, FlashArray, PlaneId};
+use crate::{Error, Result};
+
+/// Result of a reliability audit over the whole array.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReliabilityAudit {
+    /// Word lines inspected.
+    pub wordlines: u64,
+    /// Word lines that have been reprogrammed at least once.
+    pub reprogrammed_wls: u64,
+    /// Maximum reprogram count observed on any word line.
+    pub max_reprograms: u8,
+    /// IPS blocks inspected.
+    pub ips_blocks: u64,
+}
+
+impl ReliabilityAudit {
+    /// Run the audit. Errors on any violation of:
+    /// * reprogram budget (≤ `max_reprograms` per word line);
+    /// * window rule: in an IPS block, only word lines *below* the
+    ///   active group's end may hold reprogrammed cells;
+    /// * sequential rule: within the active group, a reprogrammed word
+    ///   line never follows a less-programmed one (conversion is
+    ///   front-to-back).
+    pub fn run(array: &FlashArray, max_reprograms: u32) -> Result<ReliabilityAudit> {
+        let g = *array.geometry();
+        let mut audit = ReliabilityAudit::default();
+        for p in 0..g.planes() {
+            for b in 0..g.blocks_per_plane {
+                let addr = BlockAddr { plane: PlaneId(p), block: b };
+                let blk = array.block(addr);
+                let n_wls = g.wordlines_per_block();
+                let mut prev_pages = u8::MAX;
+                let group_wls = 0; // set below for IPS blocks
+                let _ = group_wls;
+                if blk.mode() == BlockMode::Ips {
+                    audit.ips_blocks += 1;
+                }
+                for wl in 0..n_wls {
+                    let s = blk.wl(wl);
+                    audit.wordlines += 1;
+                    if s.reprograms() > 0 {
+                        audit.reprogrammed_wls += 1;
+                        audit.max_reprograms = audit.max_reprograms.max(s.reprograms());
+                    }
+                    if s.reprograms() as u32 > max_reprograms {
+                        return Err(Error::invariant(format!(
+                            "plane {p} block {b} wl {wl}: {} reprograms > budget {max_reprograms}",
+                            s.reprograms()
+                        )));
+                    }
+                    if blk.mode() == BlockMode::Ips {
+                        // Window rule: beyond the active group, word
+                        // lines must be erased.
+                        let group_end = (blk.active_group() + 1)
+                            * (g.wordlines_per_layer * 2).min(n_wls);
+                        if wl >= group_end && !s.is_erased() {
+                            return Err(Error::invariant(format!(
+                                "plane {p} block {b} wl {wl}: programmed beyond the \
+                                 active window (group end {group_end})"
+                            )));
+                        }
+                        // Sequential rule (within the block as a whole,
+                        // fill is monotone): pages never increase after
+                        // a less-programmed word line *below* the write
+                        // pointer. We check the weaker global form:
+                        // erased word lines are never followed by
+                        // reprogrammed ones inside the same group.
+                        if prev_pages == 0 && s.reprograms() > 0 {
+                            return Err(Error::invariant(format!(
+                                "plane {p} block {b} wl {wl}: reprogram after erased word line"
+                            )));
+                        }
+                    }
+                    prev_pages = s.pages();
+                }
+            }
+        }
+        Ok(audit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::flash::Lpn;
+
+    #[test]
+    fn clean_array_passes() {
+        let cfg = presets::small();
+        let array = FlashArray::new(&cfg);
+        let a = ReliabilityAudit::run(&array, 2).unwrap();
+        assert_eq!(a.reprogrammed_wls, 0);
+        assert!(a.wordlines > 0);
+    }
+
+    #[test]
+    fn legal_ips_cycle_passes() {
+        let cfg = presets::small();
+        let mut array = FlashArray::new(&cfg);
+        let addr = array.pop_free(PlaneId(0)).unwrap();
+        array.block_mut(addr).set_mode(BlockMode::Ips).unwrap();
+        let group_wls = 2 * cfg.geometry.wordlines_per_layer;
+        for i in 0..group_wls {
+            array.program_slc(addr, Lpn(i as u64), 0).unwrap();
+        }
+        for i in 0..group_wls * 2 {
+            array.reprogram(addr, Lpn(100 + i as u64), 0).unwrap();
+        }
+        let a = ReliabilityAudit::run(&array, 2).unwrap();
+        assert_eq!(a.reprogrammed_wls, group_wls as u64);
+        assert_eq!(a.max_reprograms, 2);
+        assert_eq!(a.ips_blocks as u64, 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Bridge to the AOT-compiled RBER artifact.
+//!
+//! Feeds sampled word-line batches (data bits + per-phase programming
+//! noise) to `artifacts/rber.hlo.txt` — the JAX/Pallas ISPP voltage
+//! model — through the PJRT runtime, and averages the returned
+//! per-page raw bit error rates. The noise inputs come from the run's
+//! seeded PRNG, so audits are reproducible.
+
+use crate::runtime::{self, Runtime, RBER_ARTIFACT};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Batch shape fixed at lowering time (see `python/compile/aot.py`).
+pub const PAGES: usize = 64;
+/// Cells per page in the artifact batch.
+pub const CELLS: usize = 1024;
+
+/// Aggregated RBER prediction from the artifact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RberReport {
+    /// Mean RBER of pages written by the SLC + 2-reprogram chain.
+    pub ips_tlc: f64,
+    /// Mean RBER of one-shot TLC pages.
+    pub native_tlc: f64,
+    /// Mean RBER of SLC-stage reads.
+    pub slc: f64,
+    /// Batches evaluated.
+    pub batches: u32,
+}
+
+/// The RBER artifact bridge.
+pub struct RberBridge {
+    rt: Runtime,
+    key: String,
+}
+
+impl RberBridge {
+    /// Load the artifact; errors if `make artifacts` has not run.
+    pub fn new() -> Result<RberBridge> {
+        let dir = runtime::artifact_dir()
+            .ok_or_else(|| Error::Runtime("artifacts/ not found (run `make artifacts`)".into()))?;
+        let path = dir.join(RBER_ARTIFACT);
+        if !path.exists() {
+            return Err(Error::Runtime(format!("{} missing", path.display())));
+        }
+        let mut rt = Runtime::new()?;
+        let key = rt.load(&path)?;
+        Ok(RberBridge { rt, key })
+    }
+
+    /// Evaluate one batch: random data bits and noise from `rng`,
+    /// with the given process variation and coupling strength.
+    pub fn run_batch(&self, rng: &mut Rng, sigma: f32, alpha: f32) -> Result<RberReport> {
+        let n = PAGES * CELLS;
+        let bits: Vec<i32> = (0..n).map(|_| rng.below(8) as i32).collect();
+        let mut noise = || -> Vec<f32> { (0..n).map(|_| rng.f64() as f32).collect() };
+        let (n1, n2, n3) = (noise(), noise(), noise());
+        let dims = [PAGES as i64, CELLS as i64];
+        let args = [
+            runtime::literal_i32(&bits, &dims)?,
+            runtime::literal_f32(&n1, &dims)?,
+            runtime::literal_f32(&n2, &dims)?,
+            runtime::literal_f32(&n3, &dims)?,
+            runtime::literal_scalar(sigma),
+            runtime::literal_scalar(alpha),
+        ];
+        let out = self.rt.execute(&self.key, &args)?;
+        if out.len() != 3 {
+            return Err(Error::Runtime(format!("expected 3 outputs, got {}", out.len())));
+        }
+        let mean = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len().max(1) as f64;
+        Ok(RberReport {
+            ips_tlc: mean(&runtime::to_vec_f32(&out[0])?),
+            native_tlc: mean(&runtime::to_vec_f32(&out[1])?),
+            slc: mean(&runtime::to_vec_f32(&out[2])?),
+            batches: 1,
+        })
+    }
+
+    /// Average over `batches` batches.
+    pub fn run(&self, seed: u64, batches: u32, sigma: f32, alpha: f32) -> Result<RberReport> {
+        let mut rng = Rng::new(seed);
+        let mut acc = RberReport::default();
+        for _ in 0..batches.max(1) {
+            let r = self.run_batch(&mut rng, sigma, alpha)?;
+            acc.ips_tlc += r.ips_tlc;
+            acc.native_tlc += r.native_tlc;
+            acc.slc += r.slc;
+            acc.batches += 1;
+        }
+        let n = acc.batches as f64;
+        acc.ips_tlc /= n;
+        acc.native_tlc /= n;
+        acc.slc /= n;
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end: Pallas-authored model executed from Rust via PJRT.
+    /// Skips when artifacts are absent.
+    #[test]
+    fn artifact_rber_behaves_physically() {
+        let bridge = match RberBridge::new() {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        // clean conditions: error-free
+        let clean = bridge.run(1, 1, 0.0, 0.0).unwrap();
+        assert_eq!(clean.ips_tlc, 0.0, "{clean:?}");
+        assert_eq!(clean.slc, 0.0);
+        // noisy conditions: SLC most robust; interference raises RBER
+        let lo = bridge.run(2, 2, 0.3, 0.02).unwrap();
+        let hi = bridge.run(2, 2, 0.3, 0.25).unwrap();
+        assert!(lo.slc <= lo.ips_tlc + 1e-9, "{lo:?}");
+        assert!(hi.ips_tlc >= lo.ips_tlc, "hi={hi:?} lo={lo:?}");
+    }
+}

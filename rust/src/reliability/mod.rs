@@ -1,0 +1,25 @@
+//! Reliability model of the reprogram operation (paper §IV-D1).
+//!
+//! The paper asserts IPS is safe because it obeys the device study's
+//! restrictions [7]: SLC first (wide margins), at most two reprograms
+//! per word line, sequential reprogramming within a two-layer window.
+//! This module *checks* that claim for every run:
+//!
+//! * [`audit::ReliabilityAudit`] — structural audit over the flash
+//!   array: reprogram-count budgets and window/ordering restrictions
+//!   (they are also enforced inline by [`crate::flash::cell`]; the
+//!   audit re-derives them independently).
+//! * [`bridge::RberBridge`] — samples reprogram batches through the
+//!   AOT-compiled JAX/Pallas voltage model (`artifacts/rber.hlo.txt`)
+//!   executed natively via PJRT, reporting predicted raw bit error
+//!   rates for SLC pages, reprogrammed TLC pages, and native TLC pages.
+//! * [`model`] — a closed-form Rust mirror of the RBER model used when
+//!   artifacts are absent (and cross-checked against the artifact in
+//!   tests).
+
+pub mod audit;
+pub mod bridge;
+pub mod model;
+
+pub use audit::ReliabilityAudit;
+pub use bridge::RberBridge;

@@ -1,0 +1,108 @@
+//! Closed-form Rust mirror of the L2 RBER model.
+//!
+//! Used when `artifacts/` is absent and as an independent cross-check
+//! of the artifact path. The model matches
+//! `python/compile/model.py::rber_model` in *shape* (not bit-exactly —
+//! it is analytic rather than Monte-Carlo): the probability that a
+//! cell lands in the wrong read window given programming overshoot
+//! (uniform in one variation-adjusted step) plus neighbour coupling.
+
+/// Parameters of the voltage model (level spacing = 1.0).
+#[derive(Clone, Copy, Debug)]
+pub struct RberParams {
+    /// ISPP step size.
+    pub step: f64,
+    /// Process variation of the step.
+    pub sigma: f64,
+    /// Neighbour coupling strength.
+    pub alpha: f64,
+}
+
+impl Default for RberParams {
+    fn default() -> Self {
+        RberParams { step: 0.25, sigma: 0.25, alpha: 0.02 }
+    }
+}
+
+/// Analytic RBER estimates per page kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RberEstimate {
+    /// SLC-stage LSB error rate.
+    pub slc: f64,
+    /// Reprogrammed-TLC mean bit error rate.
+    pub ips_tlc: f64,
+    /// Native one-shot TLC mean bit error rate.
+    pub native_tlc: f64,
+}
+
+/// Effective post-program voltage spread: overshoot (uniform within
+/// one variation-adjusted step) plus two-neighbour coupling.
+fn spread(p: &RberParams, passes: f64) -> f64 {
+    let overshoot = p.step * (1.0 + p.sigma / 2.0);
+    // each pass adds coupling from two neighbours whose deltas are O(levels)
+    overshoot + passes * p.alpha * 2.0 * 2.0
+}
+
+/// Probability of crossing a read boundary `margin` away given spread
+/// `s` (uniform model: mass beyond the margin).
+fn cross(margin: f64, s: f64) -> f64 {
+    if s <= margin {
+        0.0
+    } else {
+        ((s - margin) / s).clamp(0.0, 1.0)
+    }
+}
+
+/// Estimate RBERs under `p`.
+///
+/// SLC margins are 1.0 (two states at spacing 2.0, threshold between);
+/// TLC margins are 0.5 (eight states at spacing 1.0). IPS cells see
+/// interference from three programming passes (program + 2 reprograms,
+/// §IV-D1: "twice the cell-to-cell interference"); native TLC from one.
+pub fn estimate(p: &RberParams) -> RberEstimate {
+    RberEstimate {
+        slc: cross(1.0, spread(p, 1.0)),
+        ips_tlc: cross(0.5, spread(p, 3.0)),
+        native_tlc: cross(0.5, spread(p, 1.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_params_are_error_free() {
+        let e = estimate(&RberParams { step: 0.25, sigma: 0.0, alpha: 0.0 });
+        assert_eq!(e.slc, 0.0);
+        assert_eq!(e.ips_tlc, 0.0);
+        assert_eq!(e.native_tlc, 0.0);
+    }
+
+    #[test]
+    fn slc_more_robust_than_tlc() {
+        let e = estimate(&RberParams { step: 0.4, sigma: 0.5, alpha: 0.05 });
+        assert!(e.slc <= e.ips_tlc);
+    }
+
+    #[test]
+    fn ips_pays_for_extra_passes() {
+        let e = estimate(&RberParams { step: 0.4, sigma: 0.5, alpha: 0.05 });
+        assert!(e.ips_tlc >= e.native_tlc);
+    }
+
+    #[test]
+    fn monotone_in_alpha() {
+        let lo = estimate(&RberParams { alpha: 0.01, ..Default::default() });
+        let hi = estimate(&RberParams { alpha: 0.20, ..Default::default() });
+        assert!(hi.ips_tlc >= lo.ips_tlc);
+    }
+
+    #[test]
+    fn bounded() {
+        let e = estimate(&RberParams { step: 5.0, sigma: 2.0, alpha: 1.0 });
+        for v in [e.slc, e.ips_tlc, e.native_tlc] {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them natively.
+//!
+//! Python runs exactly once (`make artifacts`); this module is the
+//! request-path side — `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, with a
+//! per-artifact executable cache. HLO *text* is the interchange format
+//! (the image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos; the text parser reassigns instruction ids).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact names the crate knows about.
+pub const RBER_ARTIFACT: &str = "rber.hlo.txt";
+/// Analytic sweep artifact.
+pub const SWEEP_ARTIFACT: &str = "sweep.hlo.txt";
+
+/// Locate the artifacts directory: `$IPS_ARTIFACT_DIR`, else
+/// `./artifacts` relative to the current dir or the crate root.
+pub fn artifact_dir() -> Option<PathBuf> {
+    if let Some(d) = std::env::var_os("IPS_ARTIFACT_DIR") {
+        let p = PathBuf::from(d);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    for base in ["artifacts", "../artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")]
+    {
+        let p = PathBuf::from(base);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// A PJRT CPU client with compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT cpu client: {e}")))?;
+        Ok(Runtime { client, exes: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, path: &Path) -> Result<String> {
+        let key = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("artifact")
+            .to_string();
+        if self.exes.contains_key(&key) {
+            return Ok(key);
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        self.exes.insert(key.clone(), exe);
+        Ok(key)
+    }
+
+    /// Execute a loaded artifact. jax lowers with `return_tuple=True`,
+    /// so the single output is a tuple — returned decomposed.
+    pub fn execute(&self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(key)
+            .ok_or_else(|| Error::Runtime(format!("artifact {key:?} not loaded")))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| Error::Runtime(format!("execute {key}: {e}")))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {key}: {e}")))?;
+        literal.to_tuple().map_err(|e| Error::Runtime(format!("untuple {key}: {e}")))
+    }
+}
+
+/// Build an `f32` literal of the given shape from host data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+}
+
+/// Build an `i32` literal of the given shape from host data.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full AOT round trip on the sweep artifact (skips cleanly when
+    /// `make artifacts` has not run).
+    #[test]
+    fn sweep_artifact_roundtrip() {
+        let dir = match artifact_dir() {
+            Some(d) if d.join(SWEEP_ARTIFACT).exists() => d,
+            _ => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        };
+        let mut rt = Runtime::new().unwrap();
+        let key = rt.load(&dir.join(SWEEP_ARTIFACT)).unwrap();
+        let n = 256usize;
+        let cache = literal_f32(&vec![4.0f32; n], &[n as i64]).unwrap();
+        let write: Vec<f32> = (0..n).map(|i| 1.0 + i as f32).collect();
+        let write = literal_f32(&write, &[n as i64]).unwrap();
+        let upd = literal_f32(&vec![0.1f32; n], &[n as i64]).unwrap();
+        let out = rt.execute(&key, &[cache, write, upd]).unwrap();
+        assert_eq!(out.len(), 4, "4 outputs");
+        let lat_base = to_vec_f32(&out[0]).unwrap();
+        let lat_ips = to_vec_f32(&out[1]).unwrap();
+        // inside the cache (write < 4 GB): identical; beyond: IPS wins
+        assert!((lat_base[0] - lat_ips[0]).abs() < 1e-6);
+        assert!(lat_ips[200] < lat_base[200]);
+        // loading again hits the cache
+        let key2 = rt.load(&dir.join(SWEEP_ARTIFACT)).unwrap();
+        assert_eq!(key, key2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Workload-driven simulation: replays a [`Trace`] through a cache
+//! scheme over the FTL and flash array, detecting idle windows and
+//! collecting the paper's metrics.
+//!
+//! Timing model: each host request is split into 4 KiB pages; each
+//! page becomes one flash operation routed by the scheme. Queueing is
+//! captured by per-plane `busy_until` timelines — an operation issued
+//! at `now` on a busy plane starts when the plane frees up, so request
+//! latency includes the conflict delays the paper analyses (host
+//! writes arriving during baseline block reclamation wait; IPS/agc's
+//! page-granular steps barely delay them).
+//!
+//! Idle windows: when the gap between the device quiescing and the
+//! next arrival exceeds `cache.idle_threshold`, the scheme's
+//! `idle_work` runs with the next arrival as its deadline (background
+//! steps issued before the deadline may overrun it — exactly the
+//! paper's Fig. 7 conflict).
+
+use crate::cache::{self, CachePolicy};
+use crate::config::{Config, Nanos};
+use crate::flash::Lpn;
+use crate::ftl::Ftl;
+use crate::metrics::{BandwidthTimeline, LatencyStats, RunSummary};
+use crate::trace::scenario::Scenario;
+use crate::trace::{OpKind, Trace};
+use crate::Result;
+
+/// A configured simulator instance (one scheme over one fresh SSD).
+pub struct Simulator {
+    cfg: Config,
+    ftl: Ftl,
+    policy: Box<dyn CachePolicy>,
+    /// Host write-request latencies.
+    pub write_latency: LatencyStats,
+    /// Host read-request latencies.
+    pub read_latency: LatencyStats,
+    /// Host write bandwidth timeline.
+    pub bandwidth: BandwidthTimeline,
+    /// Simulated clock (last activity).
+    now: Nanos,
+}
+
+impl Simulator {
+    /// Build a simulator for `cfg` (scheme from `cfg.cache.scheme`).
+    pub fn new(cfg: Config) -> Result<Simulator> {
+        cfg.validate()?;
+        let mut ftl = Ftl::new(&cfg)?;
+        let mut policy = cache::build(&cfg);
+        policy.init(&mut ftl)?;
+        Ok(Simulator {
+            write_latency: LatencyStats::new(cfg.sim.latency_samples),
+            read_latency: LatencyStats::new(0),
+            bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
+            cfg,
+            ftl,
+            policy,
+            now: 0,
+        })
+    }
+
+    /// Access the FTL (diagnostics, audits).
+    pub fn ftl(&self) -> &Ftl {
+        &self.ftl
+    }
+    /// Scheme name.
+    pub fn scheme_name(&self) -> &'static str {
+        self.policy.name()
+    }
+    /// Logical page limit for trace construction.
+    pub fn lpn_limit(&self) -> u64 {
+        self.ftl.map.lpn_limit()
+    }
+    /// Logical byte capacity for trace construction.
+    pub fn logical_bytes(&self) -> u64 {
+        self.lpn_limit() * self.cfg.geometry.page_bytes as u64
+    }
+
+    /// Replay a whole trace under `scenario`; returns the run summary.
+    pub fn run(&mut self, trace: &Trace, scenario: Scenario) -> Result<RunSummary> {
+        let wall0 = std::time::Instant::now();
+        let idle_threshold = self.cfg.cache.idle_threshold;
+        let page = self.cfg.geometry.page_bytes as u64;
+        let lpn_limit = self.ftl.map.lpn_limit();
+        let mut host_bytes = 0u64;
+
+        for op in &trace.ops {
+            let arrival = op.at;
+            // idle window before this arrival?
+            if scenario == Scenario::Daily {
+                let quiesce = self.now;
+                if arrival > quiesce.saturating_add(idle_threshold) {
+                    let start = quiesce + idle_threshold;
+                    self.policy.idle_work(&mut self.ftl, start, arrival)?;
+                }
+            }
+            let first_lpn = (op.offset / page) % lpn_limit;
+            let n_pages = (op.len as u64).div_ceil(page).max(1);
+            match op.kind {
+                OpKind::Write => {
+                    let mut req_end = arrival;
+                    for i in 0..n_pages {
+                        let lpn = Lpn((first_lpn + i) % lpn_limit);
+                        self.ftl.ledger.host_page();
+                        let c = self.policy.host_write_page(&mut self.ftl, lpn, arrival)?;
+                        req_end = req_end.max(c.end);
+                    }
+                    self.write_latency.record(req_end - arrival);
+                    self.bandwidth.record(req_end, op.len as u64);
+                    host_bytes += op.len as u64;
+                    self.now = self.now.max(req_end);
+                }
+                OpKind::Read => {
+                    let mut req_end = arrival;
+                    for i in 0..n_pages {
+                        let lpn = Lpn((first_lpn + i) % lpn_limit);
+                        let c = self.ftl.host_read(lpn, arrival)?;
+                        req_end = req_end.max(c.end);
+                    }
+                    self.read_latency.record(req_end - arrival);
+                    self.now = self.now.max(req_end);
+                }
+            }
+            self.now = self.now.max(arrival);
+        }
+
+        // end-of-workload flush (daily): clear/convert the SLC cache
+        if scenario.flush_at_end() {
+            let end = self.policy.flush(&mut self.ftl, self.now)?;
+            self.now = self.now.max(end);
+        }
+
+        if self.cfg.sim.verify {
+            self.ftl.audit()?;
+        }
+
+        Ok(RunSummary {
+            scheme: self.policy.name().to_string(),
+            workload: trace.name.clone(),
+            scenario: scenario.name().to_string(),
+            seed: self.cfg.sim.seed,
+            write_latency: self.write_latency.clone(),
+            read_latency: self.read_latency.clone(),
+            ledger: self.ftl.ledger,
+            bandwidth: self.bandwidth.clone(),
+            sim_end: self.now,
+            host_bytes_written: host_bytes,
+            wall_clock: wall0.elapsed(),
+        })
+    }
+
+    /// Convenience: build + run in one call.
+    pub fn run_once(cfg: Config, trace: &Trace, scenario: Scenario) -> Result<RunSummary> {
+        Simulator::new(cfg)?.run(trace, scenario)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Scheme, MS, SEC};
+    use crate::trace::{scenario, synth, profiles};
+
+    fn small_cfg(scheme: Scheme) -> Config {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = scheme;
+        cfg.cache.slc_cache_bytes = 1 << 20;
+        cfg.sim.verify = true;
+        cfg
+    }
+
+    #[test]
+    fn bursty_baseline_shows_cliff() {
+        let cfg = small_cfg(Scheme::Baseline);
+        let mut sim = Simulator::new(cfg.clone()).unwrap();
+        // write 3× the cache size sequentially, no idle
+        let trace = scenario::sequential_fill("seq", 3 << 20, sim.logical_bytes());
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        // breakdown: both SLC writes (pre-cliff) and TLC writes (post)
+        assert!(s.ledger.slc_cache_writes > 0);
+        assert!(s.ledger.tlc_direct_writes > 0);
+        // bandwidth collapses after the cliff: mean latency between
+        // pure-SLC and pure-TLC page cost
+        assert!(s.mean_write_latency() > cfg.timing.slc_prog as f64);
+        // no idle-time migration during the run; the end-of-workload
+        // flush moves at most one cache's worth (§III)
+        let cache_pages = (1u64 << 20) / 4096;
+        assert!(s.ledger.slc2tlc_migrations <= cache_pages);
+        assert!(s.wa() < 1.4, "wa={}", s.wa());
+    }
+
+    #[test]
+    fn daily_baseline_reclaims_and_amplifies() {
+        let cfg = small_cfg(Scheme::Baseline);
+        let mut sim = Simulator::new(cfg).unwrap();
+        // two 1 MiB streams with a long idle gap between
+        let trace = scenario::daily_streams(2, 1 << 20, 60 * SEC, sim.logical_bytes());
+        let s = sim.run(&trace, scenario::Scenario::Daily).unwrap();
+        assert!(s.ledger.slc2tlc_migrations > 0, "idle reclamation ran");
+        assert!(s.wa() > 1.5, "daily-use WA grows: {}", s.wa());
+    }
+
+    #[test]
+    fn daily_ips_avoids_amplification() {
+        let cfg = small_cfg(Scheme::Ips);
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = scenario::daily_streams(2, 1 << 20, 60 * SEC, sim.logical_bytes());
+        let s = sim.run(&trace, scenario::Scenario::Daily).unwrap();
+        assert!(s.wa() < 1.1, "IPS keeps WA near 1: {}", s.wa());
+    }
+
+    #[test]
+    fn bursty_ips_beats_baseline_after_cliff() {
+        // total volume = 4× cache: baseline pays TLC for 3/4 of it;
+        // IPS intermittently re-arms SLC windows.
+        let vol = 4u64 << 20;
+        let run = |scheme| {
+            let cfg = small_cfg(scheme);
+            let mut sim = Simulator::new(cfg).unwrap();
+            let t = scenario::sequential_fill("seq", vol, sim.logical_bytes());
+            sim.run(&t, scenario::Scenario::Bursty).unwrap()
+        };
+        let base = run(Scheme::Baseline);
+        let ips = run(Scheme::Ips);
+        assert!(
+            ips.mean_write_latency() < base.mean_write_latency(),
+            "ips {} < baseline {}",
+            ips.mean_write_latency(),
+            base.mean_write_latency()
+        );
+    }
+
+    #[test]
+    fn synthetic_profile_runs_all_schemes_daily() {
+        let p = profiles::by_name("HM_0").unwrap();
+        for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop] {
+            let mut cfg = small_cfg(scheme);
+            cfg.cache.idle_threshold = 10 * MS;
+            let mut sim = Simulator::new(cfg).unwrap();
+            let trace = synth::generate_scaled(p, 42, sim.logical_bytes(), 0.002);
+            let s = sim.run(&trace, scenario::Scenario::Daily).unwrap();
+            assert!(s.ledger.host_pages > 0, "{scheme:?} processed writes");
+            assert!(s.wa() >= 0.999, "{scheme:?} WA >= 1: {}", s.wa());
+            // audit ran inside (verify=true) — reaching here is the test
+        }
+    }
+
+    #[test]
+    fn read_latency_tracked() {
+        let cfg = small_cfg(Scheme::Baseline);
+        let mut sim = Simulator::new(cfg).unwrap();
+        let mut trace = scenario::sequential_fill("seq", 256 << 10, sim.logical_bytes());
+        // append reads of the just-written range
+        let dur = trace.duration();
+        for i in 0..8u64 {
+            trace.ops.push(crate::trace::TraceOp {
+                at: dur + 1 + i,
+                kind: OpKind::Read,
+                offset: i * 4096,
+                len: 4096,
+            });
+        }
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.read_latency.count(), 8);
+        assert!(s.read_latency.mean() > 0.0);
+    }
+
+    #[test]
+    fn latency_samples_captured_for_fig9() {
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.sim.latency_samples = 100;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = scenario::sequential_fill("seq", 1 << 20, sim.logical_bytes());
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.write_latency.raw_us().len(), 32.min(100));
+    }
+}

@@ -1,0 +1,5 @@
+//! The discrete-event simulation engine.
+
+pub mod engine;
+
+pub use engine::Simulator;

@@ -1,0 +1,136 @@
+//! Workload machinery: trace representation, the MSR Cambridge CSV
+//! parser, synthetic per-volume generators, and the paper's scenario
+//! transforms (bursty / daily use).
+//!
+//! The paper evaluates a subset of the MSR Cambridge server traces
+//! [24]. Those traces are a separate multi-GB download; when a real
+//! trace directory is available (`$MSR_TRACE_DIR`), [`msr`] parses the
+//! native CSV format. Otherwise [`synth`] generates statistically
+//! matched traces from the published per-volume characteristics in
+//! [`profiles`] — the substitution is documented in DESIGN.md.
+
+pub mod msr;
+pub mod profiles;
+pub mod scenario;
+pub mod synth;
+
+use crate::config::Nanos;
+
+/// Host operation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Host read.
+    Read,
+    /// Host write.
+    Write,
+}
+
+/// One host request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Arrival time (ns, normalized to trace start).
+    pub at: Nanos,
+    /// Read or write.
+    pub kind: OpKind,
+    /// Byte offset on the device.
+    pub offset: u64,
+    /// Length in bytes.
+    pub len: u32,
+}
+
+/// A whole workload trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Workload name (e.g. "HM_0").
+    pub name: String,
+    /// Requests sorted by arrival time.
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    /// Total bytes written by the trace.
+    pub fn total_write_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| o.kind == OpKind::Write)
+            .map(|o| o.len as u64)
+            .sum()
+    }
+
+    /// Total bytes read.
+    pub fn total_read_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| o.kind == OpKind::Read)
+            .map(|o| o.len as u64)
+            .sum()
+    }
+
+    /// Trace duration (last arrival).
+    pub fn duration(&self) -> Nanos {
+        self.ops.last().map(|o| o.at).unwrap_or(0)
+    }
+
+    /// Highest byte offset touched + 1.
+    pub fn footprint_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.offset + o.len as u64).max().unwrap_or(0)
+    }
+
+    /// Number of write requests.
+    pub fn write_ops(&self) -> usize {
+        self.ops.iter().filter(|o| o.kind == OpKind::Write).count()
+    }
+
+    /// Ensure arrival-time ordering (stable).
+    pub fn sort(&mut self) {
+        self.ops.sort_by_key(|o| o.at);
+    }
+
+    /// Repeat the trace `n` times back to back (used by Fig. 12 to
+    /// grow total write size), shifting arrivals by the duration plus
+    /// `gap` between copies.
+    pub fn repeat(&self, n: u32, gap: Nanos) -> Trace {
+        let mut ops = Vec::with_capacity(self.ops.len() * n as usize);
+        let period = self.duration() + gap;
+        for i in 0..n as u64 {
+            for op in &self.ops {
+                ops.push(TraceOp { at: op.at + i * period, ..*op });
+            }
+        }
+        Trace { name: format!("{}x{n}", self.name), ops }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Trace {
+        Trace {
+            name: "t".into(),
+            ops: vec![
+                TraceOp { at: 0, kind: OpKind::Write, offset: 0, len: 4096 },
+                TraceOp { at: 10, kind: OpKind::Read, offset: 4096, len: 8192 },
+                TraceOp { at: 20, kind: OpKind::Write, offset: 8192, len: 4096 },
+            ],
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let tr = t();
+        assert_eq!(tr.total_write_bytes(), 8192);
+        assert_eq!(tr.total_read_bytes(), 8192);
+        assert_eq!(tr.duration(), 20);
+        assert_eq!(tr.footprint_bytes(), 12288);
+        assert_eq!(tr.write_ops(), 2);
+    }
+
+    #[test]
+    fn repeat_shifts_time() {
+        let tr = t().repeat(3, 5);
+        assert_eq!(tr.ops.len(), 9);
+        assert_eq!(tr.ops[3].at, 25); // duration 20 + gap 5
+        assert_eq!(tr.total_write_bytes(), 3 * 8192);
+    }
+}

@@ -1,0 +1,139 @@
+//! MSR Cambridge block-trace parser [24].
+//!
+//! Native CSV format, one request per line:
+//! `Timestamp,Hostname,DiskNumber,Type,Offset,Size,ResponseTime`
+//! where `Timestamp` is a Windows filetime (100 ns ticks since 1601),
+//! `Type` is `Read`/`Write`, `Offset`/`Size` are bytes, and
+//! `ResponseTime` is in 100 ns units (ignored — we simulate our own).
+//!
+//! [`load_dir`] looks for `<name>.csv` (case-insensitive) under
+//! `$MSR_TRACE_DIR`; callers fall back to [`super::synth`] when absent.
+
+use super::{OpKind, Trace, TraceOp};
+use crate::{Error, Result};
+use std::io::BufRead;
+use std::path::Path;
+
+/// Parse one MSR CSV line.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<TraceOp>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut fields = line.split(',');
+    let err = |what: &str| Error::Trace(format!("line {lineno}: {what} in {line:?}"));
+    let ts: u64 = fields
+        .next()
+        .ok_or_else(|| err("missing timestamp"))?
+        .trim()
+        .parse()
+        .map_err(|_| err("bad timestamp"))?;
+    let _host = fields.next().ok_or_else(|| err("missing hostname"))?;
+    let _disk = fields.next().ok_or_else(|| err("missing disk"))?;
+    let kind = match fields.next().ok_or_else(|| err("missing type"))?.trim() {
+        t if t.eq_ignore_ascii_case("read") => OpKind::Read,
+        t if t.eq_ignore_ascii_case("write") => OpKind::Write,
+        _ => return Err(err("bad type")),
+    };
+    let offset: u64 = fields
+        .next()
+        .ok_or_else(|| err("missing offset"))?
+        .trim()
+        .parse()
+        .map_err(|_| err("bad offset"))?;
+    let len: u64 = fields
+        .next()
+        .ok_or_else(|| err("missing size"))?
+        .trim()
+        .parse()
+        .map_err(|_| err("bad size"))?;
+    Ok(Some(TraceOp {
+        at: ts.saturating_mul(100), // 100 ns ticks → ns
+        kind,
+        offset,
+        len: len.min(u32::MAX as u64) as u32,
+    }))
+}
+
+/// Parse an MSR CSV stream into a trace (timestamps normalized to 0).
+pub fn parse<R: BufRead>(name: &str, reader: R) -> Result<Trace> {
+    let mut ops = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        if let Some(op) = parse_line(&line, i + 1)? {
+            ops.push(op);
+        }
+    }
+    if ops.is_empty() {
+        return Err(Error::Trace(format!("{name}: empty trace")));
+    }
+    ops.sort_by_key(|o| o.at);
+    let t0 = ops[0].at;
+    for op in &mut ops {
+        op.at -= t0;
+    }
+    Ok(Trace { name: name.to_string(), ops })
+}
+
+/// Load `<dir>/<name>.csv` (tries lower/upper case).
+pub fn load_dir(dir: &Path, name: &str) -> Result<Trace> {
+    for candidate in [
+        dir.join(format!("{}.csv", name.to_ascii_lowercase())),
+        dir.join(format!("{name}.csv")),
+        dir.join(format!("{}.csv", name.to_ascii_uppercase())),
+    ] {
+        if candidate.exists() {
+            let f = std::fs::File::open(&candidate)?;
+            return parse(name, std::io::BufReader::new(f));
+        }
+    }
+    Err(Error::Trace(format!("no CSV for {name} under {}", dir.display())))
+}
+
+/// The directory from `$MSR_TRACE_DIR`, if configured.
+pub fn trace_dir() -> Option<std::path::PathBuf> {
+    std::env::var_os("MSR_TRACE_DIR").map(std::path::PathBuf::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+128166372003061629,hm,0,Read,383496192,32768,1331
+128166372016853424,hm,0,Write,2822144,4096,1790
+128166372026185026,hm,0,Write,2877440,8192,981
+";
+
+    #[test]
+    fn parses_and_normalizes() {
+        let t = parse("hm_0", SAMPLE.as_bytes()).unwrap();
+        assert_eq!(t.ops.len(), 3);
+        assert_eq!(t.ops[0].at, 0, "normalized to zero");
+        assert_eq!(t.ops[0].kind, OpKind::Read);
+        assert_eq!(t.ops[1].kind, OpKind::Write);
+        assert_eq!(t.ops[1].len, 4096);
+        // 100ns ticks scaled to ns
+        assert_eq!(t.ops[1].at, (128166372016853424 - 128166372003061629) * 100);
+        assert_eq!(t.total_write_bytes(), 12288);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("x", "not,a,trace".as_bytes()).is_err());
+        assert!(parse("x", "".as_bytes()).is_err());
+        assert!(parse("x", "1,h,0,Frobnicate,0,4096,1".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let src = format!("\n# comment\n{SAMPLE}\n");
+        let t = parse("hm_0", src.as_bytes()).unwrap();
+        assert_eq!(t.ops.len(), 3);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_dir(Path::new("/nonexistent-xyz"), "hm_0").is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! The paper's two evaluation scenarios (§III, §V-A).
+//!
+//! * **Bursty access**: "incoming writes of all workloads are
+//!   configured as sequential writes with 32 KB write size. And then,
+//!   arriving time is accelerated so that there is no idle time."
+//!   [`to_bursty`] rewrites a trace accordingly (reads dropped, same
+//!   total write volume).
+//! * **Daily use**: the native trace runs as-is; idle gaps host
+//!   background work, and at the end of the workload the SLC cache is
+//!   force-flushed ([`Scenario::flush_at_end`]).
+//!
+//! [`daily_streams`] builds the Fig. 4 motivation workload: N
+//! sequential write streams of S bytes with a fixed idle gap between
+//! consecutive streams.
+
+use super::{OpKind, Trace, TraceOp};
+use crate::config::Nanos;
+
+/// Which scenario a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Sustained sequential 32 KiB writes, no idle time.
+    Bursty,
+    /// Native arrivals; idle-time background work; end-of-run flush.
+    Daily,
+}
+
+impl Scenario {
+    /// Scenario name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Bursty => "bursty",
+            Scenario::Daily => "daily",
+        }
+    }
+    /// Does the scenario run the scheme's end-of-workload flush?
+    /// Both do — paper §III: "at the end of each workload, all data in
+    /// the SLC cache is migrated to the TLC space, and the used blocks
+    /// are erased" (Fig. 5a shows SLC2TLC fractions for bursty runs
+    /// too). Only the *idle-time* background work is daily-only.
+    pub fn flush_at_end(&self) -> bool {
+        true
+    }
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> crate::Result<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "bursty" => Ok(Scenario::Bursty),
+            "daily" => Ok(Scenario::Daily),
+            other => Err(crate::Error::config(format!(
+                "unknown scenario {other:?} (want bursty|daily)"
+            ))),
+        }
+    }
+}
+
+/// 32 KiB — the paper's bursty write size.
+pub const BURSTY_WRITE_BYTES: u32 = 32 * 1024;
+
+/// Rewrite a trace for the bursty scenario: same total write volume,
+/// back-to-back sequential 32 KiB writes, zero think time (arrivals
+/// 1 ns apart so ordering is preserved but no idle window ever opens).
+pub fn to_bursty(trace: &Trace, footprint_limit: u64) -> Trace {
+    let total = trace.total_write_bytes();
+    sequential_fill(&format!("{}(bursty)", trace.name), total, footprint_limit)
+}
+
+/// Sequential 32 KiB writes totalling `total_bytes`, wrapping at
+/// `footprint_limit`, with no idle time.
+pub fn sequential_fill(name: &str, total_bytes: u64, footprint_limit: u64) -> Trace {
+    let n = total_bytes / BURSTY_WRITE_BYTES as u64;
+    let wrap = footprint_limit.max(BURSTY_WRITE_BYTES as u64);
+    let ops = (0..n)
+        .map(|i| TraceOp {
+            at: i, // 1 ns apart: ordered, but never idle
+            kind: OpKind::Write,
+            offset: (i * BURSTY_WRITE_BYTES as u64) % (wrap - wrap % BURSTY_WRITE_BYTES as u64),
+            len: BURSTY_WRITE_BYTES,
+        })
+        .collect();
+    Trace { name: name.to_string(), ops }
+}
+
+/// The Fig. 4 motivation workload: `streams` sequential write streams
+/// of `stream_bytes` each, separated by `idle_gap` of quiet time.
+/// Within a stream, requests arrive back to back (the device is the
+/// bottleneck).
+pub fn daily_streams(
+    streams: u32,
+    stream_bytes: u64,
+    idle_gap: Nanos,
+    footprint_limit: u64,
+) -> Trace {
+    let per_stream = stream_bytes / BURSTY_WRITE_BYTES as u64;
+    let wrap = footprint_limit.max(BURSTY_WRITE_BYTES as u64);
+    let wrap = wrap - wrap % BURSTY_WRITE_BYTES as u64;
+    let mut ops = Vec::with_capacity((streams as u64 * per_stream) as usize);
+    let mut offset = 0u64;
+    for s in 0..streams as u64 {
+        // Streams are arrival-dense; the engine's queueing spreads them
+        // out at device speed. Each stream starts after the previous
+        // stream's nominal span plus the idle gap; the span estimate
+        // uses request count (1 ns apart) — queueing dominates anyway.
+        let stream_start = s * idle_gap + s * per_stream;
+        for i in 0..per_stream {
+            ops.push(TraceOp {
+                at: stream_start + i,
+                kind: OpKind::Write,
+                offset,
+                len: BURSTY_WRITE_BYTES,
+            });
+            offset = (offset + BURSTY_WRITE_BYTES as u64) % wrap;
+        }
+    }
+    Trace { name: format!("streams{streams}x{}", stream_bytes >> 30), ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MS, SEC};
+    use crate::trace::profiles;
+    use crate::trace::synth;
+
+    #[test]
+    fn bursty_preserves_volume_and_removes_idle() {
+        let p = profiles::by_name("HM_0").unwrap();
+        let daily = synth::generate_scaled(p, 1, u64::MAX, 0.01);
+        let bursty = to_bursty(&daily, 1 << 30);
+        // volume preserved to within one request
+        let dv = daily.total_write_bytes() as i64;
+        let bv = bursty.total_write_bytes() as i64;
+        assert!((dv - bv).abs() < BURSTY_WRITE_BYTES as i64 + 1);
+        // all 32 KiB writes, arrivals dense
+        assert!(bursty.ops.iter().all(|o| o.len == BURSTY_WRITE_BYTES));
+        assert!(bursty.ops.iter().all(|o| o.kind == OpKind::Write));
+        let max_gap = bursty.ops.windows(2).map(|w| w[1].at - w[0].at).max().unwrap_or(0);
+        assert!(max_gap <= 1, "no idle time");
+    }
+
+    #[test]
+    fn bursty_is_sequential_then_wraps() {
+        let t = sequential_fill("x", 1 << 20, 256 << 10);
+        assert_eq!(t.ops[0].offset, 0);
+        assert_eq!(t.ops[1].offset, 32 << 10);
+        // wraps within the footprint
+        assert!(t.footprint_bytes() <= 256 << 10);
+    }
+
+    #[test]
+    fn daily_streams_structure() {
+        let t = daily_streams(5, 1 << 20, 600 * SEC, 1 << 30);
+        assert_eq!(t.ops.len(), 5 * 32);
+        // the gap between stream s and s+1 first ops spans the idle gap
+        let per = 32u64;
+        let gap = t.ops[per as usize].at - t.ops[per as usize - 1].at;
+        assert!(gap >= 600 * SEC - MS, "idle gap present: {gap}");
+        assert_eq!(t.total_write_bytes(), 5 << 20);
+    }
+
+    #[test]
+    fn scenario_parse() {
+        assert_eq!(Scenario::parse("bursty").unwrap(), Scenario::Bursty);
+        assert_eq!(Scenario::parse("DAILY").unwrap(), Scenario::Daily);
+        assert!(Scenario::parse("x").is_err());
+        assert!(Scenario::Daily.flush_at_end());
+        assert!(Scenario::Bursty.flush_at_end(), "flush applies to both (§III)");
+    }
+}

@@ -1,0 +1,188 @@
+//! Synthetic trace generation from statistical profiles.
+//!
+//! Generates a burst-structured request stream: bursts of
+//! `burst_len_mean` requests with exponential intra-burst gaps,
+//! separated by exponential idle gaps (`idle_gap_ms`). Write offsets
+//! either continue a sequential run (`seq_prob`) or jump to a
+//! Zipf-distributed 4 KiB-aligned position in the working set (update
+//! locality). All randomness flows from one seed — traces are exactly
+//! reproducible.
+
+use super::profiles::Profile;
+use super::{OpKind, Trace, TraceOp};
+use crate::config::{Nanos, MS, US};
+use crate::util::rng::{Rng, Zipf};
+
+/// Generate a daily-use trace for `profile`, targeting its
+/// `total_write_bytes`. `footprint_limit` bounds offsets (the logical
+/// device size); pass `u64::MAX` for unbounded.
+pub fn generate(profile: &Profile, seed: u64, footprint_limit: u64) -> Trace {
+    generate_scaled(profile, seed, footprint_limit, 1.0)
+}
+
+/// Like [`generate`] but scaling the write volume by `volume_scale`
+/// (used by scaled-down benches and Fig. 12 sweeps).
+pub fn generate_scaled(
+    profile: &Profile,
+    seed: u64,
+    footprint_limit: u64,
+    volume_scale: f64,
+) -> Trace {
+    let mut rng = Rng::new(seed ^ fxhash(profile.name));
+    let target_bytes = ((profile.total_write_bytes as f64) * volume_scale) as u64;
+    // The working set scales with the volume so the overwrite fraction
+    // (update locality — what drives invalidation and WA) is invariant
+    // under scaling.
+    let ws_scaled = ((profile.working_set_bytes as f64) * volume_scale) as u64;
+    let ws = ws_scaled.min(footprint_limit).max(1 << 20);
+    let ws_pages = ws / 4096;
+    let zipf = Zipf::new(ws_pages.max(2), profile.update_theta);
+    // scatter the hot ranks around the working set deterministically
+    let page_of_rank = |rank: u64| -> u64 { rank.wrapping_mul(0x9E3779B97F4A7C15) % ws_pages };
+
+    let mut ops = Vec::new();
+    let mut t: Nanos = 0;
+    let mut written = 0u64;
+    let mut seq_w: u64 = rng.below(ws_pages) * 4096; // sequential write head
+    let mut seq_r: u64 = rng.below(ws_pages) * 4096;
+    while written < target_bytes {
+        // one burst
+        let burst_len = (rng.exp(profile.burst_len_mean).ceil() as u64).max(1);
+        for _ in 0..burst_len {
+            let is_write = rng.chance(profile.write_ratio);
+            let len = {
+                let weights: Vec<f64> = profile.size_mix.iter().map(|(_, w)| *w).collect();
+                profile.size_mix[rng.weighted(&weights)].0
+            };
+            let offset = if is_write {
+                if rng.chance(profile.seq_prob) {
+                    let o = seq_w;
+                    seq_w = (seq_w + len as u64) % ws;
+                    o
+                } else {
+                    let rank = zipf.sample(&mut rng);
+                    let o = page_of_rank(rank) * 4096;
+                    seq_w = (o + len as u64) % ws;
+                    o
+                }
+            } else if rng.chance(profile.seq_prob) {
+                let o = seq_r;
+                seq_r = (seq_r + len as u64) % ws;
+                o
+            } else {
+                rng.below(ws_pages) * 4096
+            };
+            let offset = offset.min(footprint_limit.saturating_sub(len as u64));
+            ops.push(TraceOp {
+                at: t,
+                kind: if is_write { OpKind::Write } else { OpKind::Read },
+                offset,
+                len,
+            });
+            if is_write {
+                written += len as u64;
+                if written >= target_bytes {
+                    break;
+                }
+            }
+            t += (rng.exp(profile.intra_gap_us) * US as f64) as Nanos;
+        }
+        // idle gap to the next burst
+        t += (rng.exp(profile.idle_gap_ms) * MS as f64) as Nanos;
+    }
+    let mut trace = Trace { name: profile.name.to_string(), ops };
+    trace.sort();
+    trace
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::profiles;
+
+    #[test]
+    fn hits_write_volume_target() {
+        let p = profiles::by_name("HM_0").unwrap();
+        let t = generate_scaled(p, 1, u64::MAX, 0.01); // ~60 MiB
+        let target = (p.total_write_bytes as f64 * 0.01) as u64;
+        let got = t.total_write_bytes();
+        assert!(got >= target, "target reached");
+        assert!(got < target + (1 << 20), "no gross overshoot");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = profiles::by_name("PRXY_0").unwrap();
+        let a = generate_scaled(p, 7, u64::MAX, 0.005);
+        let b = generate_scaled(p, 7, u64::MAX, 0.005);
+        assert_eq!(a.ops, b.ops);
+        let c = generate_scaled(p, 8, u64::MAX, 0.005);
+        assert_ne!(a.ops, c.ops);
+    }
+
+    #[test]
+    fn respects_footprint_limit() {
+        let p = profiles::by_name("USR_0").unwrap();
+        let limit = 64 << 20;
+        let t = generate_scaled(p, 3, limit, 0.002);
+        assert!(t.footprint_bytes() <= limit);
+    }
+
+    #[test]
+    fn write_ratio_roughly_matches() {
+        let p = profiles::by_name("PRXY_0").unwrap(); // 0.97 writes
+        let t = generate_scaled(p, 5, u64::MAX, 0.01);
+        let w = t.write_ops() as f64 / t.ops.len() as f64;
+        assert!(w > 0.90, "w={w}");
+        let p = profiles::by_name("HM_1").unwrap(); // 0.05 writes
+        let t = generate_scaled(p, 5, u64::MAX, 0.05);
+        let w = t.write_ops() as f64 / t.ops.len() as f64;
+        assert!(w < 0.20, "w={w}");
+    }
+
+    #[test]
+    fn update_locality_creates_overwrites() {
+        // PRXY_0 has a hot 512 MiB working set: a trace writing ~1% of
+        // volume must overwrite pages (distinct 4K pages < total pages).
+        let p = profiles::by_name("PRXY_0").unwrap();
+        let t = generate_scaled(p, 11, u64::MAX, 0.02);
+        use std::collections::HashSet;
+        let mut pages: HashSet<u64> = HashSet::new();
+        let mut total = 0u64;
+        for op in t.ops.iter().filter(|o| o.kind == OpKind::Write) {
+            let first = op.offset / 4096;
+            let n = (op.len as u64).div_ceil(4096);
+            for i in 0..n {
+                pages.insert(first + i);
+                total += 1;
+            }
+        }
+        assert!(
+            (pages.len() as u64) < total * 9 / 10,
+            "hot set causes repeats: {} distinct of {total}",
+            pages.len()
+        );
+    }
+
+    #[test]
+    fn idle_gaps_present_in_daily_traces() {
+        let p = profiles::by_name("HM_0").unwrap(); // 400 ms gaps
+        let t = generate_scaled(p, 13, u64::MAX, 0.01);
+        let mut big_gaps = 0;
+        for w in t.ops.windows(2) {
+            if w[1].at - w[0].at > 100 * MS {
+                big_gaps += 1;
+            }
+        }
+        assert!(big_gaps > 5, "bursty structure with real idle windows");
+    }
+}

@@ -1,0 +1,222 @@
+//! Measurement harness for `benches/*` (offline stand-in for
+//! `criterion`; used with `harness = false`).
+//!
+//! Provides wall-clock measurement with warmup, adaptive iteration
+//! counts, robust statistics (mean / median / p95 / min), and a small
+//! results table. Benchmarks register named closures; the harness can
+//! filter them by the substring argument `cargo bench -- <filter>`.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Benchmark name.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u32,
+    /// Mean per-iteration time.
+    pub mean: Duration,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// 95th percentile per-iteration time.
+    pub p95: Duration,
+    /// Fastest iteration.
+    pub min: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<u64>,
+}
+
+impl Stats {
+    /// items/second if a throughput denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+}
+
+/// Format a duration compactly (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// The bench harness. Create one in `main`, `register` closures, `run`.
+pub struct Harness {
+    filter: Option<String>,
+    /// Target time to spend measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    results: Vec<Stats>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Harness {
+    /// Create a harness, reading the filter from `std::env::args` and
+    /// time budgets from `IPS_BENCH_MEASURE_MS` / `IPS_BENCH_WARMUP_MS`.
+    pub fn new() -> Self {
+        // cargo bench passes "--bench"; anything else is a filter.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        let measure_ms = std::env::var("IPS_BENCH_MEASURE_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2_000u64);
+        let warmup_ms = std::env::var("IPS_BENCH_WARMUP_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300u64);
+        Harness {
+            filter,
+            measure_time: Duration::from_millis(measure_ms),
+            warmup_time: Duration::from_millis(warmup_ms),
+            results: Vec::new(),
+        }
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// `items` is the optional throughput denominator (e.g. host pages
+    /// written per iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        // Warmup and calibration: find how many iters fit the budget.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u32;
+        while warm_start.elapsed() < self.warmup_time || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / calib_iters.max(1);
+        let target = self
+            .measure_time
+            .as_nanos()
+            .checked_div(per_iter.as_nanos().max(1))
+            .unwrap_or(1) as u32;
+        let iters = target.clamp(5, 10_000);
+
+        let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean: total / iters,
+            median: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+            items_per_iter: items,
+        };
+        self.report_line(&stats);
+        self.results.push(stats);
+    }
+
+    fn report_line(&self, s: &Stats) {
+        let tp = match s.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>9.2} M items/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>9.2} K items/s", t / 1e3),
+            Some(t) => format!("  {t:>9.2} items/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>10}/iter  (median {:>10}, p95 {:>10}, min {:>10}, n={}){}",
+            s.name,
+            fmt_duration(s.mean),
+            fmt_duration(s.median),
+            fmt_duration(s.p95),
+            fmt_duration(s.min),
+            s.iters,
+            tp
+        );
+    }
+
+    /// All collected stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print a closing summary (called at the end of each bench binary).
+    pub fn finish(&self) {
+        println!("\n{} benchmark(s) complete.", self.results.len());
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut h = Harness {
+            filter: None,
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        h.bench("noop-ish", Some(100), || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(h.results().len(), 1);
+        let s = &h.results()[0];
+        assert!(s.iters >= 5);
+        assert!(s.mean >= s.min);
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut h = Harness {
+            filter: Some("match-me".into()),
+            measure_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        h.bench("other", None, || {});
+        assert!(h.results().is_empty());
+        h.bench("yes-match-me", None, || {});
+        assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with("s"));
+    }
+}

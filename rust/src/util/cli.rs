@@ -1,0 +1,358 @@
+//! Declarative command-line parsing (offline stand-in for `clap`).
+//!
+//! Supports subcommands, long/short flags, options with values
+//! (`--opt v`, `--opt=v`), repeated options, positional arguments, and
+//! generated `--help` text.
+//!
+//! ```no_run
+//! use ips::util::cli::{Command, Parsed};
+//! let cmd = Command::new("demo", "demo tool")
+//!     .flag("verbose", Some('v'), "chatty output")
+//!     .opt("seed", None, "SEED", "rng seed", Some("42"));
+//! let parsed = cmd.parse_from(vec!["--verbose".into(), "--seed=7".into()]).unwrap();
+//! assert!(parsed.flag("verbose"));
+//! assert_eq!(parsed.get_u64("seed").unwrap(), 7);
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+struct Spec {
+    name: &'static str,
+    short: Option<char>,
+    value_name: Option<&'static str>, // None => boolean flag
+    help: &'static str,
+    default: Option<&'static str>,
+}
+
+/// A (sub)command specification.
+#[derive(Clone, Debug)]
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+    positionals: Vec<(&'static str, &'static str, bool)>, // (name, help, required)
+    subs: Vec<Command>,
+}
+
+/// Parse result: values keyed by option name.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    /// Which subcommand matched (path of names), if any.
+    pub subcommand: Option<&'static str>,
+    /// Nested parse result for the subcommand.
+    sub: Option<Box<Parsed>>,
+    flags: BTreeMap<&'static str, bool>,
+    values: BTreeMap<&'static str, Vec<String>>,
+    positionals: BTreeMap<&'static str, String>,
+}
+
+/// CLI parsing error with a user-facing message.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Command {
+    /// New command with a name and a one-line description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new(), positionals: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, short: Option<char>, help: &'static str) -> Self {
+        self.specs.push(Spec { name, short, value_name: None, help, default: None });
+        self
+    }
+
+    /// Add an option that takes a value, with an optional default.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        short: Option<char>,
+        value_name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.specs.push(Spec { name, short, value_name: Some(value_name), help, default });
+        self
+    }
+
+    /// Add a positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str, required: bool) -> Self {
+        self.positionals.push((name, help, required));
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subs.push(sub);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.specs.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _, req) in &self.positionals {
+            if *req {
+                s.push_str(&format!(" <{p}>"));
+            } else {
+                s.push_str(&format!(" [{p}]"));
+            }
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h, _) in &self.positionals {
+                s.push_str(&format!("  {p:<18} {h}\n"));
+            }
+        }
+        if !self.specs.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for spec in &self.specs {
+                let short = spec.short.map(|c| format!("-{c}, ")).unwrap_or_else(|| "    ".into());
+                let long = match spec.value_name {
+                    Some(v) => format!("--{} <{}>", spec.name, v),
+                    None => format!("--{}", spec.name),
+                };
+                let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {short}{long:<28} {}{def}\n", spec.help));
+            }
+        }
+        if !self.subs.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sub in &self.subs {
+                s.push_str(&format!("  {:<18} {}\n", sub.name, sub.about));
+            }
+        }
+        s
+    }
+
+    /// Parse `std::env::args` (skipping argv0). Exits the process on
+    /// `--help` or error — the binary-facing entry point.
+    pub fn parse_or_exit(&self) -> Parsed {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(args) {
+            Ok(p) => p,
+            Err(CliError(msg)) => {
+                if msg == "__help__" {
+                    println!("{}", self.help());
+                    std::process::exit(0);
+                }
+                eprintln!("error: {msg}\n\n{}", self.help());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse an explicit argument vector.
+    pub fn parse_from(&self, args: Vec<String>) -> std::result::Result<Parsed, CliError> {
+        let mut parsed = Parsed::default();
+        // seed defaults
+        for spec in &self.specs {
+            if let (Some(_), Some(d)) = (spec.value_name, spec.default) {
+                parsed.values.insert(spec.name, vec![d.to_string()]);
+            }
+        }
+        let mut pos_idx = 0usize;
+        let mut i = 0usize;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError("__help__".into()));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                match spec.value_name {
+                    None => {
+                        if inline_val.is_some() {
+                            return Err(CliError(format!("flag --{key} takes no value")));
+                        }
+                        parsed.flags.insert(spec.name, true);
+                    }
+                    Some(_) => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                args.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            }
+                        };
+                        // explicit value replaces the default; repeats accumulate
+                        let entry = parsed.values.entry(spec.name).or_default();
+                        if spec.default.map(|d| entry.len() == 1 && entry[0] == d).unwrap_or(false)
+                        {
+                            entry.clear();
+                        }
+                        entry.push(v);
+                    }
+                }
+            } else if let Some(rest) = a.strip_prefix('-') {
+                if rest.len() != 1 {
+                    return Err(CliError(format!("unknown argument {a}")));
+                }
+                let c = rest.chars().next().unwrap();
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.short == Some(c))
+                    .ok_or_else(|| CliError(format!("unknown option -{c}")))?;
+                if spec.value_name.is_some() {
+                    i += 1;
+                    let v = args
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("-{c} needs a value")))?;
+                    parsed.values.entry(spec.name).or_default().push(v);
+                } else {
+                    parsed.flags.insert(spec.name, true);
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == a) {
+                let rest = args[i + 1..].to_vec();
+                let sub_parsed = sub.parse_from(rest)?;
+                parsed.subcommand = Some(sub.name);
+                parsed.sub = Some(Box::new(sub_parsed));
+                return Ok(parsed);
+            } else {
+                // positional
+                match self.positionals.get(pos_idx) {
+                    Some((name, _, _)) => {
+                        parsed.positionals.insert(name, a.clone());
+                        pos_idx += 1;
+                    }
+                    None => return Err(CliError(format!("unexpected argument {a}"))),
+                }
+            }
+            i += 1;
+        }
+        for (name, _, required) in &self.positionals {
+            if *required && !parsed.positionals.contains_key(name) {
+                return Err(CliError(format!("missing required argument <{name}>")));
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+impl Parsed {
+    /// Was the boolean flag given?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+    /// Last value of an option (replaces repeats), if any.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+    /// All values of a repeated option.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+    /// Positional argument value.
+    pub fn pos(&self, name: &str) -> Option<&str> {
+        self.positionals.get(name).map(|s| s.as_str())
+    }
+    /// Nested parse result of the matched subcommand.
+    pub fn sub(&self) -> Option<&Parsed> {
+        self.sub.as_deref()
+    }
+    /// Parse an option as `u64`.
+    pub fn get_u64(&self, name: &str) -> std::result::Result<u64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("--{name} missing")))?;
+        v.parse().map_err(|_| CliError(format!("--{name}: expected integer, got {v:?}")))
+    }
+    /// Parse an option as `f64`.
+    pub fn get_f64(&self, name: &str) -> std::result::Result<f64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("--{name} missing")))?;
+        v.parse().map_err(|_| CliError(format!("--{name}: expected float, got {v:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Command {
+        Command::new("demo", "test tool")
+            .flag("verbose", Some('v'), "chatty")
+            .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+            .opt("fig", None, "N", "figure", None)
+            .positional("input", "input file", false)
+            .subcommand(Command::new("run", "run it").opt("n", None, "N", "count", Some("1")))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = demo().parse_from(vec![]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 42);
+        assert!(!p.flag("verbose"));
+        assert!(p.get("fig").is_none());
+    }
+
+    #[test]
+    fn long_and_inline_forms() {
+        let p = demo().parse_from(vec!["--seed".into(), "7".into()]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 7);
+        let p = demo().parse_from(vec!["--seed=9".into()]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 9);
+    }
+
+    #[test]
+    fn short_flags() {
+        let p = demo().parse_from(vec!["-v".into(), "-s".into(), "5".into()]).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.get_u64("seed").unwrap(), 5);
+    }
+
+    #[test]
+    fn subcommand_routing() {
+        let p = demo().parse_from(vec!["run".into(), "--n".into(), "3".into()]).unwrap();
+        assert_eq!(p.subcommand, Some("run"));
+        assert_eq!(p.sub().unwrap().get_u64("n").unwrap(), 3);
+    }
+
+    #[test]
+    fn positional_capture() {
+        let p = demo().parse_from(vec!["file.txt".into()]).unwrap();
+        assert_eq!(p.pos("input"), Some("file.txt"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(demo().parse_from(vec!["--nope".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo().parse_from(vec!["--fig".into()]).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = demo().help();
+        assert!(h.contains("--seed"));
+        assert!(h.contains("SUBCOMMANDS"));
+        assert!(h.contains("run"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal leveled stderr logger honouring `IPS_LOG`
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity levels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 0,
+    /// Suspicious but continuing.
+    Warn = 1,
+    /// Progress messages (default).
+    Info = 2,
+    /// Per-experiment detail.
+    Debug = 3,
+    /// Per-event firehose.
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn current() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let parsed = match std::env::var("IPS_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the log level programmatically (tests, benches).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` enabled?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= current()
+}
+
+/// Log a preformatted message at `level`.
+pub fn log(level: Level, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+/// `info!`-style macros.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*)) };
+}
+/// Warn-level log macro.
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*)) };
+}
+/// Debug-level log macro.
+#[macro_export]
+macro_rules! debug_log {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

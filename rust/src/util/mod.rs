@@ -1,0 +1,28 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! available, so everything a typical systems project pulls from
+//! crates.io is implemented here from scratch:
+//!
+//! * [`rng`] — SplitMix64 seeding + xoshiro256** PRNG with the
+//!   distributions the trace generator needs (uniform, zipf, pareto,
+//!   exponential, normal).
+//! * [`cli`] — a small declarative argument parser (flags, options,
+//!   subcommands, `--help` generation).
+//! * [`toml`] — a TOML-subset parser for the config system (tables,
+//!   dotted keys, strings, ints, floats, bools, arrays, comments).
+//! * [`prop`] — a property-based testing runner with generators and
+//!   greedy shrinking (stand-in for `proptest`).
+//! * [`bench`] — a measurement harness (warmup, adaptive iteration
+//!   count, mean/median/p99, throughput) used by `benches/*` with
+//!   `harness = false` (stand-in for `criterion`).
+//! * [`fmt`] — plain-text table rendering + CSV writing for reports.
+//! * [`logging`] — leveled stderr logger honouring `IPS_LOG`.
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod toml;

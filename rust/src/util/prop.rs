@@ -1,0 +1,289 @@
+//! Property-based testing runner (offline stand-in for `proptest`).
+//!
+//! A property is a function from a generated input to `Result<(), String>`.
+//! The runner draws `cases` random inputs; on the first failure it
+//! greedily shrinks the input through the generator's `shrink` hook and
+//! reports the minimal counterexample together with the seed that
+//! reproduces it.
+//!
+//! ```no_run
+//! use ips::util::prop::{self, Gen};
+//! prop::check("addition commutes", 256, prop::tuple2(prop::u64_up_to(1000), prop::u64_up_to(1000)),
+//!     |&(a, b)| if a + b == b + a { Ok(()) } else { Err("no".into()) });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type `T` with shrinking.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+    /// Draw a random value.
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+    /// Propose strictly "smaller" candidates (default: none).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs; panics with a minimal
+/// counterexample on failure. The seed comes from `IPS_PROP_SEED` if
+/// set (for reproduction), else a fixed default so CI is deterministic.
+pub fn check<G, F>(name: &str, cases: u32, gen: G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let seed = std::env::var("IPS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA11CE5EED);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink greedily
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 1000 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x})\n  \
+                 minimal counterexample: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Primitive generators
+// ------------------------------------------------------------------
+
+/// Uniform `u64` in `[0, max]` with halving shrinks.
+pub struct U64UpTo(pub u64);
+
+/// Uniform u64 in `[0, max]`.
+pub fn u64_up_to(max: u64) -> U64UpTo {
+    U64UpTo(max)
+}
+
+impl Gen for U64UpTo {
+    type Value = u64;
+    fn gen(&self, rng: &mut Rng) -> u64 {
+        rng.range(0, self.0)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > 0 {
+            out.push(0);
+            out.push(v / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform `usize` in `[lo, hi]`.
+pub struct UsizeIn(pub usize, pub usize);
+
+/// Uniform usize in `[lo, hi]`.
+pub fn usize_in(lo: usize, hi: usize) -> UsizeIn {
+    UsizeIn(lo, hi)
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0 as u64, self.1 as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// `f64` in `[lo, hi)`.
+pub struct F64In(pub f64, pub f64);
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn f64_in(lo: f64, hi: f64) -> F64In {
+    F64In(lo, hi)
+}
+
+impl Gen for F64In {
+    type Value = f64;
+    fn gen(&self, rng: &mut Rng) -> f64 {
+        self.0 + rng.f64() * (self.1 - self.0)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.0 {
+            vec![self.0, self.0 + (v - self.0) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an inner generator, with length and element shrinks.
+pub struct VecOf<G> {
+    inner: G,
+    min_len: usize,
+    max_len: usize,
+}
+
+/// Vector of `inner` values with length in `[min_len, max_len]`.
+pub fn vec_of<G: Gen>(inner: G, min_len: usize, max_len: usize) -> VecOf<G> {
+    VecOf { inner, min_len, max_len }
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.range(self.min_len as u64, self.max_len as u64) as usize;
+        (0..n).map(|_| self.inner.gen(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        // remove halves / single elements
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+            let mut minus_first = v.clone();
+            minus_first.remove(0);
+            out.push(minus_first);
+        }
+        // shrink one element
+        for (i, e) in v.iter().enumerate().take(8) {
+            for cand in self.inner.shrink(e) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out.retain(|w| w.len() >= self.min_len);
+        out
+    }
+}
+
+/// Pair of two generators.
+pub struct Tuple2<A, B>(pub A, pub B);
+
+/// Pair generator.
+pub fn tuple2<A: Gen, B: Gen>(a: A, b: B) -> Tuple2<A, B> {
+    Tuple2(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for Tuple2<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Choose uniformly from a fixed list of values.
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+/// Uniform choice from a list.
+pub fn one_of<T: Clone + std::fmt::Debug>(items: Vec<T>) -> OneOf<T> {
+    OneOf(items)
+}
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn gen(&self, rng: &mut Rng) -> T {
+        rng.pick(&self.0).clone()
+    }
+    fn shrink(&self, v: &T) -> Vec<T>
+    where
+        T: Clone,
+    {
+        // shrink toward the first (assumed simplest) choice
+        let first = self.0.first().cloned();
+        match first {
+            Some(f) if format!("{f:?}") != format!("{v:?}") => vec![f],
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum symmetric", 128, tuple2(u64_up_to(1000), u64_up_to(1000)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check("all below 500", 512, u64_up_to(1000), |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 500"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_values() {
+        // capture the panic message and check the counterexample is minimal-ish
+        let result = std::panic::catch_unwind(|| {
+            check("no big", 512, u64_up_to(1 << 40), |&x| {
+                if x < 1024 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            })
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving should land close to the 1024 boundary
+        assert!(msg.contains("counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = vec_of(u64_up_to(10), 2, 5);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.gen(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+}

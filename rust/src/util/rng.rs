@@ -1,0 +1,324 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! xoshiro256** (Blackman & Vigna) seeded through SplitMix64, plus the
+//! handful of distributions the synthetic trace generator needs. All
+//! simulator randomness flows through [`Rng`] so runs are exactly
+//! reproducible from a `u64` seed (recorded in every report).
+
+/// xoshiro256** pseudo-random generator.
+///
+/// Fast (sub-ns per draw), passes BigCrush, and trivially serializable.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// SplitMix64 step — used for seeding and as a cheap stateless hash.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Stateless 64-bit mix of two values (for derived sub-seeds).
+#[inline]
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.rotate_left(32) ^ 0x6a09_e667_f3bc_c909;
+    splitmix64(&mut s)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a named sub-component.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(mix64(self.next_u64(), tag))
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection method (unbiased).
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive (full-range safe).
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        if span == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.below(span + 1)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with mean `mean` (inter-arrival gaps).
+    #[inline]
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        // Inverse-CDF; clamp the uniform away from 0 to avoid inf.
+        let u = self.f64().max(1e-18);
+        -mean * u.ln()
+    }
+
+    /// Bounded Pareto draw in `[lo, hi]` with shape `alpha` (burst sizes).
+    pub fn pareto(&mut self, lo: f64, hi: f64, alpha: f64) -> f64 {
+        let u = self.f64();
+        let la = lo.powf(alpha);
+        let ha = hi.powf(alpha);
+        let x = (-(u * (1.0 - la / ha)) + 1.0).powf(-1.0 / alpha) * lo;
+        x.clamp(lo, hi)
+    }
+
+    /// Standard normal via Box–Muller (retention / noise models).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = self.f64().max(1e-18);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        mean + std * r * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Weighted index draw; `weights` need not be normalized.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= *w;
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-distributed sampler over `[0, n)` with skew `theta` in `(0,1)`.
+///
+/// Uses the standard YCSB-style rejection-free approximation with
+/// precomputed constants; draws are O(1).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` items with skew `theta` (0 = uniform-ish,
+    /// 0.99 = highly skewed). `n` must be ≥ 1.
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n >= 1);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2: zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for small n, Euler–Maclaurin tail for large n.
+        let direct = n.min(10_000);
+        let mut z = 0.0;
+        for i in 1..=direct {
+            z += 1.0 / (i as f64).powf(theta);
+        }
+        if n > direct {
+            // integral approximation of the tail
+            let a = direct as f64;
+            let b = n as f64;
+            z += (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta);
+        }
+        z
+    }
+
+    /// Draw an item rank in `[0, n)`; rank 0 is the hottest.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let _ = self.zeta2;
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exp_mean_roughly_right() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exp(5.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(2.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.5, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let z = Zipf::new(1000, 0.9);
+        let mut r = Rng::new(5);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..50_000 {
+            let x = z.sample(&mut r);
+            assert!(x < 1000);
+            counts[x as usize] += 1;
+        }
+        // hottest item should dominate the median item decisively
+        assert!(counts[0] > 20 * counts[500].max(1));
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 0.0, 9.0];
+        let mut c = [0u32; 3];
+        for _ in 0..10_000 {
+            c[r.weighted(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        assert!(c[2] > 5 * c[0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(21);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn pareto_bounded() {
+        let mut r = Rng::new(33);
+        for _ in 0..10_000 {
+            let x = r.pareto(4.0, 64.0, 1.2);
+            assert!((4.0..=64.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! TOML-subset parser for the config system (offline stand-in for
+//! `toml` + `serde`).
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = value` with dotted
+//! keys, strings (`"..."` with escapes), integers (with `_`
+//! separators), floats, booleans, homogeneous arrays, `#` comments.
+//! Unsupported on purpose (and rejected loudly): inline tables, arrays
+//! of tables, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// UTF-8 string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Array(Vec<Value>),
+    /// Nested table.
+    Table(Table),
+}
+
+/// A TOML table: ordered map from key to value.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct TomlError {
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, msg: msg.into() })
+}
+
+/// Parse a TOML document into a root [`Table`].
+pub fn parse(src: &str) -> Result<Table, TomlError> {
+    let mut root = Table::new();
+    let mut current_path: Vec<String> = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return err(lineno, "arrays of tables are not supported");
+            }
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or(TomlError { line: lineno, msg: "unterminated table header".into() })?;
+            current_path =
+                split_key(inner, lineno)?.into_iter().map(|s| s.to_string()).collect();
+            // materialize the table
+            ensure_table(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let eq = match find_unquoted(line, '=') {
+            Some(i) => i,
+            None => return err(lineno, format!("expected `key = value`, got {line:?}")),
+        };
+        let key_part = line[..eq].trim();
+        let val_part = line[eq + 1..].trim();
+        if key_part.is_empty() || val_part.is_empty() {
+            return err(lineno, "empty key or value");
+        }
+        let mut path = current_path.clone();
+        path.extend(split_key(key_part, lineno)?.into_iter().map(|s| s.to_string()));
+        let value = parse_value(val_part, lineno)?;
+        insert(&mut root, &path, value, lineno)?;
+    }
+    Ok(root)
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    match find_unquoted(line, '#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn find_unquoted(line: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == target {
+            return Some(i);
+        }
+    }
+    None
+}
+
+fn split_key(key: &str, lineno: usize) -> Result<Vec<&str>, TomlError> {
+    let parts: Vec<&str> = key.split('.').map(|p| p.trim()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return err(lineno, format!("bad key {key:?}"));
+    }
+    for p in &parts {
+        if !p.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+            return err(lineno, format!("bad key component {p:?} (quote keys are unsupported)"));
+        }
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut Table,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Table, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(Table::new()));
+        match entry {
+            Value::Table(t) => cur = t,
+            _ => return err(lineno, format!("{part:?} is not a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn insert(root: &mut Table, path: &[String], value: Value, lineno: usize) -> Result<(), TomlError> {
+    let (last, prefix) = path.split_last().expect("non-empty path");
+    let table = ensure_table(root, prefix, lineno)?;
+    if table.contains_key(last) {
+        return err(lineno, format!("duplicate key {last:?}"));
+    }
+    table.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let mut out = String::new();
+        let mut escaped = false;
+        for (i, c) in rest.char_indices() {
+            if escaped {
+                out.push(match c {
+                    'n' => '\n',
+                    't' => '\t',
+                    'r' => '\r',
+                    '\\' => '\\',
+                    '"' => '"',
+                    _ => return err(lineno, format!("bad escape \\{c}")),
+                });
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                if rest[i + 1..].trim().is_empty() {
+                    return Ok(Value::Str(out));
+                }
+                return err(lineno, "trailing characters after string");
+            } else {
+                out.push(c);
+            }
+        }
+        return err(lineno, "unterminated string");
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or(TomlError { line: lineno, msg: "unterminated array".into() })?;
+        let mut vals = Vec::new();
+        for item in split_array_items(inner) {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            vals.push(parse_value(item, lineno)?);
+        }
+        return Ok(Value::Array(vals));
+    }
+    if s == "{" || s.starts_with('{') {
+        return err(lineno, "inline tables are not supported");
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(lineno, format!("cannot parse value {s:?}"))
+}
+
+fn split_array_items(s: &str) -> Vec<&str> {
+    // split on commas not inside strings or nested brackets
+    let mut items = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '[' => depth += 1,
+            ']' => depth -= 1,
+            ',' if depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+// ------------------------------------------------------------------
+// Typed accessors used by the config layer.
+// ------------------------------------------------------------------
+
+/// Typed view over a parsed table with dotted-path lookups.
+pub struct View<'a> {
+    root: &'a Table,
+}
+
+impl<'a> View<'a> {
+    /// Wrap a parsed root table.
+    pub fn new(root: &'a Table) -> Self {
+        View { root }
+    }
+
+    /// Look up `a.b.c`.
+    pub fn lookup(&self, path: &str) -> Option<&'a Value> {
+        let mut cur = self.root;
+        let parts: Vec<&str> = path.split('.').collect();
+        for (i, part) in parts.iter().enumerate() {
+            let v = cur.get(*part)?;
+            if i == parts.len() - 1 {
+                return Some(v);
+            }
+            match v {
+                Value::Table(t) => cur = t,
+                _ => return None,
+            }
+        }
+        None
+    }
+
+    /// `u64` at path, or default.
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        match self.lookup(path) {
+            Some(Value::Int(i)) if *i >= 0 => *i as u64,
+            _ => default,
+        }
+    }
+
+    /// `f64` at path (accepts int literals), or default.
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        match self.lookup(path) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    /// `bool` at path, or default.
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        match self.lookup(path) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// String at path, or default.
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        match self.lookup(path) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let t = parse(
+            r#"
+            # top comment
+            title = "ips" # trailing comment
+            seed = 1_000
+            ratio = 0.75
+            on = true
+
+            [ssd.geometry]
+            channels = 8
+            chips = 4
+            "#,
+        )
+        .unwrap();
+        let v = View::new(&t);
+        assert_eq!(v.str_or("title", ""), "ips");
+        assert_eq!(v.u64_or("seed", 0), 1000);
+        assert!((v.f64_or("ratio", 0.0) - 0.75).abs() < 1e-12);
+        assert!(v.bool_or("on", false));
+        assert_eq!(v.u64_or("ssd.geometry.channels", 0), 8);
+        assert_eq!(v.u64_or("ssd.geometry.chips", 0), 4);
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("sizes = [4, 8, 16]\nnames = [\"a\", \"b\"]").unwrap();
+        match t.get("sizes").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(t.get("s"), Some(&Value::Str("a\nb\"c".into())));
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let t = parse("a.b.c = 3").unwrap();
+        let v = View::new(&t);
+        assert_eq!(v.u64_or("a.b.c", 0), 3);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn garbage_rejected_with_line() {
+        let e = parse("ok = 1\nwhat").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(t.get("s"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn inline_tables_rejected() {
+        assert!(parse("a = { b = 1 }").is_err());
+    }
+
+    #[test]
+    fn missing_paths_default() {
+        let t = parse("x = 1").unwrap();
+        let v = View::new(&t);
+        assert_eq!(v.u64_or("nope.deep", 9), 9);
+    }
+}

@@ -1,0 +1,73 @@
+//! Config-system integration: TOML file → Config → Simulator, plus
+//! CLI parse coverage of the launcher surface.
+
+use ips::config::{presets, Config, Scheme};
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+
+#[test]
+fn toml_file_drives_a_run() {
+    let dir = std::env::temp_dir().join("ips_cfg_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        r#"
+# experiment override
+[cache]
+scheme = "ips"
+idle_threshold_ns = 5_000_000
+
+[sim]
+seed = 1234
+verify = true
+"#,
+    )
+    .unwrap();
+    let cfg = Config::load(&path, presets::small()).unwrap();
+    assert_eq!(cfg.cache.scheme, Scheme::Ips);
+    assert_eq!(cfg.sim.seed, 1234);
+    let mut sim = Simulator::new(cfg).unwrap();
+    let t = scenario::sequential_fill("seq", 1 << 20, sim.logical_bytes());
+    let s = sim.run(&t, Scenario::Bursty).unwrap();
+    assert_eq!(s.seed, 1234);
+    assert_eq!(s.scheme, "ips");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_toml_rejected_with_context() {
+    let err = Config::from_toml_str("[cache]\nscheme = \"nope\"", presets::small());
+    assert!(err.is_err());
+    let err = Config::from_toml_str("[ssd]\npages_per_block = 100", presets::small());
+    assert!(err.is_err(), "non-multiple-of-3 pages per block");
+}
+
+#[test]
+fn cli_surface_parses() {
+    use ips::util::cli::Command;
+    let cmd = Command::new("ips", "x")
+        .subcommand(
+            Command::new("reproduce", "r")
+                .opt("fig", Some('f'), "N", "figure", Some("all"))
+                .opt("scale", None, "N", "scale", Some("4")),
+        )
+        .subcommand(Command::new("list", "l"));
+    let p = cmd
+        .parse_from(vec!["reproduce".into(), "--fig".into(), "10".into()])
+        .unwrap();
+    assert_eq!(p.subcommand, Some("reproduce"));
+    assert_eq!(p.sub().unwrap().get("fig"), Some("10"));
+    assert_eq!(p.sub().unwrap().get_u64("scale").unwrap(), 4);
+}
+
+#[test]
+fn presets_compose_with_scaling() {
+    use ips::coordinator::experiment::scale_config;
+    for scale in [1u32, 2, 4, 8, 16] {
+        let cfg = scale_config(presets::table1(), scale);
+        cfg.validate().unwrap_or_else(|e| panic!("scale {scale}: {e}"));
+        let coop = scale_config(presets::coop64(), scale);
+        coop.validate().unwrap_or_else(|e| panic!("coop scale {scale}: {e}"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Cross-module integration: full simulations per scheme, asserting
+//! the paper's qualitative results and the end-of-run invariants.
+
+use ips::config::{presets, Config, Scheme, MS, SEC};
+use ips::reliability::ReliabilityAudit;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::trace::{profiles, synth};
+
+fn cfg(scheme: Scheme) -> Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.sim.verify = true; // full audit at end of every run
+    c
+}
+
+fn run(scheme: Scheme, scen: Scenario, volume: u64) -> ips::metrics::RunSummary {
+    let c = cfg(scheme);
+    let mut sim = Simulator::new(c).unwrap();
+    let trace = scenario::sequential_fill("seq", volume, sim.logical_bytes());
+    sim.run(&trace, scen).unwrap()
+}
+
+#[test]
+fn bursty_ips_beats_baseline_beyond_cache() {
+    let vol = 4u64 << 20; // 4x the 1 MiB cache
+    let base = run(Scheme::Baseline, Scenario::Bursty, vol);
+    let ips = run(Scheme::Ips, Scenario::Bursty, vol);
+    let ratio = ips.mean_write_latency() / base.mean_write_latency();
+    assert!(ratio < 0.95, "paper Fig. 10a direction: ratio={ratio:.3}");
+}
+
+#[test]
+fn daily_wa_ordering_matches_paper() {
+    // baseline migrates (~2x), IPS keeps ~1, IPS/agc in between
+    let c = cfg(Scheme::Baseline);
+    let p = profiles::by_name("HM_0").unwrap();
+    let mk = |scheme| {
+        let mut sim = Simulator::new(cfg(scheme)).unwrap();
+        let t = synth::generate_scaled(p, 3, sim.logical_bytes(), 0.0008);
+        sim.run(&t, Scenario::Daily).unwrap()
+    };
+    let base = mk(Scheme::Baseline);
+    let ips = mk(Scheme::Ips);
+    let agc = mk(Scheme::IpsAgc);
+    assert!(base.wa() > 1.3, "baseline daily amplifies: {}", base.wa());
+    assert!(ips.wa() < 1.05, "IPS daily stays ~1: {}", ips.wa());
+    assert!(agc.wa() >= ips.wa() - 1e-9, "AGC adds (bounded) WA");
+    let _ = c;
+}
+
+#[test]
+fn reliability_restrictions_hold_after_every_scheme() {
+    for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop] {
+        let c = cfg(scheme);
+        let max_rep = c.cache.max_reprograms;
+        let mut sim = Simulator::new(c).unwrap();
+        let trace = scenario::sequential_fill("seq", 3 << 20, sim.logical_bytes());
+        sim.run(&trace, Scenario::Daily).unwrap();
+        let audit = ReliabilityAudit::run(&sim.ftl().array, max_rep)
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        assert!(audit.max_reprograms <= 2, "{scheme:?}");
+        if matches!(scheme, Scheme::Ips | Scheme::IpsAgc | Scheme::Coop) {
+            assert!(audit.ips_blocks > 0, "{scheme:?} used IPS blocks");
+        }
+    }
+}
+
+#[test]
+fn coop_outlives_cache_exhaustion_and_flushes() {
+    let mut c = cfg(Scheme::Coop);
+    c.cache.ips_block_fraction = 0.4;
+    let mut sim = Simulator::new(c).unwrap();
+    // write 8 MiB through a ~1 MiB trad + small IPS cache with idle gaps
+    let trace = scenario::daily_streams(4, 2 << 20, 30 * SEC, sim.logical_bytes());
+    let s = sim.run(&trace, Scenario::Daily).unwrap();
+    assert!(s.ledger.host_pages >= (8 << 20) / 4096);
+    assert!(
+        s.ledger.coop_reprogram_writes + s.ledger.slc2tlc_migrations > 0,
+        "trad cache was drained one way or the other"
+    );
+}
+
+#[test]
+fn tlc_only_is_the_latency_floor_scheme() {
+    let vol = 2u64 << 20;
+    let tlc = run(Scheme::TlcOnly, Scenario::Bursty, vol);
+    let base = run(Scheme::Baseline, Scenario::Bursty, vol);
+    // with volume 2x cache, baseline still beats raw TLC on average
+    assert!(base.mean_write_latency() < tlc.mean_write_latency());
+    assert!((tlc.wa() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn deterministic_runs_same_seed() {
+    let p = profiles::by_name("PRXY_0").unwrap();
+    let mk = || {
+        let mut sim = Simulator::new(cfg(Scheme::IpsAgc)).unwrap();
+        let t = synth::generate_scaled(p, 9, sim.logical_bytes(), 0.0008);
+        sim.run(&t, Scenario::Daily).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.ledger, b.ledger);
+    assert_eq!(a.sim_end, b.sim_end);
+    assert_eq!(a.write_latency.count(), b.write_latency.count());
+}
+
+#[test]
+fn read_after_write_everywhere() {
+    // every written LPN remains readable at flash speed after heavy
+    // churn across all schemes (mapping integrity end to end)
+    for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop] {
+        let mut sim = Simulator::new(cfg(scheme)).unwrap();
+        let mut trace = scenario::sequential_fill("seq", 2 << 20, sim.logical_bytes());
+        let dur = trace.duration();
+        // read back the first 64 pages after a long idle gap
+        for i in 0..64u64 {
+            trace.ops.push(ips::trace::TraceOp {
+                at: dur + 60 * SEC + i,
+                kind: ips::trace::OpKind::Read,
+                offset: i * 4096,
+                len: 4096,
+            });
+        }
+        let s = sim.run(&trace, Scenario::Daily).unwrap();
+        assert_eq!(s.read_latency.count(), 64, "{scheme:?}");
+        assert!(s.read_latency.min() > 0, "{scheme:?}: reads hit flash, not a hole");
+    }
+}
