@@ -11,7 +11,7 @@ use ips::coordinator::{experiment, ExpOptions};
 use ips::sim::Simulator;
 use ips::trace::scenario::{self, Scenario};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ips::Result<()> {
     let scale = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
     let opts = ExpOptions { scale, ..ExpOptions::default() };
 

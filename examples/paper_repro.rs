@@ -27,7 +27,7 @@ fn run(
     scheme: Scheme,
     workload: &str,
     scen: Scenario,
-) -> anyhow::Result<(RunSummary, ReliabilityAudit)> {
+) -> ips::Result<(RunSummary, ReliabilityAudit)> {
     let cfg = experiment::exp_config(opts, scheme);
     let max_rep = cfg.cache.max_reprograms;
     let mut sim = Simulator::new(cfg)?;
@@ -41,7 +41,7 @@ fn run(
     Ok((summary, audit))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ips::Result<()> {
     let scale = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let opts = ExpOptions { scale, ..ExpOptions::default() };
     let t0 = std::time::Instant::now();

@@ -12,7 +12,7 @@ use ips::sim::Simulator;
 use ips::trace::scenario::Scenario;
 use ips::util::fmt::TextTable;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ips::Result<()> {
     // A 1/8-scale Table-I SSD (geometry, timing and the 4 GB-equivalent
     // SLC cache all scale together — see DESIGN.md).
     let opts = ExpOptions { scale: 8, ..ExpOptions::default() };

@@ -10,7 +10,7 @@
 
 use ips::reliability::{model, RberBridge};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ips::Result<()> {
     let sweep = [
         (0.00f32, 0.00f32),
         (0.20, 0.01),

@@ -1,0 +1,64 @@
+//! Bench: multi-tenant interference end-to-end — the aggressor+victims
+//! mix through each scheduler on baseline vs IPS, per-run timing +
+//! simulated-request throughput, plus the fleet runner's parallel
+//! speedup over serial execution.
+use ips::config::{MixKind, SchedKind, Scheme};
+use ips::coordinator::fleet::{run_fleet, FleetSpec};
+use ips::coordinator::{experiment, ExpOptions};
+use ips::host::MultiTenantSimulator;
+use ips::trace::scenario::Scenario;
+use ips::util::bench::{black_box, Harness};
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+
+    for scheme in [Scheme::Baseline, Scheme::Ips] {
+        for sched in SchedKind::all() {
+            let mut cfg = experiment::exp_config(&opts, scheme);
+            cfg.host.tenants = 4;
+            cfg.host.scheduler = sched;
+            cfg.host.mix = MixKind::AggressorVictims;
+            let reqs = {
+                // one dry run to size the throughput denominator
+                let s = MultiTenantSimulator::run_once(cfg.clone(), Scenario::Bursty).unwrap();
+                s.write_latency.count() + s.read_latency.count()
+            };
+            h.bench(
+                &format!("multitenant/{}/{}", scheme.name(), sched.name()),
+                Some(reqs),
+                || {
+                    let s =
+                        MultiTenantSimulator::run_once(cfg.clone(), Scenario::Bursty).unwrap();
+                    black_box(s.max_victim_p99());
+                },
+            );
+        }
+    }
+
+    // fleet fan-out: serial vs all-cores over the same 2x3 sweep
+    for (label, threads) in [("fleet/serial", 1usize), ("fleet/parallel", 0)] {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+        let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+        base.host.tenants = 4;
+        let spec = FleetSpec {
+            base,
+            schemes: vec![Scheme::Baseline, Scheme::Ips],
+            scheds: SchedKind::all().to_vec(),
+            mixes: vec![MixKind::AggressorVictims],
+            scenario: Scenario::Bursty,
+            seed: 42,
+            threads,
+        };
+        let cells = spec.jobs().len() as u64;
+        h.bench(label, Some(cells), || {
+            black_box(run_fleet(&spec).unwrap());
+        });
+    }
+
+    h.finish();
+}

@@ -236,6 +236,160 @@ impl CacheConfig {
     }
 }
 
+/// Request scheduler merging per-tenant submission queues in the
+/// multi-tenant host front end ([`crate::host`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    /// Global arrival order (a bursty tenant monopolizes the device).
+    Fifo,
+    /// One request per tenant in rotation.
+    RoundRobin,
+    /// Least-attained normalized service first (byte-weighted).
+    WeightedFair,
+}
+
+impl SchedKind {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<SchedKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(SchedKind::Fifo),
+            "rr" | "round-robin" | "roundrobin" => Ok(SchedKind::RoundRobin),
+            "wfq" | "weighted-fair" | "weightedfair" | "fair" => Ok(SchedKind::WeightedFair),
+            other => Err(Error::config(format!(
+                "unknown scheduler {other:?} (want fifo|round-robin|weighted-fair)"
+            ))),
+        }
+    }
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Fifo => "fifo",
+            SchedKind::RoundRobin => "round-robin",
+            SchedKind::WeightedFair => "weighted-fair",
+        }
+    }
+    /// All schedulers, in presentation order.
+    pub fn all() -> [SchedKind; 3] {
+        [SchedKind::Fifo, SchedKind::RoundRobin, SchedKind::WeightedFair]
+    }
+}
+
+/// Named tenant-mix scenario shapes ([`crate::host::tenant`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixKind {
+    /// One bursty aggressor driving the cache over its cliff plus K
+    /// latency-sensitive victims issuing sparse small writes.
+    AggressorVictims,
+    /// All tenants identical moderate sequential write streams.
+    Uniform,
+    /// Victim-style writers that then mostly read back their data.
+    ReadHeavy,
+    /// Dense sequential writes from every tenant at once.
+    WriteHeavy,
+}
+
+impl MixKind {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<MixKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "aggressor-victims" | "aggressor" | "av" => Ok(MixKind::AggressorVictims),
+            "uniform" => Ok(MixKind::Uniform),
+            "read-heavy" | "readheavy" => Ok(MixKind::ReadHeavy),
+            "write-heavy" | "writeheavy" => Ok(MixKind::WriteHeavy),
+            other => Err(Error::config(format!(
+                "unknown tenant mix {other:?} \
+                 (want aggressor-victims|uniform|read-heavy|write-heavy)"
+            ))),
+        }
+    }
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixKind::AggressorVictims => "aggressor-victims",
+            MixKind::Uniform => "uniform",
+            MixKind::ReadHeavy => "read-heavy",
+            MixKind::WriteHeavy => "write-heavy",
+        }
+    }
+    /// All mixes, in presentation order.
+    pub fn all() -> [MixKind; 4] {
+        [MixKind::AggressorVictims, MixKind::Uniform, MixKind::ReadHeavy, MixKind::WriteHeavy]
+    }
+}
+
+/// Multi-tenant host front-end configuration ([`crate::host`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HostConfig {
+    /// Number of tenants (each with its own submission queue).
+    pub tenants: u32,
+    /// Submission-queue depth: how many of a tenant's commands may be
+    /// outstanding in the device at once (NVMe SQ semantics; a tenant
+    /// at its depth is skipped by the scheduler until a completion).
+    pub queue_depth: usize,
+    /// Device-side window: how many dispatched requests may be in
+    /// flight at once before the front end back-pressures (this is
+    /// what makes dispatch *order* matter — with an unbounded window
+    /// every scheduler degenerates to arrival order).
+    pub device_qd: usize,
+    /// Request scheduler merging the queues.
+    pub scheduler: SchedKind,
+    /// Tenant-mix shape.
+    pub mix: MixKind,
+    /// Aggressor write volume as a multiple of the SLC cache size
+    /// (aggressor-victims mix; > 1 drives the cache over its cliff).
+    pub aggressor_cache_mult: f64,
+    /// Scheduler weight of the aggressor tenant (victims weigh 1.0).
+    pub aggressor_weight: f64,
+    /// Victim request size in bytes.
+    pub victim_req_bytes: u32,
+    /// Gap between consecutive requests of one victim tenant.
+    pub victim_gap: Nanos,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        HostConfig {
+            tenants: 4,
+            queue_depth: 32,
+            device_qd: 8,
+            scheduler: SchedKind::Fifo,
+            mix: MixKind::AggressorVictims,
+            aggressor_cache_mult: 3.0,
+            aggressor_weight: 1.0,
+            victim_req_bytes: 16 << 10,
+            victim_gap: 2 * MS,
+        }
+    }
+}
+
+impl HostConfig {
+    /// Validate settings.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants == 0 || self.tenants > u16::MAX as u32 {
+            return Err(Error::config("host.tenants must be in [1, 65535]"));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::config("host.queue_depth must be >= 1"));
+        }
+        if self.device_qd == 0 {
+            return Err(Error::config("host.device_qd must be >= 1"));
+        }
+        if self.aggressor_cache_mult <= 0.0 {
+            return Err(Error::config("host.aggressor_cache_mult must be > 0"));
+        }
+        if self.aggressor_weight <= 0.0 {
+            return Err(Error::config("host.aggressor_weight must be > 0"));
+        }
+        if self.victim_req_bytes < 512 {
+            return Err(Error::config("host.victim_req_bytes must be >= 512"));
+        }
+        if self.victim_gap == 0 {
+            return Err(Error::config("host.victim_gap must be >= 1 ns"));
+        }
+        Ok(())
+    }
+}
+
 /// Simulator engine knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
@@ -274,6 +428,8 @@ pub struct Config {
     pub timing: Timing,
     /// Cache scheme settings.
     pub cache: CacheConfig,
+    /// Multi-tenant host front-end settings.
+    pub host: HostConfig,
     /// Engine settings.
     pub sim: SimConfig,
 }
@@ -284,6 +440,7 @@ impl Config {
         self.geometry.validate()?;
         self.timing.validate()?;
         self.cache.validate()?;
+        self.host.validate()?;
         // cache must fit: traditional SLC capacity consumes blocks in
         // SLC mode (1 page per word line).
         let slc_pages_needed =
@@ -355,6 +512,26 @@ impl Config {
             gc_low_watermark: v.f64_or("cache.gc_low_watermark", c.gc_low_watermark),
             gc_high_watermark: v.f64_or("cache.gc_high_watermark", c.gc_high_watermark),
         };
+        let h = &base.host;
+        let scheduler = match v.lookup("host.scheduler") {
+            Some(crate::util::toml::Value::Str(s)) => SchedKind::parse(s)?,
+            _ => h.scheduler,
+        };
+        let mix = match v.lookup("host.mix") {
+            Some(crate::util::toml::Value::Str(s)) => MixKind::parse(s)?,
+            _ => h.mix,
+        };
+        let host = HostConfig {
+            tenants: v.u64_or("host.tenants", h.tenants as u64) as u32,
+            queue_depth: v.u64_or("host.queue_depth", h.queue_depth as u64) as usize,
+            device_qd: v.u64_or("host.device_qd", h.device_qd as u64) as usize,
+            scheduler,
+            mix,
+            aggressor_cache_mult: v.f64_or("host.aggressor_cache_mult", h.aggressor_cache_mult),
+            aggressor_weight: v.f64_or("host.aggressor_weight", h.aggressor_weight),
+            victim_req_bytes: v.u64_or("host.victim_req_bytes", h.victim_req_bytes as u64) as u32,
+            victim_gap: v.u64_or("host.victim_gap_ns", h.victim_gap),
+        };
         let s = &base.sim;
         let sim = SimConfig {
             seed: v.u64_or("sim.seed", s.seed),
@@ -363,7 +540,7 @@ impl Config {
             bandwidth_window: v.u64_or("sim.bandwidth_window_ns", s.bandwidth_window),
             max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
         };
-        let cfg = Config { geometry, timing, cache, sim };
+        let cfg = Config { geometry, timing, cache, host, sim };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -448,6 +625,48 @@ mod tests {
         for s in Scheme::all() {
             assert_eq!(Scheme::parse(s.name()).unwrap(), s);
         }
+    }
+
+    #[test]
+    fn sched_and_mix_parse_roundtrip() {
+        for s in SchedKind::all() {
+            assert_eq!(SchedKind::parse(s.name()).unwrap(), s);
+        }
+        for m in MixKind::all() {
+            assert_eq!(MixKind::parse(m.name()).unwrap(), m);
+        }
+        assert!(SchedKind::parse("lifo").is_err());
+        assert!(MixKind::parse("wat").is_err());
+    }
+
+    #[test]
+    fn host_toml_overrides_apply() {
+        let base = presets::small();
+        let cfg = Config::from_toml_str(
+            "[host]\ntenants = 6\nscheduler = \"weighted-fair\"\nmix = \"uniform\"\n\
+             queue_depth = 8\naggressor_weight = 0.5",
+            base,
+        )
+        .unwrap();
+        assert_eq!(cfg.host.tenants, 6);
+        assert_eq!(cfg.host.scheduler, SchedKind::WeightedFair);
+        assert_eq!(cfg.host.mix, MixKind::Uniform);
+        assert_eq!(cfg.host.queue_depth, 8);
+        assert!((cfg.host.aggressor_weight - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_host_config_rejected() {
+        let mut c = presets::small();
+        c.host.tenants = 0;
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.host.queue_depth = 0;
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.host.victim_gap = 0; // would divide by zero in victim pacing
+        assert!(c.validate().is_err());
+        assert!(Config::from_toml_str("[host]\nscheduler = \"lifo\"", presets::small()).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub fn table1() -> Config {
             erase: 10 * MS,
         },
         cache: CacheConfig { slc_cache_bytes: 4 << 30, ..CacheConfig::default() },
+        host: HostConfig::default(),
         sim: SimConfig::default(),
     }
 }
@@ -85,6 +86,7 @@ pub fn small() -> Config {
             idle_threshold: 1 * MS,
             ..CacheConfig::default()
         },
+        host: HostConfig::default(),
         sim: SimConfig { verify: true, ..SimConfig::default() },
     }
 }
@@ -110,6 +112,7 @@ pub fn bench_medium() -> Config {
             idle_threshold: 10 * MS,
             ..CacheConfig::default()
         },
+        host: HostConfig::default(),
         sim: SimConfig::default(),
     }
 }

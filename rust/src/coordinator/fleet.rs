@@ -1,0 +1,258 @@
+//! Thread-parallel fleet runner: the (scheme × scheduler × tenant-mix)
+//! cross-product of independent multi-tenant simulations.
+//!
+//! Every cell of the cross-product is one fresh
+//! [`MultiTenantSimulator`] — runs share nothing, so they fan out over
+//! [`super::runner::parallel_map`] worker threads. Per-run seeds are
+//! derived from the *cell coordinates* (not the execution order), so a
+//! parallel sweep produces byte-identical summaries to a serial one —
+//! asserted by `tests/integration_multitenant.rs`.
+
+use super::runner::parallel_map;
+use crate::config::{Config, MixKind, SchedKind, Scheme};
+use crate::host::{MultiTenantSimulator, MultiTenantSummary};
+use crate::trace::scenario::Scenario;
+use crate::util::fmt::TextTable;
+use crate::util::rng::mix64;
+use crate::Result;
+
+/// One cell of the fleet cross-product.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetJob {
+    /// Cache scheme under test.
+    pub scheme: Scheme,
+    /// Request scheduler under test.
+    pub scheduler: SchedKind,
+    /// Tenant mix under test.
+    pub mix: MixKind,
+    /// Per-run seed (derived from the cell, not the execution order).
+    pub seed: u64,
+}
+
+/// The sweep specification.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Base configuration (geometry, timing, `[host]` tenant knobs).
+    pub base: Config,
+    /// Schemes axis.
+    pub schemes: Vec<Scheme>,
+    /// Schedulers axis.
+    pub scheds: Vec<SchedKind>,
+    /// Tenant-mix axis.
+    pub mixes: Vec<MixKind>,
+    /// Scenario each cell runs under.
+    pub scenario: Scenario,
+    /// Base seed the per-cell seeds derive from.
+    pub seed: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl FleetSpec {
+    /// Full sweep over every scheme × scheduler × mix with `base`'s
+    /// host settings.
+    pub fn full(base: Config, seed: u64, threads: usize) -> FleetSpec {
+        FleetSpec {
+            base,
+            schemes: Scheme::all().to_vec(),
+            scheds: SchedKind::all().to_vec(),
+            mixes: MixKind::all().to_vec(),
+            scenario: Scenario::Bursty,
+            seed,
+            threads,
+        }
+    }
+
+    /// The cross-product, in deterministic presentation order. Seeds
+    /// mix the cell coordinates into the base seed so that reordering
+    /// or filtering the axes never changes a given cell's seed.
+    pub fn jobs(&self) -> Vec<FleetJob> {
+        let mut out = Vec::with_capacity(self.schemes.len() * self.scheds.len() * self.mixes.len());
+        for &scheme in &self.schemes {
+            for &scheduler in &self.scheds {
+                for &mix in &self.mixes {
+                    let cell = mix64(
+                        hash_str(scheme.name()),
+                        mix64(hash_str(scheduler.name()), hash_str(mix.name())),
+                    );
+                    out.push(FleetJob { scheme, scheduler, mix, seed: mix64(self.seed, cell) });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// FNV-1a — a stable 64-bit name hash (seed derivation only).
+fn hash_str(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Execute the sweep: one fresh simulator per cell, fanned out over
+/// `spec.threads` workers, results in `spec.jobs()` order.
+pub fn run_fleet(spec: &FleetSpec) -> Result<Vec<MultiTenantSummary>> {
+    let jobs = spec.jobs();
+    let results = parallel_map(jobs, spec.threads, |job| -> Result<MultiTenantSummary> {
+        let mut cfg = spec.base.clone();
+        cfg.cache.scheme = job.scheme;
+        cfg.host.scheduler = job.scheduler;
+        cfg.host.mix = job.mix;
+        cfg.sim.seed = job.seed;
+        MultiTenantSimulator::run_once(cfg, spec.scenario)
+    });
+    results.into_iter().collect()
+}
+
+/// Render a sweep as the paper-style summary table (deterministic:
+/// wall-clock is deliberately excluded so serial and parallel sweeps
+/// render byte-identically).
+pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
+    let mut table = TextTable::new(&[
+        "scheme",
+        "scheduler",
+        "mix",
+        "seed",
+        "mean_ms",
+        "p99_ms",
+        "wa",
+        "victim_p99_ms",
+        "bg_pages",
+    ]);
+    for s in results {
+        table.row(vec![
+            s.scheme.clone(),
+            s.scheduler.clone(),
+            s.mix.clone(),
+            format!("{:#018x}", s.seed),
+            format!("{:.3}", s.write_latency.mean() / 1e6),
+            format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
+            format!("{:.3}", s.wa()),
+            format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+            s.background.total_programs().to_string(),
+        ]);
+    }
+    table
+}
+
+/// Render one run's per-tenant breakdown (the `multi-tenant`
+/// subcommand's detail view).
+pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
+    let mut table = TextTable::new(&[
+        "tenant",
+        "weight",
+        "writes",
+        "reads",
+        "mean_ms",
+        "p50_ms",
+        "p99_ms",
+        "mb_s",
+        "wa",
+    ]);
+    let span_s = (s.sim_end as f64 / 1e9).max(1e-9);
+    for t in &s.tenants {
+        table.row(vec![
+            t.name.clone(),
+            format!("{:.2}", t.weight),
+            t.write_latency.count().to_string(),
+            t.read_latency.count().to_string(),
+            format!("{:.3}", t.mean_write_latency() / 1e6),
+            format!("{:.3}", t.p50_write_latency() as f64 / 1e6),
+            format!("{:.3}", t.p99_write_latency() as f64 / 1e6),
+            format!("{:.1}", t.host_bytes_written as f64 / 1e6 / span_s),
+            format!("{:.3}", t.wa()),
+        ]);
+    }
+    table.row(vec![
+        "(device)".into(),
+        "-".into(),
+        s.write_latency.count().to_string(),
+        s.read_latency.count().to_string(),
+        format!("{:.3}", s.write_latency.mean() / 1e6),
+        format!("{:.3}", s.write_latency.percentile_best(0.50) as f64 / 1e6),
+        format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
+        format!("{:.1}", s.host_bytes_written as f64 / 1e6 / span_s),
+        format!("{:.3}", s.wa()),
+    ]);
+    table.row(vec![
+        "(background)".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("+{} pages", s.background.total_programs()),
+    ]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny_spec(threads: usize) -> FleetSpec {
+        let mut base = presets::small();
+        base.cache.slc_cache_bytes = 1 << 20;
+        base.host.tenants = 3;
+        base.host.aggressor_cache_mult = 1.5;
+        FleetSpec {
+            base,
+            schemes: vec![Scheme::Baseline, Scheme::Ips],
+            scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
+            mixes: vec![MixKind::AggressorVictims],
+            scenario: Scenario::Bursty,
+            seed: 42,
+            threads,
+        }
+    }
+
+    #[test]
+    fn jobs_cover_the_cross_product() {
+        let spec = tiny_spec(1);
+        let jobs = spec.jobs();
+        assert_eq!(jobs.len(), 4);
+        // seeds are distinct per cell and stable across invocations
+        let seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "distinct per-cell seeds");
+        assert_eq!(seeds, spec.jobs().iter().map(|j| j.seed).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cell_seed_ignores_axis_order() {
+        let spec = tiny_spec(1);
+        let mut rev = spec.clone();
+        rev.schemes.reverse();
+        rev.scheds.reverse();
+        let find = |jobs: &[FleetJob], s: Scheme, d: SchedKind| {
+            jobs.iter().find(|j| j.scheme == s && j.scheduler == d).unwrap().seed
+        };
+        let a = spec.jobs();
+        let b = rev.jobs();
+        assert_eq!(
+            find(&a, Scheme::Ips, SchedKind::Fifo),
+            find(&b, Scheme::Ips, SchedKind::Fifo),
+            "a cell's seed is a function of the cell, not its position"
+        );
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_byte_for_byte() {
+        let serial = run_fleet(&tiny_spec(1)).unwrap();
+        let parallel = run_fleet(&tiny_spec(4)).unwrap();
+        assert_eq!(
+            summary_table(&serial).render(),
+            summary_table(&parallel).render(),
+            "thread count must not leak into results"
+        );
+    }
+}

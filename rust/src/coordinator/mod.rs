@@ -7,6 +7,7 @@
 //! DESIGN.md's experiment index for the figure ↔ module map.
 
 pub mod experiment;
+pub mod fleet;
 pub mod report;
 pub mod runner;
 

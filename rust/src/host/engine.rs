@@ -1,0 +1,436 @@
+//! The multi-tenant simulation engine: per-tenant submission queues →
+//! scheduler → cache scheme / FTL, with per-tenant metric attribution.
+//!
+//! Timing model: the front end dispatches one request at a time in
+//! scheduler order, with at most `host.device_qd` requests in flight —
+//! when the window is full it waits for the earliest completion. That
+//! back-pressure is what makes dispatch *order* observable: a victim
+//! request picked late waits behind the aggressor's backlog on the
+//! shared planes, so its latency carries the neighbour's cliff.
+//! Within a request, pages still spread over planes exactly like the
+//! single-tenant [`crate::sim::Simulator`].
+//!
+//! Attribution: the engine snapshots the FTL [`Ledger`] around every
+//! request; the diff (host pages, programs, synchronous GC) is charged
+//! to the submitting tenant. Idle-time background work and the
+//! end-of-workload flush are charged to the device's `background`
+//! ledger instead — no tenant owns them.
+
+use super::queue::SubmissionQueue;
+use super::sched::{self, HeadInfo, Scheduler};
+use super::tenant::{self, TenantSpec};
+use crate::cache::{self, CachePolicy};
+use crate::config::{Config, Nanos};
+use crate::flash::Lpn;
+use crate::ftl::Ftl;
+use crate::metrics::{BandwidthTimeline, LatencyStats, Ledger, TenantStats};
+use crate::trace::scenario::Scenario;
+use crate::trace::OpKind;
+use crate::Result;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A configured multi-tenant simulator (one scheme, one scheduler,
+/// one tenant mix over one fresh SSD).
+pub struct MultiTenantSimulator {
+    cfg: Config,
+    ftl: Ftl,
+    policy: Box<dyn CachePolicy>,
+    sched: Box<dyn Scheduler>,
+    queues: Vec<SubmissionQueue>,
+    stats: Vec<TenantStats>,
+    now: Nanos,
+}
+
+/// Everything a multi-tenant run produced.
+#[derive(Clone, Debug)]
+pub struct MultiTenantSummary {
+    /// Scheme name.
+    pub scheme: String,
+    /// Scheduler name.
+    pub scheduler: String,
+    /// Tenant-mix name.
+    pub mix: String,
+    /// Scenario name.
+    pub scenario: String,
+    /// PRNG seed used.
+    pub seed: u64,
+    /// Per-tenant statistics, in tenant order.
+    pub tenants: Vec<TenantStats>,
+    /// Device-wide write-request latencies.
+    pub write_latency: LatencyStats,
+    /// Device-wide read-request latencies.
+    pub read_latency: LatencyStats,
+    /// Device-wide host write bandwidth.
+    pub bandwidth: BandwidthTimeline,
+    /// Device-wide ledger (everything the flash programmed).
+    pub ledger: Ledger,
+    /// Unattributed programs: idle-time reclamation + final flush.
+    pub background: Ledger,
+    /// Simulated end time.
+    pub sim_end: Nanos,
+    /// Bytes the host wrote (all tenants).
+    pub host_bytes_written: u64,
+    /// Host-side wall clock of the simulation.
+    pub wall_clock: std::time::Duration,
+}
+
+impl MultiTenantSummary {
+    /// Device-wide write amplification.
+    pub fn wa(&self) -> f64 {
+        self.ledger.write_amplification()
+    }
+    /// Look a tenant up by name.
+    pub fn tenant(&self, name: &str) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+    /// Worst victim tail latency (ns) — the cross-tenant interference
+    /// headline for the aggressor-victims mix.
+    pub fn max_victim_p99(&self) -> Nanos {
+        self.tenants
+            .iter()
+            .filter(|t| t.name.starts_with("victim"))
+            .map(|t| t.p99_write_latency())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl MultiTenantSimulator {
+    /// Build the simulator from `cfg` (scheme from `cfg.cache.scheme`,
+    /// front end from `cfg.host`, tenant traces from
+    /// `cfg.host.mix` × `cfg.sim.seed`).
+    pub fn new(cfg: Config) -> Result<MultiTenantSimulator> {
+        cfg.validate()?;
+        let mut ftl = Ftl::new(&cfg)?;
+        let mut policy = cache::build(&cfg);
+        policy.init(&mut ftl)?;
+        let logical = ftl.map.lpn_limit() * cfg.geometry.page_bytes as u64;
+        let (specs, traces) = tenant::build_mix(&cfg, logical, cfg.sim.seed)?;
+        let weights: Vec<f64> = specs.iter().map(|s| s.weight).collect();
+        let sched = sched::build(cfg.host.scheduler, &weights);
+        let queues: Vec<SubmissionQueue> = specs
+            .iter()
+            .zip(&traces)
+            .map(|(s, t)| SubmissionQueue::new(s.id, cfg.host.queue_depth, t))
+            .collect();
+        let stats: Vec<TenantStats> = specs
+            .iter()
+            .map(|s: &TenantSpec| {
+                TenantStats::new(
+                    s.id.0,
+                    s.name.clone(),
+                    s.weight,
+                    cfg.sim.latency_samples,
+                    cfg.sim.bandwidth_window,
+                )
+            })
+            .collect();
+        Ok(MultiTenantSimulator { cfg, ftl, policy, sched, queues, stats, now: 0 })
+    }
+
+    /// Access the FTL (diagnostics, audits).
+    pub fn ftl(&self) -> &Ftl {
+        &self.ftl
+    }
+    /// Scheme name.
+    pub fn scheme_name(&self) -> &'static str {
+        self.policy.name()
+    }
+    /// Tenant count.
+    pub fn tenants(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Drive every queue dry under `scenario`; returns the summary.
+    pub fn run(&mut self, scenario: Scenario) -> Result<MultiTenantSummary> {
+        let wall0 = std::time::Instant::now();
+        let idle_threshold = self.cfg.cache.idle_threshold;
+        let page = self.cfg.geometry.page_bytes as u64;
+        let lpn_limit = self.ftl.map.lpn_limit();
+        let qd = self.cfg.host.device_qd.max(1);
+        let mut write_latency = LatencyStats::new(self.cfg.sim.latency_samples);
+        let mut read_latency = LatencyStats::new(self.cfg.sim.latency_samples);
+        let mut bandwidth = BandwidthTimeline::new(self.cfg.sim.bandwidth_window);
+        let mut host_bytes = 0u64;
+        let mut last_end: Nanos = 0;
+        // in-flight dispatched requests: (completion time, tenant)
+        let mut inflight: BinaryHeap<Reverse<(Nanos, usize)>> = BinaryHeap::new();
+        // per-tenant outstanding commands (bounded by the SQ depth)
+        let mut outstanding = vec![0usize; self.queues.len()];
+
+        loop {
+            // retire completions up to the front-end clock
+            while inflight.peek().map(|&Reverse((t, _))| t <= self.now).unwrap_or(false) {
+                let Reverse((_, ti)) = inflight.pop().expect("peeked");
+                outstanding[ti] -= 1;
+            }
+
+            // dispatch if the device window is open and a head is ready
+            if inflight.len() < qd {
+                let now = self.now;
+                let ready: Vec<Option<HeadInfo>> = self
+                    .queues
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, q)| {
+                        // NVMe SQ window: a tenant may not exceed its
+                        // queue depth in outstanding commands
+                        if outstanding[ti] >= q.depth {
+                            return None;
+                        }
+                        q.head().filter(|op| op.at <= now).map(|op| HeadInfo {
+                            arrival: op.at,
+                            bytes: op.len as u64,
+                        })
+                    })
+                    .collect();
+                if let Some(i) = self.sched.pick(&ready) {
+                    let op = self.queues[i].pop().expect("picked head exists");
+                    let issue = self.now.max(op.at);
+                    let before = self.ftl.ledger;
+                    let first_lpn = (op.offset / page) % lpn_limit;
+                    let n_pages = (op.len as u64).div_ceil(page).max(1);
+                    let mut req_end = issue;
+                    match op.kind {
+                        OpKind::Write => {
+                            for k in 0..n_pages {
+                                let lpn = Lpn((first_lpn + k) % lpn_limit);
+                                self.ftl.ledger.host_page();
+                                let c = self.policy.host_write_page(&mut self.ftl, lpn, issue)?;
+                                req_end = req_end.max(c.end);
+                            }
+                        }
+                        OpKind::Read => {
+                            for k in 0..n_pages {
+                                let lpn = Lpn((first_lpn + k) % lpn_limit);
+                                let c = self.ftl.host_read(lpn, issue)?;
+                                req_end = req_end.max(c.end);
+                            }
+                        }
+                    }
+                    let lat = req_end - op.at; // includes queueing in the SQ
+                    let diff = self.ftl.ledger.diff(&before);
+                    let st = &mut self.stats[i];
+                    st.ledger.merge(&diff);
+                    match op.kind {
+                        OpKind::Write => {
+                            st.write_latency.record(lat);
+                            st.bandwidth.record(req_end, op.len as u64);
+                            st.host_bytes_written += op.len as u64;
+                            write_latency.record(lat);
+                            bandwidth.record(req_end, op.len as u64);
+                            host_bytes += op.len as u64;
+                        }
+                        OpKind::Read => {
+                            st.read_latency.record(lat);
+                            read_latency.record(lat);
+                        }
+                    }
+                    self.sched.charge(i, op.len as u64);
+                    inflight.push(Reverse((req_end, i)));
+                    outstanding[i] += 1;
+                    last_end = last_end.max(req_end);
+                    continue;
+                }
+            }
+
+            // Nothing dispatchable: advance to the next event. Only
+            // *future* arrivals count — an already-arrived head that is
+            // blocked (device window full, or its tenant at SQ depth)
+            // is unblocked by a completion, never by its own arrival.
+            let next_arrival = self
+                .queues
+                .iter()
+                .filter_map(|q| q.next_arrival())
+                .filter(|&a| a > self.now)
+                .min();
+            let next_completion = inflight.peek().map(|&Reverse((t, _))| t);
+            let target = if inflight.len() >= qd {
+                // window full: only a completion can unblock dispatch
+                next_completion.expect("full window has completions")
+            } else {
+                match (next_arrival, next_completion) {
+                    (None, None) => break,
+                    (Some(a), None) => {
+                        // device quiesced: the gap before the next
+                        // arrival is an idle window for background
+                        // work (daily)
+                        if scenario == Scenario::Daily {
+                            let quiesce = self.now.max(last_end);
+                            if a > quiesce.saturating_add(idle_threshold) {
+                                let start = quiesce + idle_threshold;
+                                self.policy.idle_work(&mut self.ftl, start, a)?;
+                            }
+                        }
+                        a
+                    }
+                    (Some(a), Some(c)) => a.min(c),
+                    (None, Some(c)) => c,
+                }
+            };
+            self.now = self.now.max(target);
+        }
+
+        self.now = self.now.max(last_end);
+
+        // end-of-workload flush (unattributed background work)
+        if scenario.flush_at_end() {
+            let end = self.policy.flush(&mut self.ftl, self.now)?;
+            self.now = self.now.max(end);
+        }
+
+        if self.cfg.sim.verify {
+            self.ftl.audit()?;
+        }
+
+        // background = device total minus everything tenants caused
+        let mut attributed = Ledger::default();
+        for t in &self.stats {
+            attributed.merge(&t.ledger);
+        }
+        let background = self.ftl.ledger.diff(&attributed);
+
+        Ok(MultiTenantSummary {
+            scheme: self.policy.name().to_string(),
+            scheduler: self.sched.name().to_string(),
+            mix: self.cfg.host.mix.name().to_string(),
+            scenario: scenario.name().to_string(),
+            seed: self.cfg.sim.seed,
+            tenants: self.stats.clone(),
+            write_latency,
+            read_latency,
+            bandwidth,
+            ledger: self.ftl.ledger,
+            background,
+            sim_end: self.now,
+            host_bytes_written: host_bytes,
+            wall_clock: wall0.elapsed(),
+        })
+    }
+
+    /// Convenience: build + run in one call.
+    pub fn run_once(cfg: Config, scenario: Scenario) -> Result<MultiTenantSummary> {
+        MultiTenantSimulator::new(cfg)?.run(scenario)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, MixKind, SchedKind, Scheme};
+
+    fn mt_cfg(scheme: Scheme, sched: SchedKind) -> Config {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = scheme;
+        cfg.cache.slc_cache_bytes = 1 << 20;
+        cfg.host.tenants = 4;
+        cfg.host.scheduler = sched;
+        cfg.host.mix = MixKind::AggressorVictims;
+        cfg.host.victim_req_bytes = 4096;
+        cfg.sim.verify = true;
+        cfg.sim.latency_samples = 100_000;
+        cfg
+    }
+
+    #[test]
+    fn four_tenants_complete_and_attribute() {
+        let cfg = mt_cfg(Scheme::Baseline, SchedKind::Fifo);
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert_eq!(s.tenants.len(), 4);
+        assert_eq!(s.tenants[0].name, "aggressor");
+        // every tenant got service
+        for t in &s.tenants {
+            assert!(t.write_latency.count() > 0, "{} served", t.name);
+            assert!(t.host_bytes_written > 0);
+        }
+        // attribution closes: tenants + background == device ledger
+        let mut sum = Ledger::default();
+        for t in &s.tenants {
+            sum.merge(&t.ledger);
+        }
+        sum.merge(&s.background);
+        assert_eq!(sum, s.ledger, "attribution is exhaustive");
+        // the aggressor wrote the bulk of the bytes
+        assert!(s.tenants[0].host_bytes_written > s.host_bytes_written / 2);
+    }
+
+    #[test]
+    fn round_robin_protects_victims_vs_fifo() {
+        let run = |sched| {
+            let cfg = mt_cfg(Scheme::Baseline, sched);
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        let fifo = run(SchedKind::Fifo);
+        let rr = run(SchedKind::RoundRobin);
+        // identical offered load either way
+        assert_eq!(fifo.host_bytes_written, rr.host_bytes_written);
+        // victims dodge the aggressor's backlog under round-robin
+        assert!(
+            rr.max_victim_p99() <= fifo.max_victim_p99(),
+            "rr {} <= fifo {}",
+            rr.max_victim_p99(),
+            fifo.max_victim_p99()
+        );
+    }
+
+    #[test]
+    fn sq_depth_caps_a_tenants_outstanding() {
+        // With depth 1 even FIFO cannot let the aggressor occupy the
+        // whole device window, so the victims' tail shrinks (or at
+        // worst matches) vs a deep queue.
+        let run = |depth| {
+            let mut cfg = mt_cfg(Scheme::Baseline, SchedKind::Fifo);
+            cfg.host.queue_depth = depth;
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        let deep = run(64);
+        let shallow = run(1);
+        assert_eq!(deep.host_bytes_written, shallow.host_bytes_written);
+        assert!(
+            shallow.max_victim_p99() < deep.max_victim_p99(),
+            "depth 1 {} < depth 64 {}",
+            shallow.max_victim_p99(),
+            deep.max_victim_p99()
+        );
+    }
+
+    #[test]
+    fn all_mixes_run_on_ips() {
+        for mix in MixKind::all() {
+            let mut cfg = mt_cfg(Scheme::Ips, SchedKind::WeightedFair);
+            cfg.host.mix = mix;
+            let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+            assert!(s.host_bytes_written > 0, "{mix:?} wrote data");
+            assert!(s.wa() >= 0.999, "{mix:?} WA sane: {}", s.wa());
+        }
+    }
+
+    #[test]
+    fn read_heavy_records_read_latencies() {
+        let mut cfg = mt_cfg(Scheme::Baseline, SchedKind::RoundRobin);
+        cfg.host.mix = MixKind::ReadHeavy;
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert!(s.read_latency.count() > 0);
+        for t in &s.tenants {
+            assert!(t.read_latency.count() > 0, "{} read back", t.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_summaries() {
+        let run = || {
+            let cfg = mt_cfg(Scheme::Coop, SchedKind::WeightedFair);
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.sim_end, b.sim_end);
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.write_latency.count(), b.write_latency.count());
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.p99_write_latency(), y.p99_write_latency());
+            assert_eq!(x.ledger, y.ledger);
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Tenant-mix scenarios: who the tenants are and what they drive.
+//!
+//! Each tenant owns a disjoint slice of the logical address space
+//! (production SSDs namespace tenants the same way), so per-tenant
+//! write-amplification attribution is honest — no tenant invalidates
+//! another tenant's pages. Mixes (selected by
+//! [`crate::config::MixKind`]):
+//!
+//! * **aggressor-victims** — tenant 0 bursts
+//!   `aggressor_cache_mult ×` the SLC cache size with no think time
+//!   (the §III bursty cliff), while K victims issue small paced writes.
+//!   The victims' p99 is the cross-tenant interference metric.
+//! * **uniform** — every tenant paces the same moderate sequential
+//!   stream.
+//! * **read-heavy** — every tenant writes a small working set, then
+//!   mostly reads it back.
+//! * **write-heavy** — every tenant bursts at once (collective cliff).
+
+use super::TenantId;
+use crate::config::{Config, MixKind, Nanos};
+use crate::trace::scenario::BURSTY_WRITE_BYTES;
+use crate::trace::{OpKind, Trace, TraceOp};
+use crate::util::rng::{mix64, Rng};
+use crate::{Error, Result};
+
+/// A tenant's identity and scheduling weight.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant id (dense; queue index).
+    pub id: TenantId,
+    /// Display name ("aggressor", "victim-1", ...).
+    pub name: String,
+    /// Weighted-fair-share weight.
+    pub weight: f64,
+}
+
+/// One tenant's disjoint logical-address slice.
+#[derive(Clone, Copy, Debug)]
+struct Region {
+    start: u64,
+    len: u64,
+}
+
+fn regions(cfg: &Config, logical_bytes: u64) -> Result<Vec<Region>> {
+    let n = cfg.host.tenants as u64;
+    let page = cfg.geometry.page_bytes as u64;
+    let raw = logical_bytes / n;
+    let len = raw - raw % page;
+    if len < 2 * BURSTY_WRITE_BYTES as u64 {
+        return Err(Error::config(format!(
+            "logical space too small for {n} tenants ({len} B per tenant)"
+        )));
+    }
+    Ok((0..n).map(|i| Region { start: i * len, len }).collect())
+}
+
+/// Sequential writes of `req_bytes` each, totalling `volume`, wrapping
+/// inside `region`, arrivals starting at `t0` spaced `gap` apart.
+fn stream(name: &str, region: Region, volume: u64, req_bytes: u32, t0: Nanos, gap: Nanos) -> Trace {
+    let req = (req_bytes as u64).min(region.len) as u32;
+    let n = (volume / req as u64).max(1);
+    let wrap = region.len - region.len % req as u64;
+    let ops = (0..n)
+        .map(|i| TraceOp {
+            at: t0 + i * gap.max(1),
+            kind: OpKind::Write,
+            offset: region.start + (i * req as u64) % wrap,
+            len: req,
+        })
+        .collect();
+    Trace { name: name.to_string(), ops }
+}
+
+/// Rough lower bound on how long the device stays busy serving
+/// `volume` bytes (all-SLC programs, full plane parallelism). Used to
+/// pace victims so their requests overlap the aggressor's burst.
+fn busy_estimate(cfg: &Config, volume: u64) -> Nanos {
+    let pages = (volume / cfg.geometry.page_bytes as u64).max(1);
+    let planes = cfg.geometry.planes().max(1) as u64;
+    (pages * cfg.timing.slc_prog) / planes
+}
+
+/// Build the tenant specs and their traces for `cfg.host` over a
+/// device with `logical_bytes` of logical capacity.
+///
+/// Deterministic in `seed` (victim arrival jitter only); the same
+/// `(cfg, logical_bytes, seed)` always yields byte-identical traces.
+pub fn build_mix(cfg: &Config, logical_bytes: u64, seed: u64) -> Result<(Vec<TenantSpec>, Vec<Trace>)> {
+    let h = &cfg.host;
+    let regs = regions(cfg, logical_bytes)?;
+    let n = h.tenants as usize;
+    let cache = cfg.cache.slc_cache_bytes.max(cfg.geometry.page_bytes as u64);
+    let agg_volume = ((cache as f64) * h.aggressor_cache_mult) as u64;
+    let mut specs = Vec::with_capacity(n);
+    let mut traces = Vec::with_capacity(n);
+
+    match h.mix {
+        MixKind::AggressorVictims => {
+            for (i, &reg) in regs.iter().enumerate() {
+                if i == 0 {
+                    specs.push(TenantSpec {
+                        id: TenantId(0),
+                        name: "aggressor".into(),
+                        weight: h.aggressor_weight,
+                    });
+                    // the §III burst: no think time, cache-cliff volume
+                    traces.push(stream("aggressor", reg, agg_volume, BURSTY_WRITE_BYTES, 0, 1));
+                } else {
+                    specs.push(TenantSpec {
+                        id: TenantId(i as u16),
+                        name: format!("victim-{i}"),
+                        weight: 1.0,
+                    });
+                    traces.push(victim_trace(cfg, reg, i, agg_volume, seed, OpKind::Write));
+                }
+            }
+        }
+        MixKind::Uniform => {
+            let volume = (agg_volume / n as u64).max(BURSTY_WRITE_BYTES as u64);
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("tenant-{i}"),
+                    weight: 1.0,
+                });
+                // paced: the per-op gap spreads each stream over the
+                // device-busy estimate instead of front-loading it
+                let ops = volume / BURSTY_WRITE_BYTES as u64;
+                let gap = (busy_estimate(cfg, agg_volume) / ops.max(1)).max(1);
+                traces.push(stream(
+                    &format!("tenant-{i}"),
+                    reg,
+                    volume,
+                    BURSTY_WRITE_BYTES,
+                    i as u64,
+                    gap,
+                ));
+            }
+        }
+        MixKind::ReadHeavy => {
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("reader-{i}"),
+                    weight: 1.0,
+                });
+                traces.push(victim_trace(cfg, reg, i, agg_volume, seed, OpKind::Read));
+            }
+        }
+        MixKind::WriteHeavy => {
+            let volume = (agg_volume / n as u64).max(BURSTY_WRITE_BYTES as u64);
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("writer-{i}"),
+                    weight: 1.0,
+                });
+                // everyone bursts at once: the collective cliff
+                traces.push(stream(
+                    &format!("writer-{i}"),
+                    reg,
+                    volume,
+                    BURSTY_WRITE_BYTES,
+                    i as u64,
+                    1,
+                ));
+            }
+        }
+    }
+    Ok((specs, traces))
+}
+
+/// A latency-sensitive tenant: small paced requests overlapping the
+/// aggressor's busy window. `tail` = `Read` turns the back half of the
+/// trace into read-backs of the tenant's own writes (read-heavy mix).
+fn victim_trace(
+    cfg: &Config,
+    reg: Region,
+    tenant: usize,
+    agg_volume: u64,
+    seed: u64,
+    tail: OpKind,
+) -> Trace {
+    let h = &cfg.host;
+    let req = (h.victim_req_bytes as u64).min(reg.len) as u32;
+    let busy = busy_estimate(cfg, agg_volume).max(h.victim_gap);
+    let n = (busy / h.victim_gap).clamp(64, 5000);
+    let wrap = reg.len - reg.len % req as u64;
+    let mut rng = Rng::new(mix64(seed, tenant as u64));
+    // phase-shift tenants so their arrivals don't lock step
+    let mut at = (tenant as u64 * h.victim_gap) / (h.tenants as u64).max(1);
+    let mut ops = Vec::with_capacity(n as usize);
+    let write_prefix = match tail {
+        OpKind::Write => n,
+        OpKind::Read => (n / 4).max(1),
+    };
+    for i in 0..n {
+        let kind = if i < write_prefix { OpKind::Write } else { OpKind::Read };
+        // reads walk the already-written prefix of the region
+        let idx = match kind {
+            OpKind::Write => i,
+            OpKind::Read => i % write_prefix,
+        };
+        ops.push(TraceOp {
+            at,
+            kind,
+            offset: reg.start + (idx * req as u64) % wrap,
+            len: req,
+        });
+        // jittered pacing: mean `victim_gap`, never zero
+        let jitter = 0.5 + rng.f64();
+        at += ((h.victim_gap as f64 * jitter) as Nanos).max(1);
+    }
+    let name = match tail {
+        OpKind::Write => format!("victim-{tenant}"),
+        OpKind::Read => format!("reader-{tenant}"),
+    };
+    Trace { name, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, MixKind};
+
+    fn cfg(mix: MixKind) -> Config {
+        let mut c = presets::small();
+        c.host.mix = mix;
+        c.host.tenants = 4;
+        c
+    }
+
+    const LOGICAL: u64 = 48 << 20;
+
+    #[test]
+    fn regions_are_disjoint_and_page_aligned() {
+        let c = cfg(MixKind::Uniform);
+        let regs = regions(&c, LOGICAL).unwrap();
+        assert_eq!(regs.len(), 4);
+        for w in regs.windows(2) {
+            assert_eq!(w[0].start + w[0].len, w[1].start);
+        }
+        assert_eq!(regs[0].len % c.geometry.page_bytes as u64, 0);
+    }
+
+    #[test]
+    fn mixes_build_for_all_kinds() {
+        for mix in MixKind::all() {
+            let c = cfg(mix);
+            let (specs, traces) = build_mix(&c, LOGICAL, 7).unwrap();
+            assert_eq!(specs.len(), 4);
+            assert_eq!(traces.len(), 4);
+            for (s, t) in specs.iter().zip(&traces) {
+                assert!(!t.ops.is_empty(), "{} has ops under {:?}", s.name, mix);
+                // arrival-sorted, as the queues require
+                assert!(t.ops.windows(2).all(|w| w[0].at <= w[1].at));
+            }
+        }
+    }
+
+    #[test]
+    fn tenants_stay_inside_their_regions() {
+        for mix in MixKind::all() {
+            let c = cfg(mix);
+            let regs = regions(&c, LOGICAL).unwrap();
+            let (_, traces) = build_mix(&c, LOGICAL, 7).unwrap();
+            for (t, reg) in traces.iter().zip(&regs) {
+                for op in &t.ops {
+                    assert!(op.offset >= reg.start, "{mix:?}: {} < {}", op.offset, reg.start);
+                    assert!(
+                        op.offset + op.len as u64 <= reg.start + reg.len,
+                        "{mix:?}: op leaves region"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggressor_bursts_and_victims_pace() {
+        let c = cfg(MixKind::AggressorVictims);
+        let (specs, traces) = build_mix(&c, LOGICAL, 7).unwrap();
+        assert_eq!(specs[0].name, "aggressor");
+        let agg_gap =
+            traces[0].ops.windows(2).map(|w| w[1].at - w[0].at).max().unwrap_or(0);
+        assert!(agg_gap <= 1, "aggressor has no think time");
+        // aggressor volume drives the cache over the cliff
+        assert!(traces[0].total_write_bytes() >= 2 * c.cache.slc_cache_bytes);
+        let victim_gap =
+            traces[1].ops.windows(2).map(|w| w[1].at - w[0].at).min().unwrap_or(0);
+        assert!(victim_gap >= c.host.victim_gap / 2, "victims are paced");
+    }
+
+    #[test]
+    fn read_heavy_is_mostly_reads() {
+        let c = cfg(MixKind::ReadHeavy);
+        let (_, traces) = build_mix(&c, LOGICAL, 7).unwrap();
+        for t in &traces {
+            let reads = t.ops.iter().filter(|o| o.kind == OpKind::Read).count();
+            assert!(reads * 2 > t.ops.len(), "reads dominate: {}/{}", reads, t.ops.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let c = cfg(MixKind::AggressorVictims);
+        let (_, a) = build_mix(&c, LOGICAL, 42).unwrap();
+        let (_, b) = build_mix(&c, LOGICAL, 42).unwrap();
+        assert_eq!(a.iter().map(|t| &t.ops).collect::<Vec<_>>(),
+                   b.iter().map(|t| &t.ops).collect::<Vec<_>>());
+        let (_, d) = build_mix(&c, LOGICAL, 43).unwrap();
+        assert_ne!(a[1].ops, d[1].ops, "victim jitter follows the seed");
+    }
+}

@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod flash;
 pub mod ftl;
+pub mod host;
 pub mod metrics;
 pub mod reliability;
 pub mod runtime;
@@ -40,27 +41,50 @@ pub mod util;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (dependency-free: Display/Error/From are
+/// implemented by hand so the crate builds in offline containers).
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
     /// Trace parsing errors.
-    #[error("trace error: {0}")]
     Trace(String),
     /// Simulation invariant violations (these indicate bugs).
-    #[error("simulation invariant violated: {0}")]
     Invariant(String),
     /// Flash-array level errors (illegal command sequences).
-    #[error("flash protocol error: {0}")]
     Flash(String),
     /// PJRT / artifact errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// IO errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Trace(m) => write!(f, "trace error: {m}"),
+            Error::Invariant(m) => write!(f, "simulation invariant violated: {m}"),
+            Error::Flash(m) => write!(f, "flash protocol error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

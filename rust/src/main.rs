@@ -1,15 +1,19 @@
 //! `ips` — hybrid 3D SSD simulator and paper-reproduction launcher.
 //!
 //! Subcommands:
-//! * `reproduce` — regenerate the paper's figures (`--fig 3|...|all`);
-//! * `run`       — one simulation: scheme × workload × scenario;
-//! * `sweep`     — ablations (cache size, idle threshold, group width);
-//! * `audit`     — reprogram reliability audit via the PJRT artifact;
-//! * `list`      — workloads, schemes, presets.
+//! * `reproduce`    — regenerate the paper's figures (`--fig 3|...|all`);
+//! * `run`          — one simulation: scheme × workload × scenario;
+//! * `multi-tenant` — tenants → submission queues → scheduler → scheme,
+//!   with per-tenant latency/WA attribution; `--fleet` sweeps the
+//!   (scheme × scheduler) cross-product on worker threads;
+//! * `sweep`        — ablations (cache size, idle threshold, group width);
+//! * `audit`        — reprogram reliability audit via the PJRT artifact;
+//! * `list`         — workloads, schemes, presets.
 
 use ips::cache;
-use ips::config::{presets, Config, Scheme, MS};
-use ips::coordinator::{experiment, ExpOptions};
+use ips::config::{presets, Config, MixKind, SchedKind, Scheme, MS};
+use ips::coordinator::{experiment, fleet, ExpOptions};
+use ips::host::MultiTenantSimulator;
 use ips::sim::Simulator;
 use ips::trace::scenario::{self, Scenario};
 use ips::trace::profiles;
@@ -40,6 +44,26 @@ fn cli() -> Command {
                 .flag("verify", None, "run full consistency audits"),
         )
         .subcommand(
+            Command::new("multi-tenant", "multi-tenant host front end (queues + scheduler)")
+                .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop", Some("ips"))
+                .opt("scheduler", None, "P", "fifo|round-robin|weighted-fair", Some("fifo"))
+                .opt(
+                    "mix",
+                    Some('m'),
+                    "M",
+                    "aggressor-victims|uniform|read-heavy|write-heavy",
+                    Some("aggressor-victims"),
+                )
+                .opt("tenants", Some('n'), "N", "tenant count", Some("4"))
+                .opt("scenario", None, "X", "bursty|daily", Some("bursty"))
+                .opt("scale", None, "N", "geometry divisor vs Table I", Some("8"))
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt("threads", Some('j'), "N", "fleet worker threads", None)
+                .opt("config", Some('c'), "FILE", "TOML config overriding the preset", None)
+                .flag("fleet", None, "sweep the full (scheme x scheduler) cross-product")
+                .flag("verify", None, "run full consistency audits"),
+        )
+        .subcommand(
             Command::new("sweep", "ablation sweeps")
                 .opt("what", None, "W", "cache-size|idle-threshold|group-layers", Some("cache-size"))
                 .opt("scale", None, "N", "geometry divisor", Some("8"))
@@ -61,6 +85,7 @@ fn main() {
     let result = match parsed.subcommand {
         Some("reproduce") => cmd_reproduce(parsed.sub().unwrap()),
         Some("run") => cmd_run(parsed.sub().unwrap()),
+        Some("multi-tenant") => cmd_multitenant(parsed.sub().unwrap()),
         Some("sweep") => cmd_sweep(parsed.sub().unwrap()),
         Some("audit") => cmd_audit(parsed.sub().unwrap()),
         Some("list") => cmd_list(),
@@ -155,6 +180,70 @@ fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     t.row(vec!["sim_end".into(), nanos(s.sim_end)]);
     t.row(vec!["wall_clock".into(), format!("{:.2?}", s.wall_clock)]);
     print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let opts = opts_from(p)?;
+    let scheme = Scheme::parse(p.get("scheme").unwrap_or("ips"))?;
+    let mut cfg = experiment::exp_config(&opts, scheme);
+    if let Some(path) = p.get("config") {
+        cfg = Config::load(std::path::Path::new(path), cfg)?;
+    }
+    cfg.host.tenants = p.get_u64("tenants").map_err(ips::Error::config)? as u32;
+    cfg.host.scheduler = SchedKind::parse(p.get("scheduler").unwrap_or("fifo"))?;
+    cfg.host.mix = MixKind::parse(p.get("mix").unwrap_or("aggressor-victims"))?;
+    if p.flag("verify") {
+        cfg.sim.verify = true;
+    }
+    // exact per-tenant percentiles need raw capture
+    cfg.sim.latency_samples = cfg.sim.latency_samples.max(100_000);
+    let scen = Scenario::parse(p.get("scenario").unwrap_or("bursty"))?;
+
+    if p.flag("fleet") {
+        let mix = cfg.host.mix;
+        let spec = fleet::FleetSpec {
+            base: cfg,
+            schemes: Scheme::all().to_vec(),
+            scheds: SchedKind::all().to_vec(),
+            mixes: vec![mix],
+            scenario: scen,
+            seed: opts.seed,
+            threads: opts.threads,
+        };
+        let jobs = spec.jobs().len();
+        println!(
+            "fleet: {jobs} runs ({} schemes x {} schedulers, mix {}, {} tenants, {} threads)",
+            spec.schemes.len(),
+            spec.scheds.len(),
+            mix.name(),
+            spec.base.host.tenants,
+            spec.threads
+        );
+        let results = fleet::run_fleet(&spec)?;
+        println!("\n== fleet sweep ({} / {} scenario) ==", mix.name(), scen.name());
+        print!("{}", fleet::summary_table(&results).render());
+        return Ok(());
+    }
+
+    let mut sim = MultiTenantSimulator::new(cfg.clone())?;
+    println!(
+        "multi-tenant: scheme={} scheduler={} mix={} tenants={} scenario={}",
+        scheme.name(),
+        cfg.host.scheduler.name(),
+        cfg.host.mix.name(),
+        sim.tenants(),
+        scen.name(),
+    );
+    let s = sim.run(scen)?;
+    print!("{}", fleet::tenant_table(&s).render());
+    println!(
+        "device: wa {:.3}  background pages {}  sim end {}  wall {:.2?}",
+        s.wa(),
+        s.background.total_programs(),
+        nanos(s.sim_end),
+        s.wall_clock
+    );
     Ok(())
 }
 

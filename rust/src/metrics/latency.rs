@@ -52,7 +52,8 @@ impl LatencyStats {
         let bucket = (64 - ns.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.hist[bucket] += 1;
         if self.raw.len() < self.raw_capacity {
-            self.raw.push((ns / 1_000).min(u32::MAX as u64) as u32);
+            // round-to-nearest µs (truncation would floor sub-µs tails to 0)
+            self.raw.push(((ns + 500) / 1_000).min(u32::MAX as u64) as u32);
         }
     }
 
@@ -102,6 +103,34 @@ impl LatencyStats {
     /// Raw samples captured (µs units), for runtime curves.
     pub fn raw_us(&self) -> &[u32] {
         &self.raw
+    }
+
+    /// Percentile (ns) from the captured raw samples, if any — exact
+    /// sample selection at the capture's µs resolution (samples are
+    /// stored as rounded µs). Only the first `raw_capacity` samples
+    /// are kept, so this reflects the *captured prefix* — see
+    /// [`Self::percentile_best`] for a guard against a biased prefix.
+    pub fn raw_percentile(&self, q: f64) -> Option<Nanos> {
+        if self.raw.is_empty() {
+            return None;
+        }
+        let mut v = self.raw.clone();
+        v.sort_unstable();
+        // nearest-rank: smallest sample with cumulative frequency >= q
+        let rank = (q.clamp(0.0, 1.0) * v.len() as f64).ceil().max(1.0) as usize;
+        Some(v[rank - 1] as Nanos * 1_000)
+    }
+
+    /// Best-available percentile (ns): µs-resolution raw samples when
+    /// the capture covers *every* recorded sample, the 2×-quantized
+    /// log2 histogram otherwise.
+    pub fn percentile_best(&self, q: f64) -> Nanos {
+        if self.count == self.raw.len() as u64 {
+            if let Some(p) = self.raw_percentile(q) {
+                return p;
+            }
+        }
+        self.percentile(q)
     }
 
     /// Merge another collector (raw samples appended up to capacity).
@@ -159,6 +188,24 @@ mod tests {
         }
         assert_eq!(s.raw_us().len(), 5);
         assert_eq!(s.raw_us()[1], 1000); // 1 ms = 1000 µs
+    }
+
+    #[test]
+    fn raw_percentile_exact_when_fully_captured() {
+        let mut s = LatencyStats::new(100);
+        for i in 1..=100u64 {
+            s.record(i * 1_000_000); // 1..100 ms
+        }
+        assert_eq!(s.raw_percentile(0.0).unwrap(), 1_000_000);
+        assert_eq!(s.percentile_best(0.99), 99_000_000);
+        // capacity exceeded -> prefix is biased -> fall back to histogram
+        let mut t = LatencyStats::new(5);
+        for i in 1..=100u64 {
+            t.record(i * 1_000_000);
+        }
+        let p = t.percentile_best(0.99);
+        assert!(p >= 99_000_000, "hist upper edge covers the tail: {p}");
+        assert!(LatencyStats::new(0).raw_percentile(0.5).is_none());
     }
 
     #[test]

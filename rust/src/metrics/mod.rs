@@ -12,10 +12,12 @@
 
 pub mod bandwidth;
 pub mod latency;
+pub mod tenant;
 pub mod wa;
 
 pub use bandwidth::BandwidthTimeline;
 pub use latency::LatencyStats;
+pub use tenant::TenantStats;
 pub use wa::{Attribution, Ledger};
 
 use crate::config::Nanos;

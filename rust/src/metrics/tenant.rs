@@ -1,0 +1,92 @@
+//! Per-tenant metrics for the multi-tenant host front end
+//! ([`crate::host`]): latency percentiles, bandwidth, and attributed
+//! write amplification per tenant, reported alongside the device-wide
+//! totals.
+//!
+//! Attribution model: the [`crate::host::MultiTenantSimulator`] diffs
+//! the FTL's [`Ledger`] around every request it dispatches, so each
+//! tenant is charged exactly the programs its own requests caused —
+//! including any GC the request triggered synchronously. Background
+//! work (idle-time reclamation, the end-of-workload flush) belongs to
+//! no tenant and is reported separately as the device's *background*
+//! ledger.
+
+use super::{BandwidthTimeline, LatencyStats, Ledger};
+use crate::config::Nanos;
+
+/// Everything one tenant's requests produced during a run.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    /// Tenant index (dense, 0-based; matches the queue order).
+    pub tenant: u16,
+    /// Tenant display name (e.g. "aggressor", "victim-2").
+    pub name: String,
+    /// Scheduler weight the tenant ran with.
+    pub weight: f64,
+    /// Write-request latencies (arrival -> last page durable).
+    pub write_latency: LatencyStats,
+    /// Read-request latencies.
+    pub read_latency: LatencyStats,
+    /// Host write bandwidth timeline for this tenant.
+    pub bandwidth: BandwidthTimeline,
+    /// Programs attributed to this tenant's requests (ledger diff).
+    pub ledger: Ledger,
+    /// Bytes this tenant wrote.
+    pub host_bytes_written: u64,
+}
+
+impl TenantStats {
+    /// Fresh collector for one tenant.
+    pub fn new(
+        tenant: u16,
+        name: String,
+        weight: f64,
+        raw_capacity: usize,
+        bandwidth_window: Nanos,
+    ) -> TenantStats {
+        TenantStats {
+            tenant,
+            name,
+            weight,
+            write_latency: LatencyStats::new(raw_capacity),
+            read_latency: LatencyStats::new(raw_capacity),
+            bandwidth: BandwidthTimeline::new(bandwidth_window),
+            ledger: Ledger::default(),
+            host_bytes_written: 0,
+        }
+    }
+
+    /// Attributed write amplification for this tenant.
+    pub fn wa(&self) -> f64 {
+        self.ledger.write_amplification()
+    }
+    /// Mean write latency (ns).
+    pub fn mean_write_latency(&self) -> f64 {
+        self.write_latency.mean()
+    }
+    /// Median write latency (ns; exact when raw capture covers the run).
+    pub fn p50_write_latency(&self) -> Nanos {
+        self.write_latency.percentile_best(0.50)
+    }
+    /// Tail write latency (ns; exact when raw capture covers the run).
+    pub fn p99_write_latency(&self) -> Nanos {
+        self.write_latency.percentile_best(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_track_recorded_samples() {
+        let mut t = TenantStats::new(0, "victim-0".into(), 1.0, 1000, 1_000_000);
+        for i in 1..=100u64 {
+            t.write_latency.record(i * 1_000_000);
+        }
+        assert_eq!(t.p50_write_latency(), 50_000_000);
+        assert_eq!(t.p99_write_latency(), 99_000_000);
+        assert!((t.mean_write_latency() - 50_500_000.0).abs() < 1.0);
+        assert!((t.wa() - 1.0).abs() < 1e-12, "no programs yet -> WA 1");
+    }
+}

@@ -116,6 +116,23 @@ impl Ledger {
         (slc / total, migr / total, tlc / total)
     }
 
+    /// Counter-wise difference `self - earlier` (snapshot attribution:
+    /// diffing the FTL ledger around a request yields the programs that
+    /// request caused, including any GC it triggered synchronously).
+    pub fn diff(&self, earlier: &Ledger) -> Ledger {
+        Ledger {
+            host_pages: self.host_pages - earlier.host_pages,
+            slc_cache_writes: self.slc_cache_writes - earlier.slc_cache_writes,
+            tlc_direct_writes: self.tlc_direct_writes - earlier.tlc_direct_writes,
+            reprogram_host_writes: self.reprogram_host_writes - earlier.reprogram_host_writes,
+            slc2tlc_migrations: self.slc2tlc_migrations - earlier.slc2tlc_migrations,
+            gc_migrations: self.gc_migrations - earlier.gc_migrations,
+            agc_reprogram_writes: self.agc_reprogram_writes - earlier.agc_reprogram_writes,
+            coop_reprogram_writes: self.coop_reprogram_writes - earlier.coop_reprogram_writes,
+            host_reads: self.host_reads - earlier.host_reads,
+        }
+    }
+
     /// Merge another ledger into this one (parallel shards).
     pub fn merge(&mut self, other: &Ledger) {
         self.host_pages += other.host_pages;
@@ -187,6 +204,26 @@ mod tests {
     #[test]
     fn empty_ledger_wa_is_one() {
         assert_eq!(Ledger::default().write_amplification(), 1.0);
+    }
+
+    #[test]
+    fn diff_inverts_merge() {
+        let mut a = Ledger::default();
+        a.host_pages = 5;
+        a.slc_cache_writes = 3;
+        a.gc_migrations = 2;
+        a.host_reads = 1;
+        let mut b = a;
+        b.host_page();
+        b.program(Attribution::Slc2Tlc);
+        b.host_reads += 2;
+        let d = b.diff(&a);
+        assert_eq!(d.host_pages, 1);
+        assert_eq!(d.slc2tlc_migrations, 1);
+        assert_eq!(d.host_reads, 2);
+        let mut m = a;
+        m.merge(&d);
+        assert_eq!(m, b);
     }
 
     #[test]

@@ -49,7 +49,7 @@ impl Simulator {
         policy.init(&mut ftl)?;
         Ok(Simulator {
             write_latency: LatencyStats::new(cfg.sim.latency_samples),
-            read_latency: LatencyStats::new(0),
+            read_latency: LatencyStats::new(cfg.sim.latency_samples),
             bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
             cfg,
             ftl,
@@ -246,7 +246,8 @@ mod tests {
 
     #[test]
     fn read_latency_tracked() {
-        let cfg = small_cfg(Scheme::Baseline);
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.sim.latency_samples = 4; // read tails are inspectable too
         let mut sim = Simulator::new(cfg).unwrap();
         let mut trace = scenario::sequential_fill("seq", 256 << 10, sim.logical_bytes());
         // append reads of the just-written range
@@ -262,6 +263,8 @@ mod tests {
         let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
         assert_eq!(s.read_latency.count(), 8);
         assert!(s.read_latency.mean() > 0.0);
+        // cfg.sim.latency_samples applies to reads as well as writes
+        assert_eq!(s.read_latency.raw_us().len(), 4);
     }
 
     #[test]

@@ -62,6 +62,21 @@ fn cli_surface_parses() {
 }
 
 #[test]
+fn host_section_drives_a_multitenant_run() {
+    use ips::host::MultiTenantSimulator;
+    let cfg = Config::from_toml_str(
+        "[host]\ntenants = 3\nscheduler = \"round-robin\"\nmix = \"uniform\"",
+        presets::small(),
+    )
+    .unwrap();
+    let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+    assert_eq!(s.tenants.len(), 3);
+    assert_eq!(s.scheduler, "round-robin");
+    assert_eq!(s.mix, "uniform");
+    assert!(s.host_bytes_written > 0);
+}
+
+#[test]
 fn presets_compose_with_scaling() {
     use ips::coordinator::experiment::scale_config;
     for scale in [1u32, 2, 4, 8, 16] {

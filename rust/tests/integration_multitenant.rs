@@ -1,0 +1,151 @@
+//! Cross-module integration for the multi-tenant host front end:
+//! every scheme serves the aggressor+victims mix, per-tenant metrics
+//! are complete, cross-tenant interference orders Baseline vs IPS the
+//! way the paper's cliff analysis predicts, and the fleet runner is
+//! thread-count-invariant.
+
+use ips::config::{MixKind, SchedKind, Scheme};
+use ips::coordinator::fleet::{run_fleet, summary_table, tenant_table, FleetSpec};
+use ips::host::MultiTenantSimulator;
+use ips::metrics::Ledger;
+use ips::trace::scenario::Scenario;
+
+fn mt_cfg(scheme: Scheme, sched: SchedKind) -> ips::config::Config {
+    let mut cfg = ips::config::presets::small();
+    cfg.cache.scheme = scheme;
+    cfg.cache.slc_cache_bytes = 1 << 20;
+    cfg.host.tenants = 4; // 1 aggressor + 3 victims
+    cfg.host.scheduler = sched;
+    cfg.host.mix = MixKind::AggressorVictims;
+    cfg.host.aggressor_cache_mult = 4.0; // well past the cliff
+    cfg.host.victim_req_bytes = 4096; // single-page, latency-sensitive
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000; // exact percentiles
+    cfg
+}
+
+#[test]
+fn all_five_schemes_serve_four_tenants() {
+    for scheme in Scheme::all() {
+        let cfg = mt_cfg(scheme, SchedKind::Fifo);
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty)
+            .unwrap_or_else(|e| panic!("{scheme:?} failed: {e}"));
+        assert_eq!(s.scheme, scheme.name());
+        assert_eq!(s.tenants.len(), 4);
+        // per-tenant p50/p99 and WA are all reportable
+        for t in &s.tenants {
+            assert!(t.write_latency.count() > 0, "{}: {} served", s.scheme, t.name);
+            assert!(t.p50_write_latency() > 0, "{}: {} p50", s.scheme, t.name);
+            assert!(
+                t.p99_write_latency() >= t.p50_write_latency(),
+                "{}: {} p99 >= p50",
+                s.scheme,
+                t.name
+            );
+            assert!(t.wa() >= 1.0 - 1e-9, "{}: {} WA sane: {}", s.scheme, t.name, t.wa());
+        }
+        // attribution closes exactly
+        let mut sum = Ledger::default();
+        for t in &s.tenants {
+            sum.merge(&t.ledger);
+        }
+        sum.merge(&s.background);
+        assert_eq!(sum, s.ledger, "{}: tenants + background == device", s.scheme);
+        // the detail table renders every tenant plus device/background rows
+        assert_eq!(tenant_table(&s).len(), 4 + 2);
+    }
+}
+
+#[test]
+fn aggressor_cliff_inflates_victim_p99_more_under_baseline_than_ips() {
+    let run = |scheme| {
+        let cfg = mt_cfg(scheme, SchedKind::Fifo);
+        MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+    };
+    let base = run(Scheme::Baseline);
+    let ips = run(Scheme::Ips);
+    // same mix shape either way: an aggressor and three victims
+    assert!(base.tenant("aggressor").is_some() && base.tenant("victim-1").is_some());
+    let base_p99 = base.max_victim_p99();
+    let ips_p99 = ips.max_victim_p99();
+    assert!(
+        base_p99 > ips_p99,
+        "victims inherit the baseline cliff: baseline p99 {} ns vs ips p99 {} ns",
+        base_p99,
+        ips_p99
+    );
+    // the victims' own writes are small and paced — the tail comes from
+    // waiting behind the aggressor, i.e. the neighbour's cliff
+    let victim_bytes: u64 = base
+        .tenants
+        .iter()
+        .filter(|t| t.name.starts_with("victim"))
+        .map(|t| t.host_bytes_written)
+        .sum();
+    assert!(victim_bytes * 2 < base.tenants[0].host_bytes_written, "aggressor dominates load");
+}
+
+#[test]
+fn schedulers_shift_tail_latency_between_tenants() {
+    let run = |sched| {
+        let cfg = mt_cfg(Scheme::Baseline, sched);
+        MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+    };
+    let fifo = run(SchedKind::Fifo);
+    let rr = run(SchedKind::RoundRobin);
+    let wfq = run(SchedKind::WeightedFair);
+    // identical offered load across schedulers
+    assert_eq!(fifo.host_bytes_written, rr.host_bytes_written);
+    assert_eq!(fifo.host_bytes_written, wfq.host_bytes_written);
+    // fair schedulers protect the victims at least as well as FIFO
+    assert!(rr.max_victim_p99() <= fifo.max_victim_p99());
+    assert!(wfq.max_victim_p99() <= fifo.max_victim_p99());
+}
+
+#[test]
+fn fleet_sweep_is_thread_count_invariant() {
+    let spec = |threads| FleetSpec {
+        base: {
+            let mut b = mt_cfg(Scheme::Baseline, SchedKind::Fifo);
+            b.host.aggressor_cache_mult = 2.0; // keep the sweep fast
+            b
+        },
+        schemes: vec![Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc],
+        scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
+        mixes: vec![MixKind::AggressorVictims],
+        scenario: Scenario::Bursty,
+        seed: 1234,
+        threads,
+    };
+    let serial = run_fleet(&spec(1)).unwrap();
+    let parallel = run_fleet(&spec(8)).unwrap();
+    assert_eq!(serial.len(), 6);
+    let a = summary_table(&serial).render();
+    let b = summary_table(&parallel).render();
+    assert_eq!(a, b, "byte-identical summaries regardless of thread count");
+    // per-run seeds are deterministic and distinct
+    let mut seeds: Vec<u64> = serial.iter().map(|s| s.seed).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), 6);
+}
+
+#[test]
+fn daily_scenario_runs_idle_work_between_tenant_streams() {
+    // Uniform paced streams under the daily scenario: the baseline's
+    // idle-time reclamation shows up as background (unattributed) work.
+    let mut cfg = mt_cfg(Scheme::Baseline, SchedKind::RoundRobin);
+    cfg.host.mix = MixKind::Uniform;
+    cfg.cache.idle_threshold = ips::config::MS;
+    let s = MultiTenantSimulator::run_once(cfg, Scenario::Daily).unwrap();
+    assert!(s.host_bytes_written > 0);
+    // flush/idle reclamation happened and is attributed to no tenant
+    assert!(
+        s.background.slc2tlc_migrations > 0,
+        "baseline reclamation is background work: {:?}",
+        s.background
+    );
+    for t in &s.tenants {
+        assert_eq!(t.ledger.slc2tlc_migrations, 0, "{} never charged for reclamation", t.name);
+    }
+}

@@ -1,0 +1,166 @@
+//! System-level property tests for the multi-tenant front end:
+//! merging/interleaving per-tenant traces must preserve each tenant's
+//! op order and global arrival-time monotonicity, and a full
+//! multi-tenant run must conserve the attribution ledger no matter the
+//! scheduler or mix.
+
+use ips::config::{presets, MixKind, SchedKind, Scheme};
+use ips::host::{merge_traces, MultiTenantSimulator, TenantId};
+use ips::metrics::Ledger;
+use ips::trace::scenario::Scenario;
+use ips::trace::{OpKind, Trace, TraceOp};
+use ips::util::prop::{self, usize_in, vec_of, Gen};
+
+/// Generator of per-tenant op lists: for each tenant, a list of
+/// (gap, len-pages, is-read) triples turned into a monotone trace.
+struct TenantTraceGen;
+
+impl Gen for TenantTraceGen {
+    type Value = Vec<Vec<(u32, u8, bool)>>;
+    fn gen(&self, rng: &mut ips::util::rng::Rng) -> Self::Value {
+        let tenants = rng.range(1, 6) as usize;
+        (0..tenants)
+            .map(|_| {
+                let n = rng.range(0, 40) as usize;
+                (0..n)
+                    .map(|_| {
+                        (
+                            rng.below(1_000_000) as u32,
+                            rng.range(1, 8) as u8,
+                            rng.chance(0.3),
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        for (i, ops) in v.iter().enumerate() {
+            if !ops.is_empty() {
+                let mut w = v.clone();
+                w[i] = ops[..ops.len() / 2].to_vec();
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+fn build_traces(spec: &[Vec<(u32, u8, bool)>]) -> Vec<Trace> {
+    spec.iter()
+        .enumerate()
+        .map(|(ti, ops)| {
+            let mut at = 0u64;
+            let mut trace = Trace { name: format!("t{ti}"), ops: Vec::new() };
+            for (i, &(gap, pages, is_read)) in ops.iter().enumerate() {
+                at += gap as u64;
+                trace.ops.push(TraceOp {
+                    at,
+                    kind: if is_read { OpKind::Read } else { OpKind::Write },
+                    offset: (i as u64) * 4096,
+                    len: pages as u32 * 4096,
+                });
+            }
+            trace
+        })
+        .collect()
+}
+
+#[test]
+fn merge_preserves_per_tenant_order_and_monotonicity() {
+    prop::check("multi-tenant merge", 256, TenantTraceGen, |spec| {
+        let traces = build_traces(spec);
+        let merged = merge_traces(&traces);
+        // 1. global arrival-time monotonicity
+        for w in merged.windows(2) {
+            if w[0].op.at > w[1].op.at {
+                return Err(format!(
+                    "arrival order violated: {} then {}",
+                    w[0].op.at, w[1].op.at
+                ));
+            }
+        }
+        // 2. per-tenant subsequences are exactly the input traces
+        for (ti, t) in traces.iter().enumerate() {
+            let sub: Vec<TraceOp> = merged
+                .iter()
+                .filter(|x| x.tenant == TenantId(ti as u16))
+                .map(|x| x.op)
+                .collect();
+            if sub != t.ops {
+                return Err(format!("tenant {ti} op order changed"));
+            }
+        }
+        // 3. nothing lost, nothing invented
+        let total: usize = traces.iter().map(|t| t.ops.len()).sum();
+        if merged.len() != total {
+            return Err(format!("{} ops in, {} out", total, merged.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merged_arrival_ties_break_by_tenant_id() {
+    // all ops at t=0: the merge must interleave tenant-by-tenant in id
+    // order, each tenant's block keeping its own order
+    let spec: Vec<Vec<(u32, u8, bool)>> = vec![vec![(0, 1, false); 3]; 4];
+    let traces = build_traces(&spec);
+    let merged = merge_traces(&traces);
+    let tenants: Vec<u16> = merged.iter().map(|x| x.tenant.0).collect();
+    let mut expect = Vec::new();
+    for t in 0..4u16 {
+        expect.extend(std::iter::repeat(t).take(3));
+    }
+    assert_eq!(tenants, expect);
+}
+
+/// Full-engine property: for random small (scheme, scheduler, mix)
+/// draws, the run conserves attribution (tenants + background equals
+/// the device ledger) and per-tenant request counts match the traces.
+#[test]
+fn random_mt_runs_conserve_attribution() {
+    let schemes = [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc];
+    let scheds = SchedKind::all();
+    let mixes = MixKind::all();
+    prop::check(
+        "mt attribution conservation",
+        12,
+        vec_of(usize_in(0, 1000), 3, 3),
+        |draw| {
+            let scheme = schemes[draw[0] % schemes.len()];
+            let sched = scheds[draw[1] % scheds.len()];
+            let mix = mixes[draw[2] % mixes.len()];
+            let mut cfg = presets::small();
+            cfg.cache.scheme = scheme;
+            cfg.cache.slc_cache_bytes = 1 << 20;
+            cfg.host.tenants = 3;
+            cfg.host.scheduler = sched;
+            cfg.host.mix = mix;
+            cfg.host.aggressor_cache_mult = 1.5;
+            cfg.sim.verify = true;
+            cfg.sim.seed = (draw[0] * 31 + draw[1] * 7 + draw[2]) as u64;
+            let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty)
+                .map_err(|e| format!("{scheme:?}/{sched:?}/{mix:?}: {e}"))?;
+            let mut sum = Ledger::default();
+            for t in &s.tenants {
+                sum.merge(&t.ledger);
+            }
+            sum.merge(&s.background);
+            if sum != s.ledger {
+                return Err(format!(
+                    "{scheme:?}/{sched:?}/{mix:?}: attribution leak: {sum:?} != {:?}",
+                    s.ledger
+                ));
+            }
+            if s.write_latency.count() == 0 {
+                return Err("no writes served".into());
+            }
+            Ok(())
+        },
+    );
+}
