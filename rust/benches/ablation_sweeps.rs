@@ -1,6 +1,9 @@
 //! Bench: ablations over the design choices DESIGN.md calls out —
-//! SLC layer-group width, idle threshold, cache size.
+//! SLC layer-group width, idle threshold, cache size, and the
+//! device-side queue depth (`host.device_qd`) that decides how much a
+//! scheduler's dispatch order can matter to the victims' tail.
 use ips::config::{Scheme, MS};
+use ips::coordinator::fleet::device_qd_sweep;
 use ips::coordinator::{experiment, ExpOptions};
 use ips::sim::Simulator;
 use ips::trace::scenario::Scenario;
@@ -35,6 +38,32 @@ fn main() {
             let t = experiment::workload_trace(&opts, "HM_0", sim.logical_bytes()).unwrap();
             black_box(sim.run(&t, Scenario::Daily).unwrap());
         });
+    }
+    // device-QD ablation (ROADMAP): multi-tenant aggressor+victims,
+    // the window size the scheduler's dispatch order acts through
+    {
+        let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+        base.host.tenants = 4;
+        base.sim.latency_samples = 100_000;
+        let qds = [1usize, 2, 4, 8, 16, 32];
+        let mut points = Vec::new();
+        h.bench("ablation/device-qd/sweep", Some(qds.len() as u64), || {
+            points = device_qd_sweep(&base, Scenario::Bursty, &qds).unwrap();
+        });
+        // render the per-point victim tails from the measured run
+        // (empty when a bench filter skipped the sweep)
+        if !points.is_empty() {
+            println!("\n== ablation: device-qd (aggressor+victims, fifo) ==");
+            for (qd, s) in &points {
+                println!(
+                    "  qd {:>2}: device p99 {:>9.3} ms  victim p99 {:>9.3} ms  wa {:.3}",
+                    qd,
+                    s.write_latency.percentile_best(0.99) as f64 / 1e6,
+                    s.max_victim_p99() as f64 / 1e6,
+                    s.wa()
+                );
+            }
+        }
     }
     h.finish();
 }

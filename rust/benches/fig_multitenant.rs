@@ -3,7 +3,7 @@
 //! simulated-request throughput, plus the fleet runner's parallel
 //! speedup over serial execution.
 use ips::config::{MixKind, SchedKind, Scheme};
-use ips::coordinator::fleet::{run_fleet, FleetSpec};
+use ips::coordinator::fleet::{run_fleet, FleetSpec, IsolationVariant};
 use ips::coordinator::{experiment, ExpOptions};
 use ips::host::MultiTenantSimulator;
 use ips::trace::scenario::Scenario;
@@ -50,6 +50,7 @@ fn main() {
             schemes: vec![Scheme::Baseline, Scheme::Ips],
             scheds: SchedKind::all().to_vec(),
             mixes: vec![MixKind::AggressorVictims],
+            variants: vec![IsolationVariant::Shared],
             scenario: Scenario::Bursty,
             seed: 42,
             threads,

@@ -1,0 +1,125 @@
+//! Bench: per-tenant cache isolation end to end — shared cache vs
+//! per-tenant partitioning vs partitioning+QoS, paired (same seeds,
+//! same traces) across the PR-1 tenant mixes on baseline and IPS.
+//! The headline: under aggressor+victims, victim p99 with
+//! partitioned+QoS must sit strictly below the shared-cache victim
+//! p99. Also times one cell per variant so isolation overhead on the
+//! hot dispatch path stays visible.
+use ips::config::{MixKind, QosMode, SchedKind, Scheme};
+use ips::coordinator::fleet::{run_fleet, summary_table, FleetSpec, IsolationVariant};
+use ips::coordinator::{experiment, ExpOptions};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::trace::scenario::Scenario;
+use ips::util::bench::{black_box, Harness};
+
+fn is_variant(s: &MultiTenantSummary, v: IsolationVariant) -> bool {
+    // anchored to the one variant mapping: MultiTenantSummary::variant_name
+    match v {
+        IsolationVariant::PartitionedQos => s.variant_name().starts_with("partitioned+"),
+        _ => s.variant_name() == v.name(),
+    }
+}
+
+fn main() {
+    let mut h = Harness::new();
+    let opts = ExpOptions { scale: 16, ..ExpOptions::default() };
+
+    let tuned = |scheme: Scheme| {
+        let mut cfg = experiment::exp_config(&opts, scheme);
+        cfg.host.tenants = 4;
+        cfg.host.scheduler = SchedKind::Fifo; // worst case for victims
+        cfg.host.mix = MixKind::AggressorVictims;
+        // sustained rate below the device's SLC bandwidth, well above
+        // any victim's offered load
+        cfg.host.qos.rate_mbps = 32.0;
+        cfg.host.qos.burst_bytes = 256 << 10;
+        cfg.sim.latency_samples = 100_000;
+        cfg
+    };
+
+    // isolation overhead on the dispatch hot path, one run per variant
+    for variant in IsolationVariant::all() {
+        let mut cfg = tuned(Scheme::Baseline);
+        variant.apply(&mut cfg);
+        h.bench(&format!("partition/baseline/{}", variant.name()), None, || {
+            let s = MultiTenantSimulator::run_once(cfg.clone(), Scenario::Bursty).unwrap();
+            black_box(s.max_victim_p99());
+        });
+    }
+
+    // the figure: (baseline, ips) × all PR-1 mixes × all variants,
+    // paired seeds so every comparison is apples-to-apples
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let spec = FleetSpec {
+        base: tuned(Scheme::Baseline),
+        schemes: vec![Scheme::Baseline, Scheme::Ips],
+        scheds: vec![SchedKind::Fifo],
+        mixes: MixKind::all().to_vec(),
+        variants: IsolationVariant::all().to_vec(),
+        scenario: Scenario::Bursty,
+        seed: 42,
+        threads,
+    };
+    let cells = spec.jobs().len() as u64;
+    let mut results: Vec<MultiTenantSummary> = Vec::new();
+    h.bench("partition/fleet", Some(cells), || {
+        results = run_fleet(&spec).unwrap();
+    });
+
+    // render only when the fleet cell actually ran (it is skipped
+    // under a `cargo bench -- <filter>` that does not match it)
+    if !results.is_empty() {
+        println!("\n== fig_partition: shared vs partitioned vs partitioned+qos ==");
+        print!("{}", summary_table(&results).render());
+
+        println!("\nvictim p99 (aggressor+victims, fifo):");
+        for scheme in [Scheme::Baseline, Scheme::Ips] {
+            let get = |v: IsolationVariant| {
+                results
+                    .iter()
+                    .find(|s| {
+                        s.scheme == scheme.name()
+                            && s.mix == MixKind::AggressorVictims.name()
+                            && is_variant(s, v)
+                    })
+                    .expect("fleet covered every variant")
+            };
+            let shared = get(IsolationVariant::Shared);
+            let part = get(IsolationVariant::Partitioned);
+            let qos = get(IsolationVariant::PartitionedQos);
+            let verdict = if qos.max_victim_p99() < shared.max_victim_p99() {
+                "OK: partitioned+qos strictly below shared"
+            } else {
+                "REGRESSION: partitioned+qos not below shared"
+            };
+            println!(
+                "  {:<9} shared {:>9.3} ms | partitioned {:>9.3} ms | \
+                 partitioned+qos {:>9.3} ms  [{}]",
+                scheme.name(),
+                shared.max_victim_p99() as f64 / 1e6,
+                part.max_victim_p99() as f64 / 1e6,
+                qos.max_victim_p99() as f64 / 1e6,
+                verdict
+            );
+            println!(
+                "  {:<9} throttled tenants under qos: {:?} ({} stalls)",
+                "",
+                qos.throttled_tenants(),
+                qos.total_throttle_stalls()
+            );
+        }
+    }
+
+    // the SLO mode, for completeness: enforce only while victims miss
+    // their p99 target
+    let mut slo_cfg = tuned(Scheme::Baseline);
+    slo_cfg.cache.partition.enabled = true;
+    slo_cfg.host.qos.mode = QosMode::Slo;
+    slo_cfg.host.qos.slo_p99 = 20 * ips::config::MS;
+    h.bench("partition/baseline/slo-mode", None, || {
+        let s = MultiTenantSimulator::run_once(slo_cfg.clone(), Scenario::Bursty).unwrap();
+        black_box(s.total_throttle_stalls());
+    });
+
+    h.finish();
+}

@@ -12,7 +12,7 @@
 //! mid-unit waits for the plane (paper §IV-B: "it has to be delayed
 //! until the reclamation process is finished").
 
-use super::CachePolicy;
+use super::{CacheGrant, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::array::Completion;
 use crate::flash::{BlockAddr, BlockMode, Lpn, PlaneId};
@@ -261,21 +261,35 @@ impl CachePolicy for Baseline {
         Ok(())
     }
 
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
-        // try up to one full rotation of planes for SLC space
-        let planes = self.pools.len() as u32;
-        for _ in 0..planes {
-            let plane = self.rr % planes;
-            self.rr = self.rr.wrapping_add(1);
-            if !self.pool_has_space(ftl, plane) {
-                continue;
-            }
-            if let Some(addr) = self.writable_block(ftl, plane) {
-                return ftl.program_slc_into(addr, lpn, Attribution::SlcCacheWrite, now);
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        grant: CacheGrant,
+    ) -> Result<Completion> {
+        // A denied tenant takes the cliff path directly — the baseline
+        // has no reprogram path, so Reprogram degrades to TLC too.
+        if grant.allows_slc() {
+            // try up to one full rotation of planes for SLC space
+            let planes = self.pools.len() as u32;
+            for _ in 0..planes {
+                let plane = self.rr % planes;
+                self.rr = self.rr.wrapping_add(1);
+                if !self.pool_has_space(ftl, plane) {
+                    continue;
+                }
+                if let Some(addr) = self.writable_block(ftl, plane) {
+                    return ftl.program_slc_into(addr, lpn, Attribution::SlcCacheWrite, now);
+                }
             }
         }
-        // cache exhausted → the cliff: straight to TLC
+        // cache exhausted (or not granted) → the cliff: straight to TLC
         ftl.host_write_tlc(lpn, now)
+    }
+
+    fn slc_capacity_pages(&self, _ftl: &Ftl) -> u64 {
+        self.total_slc_pages
     }
 
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {

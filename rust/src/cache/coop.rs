@@ -22,7 +22,7 @@
 
 use super::baseline::Baseline;
 use super::ips::Ips;
-use super::CachePolicy;
+use super::{CacheGrant, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::array::Completion;
 use crate::flash::{BlockAddr, Lpn, PlaneId};
@@ -134,31 +134,45 @@ impl CachePolicy for Coop {
         self.ips.init(ftl)
     }
 
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        grant: CacheGrant,
+    ) -> Result<Completion> {
         let n = ftl.planes();
-        // Step 1: IPS window (deterministic plane spread)
         let start_plane = fastrand(ftl, lpn) % n;
-        if let Some(c) = self.ips.try_slc_write(ftl, start_plane, lpn, now)? {
-            return Ok(c);
-        }
-        // Step 2.2: traditional SLC cache
-        if let Some(c) = self.trad.write_if_space(ftl, lpn, now)? {
-            return Ok(c);
-        }
-        // beyond both caches: host-driven reprogram re-arms IPS
-        if let Some(c) =
-            self.ips.reprogram_write(ftl, start_plane, lpn, Attribution::ReprogramHost, now)?
-        {
-            return Ok(c);
-        }
-        if let Some(p) = self.ips.any_convertible_plane() {
-            if let Some(c) =
-                self.ips.reprogram_write(ftl, p, lpn, Attribution::ReprogramHost, now)?
-            {
+        if grant.allows_slc() {
+            // Step 1: IPS window (deterministic plane spread)
+            if let Some(c) = self.ips.try_slc_write(ftl, start_plane, lpn, now)? {
+                return Ok(c);
+            }
+            // Step 2.2: traditional SLC cache
+            if let Some(c) = self.trad.write_if_space(ftl, lpn, now)? {
                 return Ok(c);
             }
         }
+        if grant.allows_reprogram() {
+            // beyond both caches: host-driven reprogram re-arms IPS
+            if let Some(c) =
+                self.ips.reprogram_write(ftl, start_plane, lpn, Attribution::ReprogramHost, now)?
+            {
+                return Ok(c);
+            }
+            if let Some(p) = self.ips.any_convertible_plane() {
+                if let Some(c) =
+                    self.ips.reprogram_write(ftl, p, lpn, Attribution::ReprogramHost, now)?
+                {
+                    return Ok(c);
+                }
+            }
+        }
         ftl.host_write_tlc_on(PlaneId(start_plane), lpn, now)
+    }
+
+    fn slc_capacity_pages(&self, ftl: &Ftl) -> u64 {
+        self.ips.slc_capacity_pages(ftl) + self.trad.slc_capacity_pages(ftl)
     }
 
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {

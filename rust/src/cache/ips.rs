@@ -16,7 +16,7 @@
 //! than the baseline (paper Fig. 10b: 1.3×) while its write
 //! amplification stays ≈ 1 (0.53× of baseline, Fig. 10b).
 
-use super::CachePolicy;
+use super::{CacheGrant, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::array::Completion;
 use crate::flash::{BlockAddr, BlockMode, Lpn, PlaneId};
@@ -55,6 +55,8 @@ pub struct Ips {
     reserve_blocks: usize,
     /// Designation cap per plane (coop uses < 1.0 fractions).
     max_designated: u32,
+    /// SLC pages per active layer group (window capacity per block).
+    group_pages: u64,
 }
 
 impl Ips {
@@ -69,6 +71,7 @@ impl Ips {
             steal_backoff: 0,
             reserve_blocks: (((bpp as f64) * cfg.cache.gc_high_watermark) as usize + 2).max(4),
             max_designated: ((bpp as f64) * frac).floor().max(1.0) as u32,
+            group_pages: (cfg.cache.group_layers * cfg.geometry.wordlines_per_layer) as u64,
         }
     }
 
@@ -272,20 +275,45 @@ impl CachePolicy for Ips {
         Ok(())
     }
 
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        grant: CacheGrant,
+    ) -> Result<Completion> {
         let n = self.planes.len() as u32;
         let plane = self.rr % n;
         self.rr = self.rr.wrapping_add(1);
-        // Step 1: SLC window
-        if let Some(c) = self.try_slc_write(ftl, plane, lpn, now)? {
-            return Ok(c);
+        // Step 1: SLC window (skipped when the partitioner denied a
+        // new cache allocation)
+        if grant.allows_slc() {
+            if let Some(c) = self.try_slc_write(ftl, plane, lpn, now)? {
+                return Ok(c);
+            }
         }
-        // Step 2: host-write-driven reprogram
-        if let Some(c) = self.reprogram_write(ftl, plane, lpn, Attribution::ReprogramHost, now)? {
-            return Ok(c);
+        // Step 2: host-write-driven reprogram (in place — consumes the
+        // conversion budget, not erased cache capacity)
+        if grant.allows_reprogram() {
+            if let Some(c) =
+                self.reprogram_write(ftl, plane, lpn, Attribution::ReprogramHost, now)?
+            {
+                return Ok(c);
+            }
         }
-        // Fallback: plain TLC write (plane fully converted and at reserve)
+        // Fallback: plain TLC write (plane fully converted and at
+        // reserve, or the grant forced it)
         ftl.host_write_tlc_on(PlaneId(plane), lpn, now)
+    }
+
+    fn slc_capacity_pages(&self, ftl: &Ftl) -> u64 {
+        // active-window capacity: every designatable block carries one
+        // layer group's worth of SLC pages at a time; the free-block
+        // reserve caps how many blocks a plane can actually designate
+        let bpp = ftl.array.geometry().blocks_per_plane as u64;
+        let designatable =
+            (self.max_designated as u64).min(bpp.saturating_sub(self.reserve_blocks as u64));
+        designatable * self.group_pages * ftl.planes() as u64
     }
 
     fn idle_work(&mut self, _ftl: &mut Ftl, now: Nanos, _deadline: Nanos) -> Result<Nanos> {

@@ -14,7 +14,7 @@
 //! write waits at most one flash operation (paper Fig. 7).
 
 use super::ips::Ips;
-use super::CachePolicy;
+use super::{CacheGrant, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::array::Completion;
 use crate::flash::Lpn;
@@ -90,8 +90,18 @@ impl CachePolicy for IpsAgc {
         self.ips.init(ftl)
     }
 
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
-        self.ips.host_write_page(ftl, lpn, now)
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        grant: CacheGrant,
+    ) -> Result<Completion> {
+        self.ips.host_write_page_gated(ftl, lpn, now, grant)
+    }
+
+    fn slc_capacity_pages(&self, ftl: &Ftl) -> u64 {
+        self.ips.slc_capacity_pages(ftl)
     }
 
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {

@@ -16,7 +16,10 @@ pub mod baseline;
 pub mod coop;
 pub mod ips;
 pub mod ips_agc;
+pub mod partition;
 pub mod tlc_only;
+
+pub use partition::{CacheGrant, CachePartitioner};
 
 use crate::config::{Config, Nanos, Scheme};
 use crate::flash::array::Completion;
@@ -33,7 +36,31 @@ pub trait CachePolicy: Send {
     fn init(&mut self, ftl: &mut Ftl) -> Result<()>;
 
     /// Route one host page write; returns its service completion.
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion>;
+    /// Equivalent to [`CachePolicy::host_write_page_gated`] with an
+    /// unrestricted [`CacheGrant::Slc`].
+    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+        self.host_write_page_gated(ftl, lpn, now, CacheGrant::Slc)
+    }
+
+    /// Route one host page write under a cache-admission decision from
+    /// the [`CachePartitioner`]: [`CacheGrant::Reprogram`] must skip
+    /// any *new* SLC-cache page allocation (the in-place reprogram
+    /// path stays open), [`CacheGrant::Tlc`] must go straight to TLC
+    /// space. [`CacheGrant::Slc`] is the unrestricted shared-cache
+    /// path — byte-identical to what `host_write_page` always did.
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        grant: CacheGrant,
+    ) -> Result<Completion>;
+
+    /// Steady-state SLC cache capacity in pages (what the partitioner
+    /// carves into tenant slices). For window-based schemes this is the
+    /// active-window capacity, not the total over all future group
+    /// advances.
+    fn slc_capacity_pages(&self, ftl: &Ftl) -> u64;
 
     /// Perform background work inside an idle window `[now, deadline)`.
     /// Implementations issue atomic steps while their issue time is

@@ -1,0 +1,409 @@
+//! Per-tenant SLC-cache partitioning: reserved slices + shared
+//! overflow pool, enforced at allocation time.
+//!
+//! The PR-1 measurements show the multi-tenant failure mode of a
+//! shared SLC cache: one tenant's burst fills the cache and every
+//! neighbour falls off the performance cliff together. The paper's IPS
+//! design keeps the cache continuously *available* but says nothing
+//! about who gets it; hybrid-tiering work (multi-tiered SLC/MLC disks,
+//! heterogeneous SSD caches) shows that static partitioning plus
+//! admission control is what turns a fast shared tier into a fair one.
+//!
+//! The [`CachePartitioner`] is a capacity accountant layered in front
+//! of every cache scheme:
+//!
+//! * each tenant owns a *reserved* slice of the cache capacity
+//!   (`reserved_frac × capacity`, split equally or by scheduler
+//!   weight); the remainder is a shared overflow pool;
+//! * before a host page write is routed to a scheme, the engine asks
+//!   for a [`CacheGrant`]: a tenant with headroom in its slice or in
+//!   the shared pool may allocate a new SLC-cache page; a tenant that
+//!   exhausted both is restricted to the IPS reprogram path, and —
+//!   when that budget is also contended — to plain TLC writes;
+//! * occupancy is charged from the engine's per-page ledger diff and
+//!   released when cache capacity is recycled (SLC→TLC reclamation, or
+//!   word lines converted in place by reprogramming).
+//!
+//! Enforcement is *admission*, not eviction: a denied tenant's write
+//! degrades to the scheme's post-cache path, exactly like a shared
+//! cache that happens to be full — so no scheme needs an eviction
+//! callback, and a tenant's reserved slice can never be consumed by a
+//! neighbour.
+//!
+//! Invariants (property-tested in `tests/prop_partition.rs`):
+//! * per-tenant occupancies always sum to ≤ the cache capacity;
+//! * a tenant with free reserved capacity is never denied an SLC grant
+//!   (reserved slices are never cross-evicted);
+//! * a tenant whose reserved slice covers the whole cache is never
+//!   gated at all (the single-tenant differential guarantee).
+
+use crate::config::Config;
+use crate::metrics::Ledger;
+
+/// What the partitioner permits one host page write to consume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheGrant {
+    /// May allocate a new SLC-cache page (and use the reprogram path).
+    Slc,
+    /// No new SLC-cache allocation; the in-place reprogram path is
+    /// still permitted (it converts used word lines instead of
+    /// consuming erased cache capacity).
+    Reprogram,
+    /// Straight to TLC: no cache allocation, no reprogram budget.
+    Tlc,
+}
+
+impl CacheGrant {
+    /// May this grant allocate a new SLC-cache page?
+    pub fn allows_slc(&self) -> bool {
+        matches!(self, CacheGrant::Slc)
+    }
+    /// May this grant consume the reprogram budget?
+    pub fn allows_reprogram(&self) -> bool {
+        !matches!(self, CacheGrant::Tlc)
+    }
+}
+
+/// Per-tenant cache-capacity accountant (see the module docs).
+#[derive(Clone, Debug)]
+pub struct CachePartitioner {
+    enabled: bool,
+    /// Total SLC-cache capacity in pages (the scheme's steady-state
+    /// window capacity; see `CachePolicy::slc_capacity_pages`).
+    capacity: u64,
+    /// Per-tenant reserved slice (pages).
+    reserved: Vec<u64>,
+    /// Per-tenant live cached pages (charged on allocation, released
+    /// when capacity is recycled).
+    occ: Vec<u64>,
+    /// Shared-pool capacity = `capacity - Σ reserved`.
+    shared_capacity: u64,
+    /// Per-tenant reprogram ops consumed (the IPS layer-group budget).
+    reprog_used: Vec<u64>,
+    /// Total reprogram ops observed.
+    reprog_total: u64,
+    /// Per-tenant share of the reprogram budget (reserved slice plus an
+    /// equal cut of the shared pool, as a fraction of capacity).
+    reprog_share: Vec<f64>,
+    /// Reprogram ops accumulated toward a one-page capacity release
+    /// (`max_reprograms` ops convert one used SLC word line).
+    release_carry: u64,
+    /// Ops per word-line conversion (from `cache.max_reprograms`).
+    ops_per_conversion: u64,
+    /// Per-tenant pages denied an SLC grant (diagnostics).
+    denied: Vec<u64>,
+}
+
+impl CachePartitioner {
+    /// Build the partitioner for `tenants` weighted tenants over a
+    /// cache of `capacity_pages`. Disabled partitioning grants
+    /// everything and accounts nothing.
+    pub fn new(cfg: &Config, weights: &[f64], capacity_pages: u64) -> CachePartitioner {
+        let p = &cfg.cache.partition;
+        let n = weights.len().max(1);
+        let reserved_total = (capacity_pages as f64 * p.reserved_frac.clamp(0.0, 1.0)) as u64;
+        let wsum: f64 = weights.iter().map(|w| w.max(1e-9)).sum();
+        let reserved: Vec<u64> = if p.by_weight {
+            weights.iter().map(|w| (reserved_total as f64 * w.max(1e-9) / wsum) as u64).collect()
+        } else {
+            vec![reserved_total / n as u64; n]
+        };
+        let shared_capacity = capacity_pages - reserved.iter().sum::<u64>().min(capacity_pages);
+        let reprog_share: Vec<f64> = reserved
+            .iter()
+            .map(|&r| {
+                let own = r as f64 + shared_capacity as f64 / n as f64;
+                (own / capacity_pages.max(1) as f64).clamp(0.0, 1.0)
+            })
+            .collect();
+        CachePartitioner {
+            enabled: p.enabled && capacity_pages > 0,
+            capacity: capacity_pages,
+            reserved,
+            occ: vec![0; n],
+            shared_capacity,
+            reprog_used: vec![0; n],
+            reprog_total: 0,
+            reprog_share,
+            release_carry: 0,
+            ops_per_conversion: cfg.cache.max_reprograms.max(1) as u64,
+            denied: vec![0; n],
+        }
+    }
+
+    /// Is enforcement active?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+    /// Cache capacity in pages.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    /// Tenant `t`'s reserved slice in pages.
+    pub fn reserved(&self, t: usize) -> u64 {
+        self.reserved[t]
+    }
+    /// Tenant `t`'s current occupancy in pages.
+    pub fn occupancy(&self, t: usize) -> u64 {
+        self.occ[t]
+    }
+    /// Pages denied an SLC grant for tenant `t`.
+    pub fn denied(&self, t: usize) -> u64 {
+        self.denied[t]
+    }
+    /// Sum of all tenants' occupancies.
+    pub fn total_occupancy(&self) -> u64 {
+        self.occ.iter().sum()
+    }
+
+    /// Shared-pool pages currently consumed (occupancy beyond each
+    /// tenant's reserved slice spills into the shared pool).
+    fn shared_used(&self) -> u64 {
+        self.occ.iter().zip(&self.reserved).map(|(&o, &r)| o.saturating_sub(r)).sum()
+    }
+
+    /// Decide what tenant `t`'s next page write may consume.
+    /// `contended` says whether other tenants currently have arrived
+    /// requests: the reprogram budget is a *flow* resource, so it is
+    /// metered proportionally only while someone else is waiting —
+    /// a lone tenant may always use it (work conservation).
+    pub fn grant(&mut self, t: usize, contended: bool) -> CacheGrant {
+        if !self.enabled || self.reserved[t] >= self.capacity {
+            // Disabled, or the tenant owns the entire cache: there is
+            // nobody to protect, and gating on approximate occupancy
+            // would diverge from the shared-cache path (the differential
+            // test pins this to byte-identical).
+            return CacheGrant::Slc;
+        }
+        if self.occ[t] < self.reserved[t] || self.shared_used() < self.shared_capacity {
+            return CacheGrant::Slc;
+        }
+        self.denied[t] += 1;
+        if !contended || self.reprog_allowance(t) {
+            CacheGrant::Reprogram
+        } else {
+            CacheGrant::Tlc
+        }
+    }
+
+    /// Proportional reprogram metering with 2× slack: tenant `t` may
+    /// take another reprogram op while its usage stays under twice its
+    /// share of all ops issued (+1 per tenant of headroom so the meter
+    /// can start).
+    fn reprog_allowance(&self, t: usize) -> bool {
+        let n = self.occ.len() as u64;
+        let allowance = (self.reprog_total + n) as f64 * self.reprog_share[t] * 2.0;
+        (self.reprog_used[t] as f64) < allowance
+    }
+
+    /// Charge tenant `t` with one page write's ledger diff: new SLC
+    /// cache pages raise its occupancy; reprogram ops consume its
+    /// budget share and recycle capacity; SLC→TLC migrations release
+    /// capacity outright.
+    pub fn charge(&mut self, t: usize, diff: &Ledger) {
+        if !self.enabled {
+            return;
+        }
+        for _ in 0..diff.slc_cache_writes {
+            if self.total_occupancy() >= self.capacity {
+                // A new cache page physically existed, so capacity was
+                // re-armed somewhere we did not see; keep Σocc ≤ capacity.
+                self.release(1);
+            }
+            self.occ[t] += 1;
+        }
+        let reprog_ops =
+            diff.reprogram_host_writes + diff.agc_reprogram_writes + diff.coop_reprogram_writes;
+        if reprog_ops > 0 {
+            self.reprog_used[t] += reprog_ops;
+            self.reprog_total += reprog_ops;
+            self.recycle(reprog_ops);
+        }
+        if diff.slc2tlc_migrations > 0 {
+            self.release(diff.slc2tlc_migrations);
+        }
+    }
+
+    /// Account background (unattributed) work: idle-time reclamation
+    /// and conversions recycle capacity without charging any tenant.
+    pub fn charge_background(&mut self, diff: &Ledger) {
+        if !self.enabled {
+            return;
+        }
+        let reprog_ops =
+            diff.reprogram_host_writes + diff.agc_reprogram_writes + diff.coop_reprogram_writes;
+        self.reprog_total += reprog_ops;
+        self.recycle(reprog_ops);
+        if diff.slc2tlc_migrations > 0 {
+            self.release(diff.slc2tlc_migrations);
+        }
+    }
+
+    /// Reprogram ops → capacity releases (`ops_per_conversion` ops
+    /// convert one used SLC word line, and the group advance re-arms
+    /// the equivalent window capacity).
+    fn recycle(&mut self, ops: u64) {
+        self.release_carry += ops;
+        let pages = self.release_carry / self.ops_per_conversion;
+        self.release_carry %= self.ops_per_conversion;
+        if pages > 0 {
+            self.release(pages);
+        }
+    }
+
+    /// Release `pages` of recycled capacity, highest-occupancy tenant
+    /// first (deterministic: ties break to the lowest index). This is
+    /// an approximation — the partitioner does not know whose data was
+    /// physically recycled — that simply debits the tenant leaning
+    /// hardest on the cache. With weight-skewed slices the pick can
+    /// land on a tenant still inside its reservation; admission, not
+    /// this accounting, is what protects reserved slices.
+    pub fn release(&mut self, pages: u64) {
+        for _ in 0..pages {
+            let mut best: Option<(u64, usize)> = None;
+            for (i, &o) in self.occ.iter().enumerate() {
+                if o > 0 && best.map(|(bo, _)| o > bo).unwrap_or(true) {
+                    best = Some((o, i));
+                }
+            }
+            match best {
+                Some((_, i)) => self.occ[i] -= 1,
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::metrics::Attribution;
+
+    fn partitioner(tenants: usize, capacity: u64, frac: f64) -> CachePartitioner {
+        let mut cfg = presets::small();
+        cfg.cache.partition.enabled = true;
+        cfg.cache.partition.reserved_frac = frac;
+        CachePartitioner::new(&cfg, &vec![1.0; tenants], capacity)
+    }
+
+    fn slc_diff() -> Ledger {
+        let mut l = Ledger::default();
+        l.program(Attribution::SlcCacheWrite);
+        l
+    }
+
+    #[test]
+    fn disabled_grants_everything() {
+        let mut cfg = presets::small();
+        cfg.cache.partition.enabled = false;
+        let mut p = CachePartitioner::new(&cfg, &[1.0, 1.0], 100);
+        for _ in 0..1000 {
+            assert_eq!(p.grant(0, true), CacheGrant::Slc);
+            p.charge(0, &slc_diff());
+        }
+        assert_eq!(p.total_occupancy(), 0, "disabled partitioner accounts nothing");
+    }
+
+    #[test]
+    fn reserved_slice_protects_the_quiet_tenant() {
+        // 2 tenants, 100 pages, 80 reserved (40 each) + 20 shared.
+        let mut p = partitioner(2, 100, 0.8);
+        assert_eq!(p.reserved(0), 40);
+        // tenant 0 hogs: its slice (40) + the whole shared pool (20)
+        let mut granted = 0;
+        while p.grant(0, true) == CacheGrant::Slc {
+            p.charge(0, &slc_diff());
+            granted += 1;
+            assert!(granted <= 100);
+        }
+        assert_eq!(granted, 60, "slice + shared pool, never tenant 1's slice");
+        // tenant 1's reserved slice is fully intact
+        for _ in 0..40 {
+            assert_eq!(p.grant(1, true), CacheGrant::Slc, "reserved never cross-evicted");
+            p.charge(1, &slc_diff());
+        }
+        assert!(p.grant(1, true) != CacheGrant::Slc);
+        assert_eq!(p.total_occupancy(), 100);
+    }
+
+    #[test]
+    fn full_cache_owner_is_never_gated() {
+        let mut p = partitioner(1, 50, 1.0);
+        for _ in 0..500 {
+            assert_eq!(p.grant(0, false), CacheGrant::Slc);
+            p.charge(0, &slc_diff());
+        }
+        assert!(p.total_occupancy() <= 50, "occupancy still capped at capacity");
+        assert_eq!(p.denied(0), 0);
+    }
+
+    #[test]
+    fn releases_reopen_the_shared_pool() {
+        let mut p = partitioner(2, 100, 0.8);
+        for _ in 0..60 {
+            assert_eq!(p.grant(0, true), CacheGrant::Slc);
+            p.charge(0, &slc_diff());
+        }
+        assert!(p.grant(0, true) != CacheGrant::Slc);
+        // reclamation returns 10 pages (highest-occupancy tenant first)
+        let mut l = Ledger::default();
+        l.slc2tlc_migrations = 10;
+        p.charge_background(&l);
+        assert_eq!(p.occupancy(0), 50);
+        for _ in 0..10 {
+            assert_eq!(p.grant(0, true), CacheGrant::Slc);
+            p.charge(0, &slc_diff());
+        }
+        assert!(p.grant(0, true) != CacheGrant::Slc);
+    }
+
+    #[test]
+    fn reprogram_budget_metered_only_under_contention() {
+        // 4 tenants, all capacity reserved (10 pages each, no shared pool)
+        let mut p = partitioner(4, 40, 1.0);
+        for _ in 0..10 {
+            p.charge(0, &slc_diff());
+        }
+        // uncontended denial degrades to the reprogram path, never TLC
+        assert_eq!(p.grant(0, false), CacheGrant::Reprogram);
+        // Engine-like loop under contention: SLC when conversions have
+        // recycled capacity, reprogram while the fair-share meter
+        // allows, TLC once usage outruns 2× the tenant's share.
+        let (mut saw_reprogram, mut saw_tlc) = (false, false);
+        for _ in 0..200 {
+            let mut l = Ledger::default();
+            match p.grant(0, true) {
+                CacheGrant::Slc => l.program(Attribution::SlcCacheWrite),
+                CacheGrant::Reprogram => {
+                    saw_reprogram = true;
+                    l.program(Attribution::ReprogramHost);
+                }
+                CacheGrant::Tlc => {
+                    saw_tlc = true;
+                    l.program(Attribution::TlcDirectWrite);
+                }
+            }
+            p.charge(0, &l);
+        }
+        assert!(saw_reprogram, "fair share of the conversion budget is usable");
+        assert!(saw_tlc, "sustained overuse hits the fair-share meter");
+        // a quiet tenant still has its whole reserved slice
+        for _ in 0..10 {
+            assert_eq!(p.grant(1, true), CacheGrant::Slc);
+            p.charge(1, &slc_diff());
+        }
+    }
+
+    #[test]
+    fn occupancy_sum_never_exceeds_capacity() {
+        let mut p = partitioner(3, 30, 0.5);
+        for i in 0..200u64 {
+            let t = (i % 3) as usize;
+            if p.grant(t, true) == CacheGrant::Slc {
+                p.charge(t, &slc_diff());
+            }
+            assert!(p.total_occupancy() <= 30);
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Reference scheme with no SLC cache: every host write goes straight
 //! to TLC space at TLC latency. Useful as a floor in ablations.
 
-use super::CachePolicy;
+use super::{CacheGrant, CachePolicy};
 use crate::config::Nanos;
 use crate::flash::array::Completion;
 use crate::flash::Lpn;
@@ -28,8 +28,19 @@ impl CachePolicy for TlcOnly {
         Ok(())
     }
 
-    fn host_write_page(&mut self, ftl: &mut Ftl, lpn: Lpn, now: Nanos) -> Result<Completion> {
+    fn host_write_page_gated(
+        &mut self,
+        ftl: &mut Ftl,
+        lpn: Lpn,
+        now: Nanos,
+        _grant: CacheGrant,
+    ) -> Result<Completion> {
+        // no cache exists, so there is nothing to gate
         ftl.host_write_tlc(lpn, now)
+    }
+
+    fn slc_capacity_pages(&self, _ftl: &Ftl) -> u64 {
+        0
     }
 
     fn idle_work(&mut self, _ftl: &mut Ftl, now: Nanos, _deadline: Nanos) -> Result<Nanos> {

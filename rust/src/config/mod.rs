@@ -197,6 +197,8 @@ pub struct CacheConfig {
     pub gc_low_watermark: f64,
     /// GC stop: free-block high watermark per plane (fraction).
     pub gc_high_watermark: f64,
+    /// Per-tenant cache partitioning ([`crate::cache::partition`]).
+    pub partition: PartitionConfig,
 }
 
 impl Default for CacheConfig {
@@ -210,6 +212,7 @@ impl Default for CacheConfig {
             idle_threshold: 100 * MS,
             gc_low_watermark: 0.02,
             gc_high_watermark: 0.05,
+            partition: PartitionConfig::default(),
         }
     }
 }
@@ -232,7 +235,127 @@ impl CacheConfig {
                  can be reprogrammed four times at most)",
             ));
         }
+        self.partition.validate()?;
         Ok(())
+    }
+}
+
+/// Per-tenant SLC-cache partitioning ([`crate::cache::partition`]).
+///
+/// When enabled, the cache capacity (and the IPS layer-group reprogram
+/// budget) is carved into per-tenant *reserved* slices plus a shared
+/// overflow pool, enforced at allocation time: a tenant that exhausted
+/// its slice and the shared pool is denied new cache pages, so an
+/// aggressor's burst can never consume the capacity that backs a
+/// victim's reserved slice.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionConfig {
+    /// Enforce per-tenant slices (false = the PR-1 shared cache).
+    pub enabled: bool,
+    /// Fraction of the cache capacity split into reserved slices; the
+    /// remainder (`1 - reserved_frac`) is the shared overflow pool.
+    pub reserved_frac: f64,
+    /// Split the reserved fraction by scheduler weight instead of
+    /// equally.
+    pub by_weight: bool,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig { enabled: false, reserved_frac: 0.75, by_weight: false }
+    }
+}
+
+impl PartitionConfig {
+    /// Validate settings.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.reserved_frac) {
+            return Err(Error::config("cache.partition.reserved_frac must be in [0,1]"));
+        }
+        Ok(())
+    }
+}
+
+/// QoS admission-control mode ([`crate::host::qos`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosMode {
+    /// No admission control (the PR-1 behaviour).
+    Off,
+    /// Token buckets always enforced: a tenant whose bucket cannot
+    /// cover its head request is skipped until the bucket refills.
+    Strict,
+    /// Victim-p99 SLO mode: buckets are enforced only while some
+    /// *other* tenant's recent tail latency exceeds the SLO target —
+    /// work-conserving when the device is keeping its promises.
+    Slo,
+}
+
+impl QosMode {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<QosMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(QosMode::Off),
+            "strict" | "on" => Ok(QosMode::Strict),
+            "slo" => Ok(QosMode::Slo),
+            other => Err(Error::config(format!(
+                "unknown qos mode {other:?} (want off|strict|slo)"
+            ))),
+        }
+    }
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosMode::Off => "off",
+            QosMode::Strict => "strict",
+            QosMode::Slo => "slo",
+        }
+    }
+    /// All modes, in presentation order.
+    pub fn all() -> [QosMode; 3] {
+        [QosMode::Off, QosMode::Strict, QosMode::Slo]
+    }
+}
+
+/// QoS admission-control settings (token buckets in front of the
+/// schedulers; [`crate::host::qos`]).
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// Enforcement mode.
+    pub mode: QosMode,
+    /// Sustained per-tenant rate in MB/s (scaled by scheduler weight).
+    pub rate_mbps: f64,
+    /// Bucket capacity (burst budget) in bytes.
+    pub burst_bytes: u64,
+    /// Victim tail-latency target for [`QosMode::Slo`].
+    pub slo_p99: Nanos,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig { mode: QosMode::Off, rate_mbps: 64.0, burst_bytes: 1 << 20, slo_p99: 50 * MS }
+    }
+}
+
+impl QosConfig {
+    /// Validate settings.
+    pub fn validate(&self) -> Result<()> {
+        if self.mode != QosMode::Off {
+            if self.rate_mbps <= 0.0 {
+                return Err(Error::config("host.qos.rate_mbps must be > 0"));
+            }
+            if self.burst_bytes < 4096 {
+                return Err(Error::config("host.qos.burst_bytes must be >= 4096"));
+            }
+            if self.slo_p99 == 0 {
+                return Err(Error::config("host.qos.slo_p99_ns must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+    /// Token refill rate in bytes per nanosecond for a tenant with
+    /// scheduler weight `weight`.
+    pub fn rate_bytes_per_ns(&self, weight: f64) -> f64 {
+        self.rate_mbps.max(1e-9) * weight.max(1e-9) * 1e6 / 1e9
     }
 }
 
@@ -344,6 +467,8 @@ pub struct HostConfig {
     pub victim_req_bytes: u32,
     /// Gap between consecutive requests of one victim tenant.
     pub victim_gap: Nanos,
+    /// QoS admission control in front of the scheduler.
+    pub qos: QosConfig,
 }
 
 impl Default for HostConfig {
@@ -358,6 +483,7 @@ impl Default for HostConfig {
             aggressor_weight: 1.0,
             victim_req_bytes: 16 << 10,
             victim_gap: 2 * MS,
+            qos: QosConfig::default(),
         }
     }
 }
@@ -386,6 +512,7 @@ impl HostConfig {
         if self.victim_gap == 0 {
             return Err(Error::config("host.victim_gap must be >= 1 ns"));
         }
+        self.qos.validate()?;
         Ok(())
     }
 }
@@ -511,6 +638,11 @@ impl Config {
             idle_threshold: v.u64_or("cache.idle_threshold_ns", c.idle_threshold),
             gc_low_watermark: v.f64_or("cache.gc_low_watermark", c.gc_low_watermark),
             gc_high_watermark: v.f64_or("cache.gc_high_watermark", c.gc_high_watermark),
+            partition: PartitionConfig {
+                enabled: v.bool_or("cache.partition.enabled", c.partition.enabled),
+                reserved_frac: v.f64_or("cache.partition.reserved_frac", c.partition.reserved_frac),
+                by_weight: v.bool_or("cache.partition.by_weight", c.partition.by_weight),
+            },
         };
         let h = &base.host;
         let scheduler = match v.lookup("host.scheduler") {
@@ -520,6 +652,10 @@ impl Config {
         let mix = match v.lookup("host.mix") {
             Some(crate::util::toml::Value::Str(s)) => MixKind::parse(s)?,
             _ => h.mix,
+        };
+        let qos_mode = match v.lookup("host.qos.mode") {
+            Some(crate::util::toml::Value::Str(s)) => QosMode::parse(s)?,
+            _ => h.qos.mode,
         };
         let host = HostConfig {
             tenants: v.u64_or("host.tenants", h.tenants as u64) as u32,
@@ -531,6 +667,12 @@ impl Config {
             aggressor_weight: v.f64_or("host.aggressor_weight", h.aggressor_weight),
             victim_req_bytes: v.u64_or("host.victim_req_bytes", h.victim_req_bytes as u64) as u32,
             victim_gap: v.u64_or("host.victim_gap_ns", h.victim_gap),
+            qos: QosConfig {
+                mode: qos_mode,
+                rate_mbps: v.f64_or("host.qos.rate_mbps", h.qos.rate_mbps),
+                burst_bytes: v.u64_or("host.qos.burst_bytes", h.qos.burst_bytes),
+                slo_p99: v.u64_or("host.qos.slo_p99_ns", h.qos.slo_p99),
+            },
         };
         let s = &base.sim;
         let sim = SimConfig {
@@ -667,6 +809,52 @@ mod tests {
         c.host.victim_gap = 0; // would divide by zero in victim pacing
         assert!(c.validate().is_err());
         assert!(Config::from_toml_str("[host]\nscheduler = \"lifo\"", presets::small()).is_err());
+    }
+
+    #[test]
+    fn partition_and_qos_toml_overrides_apply() {
+        let base = presets::small();
+        let cfg = Config::from_toml_str(
+            "[cache.partition]\nenabled = true\nreserved_frac = 0.5\nby_weight = true\n\
+             [host.qos]\nmode = \"strict\"\nrate_mbps = 24.0\nburst_bytes = 262144\n\
+             slo_p99_ns = 1000000",
+            base,
+        )
+        .unwrap();
+        assert!(cfg.cache.partition.enabled);
+        assert!((cfg.cache.partition.reserved_frac - 0.5).abs() < 1e-12);
+        assert!(cfg.cache.partition.by_weight);
+        assert_eq!(cfg.host.qos.mode, QosMode::Strict);
+        assert!((cfg.host.qos.rate_mbps - 24.0).abs() < 1e-12);
+        assert_eq!(cfg.host.qos.burst_bytes, 256 << 10);
+        assert_eq!(cfg.host.qos.slo_p99, 1_000_000);
+    }
+
+    #[test]
+    fn qos_mode_parse_roundtrip_and_defaults_off() {
+        for m in QosMode::all() {
+            assert_eq!(QosMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(QosMode::parse("sometimes").is_err());
+        let c = presets::small();
+        assert_eq!(c.host.qos.mode, QosMode::Off, "QoS off by default");
+        assert!(!c.cache.partition.enabled, "partitioning off by default");
+    }
+
+    #[test]
+    fn invalid_partition_and_qos_rejected() {
+        let mut c = presets::small();
+        c.cache.partition.reserved_frac = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.host.qos.mode = QosMode::Strict;
+        c.host.qos.rate_mbps = 0.0;
+        assert!(c.validate().is_err());
+        // an invalid rate is fine while QoS is off
+        let mut c = presets::small();
+        c.host.qos.rate_mbps = 0.0;
+        c.validate().unwrap();
+        assert!(Config::from_toml_str("[host.qos]\nmode = \"wat\"", presets::small()).is_err());
     }
 
     #[test]

@@ -9,12 +9,61 @@
 //! asserted by `tests/integration_multitenant.rs`.
 
 use super::runner::parallel_map;
-use crate::config::{Config, MixKind, SchedKind, Scheme};
+use crate::config::{Config, MixKind, QosMode, SchedKind, Scheme};
 use crate::host::{MultiTenantSimulator, MultiTenantSummary};
 use crate::trace::scenario::Scenario;
 use crate::util::fmt::TextTable;
 use crate::util::rng::mix64;
 use crate::Result;
+
+/// Cache-isolation variant of one fleet cell: the shared cache the
+/// PR-1 sweep measures, per-tenant partitioning, or partitioning plus
+/// QoS admission control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IsolationVariant {
+    /// Shared SLC cache, no admission control (the PR-1 baseline).
+    Shared,
+    /// Per-tenant reserved slices + shared overflow pool.
+    Partitioned,
+    /// Partitioning plus token-bucket QoS in front of the scheduler.
+    PartitionedQos,
+}
+
+impl IsolationVariant {
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsolationVariant::Shared => "shared",
+            IsolationVariant::Partitioned => "partitioned",
+            IsolationVariant::PartitionedQos => "partitioned+qos",
+        }
+    }
+    /// All variants, in presentation order.
+    pub fn all() -> [IsolationVariant; 3] {
+        [IsolationVariant::Shared, IsolationVariant::Partitioned, IsolationVariant::PartitionedQos]
+    }
+    /// Impose the variant on a cell's config. `PartitionedQos` keeps a
+    /// base QoS mode that is already on (so a spec can sweep `slo`),
+    /// defaulting to `strict` otherwise.
+    pub fn apply(&self, cfg: &mut Config) {
+        match self {
+            IsolationVariant::Shared => {
+                cfg.cache.partition.enabled = false;
+                cfg.host.qos.mode = QosMode::Off;
+            }
+            IsolationVariant::Partitioned => {
+                cfg.cache.partition.enabled = true;
+                cfg.host.qos.mode = QosMode::Off;
+            }
+            IsolationVariant::PartitionedQos => {
+                cfg.cache.partition.enabled = true;
+                if cfg.host.qos.mode == QosMode::Off {
+                    cfg.host.qos.mode = QosMode::Strict;
+                }
+            }
+        }
+    }
+}
 
 /// One cell of the fleet cross-product.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +74,8 @@ pub struct FleetJob {
     pub scheduler: SchedKind,
     /// Tenant mix under test.
     pub mix: MixKind,
+    /// Cache-isolation variant under test.
+    pub variant: IsolationVariant,
     /// Per-run seed (derived from the cell, not the execution order).
     pub seed: u64,
 }
@@ -40,6 +91,8 @@ pub struct FleetSpec {
     pub scheds: Vec<SchedKind>,
     /// Tenant-mix axis.
     pub mixes: Vec<MixKind>,
+    /// Cache-isolation axis (shared / partitioned / partitioned+QoS).
+    pub variants: Vec<IsolationVariant>,
     /// Scenario each cell runs under.
     pub scenario: Scenario,
     /// Base seed the per-cell seeds derive from.
@@ -50,13 +103,14 @@ pub struct FleetSpec {
 
 impl FleetSpec {
     /// Full sweep over every scheme × scheduler × mix with `base`'s
-    /// host settings.
+    /// host settings (shared cache — the PR-1 sweep).
     pub fn full(base: Config, seed: u64, threads: usize) -> FleetSpec {
         FleetSpec {
             base,
             schemes: Scheme::all().to_vec(),
             scheds: SchedKind::all().to_vec(),
             mixes: MixKind::all().to_vec(),
+            variants: vec![IsolationVariant::Shared],
             scenario: Scenario::Bursty,
             seed,
             threads,
@@ -65,17 +119,27 @@ impl FleetSpec {
 
     /// The cross-product, in deterministic presentation order. Seeds
     /// mix the cell coordinates into the base seed so that reordering
-    /// or filtering the axes never changes a given cell's seed.
+    /// or filtering the axes never changes a given cell's seed. The
+    /// isolation variant is deliberately *not* mixed in: shared vs
+    /// partitioned cells of the same (scheme, scheduler, mix) run the
+    /// exact same tenant traces, so their comparison is paired.
     pub fn jobs(&self) -> Vec<FleetJob> {
-        let mut out = Vec::with_capacity(self.schemes.len() * self.scheds.len() * self.mixes.len());
+        let mut out = Vec::with_capacity(
+            self.schemes.len() * self.scheds.len() * self.mixes.len() * self.variants.len(),
+        );
         for &scheme in &self.schemes {
             for &scheduler in &self.scheds {
                 for &mix in &self.mixes {
+                    // one seed per (scheme, scheduler, mix) cell — every
+                    // variant of the cell deliberately shares it
                     let cell = mix64(
                         hash_str(scheme.name()),
                         mix64(hash_str(scheduler.name()), hash_str(mix.name())),
                     );
-                    out.push(FleetJob { scheme, scheduler, mix, seed: mix64(self.seed, cell) });
+                    let seed = mix64(self.seed, cell);
+                    for &variant in &self.variants {
+                        out.push(FleetJob { scheme, scheduler, mix, variant, seed });
+                    }
                 }
             }
         }
@@ -103,9 +167,29 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<Vec<MultiTenantSummary>> {
         cfg.host.scheduler = job.scheduler;
         cfg.host.mix = job.mix;
         cfg.sim.seed = job.seed;
+        job.variant.apply(&mut cfg);
         MultiTenantSimulator::run_once(cfg, spec.scenario)
     });
     results.into_iter().collect()
+}
+
+/// The ROADMAP's device-QD ablation: the same multi-tenant cell re-run
+/// at each device-side queue depth (serial — each point is one run).
+/// The window size is what makes dispatch order matter, so the victim
+/// tail typically *grows* with QD under FIFO while fair schedulers
+/// hold it flat.
+pub fn device_qd_sweep(
+    base: &Config,
+    scenario: Scenario,
+    qds: &[usize],
+) -> Result<Vec<(usize, MultiTenantSummary)>> {
+    qds.iter()
+        .map(|&qd| {
+            let mut cfg = base.clone();
+            cfg.host.device_qd = qd.max(1);
+            Ok((qd, MultiTenantSimulator::run_once(cfg, scenario)?))
+        })
+        .collect()
 }
 
 /// Render a sweep as the paper-style summary table (deterministic:
@@ -116,11 +200,13 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
         "scheme",
         "scheduler",
         "mix",
+        "variant",
         "seed",
         "mean_ms",
         "p99_ms",
         "wa",
         "victim_p99_ms",
+        "stalls",
         "bg_pages",
     ]);
     for s in results {
@@ -128,11 +214,13 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
             s.scheme.clone(),
             s.scheduler.clone(),
             s.mix.clone(),
+            s.variant_name(),
             format!("{:#018x}", s.seed),
             format!("{:.3}", s.write_latency.mean() / 1e6),
             format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
             format!("{:.3}", s.wa()),
             format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+            s.total_throttle_stalls().to_string(),
             s.background.total_programs().to_string(),
         ]);
     }
@@ -152,6 +240,10 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "p99_ms",
         "mb_s",
         "wa",
+        "res_pg",
+        "occ_pk",
+        "denied",
+        "stalls",
     ]);
     let span_s = (s.sim_end as f64 / 1e9).max(1e-9);
     for t in &s.tenants {
@@ -165,6 +257,10 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
             format!("{:.3}", t.p99_write_latency() as f64 / 1e6),
             format!("{:.1}", t.host_bytes_written as f64 / 1e6 / span_s),
             format!("{:.3}", t.wa()),
+            t.cache_reserved_pages.to_string(),
+            t.cache_occupancy_peak.to_string(),
+            t.slc_denied_pages.to_string(),
+            t.throttle_stalls.to_string(),
         ]);
     }
     table.row(vec![
@@ -177,6 +273,10 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
         format!("{:.1}", s.host_bytes_written as f64 / 1e6 / span_s),
         format!("{:.3}", s.wa()),
+        s.cache_capacity_pages.to_string(),
+        "-".into(),
+        "-".into(),
+        s.total_throttle_stalls().to_string(),
     ]);
     table.row(vec![
         "(background)".into(),
@@ -188,6 +288,10 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "-".into(),
         "-".into(),
         format!("+{} pages", s.background.total_programs()),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
     ]);
     table
 }
@@ -207,6 +311,7 @@ mod tests {
             schemes: vec![Scheme::Baseline, Scheme::Ips],
             scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
             mixes: vec![MixKind::AggressorVictims],
+            variants: vec![IsolationVariant::Shared],
             scenario: Scenario::Bursty,
             seed: 42,
             threads,
@@ -254,5 +359,43 @@ mod tests {
             summary_table(&parallel).render(),
             "thread count must not leak into results"
         );
+    }
+
+    #[test]
+    fn variant_axis_pairs_seeds_and_labels_runs() {
+        let mut spec = tiny_spec(1);
+        spec.schemes = vec![Scheme::Baseline];
+        spec.scheds = vec![SchedKind::Fifo];
+        spec.variants = IsolationVariant::all().to_vec();
+        let jobs = spec.jobs();
+        assert_eq!(jobs.len(), 3);
+        // paired comparison: all variants of a cell share the seed
+        assert!(jobs.windows(2).all(|w| w[0].seed == w[1].seed));
+        let results = run_fleet(&spec).unwrap();
+        assert!(!results[0].partitioned && results[0].qos_mode == "off");
+        assert!(results[1].partitioned && results[1].qos_mode == "off");
+        assert!(results[2].partitioned && results[2].qos_mode == "strict");
+        // identical offered load across variants (same traces)
+        assert_eq!(results[0].host_bytes_written, results[1].host_bytes_written);
+        assert_eq!(results[0].host_bytes_written, results[2].host_bytes_written);
+    }
+
+    #[test]
+    fn device_qd_sweep_runs_each_point() {
+        let mut base = presets::small();
+        base.cache.slc_cache_bytes = 1 << 20;
+        base.host.tenants = 3;
+        base.host.aggressor_cache_mult = 1.5;
+        let points =
+            device_qd_sweep(&base, Scenario::Bursty, &[1, 4, 16]).unwrap();
+        assert_eq!(points.len(), 3);
+        for (qd, s) in &points {
+            assert!(s.host_bytes_written > 0, "qd {qd} served traffic");
+        }
+        // identical offered load at every queue depth
+        assert_eq!(points[0].1.host_bytes_written, points[2].1.host_bytes_written);
+        // a deeper device window can only help or keep device p99 — but
+        // it must not change WHO was served
+        assert_eq!(points[0].1.write_latency.count(), points[2].1.write_latency.count());
     }
 }

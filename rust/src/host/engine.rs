@@ -16,10 +16,11 @@
 //! end-of-workload flush are charged to the device's `background`
 //! ledger instead — no tenant owns them.
 
+use super::qos::{Admission, QosGate};
 use super::queue::SubmissionQueue;
 use super::sched::{self, HeadInfo, Scheduler};
 use super::tenant::{self, TenantSpec};
-use crate::cache::{self, CachePolicy};
+use crate::cache::{self, CachePartitioner, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::Lpn;
 use crate::ftl::Ftl;
@@ -39,6 +40,10 @@ pub struct MultiTenantSimulator {
     sched: Box<dyn Scheduler>,
     queues: Vec<SubmissionQueue>,
     stats: Vec<TenantStats>,
+    /// Per-tenant cache slices + reprogram-budget accounting.
+    part: CachePartitioner,
+    /// Token-bucket admission control ahead of the scheduler.
+    qos: QosGate,
     now: Nanos,
 }
 
@@ -67,6 +72,12 @@ pub struct MultiTenantSummary {
     pub ledger: Ledger,
     /// Unattributed programs: idle-time reclamation + final flush.
     pub background: Ledger,
+    /// Was per-tenant cache partitioning enforced?
+    pub partitioned: bool,
+    /// QoS admission-control mode ("off" | "strict" | "slo").
+    pub qos_mode: String,
+    /// SLC cache capacity the partitioner carved up (pages).
+    pub cache_capacity_pages: u64,
     /// Simulated end time.
     pub sim_end: Nanos,
     /// Bytes the host wrote (all tenants).
@@ -93,6 +104,31 @@ impl MultiTenantSummary {
             .map(|t| t.p99_write_latency())
             .max()
             .unwrap_or(0)
+    }
+    /// The isolation label this run actually executed under, derived
+    /// from the effective config ("shared", "partitioned",
+    /// "partitioned+strict", "shared+slo", ...). More specific than the
+    /// fleet's `IsolationVariant` axis names — `partitioned+qos` cells
+    /// report which QoS mode really ran.
+    pub fn variant_name(&self) -> String {
+        match (self.partitioned, self.qos_mode.as_str()) {
+            (false, "off") => "shared".into(),
+            (false, mode) => format!("shared+{mode}"),
+            (true, "off") => "partitioned".into(),
+            (true, mode) => format!("partitioned+{mode}"),
+        }
+    }
+    /// Total QoS throttle stalls across all tenants.
+    pub fn total_throttle_stalls(&self) -> u64 {
+        self.tenants.iter().map(|t| t.throttle_stalls).sum()
+    }
+    /// Names of the tenants the QoS gate throttled at least once.
+    pub fn throttled_tenants(&self) -> Vec<&str> {
+        self.tenants
+            .iter()
+            .filter(|t| t.throttle_stalls > 0)
+            .map(|t| t.name.as_str())
+            .collect()
     }
 }
 
@@ -126,7 +162,9 @@ impl MultiTenantSimulator {
                 )
             })
             .collect();
-        Ok(MultiTenantSimulator { cfg, ftl, policy, sched, queues, stats, now: 0 })
+        let part = CachePartitioner::new(&cfg, &weights, policy.slc_capacity_pages(&ftl));
+        let qos = QosGate::new(&cfg.host.qos, &weights);
+        Ok(MultiTenantSimulator { cfg, ftl, policy, sched, queues, stats, part, qos, now: 0 })
     }
 
     /// Access the FTL (diagnostics, audits).
@@ -166,23 +204,49 @@ impl MultiTenantSimulator {
                 outstanding[ti] -= 1;
             }
 
+            // earliest token-bucket refill among QoS-throttled heads
+            // (a wake-up event: throttling must never deadlock the loop)
+            let mut next_token: Option<Nanos> = None;
+
             // dispatch if the device window is open and a head is ready
             if inflight.len() < qd {
                 let now = self.now;
+                // tenants with an *arrived* head, before any masking:
+                // the partitioner meters the reprogram budget only
+                // while neighbours are actually waiting (skip the scan
+                // entirely on unpartitioned runs)
+                let arrived = if self.part.enabled() {
+                    self.queues.iter().filter(|q| q.head_ready(now)).count()
+                } else {
+                    0
+                };
+                let qos = &mut self.qos;
                 let ready: Vec<Option<HeadInfo>> = self
                     .queues
                     .iter()
                     .enumerate()
                     .map(|(ti, q)| {
+                        let head = q.head().filter(|op| op.at <= now);
+                        // live starvation signal for the SLO mode: how
+                        // long has this tenant's head been waiting?
+                        qos.observe(ti, head.map(|op| op.at), now);
                         // NVMe SQ window: a tenant may not exceed its
                         // queue depth in outstanding commands
                         if outstanding[ti] >= q.depth {
                             return None;
                         }
-                        q.head().filter(|op| op.at <= now).map(|op| HeadInfo {
-                            arrival: op.at,
-                            bytes: op.len as u64,
-                        })
+                        let head = head?;
+                        let info = HeadInfo { arrival: head.at, bytes: head.len as u64 };
+                        // QoS gate: an over-budget tenant is masked
+                        // from the scheduler until its bucket refills
+                        match qos.admit(ti, info.bytes, info.arrival, now) {
+                            Admission::Admit => Some(info),
+                            Admission::ThrottleUntil(t) => {
+                                next_token =
+                                    Some(next_token.map(|x: Nanos| x.min(t)).unwrap_or(t));
+                                None
+                            }
+                        }
                     })
                     .collect();
                 if let Some(i) = self.sched.pick(&ready) {
@@ -191,9 +255,30 @@ impl MultiTenantSimulator {
                     let before = self.ftl.ledger;
                     let first_lpn = (op.offset / page) % lpn_limit;
                     let n_pages = (op.len as u64).div_ceil(page).max(1);
+                    let contended = arrived > 1;
                     let mut req_end = issue;
                     match op.kind {
+                        OpKind::Write if self.part.enabled() => {
+                            for k in 0..n_pages {
+                                let lpn = Lpn((first_lpn + k) % lpn_limit);
+                                self.ftl.ledger.host_page();
+                                // cache admission decided per page: the
+                                // partitioner sees every allocation
+                                let grant = self.part.grant(i, contended);
+                                let page_before = self.ftl.ledger;
+                                let c = self.policy.host_write_page_gated(
+                                    &mut self.ftl,
+                                    lpn,
+                                    issue,
+                                    grant,
+                                )?;
+                                self.part.charge(i, &self.ftl.ledger.diff(&page_before));
+                                req_end = req_end.max(c.end);
+                            }
+                        }
                         OpKind::Write => {
+                            // unpartitioned: the pre-PR hot path, no
+                            // per-page snapshots or grants
                             for k in 0..n_pages {
                                 let lpn = Lpn((first_lpn + k) % lpn_limit);
                                 self.ftl.ledger.host_page();
@@ -213,6 +298,8 @@ impl MultiTenantSimulator {
                     let diff = self.ftl.ledger.diff(&before);
                     let st = &mut self.stats[i];
                     st.ledger.merge(&diff);
+                    st.cache_occupancy_peak =
+                        st.cache_occupancy_peak.max(self.part.occupancy(i));
                     match op.kind {
                         OpKind::Write => {
                             st.write_latency.record(lat);
@@ -221,6 +308,7 @@ impl MultiTenantSimulator {
                             write_latency.record(lat);
                             bandwidth.record(req_end, op.len as u64);
                             host_bytes += op.len as u64;
+                            self.qos.record_latency(i, lat, req_end);
                         }
                         OpKind::Read => {
                             st.read_latency.record(lat);
@@ -228,6 +316,7 @@ impl MultiTenantSimulator {
                         }
                     }
                     self.sched.charge(i, op.len as u64);
+                    self.qos.charge(i, op.len as u64, issue);
                     inflight.push(Reverse((req_end, i)));
                     outstanding[i] += 1;
                     last_end = last_end.max(req_end);
@@ -238,7 +327,8 @@ impl MultiTenantSimulator {
             // Nothing dispatchable: advance to the next event. Only
             // *future* arrivals count — an already-arrived head that is
             // blocked (device window full, or its tenant at SQ depth)
-            // is unblocked by a completion, never by its own arrival.
+            // is unblocked by a completion, never by its own arrival;
+            // a QoS-throttled head is unblocked by its bucket refill.
             let next_arrival = self
                 .queues
                 .iter()
@@ -246,27 +336,37 @@ impl MultiTenantSimulator {
                 .filter(|&a| a > self.now)
                 .min();
             let next_completion = inflight.peek().map(|&Reverse((t, _))| t);
+            let next_token = next_token.filter(|&t| t > self.now);
             let target = if inflight.len() >= qd {
                 // window full: only a completion can unblock dispatch
                 next_completion.expect("full window has completions")
             } else {
-                match (next_arrival, next_completion) {
-                    (None, None) => break,
-                    (Some(a), None) => {
-                        // device quiesced: the gap before the next
-                        // arrival is an idle window for background
-                        // work (daily)
+                match (next_arrival, next_completion, next_token) {
+                    (None, None, None) => break,
+                    (a, None, t) => {
+                        // no completion pending: the device is
+                        // physically quiescent, so the gap before the
+                        // next arrival *or* token refill is an idle
+                        // window for background work (daily) — a
+                        // QoS-throttled head does not keep the flash
+                        // busy
+                        let next =
+                            [a, t].into_iter().flatten().min().expect("arm has one event");
                         if scenario == Scenario::Daily {
                             let quiesce = self.now.max(last_end);
-                            if a > quiesce.saturating_add(idle_threshold) {
+                            if next > quiesce.saturating_add(idle_threshold) {
                                 let start = quiesce + idle_threshold;
-                                self.policy.idle_work(&mut self.ftl, start, a)?;
+                                let bg_before = self.ftl.ledger;
+                                self.policy.idle_work(&mut self.ftl, start, next)?;
+                                // background reclamation recycles cache
+                                // capacity owned by no tenant
+                                self.part
+                                    .charge_background(&self.ftl.ledger.diff(&bg_before));
                             }
                         }
-                        a
+                        next
                     }
-                    (Some(a), Some(c)) => a.min(c),
-                    (None, Some(c)) => c,
+                    (a, c, t) => [a, c, t].into_iter().flatten().min().expect("some event"),
                 }
             };
             self.now = self.now.max(target);
@@ -291,6 +391,14 @@ impl MultiTenantSimulator {
         }
         let background = self.ftl.ledger.diff(&attributed);
 
+        // fold partition/QoS accounting into the per-tenant stats
+        for (i, st) in self.stats.iter_mut().enumerate() {
+            st.cache_reserved_pages = if self.part.enabled() { self.part.reserved(i) } else { 0 };
+            st.slc_denied_pages = self.part.denied(i);
+            st.throttle_stalls = self.qos.stalls(i);
+            st.throttle_stall_ns = self.qos.stall_ns(i);
+        }
+
         Ok(MultiTenantSummary {
             scheme: self.policy.name().to_string(),
             scheduler: self.sched.name().to_string(),
@@ -303,6 +411,9 @@ impl MultiTenantSimulator {
             bandwidth,
             ledger: self.ftl.ledger,
             background,
+            partitioned: self.part.enabled(),
+            qos_mode: self.qos.mode_name().to_string(),
+            cache_capacity_pages: self.part.capacity(),
             sim_end: self.now,
             host_bytes_written: host_bytes,
             wall_clock: wall0.elapsed(),

@@ -19,18 +19,24 @@
 //!   percentiles, bandwidth, and attributed write amplification next
 //!   to the device-wide totals;
 //! * [`tenant`] builds the tenant-mix scenarios (one aggressor + K
-//!   victims, uniform fan-out, read-heavy, write-heavy).
+//!   victims, uniform fan-out, read-heavy, write-heavy);
+//! * [`qos`] puts per-tenant token buckets in front of the scheduler
+//!   (admission control), and [`crate::cache::partition`] carves the
+//!   SLC cache into per-tenant reserved slices — together they turn
+//!   the shared fast tier into a fair one.
 //!
 //! The thread-parallel (scheme × scheduler × mix) sweep lives in
 //! [`crate::coordinator::fleet`]; the `multi-tenant` subcommand and
 //! the `fig_multitenant` bench drive it.
 
 pub mod engine;
+pub mod qos;
 pub mod queue;
 pub mod sched;
 pub mod tenant;
 
 pub use engine::{MultiTenantSimulator, MultiTenantSummary};
+pub use qos::QosGate;
 pub use queue::SubmissionQueue;
 pub use sched::Scheduler;
 pub use tenant::TenantSpec;

@@ -1,0 +1,422 @@
+//! QoS admission control: per-tenant token buckets in front of the
+//! request schedulers.
+//!
+//! The PR-1 schedulers decide *order* among ready requests, but a
+//! bursty aggressor still occupies the device window whenever the
+//! victims are momentarily idle — and the backlog it builds inside the
+//! device is what the victims' tail latency pays for. The [`QosGate`]
+//! adds *admission* control ahead of scheduling: each tenant owns a
+//! token bucket (sustained rate × scheduler weight, plus a burst
+//! budget); a tenant whose bucket cannot cover its head request is
+//! masked from the scheduler until the bucket refills, and the engine
+//! treats the refill time as a wake-up event so throttling never
+//! deadlocks the dispatch loop.
+//!
+//! Two enforcement modes (config `[host.qos] mode`):
+//!
+//! * **strict** — buckets always enforced; the device holds slack for
+//!   latecomers even when nobody is waiting.
+//! * **slo** — work-conserving: buckets are enforced *only while some
+//!   other tenant is missing the configured victim-p99 SLO*. While the
+//!   device is keeping its promises, even an over-budget tenant
+//!   dispatches freely. Two breach signals feed the mode: a completed
+//!   write over the target arms a breach *pulse* that expires after
+//!   one SLO interval (or on the tenant's next compliant completion),
+//!   and the *age of a waiting head request* is the live level signal
+//!   that catches a FIFO monopoly where starved victims never
+//!   complete at all. Both signals decay, so a single slow write from
+//!   a tenant that then goes idle cannot throttle its neighbours
+//!   forever.
+//!
+//! Invariants (property-tested in `tests/prop_partition.rs`): bucket
+//! levels always stay within `[0, burst]` — refills saturate at the
+//! burst budget and debits saturate at zero, so a bucket can never go
+//! negative no matter the (dispatch, refill) interleaving.
+
+use crate::config::{Nanos, QosConfig, QosMode};
+
+/// One tenant's token bucket.
+#[derive(Clone, Debug)]
+struct Bucket {
+    /// Current tokens (bytes of admissible traffic).
+    tokens: f64,
+    /// Bucket capacity (burst budget, bytes).
+    burst: f64,
+    /// Refill rate (bytes per nanosecond).
+    rate: f64,
+    /// Last refill timestamp.
+    last: Nanos,
+}
+
+impl Bucket {
+    fn refill(&mut self, now: Nanos) {
+        if now > self.last {
+            self.tokens = (self.tokens + (now - self.last) as f64 * self.rate).min(self.burst);
+            self.last = now;
+        }
+    }
+}
+
+/// Admission decision for one ready head request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Dispatchable now.
+    Admit,
+    /// Masked from the scheduler until roughly this time.
+    ThrottleUntil(Nanos),
+}
+
+/// Per-tenant token-bucket admission controller.
+#[derive(Clone, Debug)]
+pub struct QosGate {
+    mode: QosMode,
+    slo_p99: Nanos,
+    buckets: Vec<Bucket>,
+    /// An over-target completion arms a breach pulse until this time
+    /// (one SLO interval past the completion); the tenant's next
+    /// compliant completion disarms it early.
+    breach_until: Vec<Nanos>,
+    /// Tenant's head request has been waiting past the SLO (live
+    /// starvation signal, updated by [`QosGate::observe`]).
+    starved: Vec<bool>,
+    /// Expiry of the gate's latest mask on this tenant. Waiting the
+    /// gate itself imposed must not count as an SLO breach — starvation
+    /// is measured from `max(arrival, mask expiry)` — or two
+    /// over-budget tenants would keep each other throttled forever.
+    throttled_until: Vec<Nanos>,
+    /// Arrival of the last request we counted a throttle-stall for
+    /// (dedupes the per-request stall count across dispatch attempts).
+    last_stalled_arrival: Vec<Option<Nanos>>,
+    /// Distinct requests throttled, per tenant.
+    stalls: Vec<u64>,
+    /// Estimated delay imposed by throttling, per tenant (ns).
+    stall_ns: Vec<u64>,
+}
+
+impl QosGate {
+    /// Build the gate for tenants with the given scheduler `weights`.
+    pub fn new(cfg: &QosConfig, weights: &[f64]) -> QosGate {
+        let n = weights.len();
+        let buckets = weights
+            .iter()
+            .map(|&w| Bucket {
+                tokens: cfg.burst_bytes as f64,
+                burst: cfg.burst_bytes as f64,
+                rate: cfg.rate_bytes_per_ns(w),
+                last: 0,
+            })
+            .collect();
+        QosGate {
+            mode: cfg.mode,
+            slo_p99: cfg.slo_p99,
+            buckets,
+            breach_until: vec![0; n],
+            starved: vec![false; n],
+            throttled_until: vec![0; n],
+            last_stalled_arrival: vec![None; n],
+            stalls: vec![0; n],
+            stall_ns: vec![0; n],
+        }
+    }
+
+    /// Is admission control active at all?
+    pub fn enabled(&self) -> bool {
+        self.mode != QosMode::Off
+    }
+    /// Mode name for reports.
+    pub fn mode_name(&self) -> &'static str {
+        self.mode.name()
+    }
+    /// Distinct requests throttled for tenant `t`.
+    pub fn stalls(&self, t: usize) -> u64 {
+        self.stalls[t]
+    }
+    /// Estimated throttle-imposed delay for tenant `t` (ns).
+    pub fn stall_ns(&self, t: usize) -> u64 {
+        self.stall_ns[t]
+    }
+    /// Current token level of tenant `t` (bytes, without refilling).
+    pub fn tokens(&self, t: usize) -> f64 {
+        self.buckets[t].tokens
+    }
+    /// Burst budget of tenant `t` (bytes).
+    pub fn burst(&self, t: usize) -> f64 {
+        self.buckets[t].burst
+    }
+
+    /// Update tenant `t`'s live starvation signal: `head_arrival` is
+    /// the arrival time of its oldest waiting request, `None` when the
+    /// tenant has nothing waiting. Called every dispatch round. A head
+    /// the gate itself is masking does not count — only waiting the
+    /// *device* imposes is an SLO breach.
+    pub fn observe(&mut self, t: usize, head_arrival: Option<Nanos>, now: Nanos) {
+        if self.mode != QosMode::Slo {
+            return;
+        }
+        self.starved[t] = head_arrival
+            .map(|a| {
+                // count only the wait the device imposed: time spent
+                // under the gate's own mask is excluded even after the
+                // mask lapses
+                let device_wait_start = a.max(self.throttled_until[t]);
+                now.saturating_sub(device_wait_start) > self.slo_p99
+            })
+            .unwrap_or(false);
+    }
+
+    /// Decide whether tenant `t`'s head request (`bytes`, arrived at
+    /// `arrival`) may enter the scheduler at `now`.
+    pub fn admit(&mut self, t: usize, bytes: u64, arrival: Nanos, now: Nanos) -> Admission {
+        if self.mode == QosMode::Off {
+            return Admission::Admit;
+        }
+        self.buckets[t].refill(now);
+        // an oversized request (> burst) passes on a full bucket —
+        // otherwise it could never be admitted at all
+        let need = (bytes as f64).min(self.buckets[t].burst);
+        if self.buckets[t].tokens >= need {
+            return Admission::Admit;
+        }
+        if self.mode == QosMode::Slo && !self.slo_violated_for(t, now) {
+            // work-conserving: nobody is missing their tail target, so
+            // the over-budget tenant may proceed
+            return Admission::Admit;
+        }
+        let b = &self.buckets[t];
+        let deficit = need - b.tokens;
+        let wait = (deficit / b.rate.max(1e-12)).ceil() as Nanos;
+        let mut until = now.saturating_add(wait.max(1));
+        if self.mode == QosMode::Slo {
+            // enforcement may lapse before the bucket refills: when no
+            // other tenant is starving, the latest active breach pulse
+            // bounds how long this tenant can actually be held
+            let others_starved =
+                self.starved.iter().enumerate().any(|(u, &s)| u != t && s);
+            if !others_starved {
+                let lapse = self
+                    .breach_until
+                    .iter()
+                    .enumerate()
+                    .filter(|&(u, &bu)| u != t && bu > now)
+                    .map(|(_, &bu)| bu)
+                    .max();
+                if let Some(l) = lapse {
+                    until = until.min(l);
+                }
+            }
+        }
+        self.throttled_until[t] = until;
+        if self.last_stalled_arrival[t] != Some(arrival) {
+            self.last_stalled_arrival[t] = Some(arrival);
+            self.stalls[t] += 1;
+            self.stall_ns[t] += until - now;
+        }
+        Admission::ThrottleUntil(until)
+    }
+
+    /// Account `bytes` of dispatched service for tenant `t` (called
+    /// alongside `Scheduler::charge`). Debits saturate at zero: in SLO
+    /// mode a tenant may dispatch while in debt, and the bucket floor
+    /// is what keeps the debt from becoming unbounded punishment.
+    pub fn charge(&mut self, t: usize, bytes: u64, now: Nanos) {
+        if self.mode == QosMode::Off {
+            return;
+        }
+        self.buckets[t].refill(now);
+        self.buckets[t].tokens = (self.buckets[t].tokens - bytes as f64).max(0.0);
+    }
+
+    /// Record a completed write latency for tenant `t` that finished
+    /// at `end` (SLO detection). An over-target write arms a breach
+    /// pulse lasting one SLO interval; a compliant write disarms it —
+    /// the most recent completion is authoritative. A request the gate
+    /// itself stalled carries self-inflicted latency and never arms a
+    /// pulse (it would re-trigger the very enforcement that caused it).
+    pub fn record_latency(&mut self, t: usize, lat: Nanos, end: Nanos) {
+        if self.mode != QosMode::Slo {
+            return;
+        }
+        let arrival = end.saturating_sub(lat);
+        let self_inflicted = self.last_stalled_arrival[t] == Some(arrival);
+        self.breach_until[t] = if lat > self.slo_p99 && !self_inflicted {
+            end.saturating_add(self.slo_p99)
+        } else {
+            0
+        };
+    }
+
+    /// Is any *other* tenant missing the SLO at `now` — either a
+    /// recently completed write over the target, or a head request
+    /// starving past it?
+    fn slo_violated_for(&self, t: usize, now: Nanos) -> bool {
+        self.starved
+            .iter()
+            .enumerate()
+            .any(|(u, &st)| u != t && (st || self.breach_until[u] > now))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn cfg(mode: QosMode) -> QosConfig {
+        QosConfig {
+            mode,
+            rate_mbps: 8.0, // 8 B/µs = 0.008 B/ns
+            burst_bytes: 64 << 10,
+            slo_p99: 10 * MS,
+        }
+    }
+
+    #[test]
+    fn off_admits_everything_for_free() {
+        let mut g = QosGate::new(&cfg(QosMode::Off), &[1.0]);
+        for i in 0..100 {
+            assert_eq!(g.admit(0, 1 << 30, i, i), Admission::Admit);
+            g.charge(0, 1 << 30, i);
+        }
+        assert_eq!(g.stalls(0), 0);
+    }
+
+    #[test]
+    fn strict_throttles_past_the_burst_budget() {
+        let mut g = QosGate::new(&cfg(QosMode::Strict), &[1.0]);
+        // burn the burst budget at t=0
+        assert_eq!(g.admit(0, 64 << 10, 0, 0), Admission::Admit);
+        g.charge(0, 64 << 10, 0);
+        // the next request must wait for the refill
+        match g.admit(0, 64 << 10, 1, 0) {
+            Admission::ThrottleUntil(t) => {
+                // 64 KiB at 0.008 B/ns = 8.192 ms
+                assert!((8_000_000..9_000_000).contains(&t), "refill wait {t}");
+            }
+            a => panic!("expected throttle, got {a:?}"),
+        }
+        assert_eq!(g.stalls(0), 1);
+        // repeated attempts for the same request count once
+        let _ = g.admit(0, 64 << 10, 1, 1000);
+        assert_eq!(g.stalls(0), 1);
+        // after the refill the request is admitted
+        assert_eq!(g.admit(0, 64 << 10, 1, 10_000_000), Admission::Admit);
+    }
+
+    #[test]
+    fn slo_mode_is_work_conserving_until_violated() {
+        let mut g = QosGate::new(&cfg(QosMode::Slo), &[1.0, 1.0]);
+        g.charge(0, 64 << 10, 0); // tenant 0 over budget
+        // no one is missing their SLO: admit anyway
+        assert_eq!(g.admit(0, 64 << 10, 0, 0), Admission::Admit);
+        // tenant 1 reports a tail-latency breach -> enforcement kicks in
+        g.record_latency(1, 20 * MS, 0);
+        assert!(matches!(g.admit(0, 64 << 10, 0, 0), Admission::ThrottleUntil(_)));
+        // tenant 1's own bucket is unaffected by its own breach
+        assert_eq!(g.admit(1, 4096, 0, 0), Admission::Admit);
+    }
+
+    #[test]
+    fn slo_breach_pulse_decays_with_time_and_on_compliant_completions() {
+        let mut g = QosGate::new(&cfg(QosMode::Slo), &[1.0, 1.0]);
+        // breach completed at t=0: enforcement holds for one SLO
+        // interval (10 ms), then expires even if tenant 1 goes idle
+        g.record_latency(1, 20 * MS, 0);
+        g.charge(0, 10 << 20, 5 * MS); // keep tenant 0's bucket empty
+        assert!(matches!(g.admit(0, 64 << 10, 0, 5 * MS), Admission::ThrottleUntil(_)));
+        g.charge(0, 10 << 20, 11 * MS);
+        assert_eq!(
+            g.admit(0, 64 << 10, 0, 11 * MS),
+            Admission::Admit,
+            "a stale breach from an idle tenant must not throttle forever"
+        );
+        // a fresh breach followed by a compliant completion disarms early
+        g.record_latency(1, 20 * MS, 12 * MS);
+        g.record_latency(1, MS, 13 * MS);
+        g.charge(0, 10 << 20, 13 * MS);
+        assert_eq!(g.admit(0, 64 << 10, 0, 13 * MS), Admission::Admit);
+    }
+
+    #[test]
+    fn starving_head_triggers_slo_enforcement_without_completions() {
+        // the FIFO-monopoly case: the victim never completes a write,
+        // so only its waiting head can signal the breach
+        let mut g = QosGate::new(&cfg(QosMode::Slo), &[1.0, 1.0]);
+        g.charge(0, 64 << 10, 0); // aggressor over budget
+        assert_eq!(g.admit(0, 64 << 10, 0, 0), Admission::Admit, "no breach yet");
+        // victim head waiting 20 ms > 10 ms SLO; aggressor still broke
+        g.observe(1, Some(0), 20 * MS);
+        g.charge(0, 1 << 20, 20 * MS); // keep the bucket empty at the breach
+        assert!(matches!(g.admit(0, 64 << 10, 0, 20 * MS), Admission::ThrottleUntil(_)));
+        // the victim drains: signal clears, aggressor flows again
+        g.observe(1, None, 20 * MS);
+        g.record_latency(1, MS, 20 * MS); // a healthy completion, below the SLO
+        assert_eq!(g.admit(0, 64 << 10, 0, 20 * MS), Admission::Admit);
+    }
+
+    #[test]
+    fn gate_inflicted_delay_never_counts_as_an_slo_breach() {
+        // the mutual-throttling trap: once the gate masks tenant 0,
+        // tenant 0's aging head and inflated completion latency must
+        // not read as SLO breaches, or two over-budget tenants would
+        // keep each other throttled forever
+        let mut g = QosGate::new(
+            &QosConfig {
+                mode: QosMode::Slo,
+                rate_mbps: 8.0,
+                burst_bytes: 64 << 10,
+                slo_p99: 5 * MS,
+            },
+            &[1.0, 1.0],
+        );
+        // tenant 1 starves for real -> over-budget tenant 0 is masked
+        g.observe(1, Some(0), 6 * MS);
+        g.charge(0, 10 << 20, 6 * MS);
+        assert!(matches!(g.admit(0, 64 << 10, 0, 6 * MS), Admission::ThrottleUntil(_)));
+        // tenant 0's head is old (age > slo) but the wait is the
+        // gate's own doing: it must not register as starvation
+        g.observe(0, Some(0), 7 * MS);
+        // tenant 1 drains; no genuine breach signal remains
+        g.observe(1, None, 7 * MS);
+        g.charge(1, 10 << 20, 7 * MS);
+        assert_eq!(
+            g.admit(1, 64 << 10, 0, 7 * MS),
+            Admission::Admit,
+            "tenant 0's gate-masked wait must not throttle tenant 1"
+        );
+        // the throttled request's completion carries gate-imposed
+        // latency: it must not arm a breach pulse either
+        g.record_latency(0, 20 * MS, 20 * MS); // arrival 0 = the stalled request
+        assert_eq!(g.admit(1, 64 << 10, 0, 8 * MS), Admission::Admit);
+    }
+
+    #[test]
+    fn buckets_stay_within_bounds() {
+        let mut g = QosGate::new(&cfg(QosMode::Strict), &[2.0]);
+        let burst = g.burst(0);
+        let mut now = 0;
+        for i in 0..1000u64 {
+            now += (i * 37) % 100_000;
+            let _ = g.admit(0, (i * 997) % (1 << 20), i, now);
+            g.charge(0, (i * 31) % (1 << 18), now);
+            assert!(g.tokens(0) >= 0.0, "never negative");
+            assert!(g.tokens(0) <= burst, "never above burst");
+        }
+    }
+
+    #[test]
+    fn weight_scales_the_refill_rate() {
+        let c = cfg(QosMode::Strict);
+        let mut heavy = QosGate::new(&c, &[4.0]);
+        let mut light = QosGate::new(&c, &[1.0]);
+        for g in [&mut heavy, &mut light] {
+            g.charge(0, 64 << 10, 0); // empty both buckets
+        }
+        let wait_of = |g: &mut QosGate| match g.admit(0, 64 << 10, 0, 0) {
+            Admission::ThrottleUntil(t) => t,
+            Admission::Admit => 0,
+        };
+        let h = wait_of(&mut heavy);
+        let l = wait_of(&mut light);
+        assert!(h > 0 && l > 0 && h * 3 < l, "4x weight refills ~4x faster: {h} vs {l}");
+    }
+}

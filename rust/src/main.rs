@@ -11,7 +11,7 @@
 //! * `list`         — workloads, schemes, presets.
 
 use ips::cache;
-use ips::config::{presets, Config, MixKind, SchedKind, Scheme, MS};
+use ips::config::{presets, Config, MixKind, QosMode, SchedKind, Scheme, MS};
 use ips::coordinator::{experiment, fleet, ExpOptions};
 use ips::host::MultiTenantSimulator;
 use ips::sim::Simulator;
@@ -61,11 +61,23 @@ fn cli() -> Command {
                 .opt("threads", Some('j'), "N", "fleet worker threads", None)
                 .opt("config", Some('c'), "FILE", "TOML config overriding the preset", None)
                 .flag("fleet", None, "sweep the full (scheme x scheduler) cross-product")
+                .flag("partition", None, "per-tenant SLC cache slices (fleet: adds variants)")
+                .opt("reserved-frac", None, "F", "reserved fraction of the cache", None)
+                .opt("qos", None, "Q", "admission control: off|strict|slo", None)
+                .opt("qos-rate", None, "MBPS", "per-tenant sustained rate (MB/s)", None)
+                .opt("qos-burst", None, "KIB", "token-bucket burst budget (KiB)", None)
+                .opt("slo-p99", None, "MS", "victim p99 SLO target (ms, slo mode)", None)
                 .flag("verify", None, "run full consistency audits"),
         )
         .subcommand(
             Command::new("sweep", "ablation sweeps")
-                .opt("what", None, "W", "cache-size|idle-threshold|group-layers", Some("cache-size"))
+                .opt(
+                    "what",
+                    None,
+                    "W",
+                    "cache-size|idle-threshold|group-layers|device-qd",
+                    Some("cache-size"),
+                )
                 .opt("scale", None, "N", "geometry divisor", Some("8"))
                 .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
                 .opt("workload", Some('w'), "NAME", "workload", Some("HM_0")),
@@ -196,26 +208,71 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     if p.flag("verify") {
         cfg.sim.verify = true;
     }
+    if p.flag("partition") {
+        cfg.cache.partition.enabled = true;
+    }
+    if p.get("reserved-frac").is_some() {
+        cfg.cache.partition.reserved_frac = p.get_f64("reserved-frac").map_err(ips::Error::config)?;
+        cfg.cache.partition.enabled = true;
+    }
+    if let Some(q) = p.get("qos") {
+        cfg.host.qos.mode = QosMode::parse(q)?;
+    }
+    if p.get("qos-rate").is_some() {
+        cfg.host.qos.rate_mbps = p.get_f64("qos-rate").map_err(ips::Error::config)?;
+    }
+    if p.get("qos-burst").is_some() {
+        cfg.host.qos.burst_bytes = p.get_u64("qos-burst").map_err(ips::Error::config)? << 10;
+    }
+    if p.get("slo-p99").is_some() {
+        cfg.host.qos.slo_p99 =
+            (p.get_f64("slo-p99").map_err(ips::Error::config)? * 1e6) as u64;
+        // an SLO target implies the slo mode (explicit --qos wins)
+        if cfg.host.qos.mode == QosMode::Off {
+            cfg.host.qos.mode = QosMode::Slo;
+        }
+    }
+    // bucket parameters imply enforcement, like --reserved-frac
+    // implies --partition — otherwise they would be silently inert
+    if (p.get("qos-rate").is_some() || p.get("qos-burst").is_some())
+        && cfg.host.qos.mode == QosMode::Off
+    {
+        cfg.host.qos.mode = QosMode::Strict;
+    }
+    cfg.validate()?;
     // exact per-tenant percentiles need raw capture
     cfg.sim.latency_samples = cfg.sim.latency_samples.max(100_000);
     let scen = Scenario::parse(p.get("scenario").unwrap_or("bursty"))?;
 
     if p.flag("fleet") {
         let mix = cfg.host.mix;
+        // --partition or --qos turns the fleet into a paired
+        // shared-vs-isolated comparison (the isolated variants honor
+        // the requested QoS mode); otherwise it is the PR-1 shared
+        // sweep. Without this, an explicit --qos would be silently
+        // reset by IsolationVariant::Shared in every cell.
+        let variants = if cfg.cache.partition.enabled || cfg.host.qos.mode != QosMode::Off {
+            fleet::IsolationVariant::all().to_vec()
+        } else {
+            vec![fleet::IsolationVariant::Shared]
+        };
         let spec = fleet::FleetSpec {
             base: cfg,
             schemes: Scheme::all().to_vec(),
             scheds: SchedKind::all().to_vec(),
             mixes: vec![mix],
+            variants,
             scenario: scen,
             seed: opts.seed,
             threads: opts.threads,
         };
         let jobs = spec.jobs().len();
         println!(
-            "fleet: {jobs} runs ({} schemes x {} schedulers, mix {}, {} tenants, {} threads)",
+            "fleet: {jobs} runs ({} schemes x {} schedulers x {} variants, mix {}, \
+             {} tenants, {} threads)",
             spec.schemes.len(),
             spec.scheds.len(),
+            spec.variants.len(),
             mix.name(),
             spec.base.host.tenants,
             spec.threads
@@ -228,19 +285,23 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
 
     let mut sim = MultiTenantSimulator::new(cfg.clone())?;
     println!(
-        "multi-tenant: scheme={} scheduler={} mix={} tenants={} scenario={}",
+        "multi-tenant: scheme={} scheduler={} mix={} tenants={} scenario={} \
+         partition={} qos={}",
         scheme.name(),
         cfg.host.scheduler.name(),
         cfg.host.mix.name(),
         sim.tenants(),
         scen.name(),
+        cfg.cache.partition.enabled,
+        cfg.host.qos.mode.name(),
     );
     let s = sim.run(scen)?;
     print!("{}", fleet::tenant_table(&s).render());
     println!(
-        "device: wa {:.3}  background pages {}  sim end {}  wall {:.2?}",
+        "device: wa {:.3}  background pages {}  throttle stalls {}  sim end {}  wall {:.2?}",
         s.wa(),
         s.background.total_programs(),
+        s.total_throttle_stalls(),
         nanos(s.sim_end),
         s.wall_clock
     );
@@ -254,7 +315,7 @@ fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     let workload = p.get("workload").unwrap_or("HM_0").to_string();
     let what = p.get("what").unwrap_or("cache-size").to_string();
     let mut table = TextTable::new(&["point", "scheme", "mean_lat_ms", "wa"]);
-    let mut run_point = |label: String, cfg: Config| -> ips::Result<()> {
+    let run_point = |table: &mut TextTable, label: String, cfg: Config| -> ips::Result<()> {
         let mut sim = Simulator::new(cfg)?;
         let daily = experiment::workload_trace(&opts, &workload, sim.logical_bytes())?;
         let s = sim.run(&daily, Scenario::Daily)?;
@@ -272,22 +333,50 @@ fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
                 let mut cfg = experiment::exp_config(&opts, Scheme::Baseline);
                 cfg.cache.slc_cache_bytes =
                     ((cfg.cache.slc_cache_bytes as f64) * mult) as u64;
-                run_point(format!("cache x{mult}"), cfg)?;
+                run_point(&mut table, format!("cache x{mult}"), cfg)?;
             }
         }
         "idle-threshold" => {
             for ms_th in [10u64, 50, 100, 500, 2000] {
                 let mut cfg = experiment::exp_config(&opts, Scheme::IpsAgc);
                 cfg.cache.idle_threshold = ms_th * MS;
-                run_point(format!("idle {ms_th}ms"), cfg)?;
+                run_point(&mut table, format!("idle {ms_th}ms"), cfg)?;
             }
         }
         "group-layers" => {
             for layers in [1u32, 2, 4] {
                 let mut cfg = experiment::exp_config(&opts, Scheme::Ips);
                 cfg.cache.group_layers = layers;
-                run_point(format!("{layers} layers"), cfg)?;
+                run_point(&mut table, format!("{layers} layers"), cfg)?;
             }
+        }
+        "device-qd" => {
+            // multi-tenant: the device window is what makes dispatch
+            // order (and therefore the victims' tail) matter — so this
+            // ablation gets its own table with the victim p99 column
+            let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+            base.sim.latency_samples = 100_000;
+            let mut qd_table = TextTable::new(&[
+                "point",
+                "scheme",
+                "mean_lat_ms",
+                "victim_p99_ms",
+                "wa",
+            ]);
+            for (qd, s) in
+                fleet::device_qd_sweep(&base, Scenario::Bursty, &[1, 2, 4, 8, 16, 32])?
+            {
+                qd_table.row(vec![
+                    format!("qd {qd}"),
+                    s.scheme.clone(),
+                    format!("{:.3}", s.write_latency.mean() / 1e6),
+                    format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+                    format!("{:.3}", s.wa()),
+                ]);
+            }
+            println!("\n== ablation: device-qd (aggressor-victims mix) ==");
+            print!("{}", qd_table.render());
+            return Ok(());
         }
         other => return Err(ips::Error::config(format!("unknown sweep {other:?}"))),
     }

@@ -33,6 +33,18 @@ pub struct TenantStats {
     pub ledger: Ledger,
     /// Bytes this tenant wrote.
     pub host_bytes_written: u64,
+    /// Reserved SLC-cache slice in pages (0 when partitioning is off).
+    pub cache_reserved_pages: u64,
+    /// Peak SLC-cache occupancy over the run, in pages (0 when
+    /// partitioning is off — the shared cache tracks no owners).
+    pub cache_occupancy_peak: u64,
+    /// Host page writes denied a new SLC-cache allocation by the
+    /// partitioner (degraded to reprogram or TLC).
+    pub slc_denied_pages: u64,
+    /// Distinct requests the QoS gate throttled.
+    pub throttle_stalls: u64,
+    /// Estimated delay the QoS gate imposed on this tenant (ns).
+    pub throttle_stall_ns: u64,
 }
 
 impl TenantStats {
@@ -53,6 +65,11 @@ impl TenantStats {
             bandwidth: BandwidthTimeline::new(bandwidth_window),
             ledger: Ledger::default(),
             host_bytes_written: 0,
+            cache_reserved_pages: 0,
+            cache_occupancy_peak: 0,
+            slc_denied_pages: 0,
+            throttle_stalls: 0,
+            throttle_stall_ns: 0,
         }
     }
 

@@ -55,6 +55,10 @@ pub struct Harness {
     pub measure_time: Duration,
     /// Warmup time before measuring.
     pub warmup_time: Duration,
+    /// Smoke mode (`IPS_BENCH_SMOKE=1`): run each benchmark exactly
+    /// once with no warmup — CI uses this to catch bench bit-rot at PR
+    /// time without paying for real measurements.
+    pub smoke: bool,
     results: Vec<Stats>,
 }
 
@@ -78,10 +82,12 @@ impl Harness {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(300u64);
+        let smoke = std::env::var("IPS_BENCH_SMOKE").map(|s| s == "1").unwrap_or(false);
         Harness {
             filter,
             measure_time: Duration::from_millis(measure_ms),
             warmup_time: Duration::from_millis(warmup_ms),
+            smoke,
             results: Vec::new(),
         }
     }
@@ -96,6 +102,24 @@ impl Harness {
     /// written per iteration).
     pub fn bench<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) {
         if !self.enabled(name) {
+            return;
+        }
+        if self.smoke {
+            // one timed run, no warmup: existence proof, not measurement
+            let t0 = Instant::now();
+            f();
+            let d = t0.elapsed();
+            let stats = Stats {
+                name: name.to_string(),
+                iters: 1,
+                mean: d,
+                median: d,
+                p95: d,
+                min: d,
+                items_per_iter: items,
+            };
+            self.report_line(&stats);
+            self.results.push(stats);
             return;
         }
         // Warmup and calibration: find how many iters fit the budget.
@@ -183,6 +207,7 @@ mod tests {
             filter: None,
             measure_time: Duration::from_millis(20),
             warmup_time: Duration::from_millis(5),
+            smoke: false,
             results: Vec::new(),
         };
         let mut acc = 0u64;
@@ -204,12 +229,28 @@ mod tests {
             filter: Some("match-me".into()),
             measure_time: Duration::from_millis(5),
             warmup_time: Duration::from_millis(1),
+            smoke: false,
             results: Vec::new(),
         };
         h.bench("other", None, || {});
         assert!(h.results().is_empty());
         h.bench("yes-match-me", None, || {});
         assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn smoke_mode_runs_exactly_once() {
+        let mut h = Harness {
+            filter: None,
+            measure_time: Duration::from_millis(5000),
+            warmup_time: Duration::from_millis(5000),
+            smoke: true,
+            results: Vec::new(),
+        };
+        let mut calls = 0u32;
+        h.bench("smoke", Some(1), || calls += 1);
+        assert_eq!(calls, 1, "smoke mode never warms up or repeats");
+        assert_eq!(h.results()[0].iters, 1);
     }
 
     #[test]

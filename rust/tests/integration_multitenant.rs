@@ -113,6 +113,7 @@ fn fleet_sweep_is_thread_count_invariant() {
         schemes: vec![Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc],
         scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
         mixes: vec![MixKind::AggressorVictims],
+        variants: vec![ips::coordinator::fleet::IsolationVariant::Shared],
         scenario: Scenario::Bursty,
         seed: 1234,
         threads,

@@ -1,0 +1,257 @@
+//! Integration tests for per-tenant SLC-cache partitioning + QoS
+//! admission control:
+//!
+//! * the **differential** guarantee — a partitioned config with a
+//!   single tenant owning 100% of the cache produces byte-identical
+//!   metrics to the shared-cache path, for every scheme (this guards
+//!   the gated-write refactor of all four cache schemes);
+//! * the **headline** — under aggressor+victims, victim p99 with
+//!   partitioning+QoS sits strictly below the shared-cache victim
+//!   p99, and the aggressor is the only throttled tenant;
+//! * the device-QD ablation sweep runs end to end in smoke form.
+
+use ips::config::{MixKind, QosMode, SchedKind, Scheme};
+use ips::coordinator::fleet::{device_qd_sweep, summary_table, IsolationVariant};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::trace::scenario::Scenario;
+
+fn base_cfg(scheme: Scheme) -> ips::config::Config {
+    let mut cfg = ips::config::presets::small();
+    cfg.cache.scheme = scheme;
+    cfg.cache.slc_cache_bytes = 1 << 20;
+    cfg.host.tenants = 4;
+    cfg.host.scheduler = SchedKind::Fifo;
+    cfg.host.mix = MixKind::AggressorVictims;
+    cfg.host.aggressor_cache_mult = 4.0;
+    cfg.host.victim_req_bytes = 4096;
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000;
+    cfg
+}
+
+/// The metric surface two runs must agree on to count as identical.
+fn metrics_fingerprint(s: &MultiTenantSummary) -> String {
+    let mut out = format!(
+        "ledger={:?} background={:?} sim_end={} host_bytes={} writes={} reads={} \
+         w_mean={} w_p50={} w_p99={} r_p99={}",
+        s.ledger,
+        s.background,
+        s.sim_end,
+        s.host_bytes_written,
+        s.write_latency.count(),
+        s.read_latency.count(),
+        s.write_latency.mean().to_bits(),
+        s.write_latency.percentile_best(0.50),
+        s.write_latency.percentile_best(0.99),
+        s.read_latency.percentile_best(0.99),
+    );
+    for t in &s.tenants {
+        out.push_str(&format!(
+            " [{} ledger={:?} bytes={} mean={} p50={} p99={}]",
+            t.name,
+            t.ledger,
+            t.host_bytes_written,
+            t.mean_write_latency().to_bits(),
+            t.p50_write_latency(),
+            t.p99_write_latency(),
+        ));
+    }
+    out
+}
+
+#[test]
+fn single_tenant_full_partition_is_byte_identical_to_shared() {
+    for scheme in Scheme::all() {
+        let mut shared = base_cfg(scheme);
+        shared.host.tenants = 1;
+        shared.cache.partition.enabled = false;
+
+        let mut owned = shared.clone();
+        owned.cache.partition.enabled = true;
+        owned.cache.partition.reserved_frac = 1.0; // the tenant owns 100%
+
+        let a = MultiTenantSimulator::run_once(shared, Scenario::Bursty)
+            .unwrap_or_else(|e| panic!("{scheme:?} shared: {e}"));
+        let b = MultiTenantSimulator::run_once(owned, Scenario::Bursty)
+            .unwrap_or_else(|e| panic!("{scheme:?} partitioned: {e}"));
+        assert!(!a.partitioned);
+        // tlc-only has no cache to partition, so its partitioner
+        // reports itself disabled even when asked for
+        assert_eq!(b.partitioned, scheme != Scheme::TlcOnly, "{scheme:?}");
+        assert_eq!(
+            metrics_fingerprint(&a),
+            metrics_fingerprint(&b),
+            "{scheme:?}: a sole tenant owning the whole cache must be \
+             indistinguishable from the shared-cache path"
+        );
+    }
+}
+
+#[test]
+fn single_tenant_differential_holds_in_daily_scenario_too() {
+    // idle-time background work (reclamation, AGC) goes through the
+    // partitioner's background accounting — it must not disturb the
+    // differential either
+    for scheme in [Scheme::Baseline, Scheme::IpsAgc, Scheme::Coop] {
+        let mut shared = base_cfg(scheme);
+        shared.host.tenants = 1;
+        shared.host.mix = MixKind::Uniform;
+        shared.cache.idle_threshold = ips::config::MS;
+        shared.cache.partition.enabled = false;
+        let mut owned = shared.clone();
+        owned.cache.partition.enabled = true;
+        owned.cache.partition.reserved_frac = 1.0;
+        let a = MultiTenantSimulator::run_once(shared, Scenario::Daily).unwrap();
+        let b = MultiTenantSimulator::run_once(owned, Scenario::Daily).unwrap();
+        assert_eq!(metrics_fingerprint(&a), metrics_fingerprint(&b), "{scheme:?} daily");
+    }
+}
+
+fn qos_cfg(scheme: Scheme) -> ips::config::Config {
+    let mut cfg = base_cfg(scheme);
+    cfg.cache.partition.enabled = true;
+    cfg.cache.partition.reserved_frac = 0.75;
+    cfg.host.qos.mode = QosMode::Strict;
+    // well under the small geometry's SLC bandwidth (~32 MB/s), well
+    // over any victim's offered load (~2 MB/s)
+    cfg.host.qos.rate_mbps = 8.0;
+    cfg.host.qos.burst_bytes = 256 << 10;
+    cfg
+}
+
+#[test]
+fn partition_plus_qos_beats_shared_victim_p99_and_throttles_only_the_aggressor() {
+    for scheme in [Scheme::Baseline, Scheme::Ips] {
+        let shared = {
+            let cfg = base_cfg(scheme);
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        let isolated = {
+            let cfg = qos_cfg(scheme);
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        // identical offered load either way
+        assert_eq!(shared.host_bytes_written, isolated.host_bytes_written);
+        assert!(
+            isolated.max_victim_p99() < shared.max_victim_p99(),
+            "{scheme:?}: partitioned+qos victim p99 {} must sit strictly below shared {}",
+            isolated.max_victim_p99(),
+            shared.max_victim_p99()
+        );
+        // the aggressor is the only throttled tenant
+        assert_eq!(
+            isolated.throttled_tenants(),
+            vec!["aggressor"],
+            "{scheme:?}: victims stay within budget and are never stalled"
+        );
+        let agg = isolated.tenant("aggressor").unwrap();
+        assert!(agg.throttle_stalls > 0, "{scheme:?}: the aggressor was actually held back");
+        assert!(agg.throttle_stall_ns > 0);
+        // nobody was throttled in the shared run (QoS was off)
+        assert_eq!(shared.total_throttle_stalls(), 0);
+    }
+}
+
+#[test]
+fn partitioning_protects_the_victims_reserved_slices() {
+    let mut cfg = base_cfg(Scheme::Baseline);
+    cfg.cache.partition.enabled = true;
+    cfg.cache.partition.reserved_frac = 0.75;
+    let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+    assert!(s.partitioned);
+    assert!(s.cache_capacity_pages > 0);
+    let agg = s.tenant("aggressor").unwrap();
+    // the burst overflows the aggressor's slice: allocations denied
+    assert!(agg.slc_denied_pages > 0, "the aggressor hit its slice limit");
+    // per-tenant occupancies never exceeded slice + whole shared pool
+    let shared_pool: u64 =
+        s.cache_capacity_pages - s.tenants.iter().map(|t| t.cache_reserved_pages).sum::<u64>();
+    for t in &s.tenants {
+        assert!(t.cache_reserved_pages > 0, "{} owns a slice", t.name);
+        assert!(
+            t.cache_occupancy_peak <= t.cache_reserved_pages + shared_pool,
+            "{}: peak {} within slice {} + shared {}",
+            t.name,
+            t.cache_occupancy_peak,
+            t.cache_reserved_pages,
+            shared_pool
+        );
+    }
+    // attribution still closes under partitioning
+    let mut sum = ips::metrics::Ledger::default();
+    for t in &s.tenants {
+        sum.merge(&t.ledger);
+    }
+    sum.merge(&s.background);
+    assert_eq!(sum, s.ledger, "partitioning must not leak attribution");
+}
+
+#[test]
+fn slo_mode_is_quiet_when_targets_hold_and_bites_when_they_do_not() {
+    // a generous SLO no victim ever violates: no throttling at all
+    let mut cfg = qos_cfg(Scheme::Baseline);
+    cfg.host.qos.mode = QosMode::Slo;
+    cfg.host.qos.slo_p99 = 3_600_000 * ips::config::MS; // one hour
+    let quiet = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+    assert_eq!(
+        quiet.total_throttle_stalls(),
+        0,
+        "work-conserving: no stalls while every tenant meets the SLO"
+    );
+    // a tight SLO the aggressor's backlog breaks: enforcement kicks in
+    let mut cfg = qos_cfg(Scheme::Baseline);
+    cfg.host.qos.mode = QosMode::Slo;
+    cfg.host.qos.slo_p99 = 10 * ips::config::MS;
+    let tight = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+    assert!(tight.total_throttle_stalls() > 0, "SLO breach triggers throttling");
+    assert_eq!(tight.throttled_tenants(), vec!["aggressor"]);
+}
+
+#[test]
+fn device_qd_ablation_smoke() {
+    // the ROADMAP ablation in CI-sized form: every point runs, load is
+    // constant, and the per-point summaries render
+    let mut base = ips::config::presets::small();
+    base.cache.slc_cache_bytes = 1 << 20;
+    base.host.tenants = 3;
+    base.host.aggressor_cache_mult = 2.0;
+    base.sim.latency_samples = 100_000;
+    let points = device_qd_sweep(&base, Scenario::Bursty, &[1, 8]).unwrap();
+    assert_eq!(points.len(), 2);
+    // identical offered load and request population at every depth —
+    // the window only changes *when* things dispatch, never *what*
+    assert_eq!(points[0].1.host_bytes_written, points[1].1.host_bytes_written);
+    assert_eq!(points[0].1.write_latency.count(), points[1].1.write_latency.count());
+    for (qd, s) in &points {
+        assert!(s.max_victim_p99() > 0, "qd {qd} measured victim tails");
+    }
+    let summaries: Vec<MultiTenantSummary> = points.into_iter().map(|(_, s)| s).collect();
+    let rendered = summary_table(&summaries).render();
+    assert!(rendered.contains("victim_p99_ms"));
+}
+
+#[test]
+fn variant_axis_reports_match_their_configs() {
+    // one cell per variant through the raw engine, labels intact
+    for variant in IsolationVariant::all() {
+        let mut cfg = base_cfg(Scheme::Baseline);
+        cfg.host.qos.rate_mbps = 8.0;
+        cfg.host.qos.burst_bytes = 256 << 10;
+        variant.apply(&mut cfg);
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        match variant {
+            IsolationVariant::Shared => {
+                assert!(!s.partitioned);
+                assert_eq!(s.qos_mode, "off");
+            }
+            IsolationVariant::Partitioned => {
+                assert!(s.partitioned);
+                assert_eq!(s.qos_mode, "off");
+            }
+            IsolationVariant::PartitionedQos => {
+                assert!(s.partitioned);
+                assert_eq!(s.qos_mode, "strict");
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Property tests for the cache partitioner and the QoS token
+//! buckets, with shrinking on the generated tenant mix:
+//!
+//! * per-tenant slice occupancies always sum to ≤ the cache capacity;
+//! * reserved slices are never cross-evicted (a tenant with headroom
+//!   in its own slice is always granted an SLC allocation);
+//! * token buckets never go negative (and never exceed their burst);
+//! * full multi-tenant runs under any isolation variant still conserve
+//!   the attribution ledger.
+
+use ips::cache::{CacheGrant, CachePartitioner};
+use ips::config::{presets, MixKind, QosConfig, QosMode, SchedKind, Scheme};
+use ips::coordinator::fleet::IsolationVariant;
+use ips::host::{MultiTenantSimulator, QosGate};
+use ips::metrics::{Attribution, Ledger};
+use ips::trace::scenario::Scenario;
+use ips::util::prop::{self, Gen};
+use ips::util::rng::Rng;
+
+/// A generated tenant mix + allocation-event script for the
+/// partitioner: weights per tenant, a capacity, a reserved fraction,
+/// and a sequence of (tenant, event) pairs where the event is an SLC
+/// allocation attempt, a reprogram write, a background release, or a
+/// reclamation.
+#[derive(Clone, Debug)]
+struct PartitionScript {
+    weights: Vec<f64>,
+    capacity: u64,
+    reserved_pct: u64,
+    by_weight: bool,
+    ops: Vec<(u8, u8)>,
+}
+
+struct PartitionGen;
+
+impl Gen for PartitionGen {
+    type Value = PartitionScript;
+    fn gen(&self, rng: &mut Rng) -> PartitionScript {
+        let tenants = rng.range(1, 6) as usize;
+        PartitionScript {
+            weights: (0..tenants).map(|_| 0.5 + rng.f64() * 4.0).collect(),
+            capacity: rng.range(4, 400),
+            reserved_pct: rng.range(0, 100),
+            by_weight: rng.chance(0.5),
+            ops: (0..rng.range(0, 300) as usize)
+                .map(|_| (rng.below(8) as u8, rng.below(4) as u8))
+                .collect(),
+        }
+    }
+    fn shrink(&self, v: &PartitionScript) -> Vec<PartitionScript> {
+        let mut out = Vec::new();
+        if !v.ops.is_empty() {
+            let mut w = v.clone();
+            w.ops.truncate(v.ops.len() / 2);
+            out.push(w);
+            let mut w = v.clone();
+            w.ops.pop();
+            out.push(w);
+        }
+        if v.weights.len() > 1 {
+            let mut w = v.clone();
+            w.weights.pop();
+            out.push(w);
+        }
+        if v.reserved_pct > 0 {
+            let mut w = v.clone();
+            w.reserved_pct /= 2;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn build(script: &PartitionScript) -> CachePartitioner {
+    let mut cfg = presets::small();
+    cfg.cache.partition.enabled = true;
+    cfg.cache.partition.reserved_frac = script.reserved_pct as f64 / 100.0;
+    cfg.cache.partition.by_weight = script.by_weight;
+    CachePartitioner::new(&cfg, &script.weights, script.capacity)
+}
+
+#[test]
+fn occupancies_sum_to_at_most_capacity_and_reserved_is_never_cross_evicted() {
+    prop::check("partitioner invariants", 256, PartitionGen, |script| {
+        let n = script.weights.len();
+        let mut p = build(script);
+        // static sanity: slices fit the capacity
+        let reserved_sum: u64 = (0..n).map(|t| p.reserved(t)).sum();
+        if reserved_sum > p.capacity() {
+            return Err(format!("reserved {reserved_sum} > capacity {}", p.capacity()));
+        }
+        for (step, &(traw, ev)) in script.ops.iter().enumerate() {
+            let t = traw as usize % n;
+            let contended = step % 2 == 0;
+            let mut diff = Ledger::default();
+            match ev {
+                // an SLC allocation attempt, honoring the grant like
+                // the engine does
+                0 => match p.grant(t, contended) {
+                    CacheGrant::Slc => diff.program(Attribution::SlcCacheWrite),
+                    CacheGrant::Reprogram => diff.program(Attribution::ReprogramHost),
+                    CacheGrant::Tlc => diff.program(Attribution::TlcDirectWrite),
+                },
+                // a host-driven reprogram
+                1 => diff.program(Attribution::ReprogramHost),
+                // background reclamation of up to 3 pages
+                2 => {
+                    diff.slc2tlc_migrations = (step % 3) as u64 + 1;
+                    p.charge_background(&diff);
+                    diff = Ledger::default();
+                }
+                // an AGC reprogram feeding the window
+                _ => diff.program(Attribution::AgcReprogram),
+            }
+            p.charge(t, &diff);
+            // invariant 1: occupancies sum to ≤ capacity
+            if p.total_occupancy() > p.capacity() {
+                return Err(format!(
+                    "step {step}: total occupancy {} > capacity {}",
+                    p.total_occupancy(),
+                    p.capacity()
+                ));
+            }
+            // invariant 2: reserved slices are never cross-evicted — a
+            // tenant below its reservation always gets an SLC grant
+            for v in 0..n {
+                if p.occupancy(v) < p.reserved(v) && p.reserved(v) < p.capacity() {
+                    let g = p.grant(v, true);
+                    if g != CacheGrant::Slc {
+                        return Err(format!(
+                            "step {step}: tenant {v} has {}/{} of its slice but was \
+                             granted {g:?}",
+                            p.occupancy(v),
+                            p.reserved(v)
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A generated token-bucket exercise: weights, a config, and a script
+/// of (tenant, dt, bytes, kind) events.
+#[derive(Clone, Debug)]
+struct BucketScript {
+    weights: Vec<f64>,
+    rate_mbps: f64,
+    burst_kib: u64,
+    ops: Vec<(u8, u32, u32, u8)>,
+}
+
+struct BucketGen;
+
+impl Gen for BucketGen {
+    type Value = BucketScript;
+    fn gen(&self, rng: &mut Rng) -> BucketScript {
+        let tenants = rng.range(1, 5) as usize;
+        BucketScript {
+            weights: (0..tenants).map(|_| 0.25 + rng.f64() * 4.0).collect(),
+            rate_mbps: 1.0 + rng.f64() * 100.0,
+            burst_kib: rng.range(4, 2048),
+            ops: (0..rng.range(1, 400) as usize)
+                .map(|_| {
+                    (
+                        rng.below(8) as u8,
+                        rng.below(5_000_000) as u32,
+                        rng.below(1 << 21) as u32,
+                        rng.below(3) as u8,
+                    )
+                })
+                .collect(),
+        }
+    }
+    fn shrink(&self, v: &BucketScript) -> Vec<BucketScript> {
+        let mut out = Vec::new();
+        if !v.ops.is_empty() {
+            let mut w = v.clone();
+            w.ops.truncate(v.ops.len() / 2);
+            out.push(w);
+            let mut w = v.clone();
+            w.ops.pop();
+            out.push(w);
+        }
+        out
+    }
+}
+
+#[test]
+fn token_buckets_never_go_negative_nor_above_burst() {
+    prop::check("token-bucket bounds", 256, BucketGen, |script| {
+        let cfg = QosConfig {
+            mode: QosMode::Strict,
+            rate_mbps: script.rate_mbps,
+            burst_bytes: script.burst_kib << 10,
+            slo_p99: 50_000_000,
+        };
+        let mut gate = QosGate::new(&cfg, &script.weights);
+        let n = script.weights.len();
+        let mut now = 0u64;
+        for &(traw, dt, bytes, kind) in &script.ops {
+            let t = traw as usize % n;
+            now += dt as u64;
+            match kind {
+                0 => {
+                    let _ = gate.admit(t, bytes as u64, now, now);
+                }
+                1 => gate.charge(t, bytes as u64, now),
+                _ => gate.record_latency(t, dt as u64, now),
+            }
+            for v in 0..n {
+                let tokens = gate.tokens(v);
+                if tokens < 0.0 {
+                    return Err(format!("tenant {v} bucket went negative: {tokens}"));
+                }
+                if tokens > gate.burst(v) + 1e-6 {
+                    return Err(format!(
+                        "tenant {v} bucket {tokens} above burst {}",
+                        gate.burst(v)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-engine property: random (scheme, scheduler, mix, variant)
+/// draws conserve the attribution ledger and keep the partitioner's
+/// per-tenant reporting consistent.
+#[test]
+fn random_isolated_runs_conserve_attribution() {
+    let schemes = [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop];
+    let scheds = SchedKind::all();
+    let mixes = MixKind::all();
+    let variants = IsolationVariant::all();
+    prop::check(
+        "isolated attribution conservation",
+        10,
+        prop::vec_of(prop::usize_in(0, 1000), 4, 4),
+        |draw| {
+            let scheme = schemes[draw[0] % schemes.len()];
+            let sched = scheds[draw[1] % scheds.len()];
+            let mix = mixes[draw[2] % mixes.len()];
+            let variant = variants[draw[3] % variants.len()];
+            let mut cfg = presets::small();
+            cfg.cache.scheme = scheme;
+            cfg.cache.slc_cache_bytes = 1 << 20;
+            cfg.host.tenants = 3;
+            cfg.host.scheduler = sched;
+            cfg.host.mix = mix;
+            cfg.host.aggressor_cache_mult = 1.5;
+            cfg.host.qos.rate_mbps = 8.0;
+            cfg.host.qos.burst_bytes = 128 << 10;
+            cfg.sim.verify = true;
+            cfg.sim.seed = (draw[0] * 31 + draw[1] * 7 + draw[2] * 3 + draw[3]) as u64;
+            variant.apply(&mut cfg);
+            let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty)
+                .map_err(|e| format!("{scheme:?}/{sched:?}/{mix:?}/{variant:?}: {e}"))?;
+            let mut sum = Ledger::default();
+            for t in &s.tenants {
+                sum.merge(&t.ledger);
+            }
+            sum.merge(&s.background);
+            if sum != s.ledger {
+                return Err(format!(
+                    "{scheme:?}/{sched:?}/{mix:?}/{variant:?}: attribution leak"
+                ));
+            }
+            if s.write_latency.count() == 0 {
+                return Err("no writes served".into());
+            }
+            // partition reporting is internally consistent
+            if s.partitioned {
+                let reserved: u64 = s.tenants.iter().map(|t| t.cache_reserved_pages).sum();
+                if reserved > s.cache_capacity_pages {
+                    return Err(format!(
+                        "reserved {reserved} > capacity {}",
+                        s.cache_capacity_pages
+                    ));
+                }
+            } else if s.tenants.iter().any(|t| t.cache_reserved_pages != 0) {
+                return Err("shared run reports reserved slices".into());
+            }
+            Ok(())
+        },
+    );
+}
