@@ -3,7 +3,7 @@
 //! device-side queue depth (`host.device_qd`) that decides how much a
 //! scheduler's dispatch order can matter to the victims' tail.
 use ips::config::{Scheme, MS};
-use ips::coordinator::fleet::device_qd_sweep;
+use ips::coordinator::fleet::{device_qd_sweep, qd_joint_sweep};
 use ips::coordinator::{experiment, ExpOptions};
 use ips::sim::Simulator;
 use ips::trace::scenario::Scenario;
@@ -65,5 +65,32 @@ fn main() {
             }
         }
     }
+    // joint host-SQ × device-window ablation (ROADMAP): the two
+    // windows interact — only the device side was swept before
+    {
+        let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+        base.host.tenants = 4;
+        base.sim.latency_samples = 100_000;
+        let sqs = [1usize, 8, 64];
+        let qds = [1usize, 4, 16];
+        let mut points = Vec::new();
+        h.bench("ablation/qd-joint/sweep", Some((sqs.len() * qds.len()) as u64), || {
+            points = qd_joint_sweep(&base, Scenario::Bursty, &sqs, &qds).unwrap();
+        });
+        if !points.is_empty() {
+            println!("\n== ablation: qd-joint (aggressor+victims, fifo) ==");
+            for (sq, qd, s) in &points {
+                println!(
+                    "  sq {:>2} x qd {:>2}: device p99 {:>9.3} ms  victim p99 {:>9.3} ms  wa {:.3}",
+                    sq,
+                    qd,
+                    s.write_latency.percentile_best(0.99) as f64 / 1e6,
+                    s.max_victim_p99() as f64 / 1e6,
+                    s.wa()
+                );
+            }
+        }
+    }
+
     h.finish();
 }

@@ -2,12 +2,13 @@
 //! mix through each scheduler on baseline vs IPS, per-run timing +
 //! simulated-request throughput, plus the fleet runner's parallel
 //! speedup over serial execution.
-use ips::config::{MixKind, SchedKind, Scheme};
-use ips::coordinator::fleet::{run_fleet, FleetSpec, IsolationVariant};
+use ips::config::{AttributionMode, MixKind, SchedKind, Scheme};
+use ips::coordinator::fleet::{run_fleet, summary_json, FleetSpec, IsolationVariant};
 use ips::coordinator::{experiment, ExpOptions};
 use ips::host::MultiTenantSimulator;
 use ips::trace::scenario::Scenario;
 use ips::util::bench::{black_box, Harness};
+use ips::util::golden;
 
 fn main() {
     let mut h = Harness::new();
@@ -37,6 +38,7 @@ fn main() {
     }
 
     // fleet fan-out: serial vs all-cores over the same 2x3 sweep
+    let mut last_fleet = Vec::new();
     for (label, threads) in [("fleet/serial", 1usize), ("fleet/parallel", 0)] {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -45,20 +47,28 @@ fn main() {
         };
         let mut base = experiment::exp_config(&opts, Scheme::Baseline);
         base.host.tenants = 4;
+        base.sim.latency_samples = 100_000;
         let spec = FleetSpec {
             base,
             schemes: vec![Scheme::Baseline, Scheme::Ips],
             scheds: SchedKind::all().to_vec(),
             mixes: vec![MixKind::AggressorVictims],
             variants: vec![IsolationVariant::Shared],
+            attributions: vec![AttributionMode::Proportional],
             scenario: Scenario::Bursty,
             seed: 42,
             threads,
         };
         let cells = spec.jobs().len() as u64;
         h.bench(label, Some(cells), || {
-            black_box(run_fleet(&spec).unwrap());
+            last_fleet = run_fleet(&spec).unwrap();
+            black_box(last_fleet.len());
         });
+    }
+
+    // golden regression gate under smoke mode (see fig_partition)
+    if std::env::var("IPS_BENCH_SMOKE").as_deref() == Ok("1") && !last_fleet.is_empty() {
+        golden::check_and_report("fig_multitenant", &summary_json(&last_fleet));
     }
 
     h.finish();

@@ -5,12 +5,15 @@
 //! partitioned+QoS must sit strictly below the shared-cache victim
 //! p99. Also times one cell per variant so isolation overhead on the
 //! hot dispatch path stays visible.
-use ips::config::{MixKind, QosMode, SchedKind, Scheme};
-use ips::coordinator::fleet::{run_fleet, summary_table, FleetSpec, IsolationVariant};
+use ips::config::{AttributionMode, MixKind, QosMode, SchedKind, Scheme};
+use ips::coordinator::fleet::{
+    run_fleet, summary_json, summary_table, FleetSpec, IsolationVariant,
+};
 use ips::coordinator::{experiment, ExpOptions};
 use ips::host::{MultiTenantSimulator, MultiTenantSummary};
 use ips::trace::scenario::Scenario;
 use ips::util::bench::{black_box, Harness};
+use ips::util::golden;
 
 fn is_variant(s: &MultiTenantSummary, v: IsolationVariant) -> bool {
     // anchored to the one variant mapping: MultiTenantSummary::variant_name
@@ -47,8 +50,9 @@ fn main() {
         });
     }
 
-    // the figure: (baseline, ips) × all PR-1 mixes × all variants,
-    // paired seeds so every comparison is apples-to-apples
+    // the figure: (baseline, ips) × all PR-1 mixes × all variants ×
+    // both attribution modes, paired seeds so every comparison is
+    // apples-to-apples
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let spec = FleetSpec {
         base: tuned(Scheme::Baseline),
@@ -56,6 +60,7 @@ fn main() {
         scheds: vec![SchedKind::Fifo],
         mixes: MixKind::all().to_vec(),
         variants: IsolationVariant::all().to_vec(),
+        attributions: AttributionMode::all().to_vec(),
         scenario: Scenario::Bursty,
         seed: 42,
         threads,
@@ -72,6 +77,13 @@ fn main() {
         println!("\n== fig_partition: shared vs partitioned vs partitioned+qos ==");
         print!("{}", summary_table(&results).render());
 
+        // smoke mode doubles as the golden regression gate: the sim is
+        // deterministic, so the summary rows must match the committed
+        // snapshot byte-for-byte (attribution drift fails CI here)
+        if std::env::var("IPS_BENCH_SMOKE").as_deref() == Ok("1") {
+            golden::check_and_report("fig_partition", &summary_json(&results));
+        }
+
         println!("\nvictim p99 (aggressor+victims, fifo):");
         for scheme in [Scheme::Baseline, Scheme::Ips] {
             let get = |v: IsolationVariant| {
@@ -80,6 +92,7 @@ fn main() {
                     .find(|s| {
                         s.scheme == scheme.name()
                             && s.mix == MixKind::AggressorVictims.name()
+                            && s.attribution == "proportional"
                             && is_variant(s, v)
                     })
                     .expect("fleet covered every variant")

@@ -119,8 +119,21 @@ impl Baseline {
 
     /// Reclaim one used block (atomic unit); returns erase completion.
     fn reclaim_one(&mut self, ftl: &mut Ftl, plane: u32, now: Nanos) -> Result<Option<Nanos>> {
+        self.reclaim_at(ftl, plane, 0, now)
+    }
+
+    /// Reclaim the used block at queue index `idx` (atomic unit). Index
+    /// 0 is the FIFO front — `reclaim_one`'s behaviour; the per-tenant
+    /// eviction hook targets deeper entries.
+    fn reclaim_at(
+        &mut self,
+        ftl: &mut Ftl,
+        plane: u32,
+        idx: usize,
+        now: Nanos,
+    ) -> Result<Option<Nanos>> {
         let pool = &mut self.pools[plane as usize];
-        let addr = match pool.used.pop_front() {
+        let addr = match pool.used.remove(idx) {
             Some(a) => a,
             None => return Ok(None),
         };
@@ -290,6 +303,47 @@ impl CachePolicy for Baseline {
 
     fn slc_capacity_pages(&self, _ftl: &Ftl) -> u64 {
         self.total_slc_pages
+    }
+
+    fn evict_tenant_blocks(
+        &mut self,
+        ftl: &mut Ftl,
+        tenant: u16,
+        now: Nanos,
+        deadline: Nanos,
+    ) -> Result<Nanos> {
+        // Candidates are used blocks `tenant` MAJORITY-owns (≥ half the
+        // valid pages): reclaiming a block the tenant barely touches
+        // would migrate the neighbours' in-reserve cached data — the
+        // cross-eviction the partition invariants forbid. Blocks are
+        // scored once (reclaiming one block never adds the tenant's
+        // pages to another) and reclaimed most-owned first; the stable
+        // sort keeps FIFO order — i.e. coldest first — on ties. Atomic
+        // units issue while there is idle time left, like idle_work.
+        let mut candidates: Vec<(u32, usize, BlockAddr)> = Vec::new();
+        for (pi, pool) in self.pools.iter().enumerate() {
+            for &addr in &pool.used {
+                let owned = ftl.owned_valid_in_block(addr, tenant);
+                if owned > 0 && 2 * owned >= ftl.array.block(addr).valid_count() {
+                    candidates.push((owned, pi, addr));
+                }
+            }
+        }
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut t = now;
+        for (_, pi, addr) in candidates {
+            if t >= deadline {
+                break;
+            }
+            let qi = match self.pools[pi].used.iter().position(|&a| a == addr) {
+                Some(q) => q,
+                None => continue,
+            };
+            if let Some(end) = self.reclaim_at(ftl, pi as u32, qi, t)? {
+                t = t.max(end);
+            }
+        }
+        Ok(t)
     }
 
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {

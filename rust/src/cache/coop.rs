@@ -175,6 +175,18 @@ impl CachePolicy for Coop {
         self.ips.slc_capacity_pages(ftl) + self.trad.slc_capacity_pages(ftl)
     }
 
+    fn evict_tenant_blocks(
+        &mut self,
+        ftl: &mut Ftl,
+        tenant: u16,
+        now: Nanos,
+        deadline: Nanos,
+    ) -> Result<Nanos> {
+        // Only the traditional part holds whole reclaimable blocks; the
+        // IPS part converts in place and has nothing to evict.
+        self.trad.evict_tenant_blocks(ftl, tenant, now, deadline)
+    }
+
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos> {
         let mut t = now;
         while t < deadline {

@@ -62,6 +62,24 @@ pub trait CachePolicy: Send {
     /// advances.
     fn slc_capacity_pages(&self, ftl: &Ftl) -> u64;
 
+    /// Per-tenant eviction hook: reclaim cache blocks dominated by
+    /// `tenant`'s pages inside an idle window `[now, deadline)`, so a
+    /// slice-over-budget tenant evicts *its own* coldest blocks first
+    /// instead of waiting for FIFO reclamation to reach them. Invoked
+    /// by the multi-tenant engine under owner attribution (the owner
+    /// side table is what makes "whose block is this" answerable);
+    /// schemes without reclaimable per-tenant blocks keep the no-op
+    /// default. Returns the time the last issued step completes.
+    fn evict_tenant_blocks(
+        &mut self,
+        _ftl: &mut Ftl,
+        _tenant: u16,
+        now: Nanos,
+        _deadline: Nanos,
+    ) -> Result<Nanos> {
+        Ok(now)
+    }
+
     /// Perform background work inside an idle window `[now, deadline)`.
     /// Implementations issue atomic steps while their issue time is
     /// before `deadline`; a step already started may overrun it (that

@@ -37,7 +37,8 @@
 //! * a tenant whose reserved slice covers the whole cache is never
 //!   gated at all (the single-tenant differential guarantee).
 
-use crate::config::Config;
+use crate::config::{AttributionMode, Config};
+use crate::ftl::OwnerEvents;
 use crate::metrics::Ledger;
 
 /// What the partitioner permits one host page write to consume.
@@ -92,6 +93,12 @@ pub struct CachePartitioner {
     ops_per_conversion: u64,
     /// Per-tenant pages denied an SLC grant (diagnostics).
     denied: Vec<u64>,
+    /// Release accounting mode: `Proportional` recycles estimated
+    /// capacity from the highest-occupancy tenant (PR-2); `Owner`
+    /// expects exact residency-exit events from the FTL's owner table
+    /// ([`CachePartitioner::apply_owner_events`]) and does no internal
+    /// releasing of its own.
+    mode: AttributionMode,
 }
 
 impl CachePartitioner {
@@ -128,12 +135,17 @@ impl CachePartitioner {
             release_carry: 0,
             ops_per_conversion: cfg.cache.max_reprograms.max(1) as u64,
             denied: vec![0; n],
+            mode: cfg.host.attribution,
         }
     }
 
     /// Is enforcement active?
     pub fn enabled(&self) -> bool {
         self.enabled
+    }
+    /// Release accounting mode in force.
+    pub fn mode(&self) -> AttributionMode {
+        self.mode
     }
     /// Cache capacity in pages.
     pub fn capacity(&self) -> u64 {
@@ -205,9 +217,13 @@ impl CachePartitioner {
             return;
         }
         for _ in 0..diff.slc_cache_writes {
-            if self.total_occupancy() >= self.capacity {
+            if self.mode == AttributionMode::Proportional
+                && self.total_occupancy() >= self.capacity
+            {
                 // A new cache page physically existed, so capacity was
                 // re-armed somewhere we did not see; keep Σocc ≤ capacity.
+                // (Owner mode never needs this: residency-exit events
+                // from the owner table release exactly what left.)
                 self.release(1);
             }
             self.occ[t] += 1;
@@ -217,15 +233,20 @@ impl CachePartitioner {
         if reprog_ops > 0 {
             self.reprog_used[t] += reprog_ops;
             self.reprog_total += reprog_ops;
-            self.recycle(reprog_ops);
+            if self.mode == AttributionMode::Proportional {
+                self.recycle(reprog_ops);
+            }
         }
-        if diff.slc2tlc_migrations > 0 {
+        if self.mode == AttributionMode::Proportional && diff.slc2tlc_migrations > 0 {
             self.release(diff.slc2tlc_migrations);
         }
     }
 
     /// Account background (unattributed) work: idle-time reclamation
     /// and conversions recycle capacity without charging any tenant.
+    /// The reprogram-budget meter advances in both modes (it is a flow
+    /// resource); proportional mode also estimates capacity releases,
+    /// while owner mode leaves releasing to the exact events.
     pub fn charge_background(&mut self, diff: &Ledger) {
         if !self.enabled {
             return;
@@ -233,10 +254,68 @@ impl CachePartitioner {
         let reprog_ops =
             diff.reprogram_host_writes + diff.agc_reprogram_writes + diff.coop_reprogram_writes;
         self.reprog_total += reprog_ops;
+        if self.mode == AttributionMode::Owner {
+            return;
+        }
         self.recycle(reprog_ops);
         if diff.slc2tlc_migrations > 0 {
             self.release(diff.slc2tlc_migrations);
         }
+    }
+
+    /// Owner-mode release: debit exactly the tenant whose pages left
+    /// the fast tier (no spill to neighbours). Saturating, because a
+    /// page written before partitioning was enabled can exit without
+    /// ever having been charged.
+    pub fn release_for(&mut self, t: usize, pages: u64) {
+        if !self.enabled || t >= self.occ.len() {
+            return;
+        }
+        self.occ[t] = self.occ[t].saturating_sub(pages);
+    }
+
+    /// Apply a drained batch of owner events: exact per-tenant releases
+    /// plus a proportional release for pages with no recorded owner.
+    pub fn apply_owner_events(&mut self, ev: &OwnerEvents) {
+        if !self.enabled {
+            return;
+        }
+        for (t, &pages) in ev.released.iter().enumerate() {
+            if pages > 0 {
+                self.release_for(t, pages);
+            }
+        }
+        if ev.released_unowned > 0 {
+            self.release(ev.released_unowned);
+        }
+    }
+
+    /// The eviction hook's target: the tenant furthest over its
+    /// reserved slice (`occ − reserved` maximal, ties to the lowest
+    /// index), if any tenant is over at all. A slice-over-budget tenant
+    /// evicts *its own* coldest blocks first — the engine hands this to
+    /// [`crate::cache::CachePolicy::evict_tenant_blocks`] during idle
+    /// windows.
+    pub fn eviction_candidate(&self) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        let mut best: Option<(u64, usize)> = None;
+        for (i, (&o, &r)) in self.occ.iter().zip(&self.reserved).enumerate() {
+            // a tenant owning the entire cache has nobody to evict for
+            // (the differential guarantee: it must never see the hook);
+            // the capacity estimate can also undercount residency for
+            // schemes with dynamically claimed blocks, so `occ > r`
+            // alone is not proof of trespass there
+            if o <= r || r >= self.capacity {
+                continue;
+            }
+            let over = o - r;
+            if best.map(|(bo, _)| over > bo).unwrap_or(true) {
+                best = Some((over, i));
+            }
+        }
+        best.map(|(_, i)| i)
     }
 
     /// Reprogram ops → capacity releases (`ops_per_conversion` ops
@@ -393,6 +472,62 @@ mod tests {
             assert_eq!(p.grant(1, true), CacheGrant::Slc);
             p.charge(1, &slc_diff());
         }
+    }
+
+    #[test]
+    fn owner_mode_releases_exactly_the_owner() {
+        let mut cfg = presets::small();
+        cfg.cache.partition.enabled = true;
+        cfg.cache.partition.reserved_frac = 0.5;
+        cfg.host.attribution = crate::config::AttributionMode::Owner;
+        let mut p = CachePartitioner::new(&cfg, &[1.0, 1.0], 100);
+        assert_eq!(p.mode(), crate::config::AttributionMode::Owner);
+        for _ in 0..30 {
+            p.charge(0, &slc_diff());
+        }
+        for _ in 0..10 {
+            p.charge(1, &slc_diff());
+        }
+        // a proportional release would debit tenant 0 (highest occ);
+        // the owner event debits exactly whose pages left
+        let ev = crate::ftl::OwnerEvents {
+            released: vec![0, 7],
+            released_unowned: 0,
+            moves: vec![Default::default(); 2],
+            moves_unowned: Default::default(),
+        };
+        p.apply_owner_events(&ev);
+        assert_eq!(p.occupancy(0), 30, "tenant 0 untouched");
+        assert_eq!(p.occupancy(1), 3, "tenant 1 debited exactly");
+        // saturating: an uncharged exit cannot underflow
+        p.release_for(1, 100);
+        assert_eq!(p.occupancy(1), 0);
+        // owner mode ignores the proportional release paths in charge()
+        let mut l = Ledger::default();
+        l.slc2tlc_migrations = 5;
+        p.charge(0, &l);
+        assert_eq!(p.occupancy(0), 30, "slc2tlc in a diff no longer releases");
+    }
+
+    #[test]
+    fn eviction_candidate_is_the_most_over_budget_tenant() {
+        let mut cfg = presets::small();
+        cfg.cache.partition.enabled = true;
+        cfg.cache.partition.reserved_frac = 0.4; // 20 reserved each of 100
+        cfg.host.attribution = crate::config::AttributionMode::Owner;
+        let mut p = CachePartitioner::new(&cfg, &[1.0, 1.0], 100);
+        assert_eq!(p.eviction_candidate(), None, "nobody over budget yet");
+        for _ in 0..25 {
+            p.charge(0, &slc_diff());
+        }
+        for _ in 0..40 {
+            p.charge(1, &slc_diff());
+        }
+        assert_eq!(p.eviction_candidate(), Some(1), "tenant 1 is 20 over, tenant 0 only 5");
+        p.release_for(1, 35);
+        assert_eq!(p.eviction_candidate(), Some(0), "now only tenant 0 is over");
+        p.release_for(0, 25);
+        assert_eq!(p.eviction_candidate(), None);
     }
 
     #[test]

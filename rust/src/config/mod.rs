@@ -276,6 +276,46 @@ impl PartitionConfig {
     }
 }
 
+/// How the multi-tenant engine attributes shared-cost work (GC and
+/// reclamation migrations, cache-capacity releases) to tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttributionMode {
+    /// PR-2 behaviour: a request's full ledger diff is charged to the
+    /// dispatching tenant, and the partitioner releases recycled cache
+    /// capacity from the highest-occupancy tenant (statistical).
+    Proportional,
+    /// Exact ownership: every valid physical page carries an owner tag
+    /// ([`crate::ftl::OwnerTable`]); migration work is charged to the
+    /// tenants whose pages actually moved, cache releases debit the
+    /// owners of the recycled pages, and GC/AGC victim selection breaks
+    /// ties by owning-tenant GC debt (accountable).
+    Owner,
+}
+
+impl AttributionMode {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<AttributionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "proportional" | "prop" => Ok(AttributionMode::Proportional),
+            "owner" | "exact" => Ok(AttributionMode::Owner),
+            other => Err(Error::config(format!(
+                "unknown attribution mode {other:?} (want proportional|owner)"
+            ))),
+        }
+    }
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttributionMode::Proportional => "proportional",
+            AttributionMode::Owner => "owner",
+        }
+    }
+    /// All modes, in presentation order.
+    pub fn all() -> [AttributionMode; 2] {
+        [AttributionMode::Proportional, AttributionMode::Owner]
+    }
+}
+
 /// QoS admission-control mode ([`crate::host::qos`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QosMode {
@@ -469,6 +509,8 @@ pub struct HostConfig {
     pub victim_gap: Nanos,
     /// QoS admission control in front of the scheduler.
     pub qos: QosConfig,
+    /// How shared-cost work is attributed to tenants.
+    pub attribution: AttributionMode,
 }
 
 impl Default for HostConfig {
@@ -484,6 +526,7 @@ impl Default for HostConfig {
             victim_req_bytes: 16 << 10,
             victim_gap: 2 * MS,
             qos: QosConfig::default(),
+            attribution: AttributionMode::Proportional,
         }
     }
 }
@@ -657,6 +700,10 @@ impl Config {
             Some(crate::util::toml::Value::Str(s)) => QosMode::parse(s)?,
             _ => h.qos.mode,
         };
+        let attribution = match v.lookup("host.attribution") {
+            Some(crate::util::toml::Value::Str(s)) => AttributionMode::parse(s)?,
+            _ => h.attribution,
+        };
         let host = HostConfig {
             tenants: v.u64_or("host.tenants", h.tenants as u64) as u32,
             queue_depth: v.u64_or("host.queue_depth", h.queue_depth as u64) as usize,
@@ -667,6 +714,7 @@ impl Config {
             aggressor_weight: v.f64_or("host.aggressor_weight", h.aggressor_weight),
             victim_req_bytes: v.u64_or("host.victim_req_bytes", h.victim_req_bytes as u64) as u32,
             victim_gap: v.u64_or("host.victim_gap_ns", h.victim_gap),
+            attribution,
             qos: QosConfig {
                 mode: qos_mode,
                 rate_mbps: v.f64_or("host.qos.rate_mbps", h.qos.rate_mbps),
@@ -828,6 +876,27 @@ mod tests {
         assert!((cfg.host.qos.rate_mbps - 24.0).abs() < 1e-12);
         assert_eq!(cfg.host.qos.burst_bytes, 256 << 10);
         assert_eq!(cfg.host.qos.slo_p99, 1_000_000);
+    }
+
+    #[test]
+    fn attribution_parse_roundtrip_and_toml_override() {
+        for m in AttributionMode::all() {
+            assert_eq!(AttributionMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(AttributionMode::parse("exact").unwrap(), AttributionMode::Owner);
+        assert!(AttributionMode::parse("psychic").is_err());
+        let c = presets::small();
+        assert_eq!(
+            c.host.attribution,
+            AttributionMode::Proportional,
+            "PR-2 attribution is the default"
+        );
+        let cfg = Config::from_toml_str("[host]\nattribution = \"owner\"", presets::small())
+            .unwrap();
+        assert_eq!(cfg.host.attribution, AttributionMode::Owner);
+        assert!(
+            Config::from_toml_str("[host]\nattribution = \"wat\"", presets::small()).is_err()
+        );
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! asserted by `tests/integration_multitenant.rs`.
 
 use super::runner::parallel_map;
-use crate::config::{Config, MixKind, QosMode, SchedKind, Scheme};
+use crate::config::{AttributionMode, Config, MixKind, QosMode, SchedKind, Scheme};
 use crate::host::{MultiTenantSimulator, MultiTenantSummary};
 use crate::trace::scenario::Scenario;
 use crate::util::fmt::TextTable;
@@ -76,6 +76,8 @@ pub struct FleetJob {
     pub mix: MixKind,
     /// Cache-isolation variant under test.
     pub variant: IsolationVariant,
+    /// Attribution variant under test (proportional vs exact owner).
+    pub attribution: AttributionMode,
     /// Per-run seed (derived from the cell, not the execution order).
     pub seed: u64,
 }
@@ -93,6 +95,10 @@ pub struct FleetSpec {
     pub mixes: Vec<MixKind>,
     /// Cache-isolation axis (shared / partitioned / partitioned+QoS).
     pub variants: Vec<IsolationVariant>,
+    /// Attribution axis (proportional / owner). Like the isolation
+    /// axis, it does not perturb the cell seed, so proportional and
+    /// owner runs of a cell are a paired comparison.
+    pub attributions: Vec<AttributionMode>,
     /// Scenario each cell runs under.
     pub scenario: Scenario,
     /// Base seed the per-cell seeds derive from.
@@ -111,6 +117,7 @@ impl FleetSpec {
             scheds: SchedKind::all().to_vec(),
             mixes: MixKind::all().to_vec(),
             variants: vec![IsolationVariant::Shared],
+            attributions: vec![AttributionMode::Proportional],
             scenario: Scenario::Bursty,
             seed,
             threads,
@@ -125,20 +132,34 @@ impl FleetSpec {
     /// exact same tenant traces, so their comparison is paired.
     pub fn jobs(&self) -> Vec<FleetJob> {
         let mut out = Vec::with_capacity(
-            self.schemes.len() * self.scheds.len() * self.mixes.len() * self.variants.len(),
+            self.schemes.len()
+                * self.scheds.len()
+                * self.mixes.len()
+                * self.variants.len()
+                * self.attributions.len(),
         );
         for &scheme in &self.schemes {
             for &scheduler in &self.scheds {
                 for &mix in &self.mixes {
                     // one seed per (scheme, scheduler, mix) cell — every
-                    // variant of the cell deliberately shares it
+                    // variant and attribution mode of the cell
+                    // deliberately shares it (paired comparisons)
                     let cell = mix64(
                         hash_str(scheme.name()),
                         mix64(hash_str(scheduler.name()), hash_str(mix.name())),
                     );
                     let seed = mix64(self.seed, cell);
                     for &variant in &self.variants {
-                        out.push(FleetJob { scheme, scheduler, mix, variant, seed });
+                        for &attribution in &self.attributions {
+                            out.push(FleetJob {
+                                scheme,
+                                scheduler,
+                                mix,
+                                variant,
+                                attribution,
+                                seed,
+                            });
+                        }
                     }
                 }
             }
@@ -166,6 +187,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<Vec<MultiTenantSummary>> {
         cfg.cache.scheme = job.scheme;
         cfg.host.scheduler = job.scheduler;
         cfg.host.mix = job.mix;
+        cfg.host.attribution = job.attribution;
         cfg.sim.seed = job.seed;
         job.variant.apply(&mut cfg);
         MultiTenantSimulator::run_once(cfg, spec.scenario)
@@ -192,6 +214,33 @@ pub fn device_qd_sweep(
         .collect()
 }
 
+/// The ROADMAP's joint window ablation: `host.queue_depth` (how many
+/// commands one tenant may keep outstanding) crossed with
+/// `host.device_qd` (how many dispatched requests the device holds in
+/// flight). The two windows interact — a deep SQ only hurts the
+/// victims when the device window is deep enough to drain it in
+/// arrival order — and only the device side was ablated before this.
+/// Every cell runs the same base seed, so the grid is fully paired.
+/// Returns `(queue_depth, device_qd, summary)` rows in row-major
+/// (queue-depth-major) order.
+pub fn qd_joint_sweep(
+    base: &Config,
+    scenario: Scenario,
+    queue_depths: &[usize],
+    device_qds: &[usize],
+) -> Result<Vec<(usize, usize, MultiTenantSummary)>> {
+    let mut out = Vec::with_capacity(queue_depths.len() * device_qds.len());
+    for &sq in queue_depths {
+        for &qd in device_qds {
+            let mut cfg = base.clone();
+            cfg.host.queue_depth = sq.max(1);
+            cfg.host.device_qd = qd.max(1);
+            out.push((sq, qd, MultiTenantSimulator::run_once(cfg, scenario)?));
+        }
+    }
+    Ok(out)
+}
+
 /// Render a sweep as the paper-style summary table (deterministic:
 /// wall-clock is deliberately excluded so serial and parallel sweeps
 /// render byte-identically).
@@ -201,6 +250,7 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
         "scheduler",
         "mix",
         "variant",
+        "attr",
         "seed",
         "mean_ms",
         "p99_ms",
@@ -215,6 +265,7 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
             s.scheduler.clone(),
             s.mix.clone(),
             s.variant_name(),
+            s.attribution.clone(),
             format!("{:#018x}", s.seed),
             format!("{:.3}", s.write_latency.mean() / 1e6),
             format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
@@ -225,6 +276,43 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
         ]);
     }
     table
+}
+
+/// Serialize a sweep's summary rows as deterministic JSON (hand-rolled
+/// — the crate is dependency-free). Field order and float formatting
+/// are fixed, and wall-clock is excluded, so the same sweep always
+/// yields byte-identical output: this is what the bench-smoke golden
+/// check ([`crate::util::golden`]) compares against the committed
+/// `rust/benches/golden/*.json` files.
+pub fn summary_json(results: &[MultiTenantSummary]) -> String {
+    let mut out = String::from("{\"rows\":[\n");
+    for (i, s) in results.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"scheme\":\"{}\",\"scheduler\":\"{}\",\"mix\":\"{}\",\"variant\":\"{}\",\
+             \"attr\":\"{}\",\"seed\":\"{:#018x}\",\"mean_ms\":\"{:.3}\",\"p99_ms\":\"{:.3}\",\
+             \"wa\":\"{:.3}\",\"victim_p99_ms\":\"{:.3}\",\"stalls\":{},\"bg_pages\":{},\
+             \"host_bytes\":{},\"sim_end\":{}}}",
+            s.scheme,
+            s.scheduler,
+            s.mix,
+            s.variant_name(),
+            s.attribution,
+            s.seed,
+            s.write_latency.mean() / 1e6,
+            s.write_latency.percentile_best(0.99) as f64 / 1e6,
+            s.wa(),
+            s.max_victim_p99() as f64 / 1e6,
+            s.total_throttle_stalls(),
+            s.background.total_programs(),
+            s.host_bytes_written,
+            s.sim_end,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
 }
 
 /// Render one run's per-tenant breakdown (the `multi-tenant`
@@ -244,6 +332,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "occ_pk",
         "denied",
         "stalls",
+        "mig_pg",
     ]);
     let span_s = (s.sim_end as f64 / 1e9).max(1e-9);
     for t in &s.tenants {
@@ -261,6 +350,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
             t.cache_occupancy_peak.to_string(),
             t.slc_denied_pages.to_string(),
             t.throttle_stalls.to_string(),
+            t.migrated_pages_owned.to_string(),
         ]);
     }
     table.row(vec![
@@ -277,6 +367,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "-".into(),
         "-".into(),
         s.total_throttle_stalls().to_string(),
+        s.tenants.iter().map(|t| t.migrated_pages_owned).sum::<u64>().to_string(),
     ]);
     table.row(vec![
         "(background)".into(),
@@ -288,6 +379,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "-".into(),
         "-".into(),
         format!("+{} pages", s.background.total_programs()),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),
@@ -312,6 +404,7 @@ mod tests {
             scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
             mixes: vec![MixKind::AggressorVictims],
             variants: vec![IsolationVariant::Shared],
+            attributions: vec![AttributionMode::Proportional],
             scenario: Scenario::Bursty,
             seed: 42,
             threads,
@@ -378,6 +471,67 @@ mod tests {
         // identical offered load across variants (same traces)
         assert_eq!(results[0].host_bytes_written, results[1].host_bytes_written);
         assert_eq!(results[0].host_bytes_written, results[2].host_bytes_written);
+    }
+
+    #[test]
+    fn attribution_axis_pairs_seeds_and_labels_runs() {
+        let mut spec = tiny_spec(1);
+        spec.schemes = vec![Scheme::Baseline];
+        spec.scheds = vec![SchedKind::Fifo];
+        spec.variants = vec![IsolationVariant::Partitioned];
+        spec.attributions = AttributionMode::all().to_vec();
+        let jobs = spec.jobs();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].seed, jobs[1].seed, "attribution runs are paired");
+        let results = run_fleet(&spec).unwrap();
+        assert_eq!(results[0].attribution, "proportional");
+        assert_eq!(results[1].attribution, "owner");
+        // same traces, same offered load — only the accounting differs
+        assert_eq!(results[0].host_bytes_written, results[1].host_bytes_written);
+        // device-level totals close under both attributions
+        for s in &results {
+            let mut sum = crate::metrics::Ledger::default();
+            for t in &s.tenants {
+                sum.merge(&t.ledger);
+            }
+            sum.merge(&s.background);
+            assert_eq!(sum, s.ledger, "{} attribution closes", s.attribution);
+        }
+    }
+
+    #[test]
+    fn qd_joint_sweep_covers_the_grid_with_paired_seeds() {
+        let mut base = presets::small();
+        base.cache.slc_cache_bytes = 1 << 20;
+        base.host.tenants = 3;
+        base.host.aggressor_cache_mult = 1.5;
+        base.sim.latency_samples = 100_000;
+        let points =
+            qd_joint_sweep(&base, Scenario::Bursty, &[1, 32], &[1, 4, 16]).unwrap();
+        assert_eq!(points.len(), 6, "2 × 3 grid, one run per cell");
+        // row-major order, queue-depth-major
+        let coords: Vec<(usize, usize)> = points.iter().map(|&(sq, qd, _)| (sq, qd)).collect();
+        assert_eq!(coords, vec![(1, 1), (1, 4), (1, 16), (32, 1), (32, 4), (32, 16)]);
+        for (sq, qd, s) in &points {
+            assert_eq!(s.seed, base.sim.seed, "cell ({sq},{qd}) keeps the paired seed");
+            assert!(s.host_bytes_written > 0);
+        }
+        // the windows change scheduling, never the offered load
+        assert!(points.windows(2).all(|w| {
+            w[0].2.host_bytes_written == w[1].2.host_bytes_written
+        }));
+    }
+
+    #[test]
+    fn summary_json_is_deterministic_and_structured() {
+        let spec = tiny_spec(1);
+        let a = summary_json(&run_fleet(&spec).unwrap());
+        let b = summary_json(&run_fleet(&spec).unwrap());
+        assert_eq!(a, b, "same sweep, same bytes");
+        assert!(a.starts_with("{\"rows\":["));
+        assert!(a.contains("\"scheme\":\"baseline\""));
+        assert!(a.contains("\"attr\":\"proportional\""));
+        assert!(a.trim_end().ends_with("]}"));
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! GC victims and re-arming the SLC window at the same time.
 //!
 //! [`AgcEngine`] owns victim selection and step sequencing; the cache
-//! scheme decides what each yielded page's destination is.
+//! scheme decides what each yielded page's destination is. Victims come
+//! from [`super::Ftl::pop_victim`], so AGC inherits the FTL's victim
+//! policy: greedy by default, or tenant-aware (ties broken by the
+//! dominant owner's GC debt) when the multi-tenant engine runs under
+//! owner attribution.
 
 use super::Ftl;
 use crate::config::Nanos;

@@ -75,6 +75,43 @@ mod tests {
     }
 
     #[test]
+    fn tenant_aware_single_tenant_is_identical_to_greedy() {
+        // The differential guarantee at the GC layer: with one tenant
+        // every debt is equal, so the tenant-aware policy must make the
+        // exact same pick the greedy policy makes.
+        let build = |policy| {
+            let mut cfg = presets::small();
+            cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+            let mut f = Ftl::new(&cfg).unwrap();
+            f.set_tenant_count(1);
+            f.set_victim_policy(policy);
+            f.set_tenant(Some(0));
+            let a = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+            let b = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+            for i in 0..6u64 {
+                f.program_slc_into(a, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+            }
+            for i in 10..16u64 {
+                f.program_slc_into(b, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+            }
+            // equal invalid counts: a genuine tie
+            for i in [0u64, 1, 10, 11] {
+                f.host_write_tlc(Lpn(i), 0).unwrap();
+            }
+            f.register_closed(a);
+            f.register_closed(b);
+            (f, a, b)
+        };
+        let (mut greedy, ga, _gb) = build(crate::ftl::VictimPolicy::Greedy);
+        let (mut aware, aa, _ab) = build(crate::ftl::VictimPolicy::TenantAware);
+        let gv = greedy.pop_victim(PlaneId(0)).unwrap();
+        let av = aware.pop_victim(PlaneId(0)).unwrap();
+        assert_eq!(gv, av, "equal debts must reproduce the greedy pick");
+        assert_eq!(gv, ga, "greedy tie goes to the first block at the max");
+        let _ = aa;
+    }
+
+    #[test]
     fn gc_without_victims_reports_false() {
         let mut cfg = presets::small();
         cfg.cache.scheme = crate::config::Scheme::TlcOnly;

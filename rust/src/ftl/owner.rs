@@ -1,0 +1,230 @@
+//! Exact per-tenant page ownership: the side table that tags every
+//! valid physical page with the tenant whose data it holds.
+//!
+//! PR-2's `CachePartitioner` accounted cache occupancy from per-request
+//! ledger diffs and *released* capacity proportionally (highest
+//! occupancy first) because nothing in the stack knew which physical
+//! pages a tenant actually owned. The [`OwnerTable`] closes that gap:
+//! the FTL tags pages at program time (host writes inherit the
+//! dispatching tenant, relocations inherit the source page's owner) and
+//! clears tags on invalidation, so releases, GC-debt scoring, and
+//! migration-cost attribution can all be exact.
+//!
+//! The table mirrors [`super::Mapping`]'s chunked layout: the Table-I
+//! SSD has ~100 M physical pages, so a dense `Vec<u16>` would cost
+//! 200 MB up front; 64 Ki-entry chunks allocate on first touch instead.
+//!
+//! Invariants (property-tested in `tests/prop_ownership.rs`):
+//! * a page has an owner iff it is valid and was written while owner
+//!   tracking was enabled — exactly one owner, never two;
+//! * the owner of a valid page equals the tenant owning its LPN (tenant
+//!   address regions are disjoint, so this is checkable from the map);
+//! * Σ per-tenant *SLC-resident* tagged pages equals the partitioner's
+//!   per-tenant occupancy under owner attribution.
+
+use crate::flash::Ppa;
+
+const CHUNK_BITS: usize = 16;
+const CHUNK: usize = 1 << CHUNK_BITS;
+/// Sentinel for "no owner" inside a chunk.
+const NO_OWNER: u16 = u16::MAX;
+
+/// Chunked physical-page → owning-tenant side table.
+#[derive(Debug, Default)]
+pub struct OwnerTable {
+    chunks: Vec<Option<Box<[u16; CHUNK]>>>,
+    tagged: u64,
+}
+
+impl OwnerTable {
+    /// Table covering physical pages `[0, total_pages)`.
+    pub fn new(total_pages: u64) -> OwnerTable {
+        let n_chunks = (total_pages as usize).div_ceil(CHUNK);
+        OwnerTable { chunks: (0..n_chunks).map(|_| None).collect(), tagged: 0 }
+    }
+
+    /// Number of currently tagged pages.
+    pub fn tagged(&self) -> u64 {
+        self.tagged
+    }
+
+    #[inline]
+    fn split(ppa: Ppa) -> (usize, usize) {
+        ((ppa.0 >> CHUNK_BITS) as usize, (ppa.0 & (CHUNK as u64 - 1)) as usize)
+    }
+
+    /// Owner of `ppa`, if tagged.
+    #[inline]
+    pub fn get(&self, ppa: Ppa) -> Option<u16> {
+        let (c, o) = Self::split(ppa);
+        match self.chunks.get(c)? {
+            Some(chunk) => {
+                let v = chunk[o];
+                if v == NO_OWNER {
+                    None
+                } else {
+                    Some(v)
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Tag `ppa` with `owner` (replaces any previous tag). `owner` must
+    /// not be the sentinel `u16::MAX` — tenant counts are validated to
+    /// 65535 in the config layer.
+    pub fn set(&mut self, ppa: Ppa, owner: u16) {
+        debug_assert!(owner != NO_OWNER, "owner id collides with the sentinel");
+        let (c, o) = Self::split(ppa);
+        if c >= self.chunks.len() {
+            return;
+        }
+        let chunk = self.chunks[c].get_or_insert_with(|| Box::new([NO_OWNER; CHUNK]));
+        if chunk[o] == NO_OWNER {
+            self.tagged += 1;
+        }
+        chunk[o] = owner;
+    }
+
+    /// Clear `ppa`'s tag and return the previous owner, if any.
+    pub fn take(&mut self, ppa: Ppa) -> Option<u16> {
+        let (c, o) = Self::split(ppa);
+        match self.chunks.get_mut(c)? {
+            Some(chunk) => {
+                let v = chunk[o];
+                if v == NO_OWNER {
+                    None
+                } else {
+                    chunk[o] = NO_OWNER;
+                    self.tagged -= 1;
+                    Some(v)
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Resident memory estimate in bytes (for reports).
+    pub fn memory_bytes(&self) -> usize {
+        self.chunks.iter().filter(|c| c.is_some()).count() * CHUNK * 2
+            + self.chunks.len() * std::mem::size_of::<Option<Box<[u16; CHUNK]>>>()
+    }
+}
+
+/// Per-tenant relocation counters, split by the attribution category of
+/// the move. The engine drains these (via [`super::Ftl::take_owner_events`])
+/// to charge migration work to the tenants whose *data* moved instead
+/// of the tenant whose request happened to trigger the move.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MoveCounters {
+    /// Pages relocated by inline/background GC (TLC → TLC).
+    pub gc_migrations: u64,
+    /// Pages migrated out of the SLC cache (SLC → TLC reclamation).
+    pub slc2tlc_migrations: u64,
+    /// Pages moved by AGC into used SLC word lines (reprogram).
+    pub agc_reprograms: u64,
+    /// Traditional-cache pages reprogrammed into the IPS window (coop).
+    pub coop_reprograms: u64,
+}
+
+impl MoveCounters {
+    /// Total pages moved.
+    pub fn total(&self) -> u64 {
+        self.gc_migrations + self.slc2tlc_migrations + self.agc_reprograms + self.coop_reprograms
+    }
+
+    /// Accumulate another batch (the engine drains per page but
+    /// adjusts the dispatcher's ledger once per request).
+    pub fn add(&mut self, other: &MoveCounters) {
+        self.gc_migrations += other.gc_migrations;
+        self.slc2tlc_migrations += other.slc2tlc_migrations;
+        self.agc_reprograms += other.agc_reprograms;
+        self.coop_reprograms += other.coop_reprograms;
+    }
+}
+
+/// Everything the owner machinery accumulated since the last drain:
+/// per-tenant SLC-residency releases and per-tenant relocations, plus
+/// the unowned remainder (pages written before tracking was enabled,
+/// or whose owner was lost to a same-operation invalidation).
+#[derive(Clone, Debug, Default)]
+pub struct OwnerEvents {
+    /// Pages that left SLC residency, indexed by owning tenant.
+    pub released: Vec<u64>,
+    /// Pages that left SLC residency with no recorded owner.
+    pub released_unowned: u64,
+    /// Relocated pages, indexed by owning tenant.
+    pub moves: Vec<MoveCounters>,
+    /// Relocated pages with no recorded owner.
+    pub moves_unowned: MoveCounters,
+}
+
+impl OwnerEvents {
+    /// Total released pages (owned + unowned).
+    pub fn total_released(&self) -> u64 {
+        self.released.iter().sum::<u64>() + self.released_unowned
+    }
+    /// Total moved pages (owned + unowned).
+    pub fn total_moved(&self) -> u64 {
+        self.moves.iter().map(|m| m.total()).sum::<u64>() + self.moves_unowned.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_take_roundtrip() {
+        let mut t = OwnerTable::new(1 << 20);
+        assert_eq!(t.get(Ppa(5)), None);
+        t.set(Ppa(5), 3);
+        assert_eq!(t.get(Ppa(5)), Some(3));
+        assert_eq!(t.tagged(), 1);
+        t.set(Ppa(5), 4); // retag does not double-count
+        assert_eq!(t.tagged(), 1);
+        assert_eq!(t.take(Ppa(5)), Some(4));
+        assert_eq!(t.get(Ppa(5)), None);
+        assert_eq!(t.take(Ppa(5)), None);
+        assert_eq!(t.tagged(), 0);
+    }
+
+    #[test]
+    fn chunks_allocate_lazily() {
+        let mut t = OwnerTable::new(1 << 24);
+        let empty = t.memory_bytes();
+        t.set(Ppa(0), 1);
+        t.set(Ppa(1), 2);
+        let one = t.memory_bytes();
+        assert!(one > empty);
+        assert!(one < empty + 2 * CHUNK * 2, "only one chunk allocated");
+    }
+
+    #[test]
+    fn out_of_range_is_inert() {
+        let mut t = OwnerTable::new(100);
+        t.set(Ppa(1 << 40), 1);
+        assert_eq!(t.get(Ppa(1 << 40)), None);
+        assert_eq!(t.take(Ppa(1 << 40)), None);
+        assert_eq!(t.tagged(), 0);
+    }
+
+    #[test]
+    fn move_counters_total() {
+        let m = MoveCounters {
+            gc_migrations: 1,
+            slc2tlc_migrations: 2,
+            agc_reprograms: 3,
+            coop_reprograms: 4,
+        };
+        assert_eq!(m.total(), 10);
+        let ev = OwnerEvents {
+            released: vec![2, 3],
+            released_unowned: 1,
+            moves: vec![m, MoveCounters::default()],
+            moves_unowned: MoveCounters { gc_migrations: 5, ..MoveCounters::default() },
+        };
+        assert_eq!(ev.total_released(), 6);
+        assert_eq!(ev.total_moved(), 15);
+    }
+}

@@ -21,9 +21,9 @@ use super::queue::SubmissionQueue;
 use super::sched::{self, HeadInfo, Scheduler};
 use super::tenant::{self, TenantSpec};
 use crate::cache::{self, CachePartitioner, CachePolicy};
-use crate::config::{Config, Nanos};
+use crate::config::{AttributionMode, Config, Nanos};
 use crate::flash::Lpn;
-use crate::ftl::Ftl;
+use crate::ftl::{Ftl, MoveCounters, VictimPolicy};
 use crate::metrics::{BandwidthTimeline, LatencyStats, Ledger, TenantStats};
 use crate::trace::scenario::Scenario;
 use crate::trace::OpKind;
@@ -76,6 +76,8 @@ pub struct MultiTenantSummary {
     pub partitioned: bool,
     /// QoS admission-control mode ("off" | "strict" | "slo").
     pub qos_mode: String,
+    /// Attribution mode ("proportional" | "owner").
+    pub attribution: String,
     /// SLC cache capacity the partitioner carved up (pages).
     pub cache_capacity_pages: u64,
     /// Simulated end time.
@@ -139,6 +141,13 @@ impl MultiTenantSimulator {
     pub fn new(cfg: Config) -> Result<MultiTenantSimulator> {
         cfg.validate()?;
         let mut ftl = Ftl::new(&cfg)?;
+        if cfg.host.attribution == AttributionMode::Owner {
+            // exact ownership: tag pages per tenant, and let GC/AGC
+            // break victim ties by owning-tenant debt (single-tenant
+            // picks stay byte-identical to greedy — differential-tested)
+            ftl.set_tenant_count(cfg.host.tenants as usize);
+            ftl.set_victim_policy(VictimPolicy::TenantAware);
+        }
         let mut policy = cache::build(&cfg);
         policy.init(&mut ftl)?;
         let logical = ftl.map.lpn_limit() * cfg.geometry.page_bytes as u64;
@@ -171,6 +180,47 @@ impl MultiTenantSimulator {
     pub fn ftl(&self) -> &Ftl {
         &self.ftl
     }
+    /// Access the cache partitioner (diagnostics, property tests).
+    pub fn partitioner(&self) -> &CachePartitioner {
+        &self.part
+    }
+
+    /// Drain the FTL's owner events: apply exact cache-residency
+    /// releases to the partitioner and credit owned relocation work to
+    /// the owning tenants. Owner attribution only.
+    ///
+    /// `charge_ledgers` is true on the request path: migration programs
+    /// move from the dispatching tenant's diff to the owners' ledgers
+    /// (the caller keeps only the returned unowned remainder).
+    /// Background work (idle, flush) passes false — it stays on the
+    /// *background* ledger exactly as under proportional attribution
+    /// (so a single tenant is indistinguishable from the shared path),
+    /// while the owned-move metrics still record whose data moved.
+    fn absorb_owner_events(&mut self, migr_ns: u64, charge_ledgers: bool) -> MoveCounters {
+        if !self.ftl.has_owner_events() {
+            // common case on the per-page hot path: no exits, no moves
+            // — skip the drain's vector churn entirely
+            return MoveCounters::default();
+        }
+        let ev = self.ftl.take_owner_events();
+        self.part.apply_owner_events(&ev);
+        for (t, mv) in ev.moves.iter().enumerate() {
+            let pages = mv.total();
+            if pages == 0 {
+                continue;
+            }
+            let ts = &mut self.stats[t];
+            if charge_ledgers {
+                ts.ledger.gc_migrations += mv.gc_migrations;
+                ts.ledger.slc2tlc_migrations += mv.slc2tlc_migrations;
+                ts.ledger.agc_reprogram_writes += mv.agc_reprograms;
+                ts.ledger.coop_reprogram_writes += mv.coop_reprograms;
+            }
+            ts.migrated_pages_owned += pages;
+            ts.migration_ns_owned += pages * migr_ns;
+        }
+        ev.moves_unowned
+    }
     /// Scheme name.
     pub fn scheme_name(&self) -> &'static str {
         self.policy.name()
@@ -184,6 +234,10 @@ impl MultiTenantSimulator {
     pub fn run(&mut self, scenario: Scenario) -> Result<MultiTenantSummary> {
         let wall0 = std::time::Instant::now();
         let idle_threshold = self.cfg.cache.idle_threshold;
+        let owner_attr = self.cfg.host.attribution == AttributionMode::Owner;
+        // per-page relocation cost estimate: one read + a third of a
+        // one-shot TLC word-line program
+        let migr_ns = self.cfg.timing.tlc_read + self.cfg.timing.tlc_prog / 3;
         let page = self.cfg.geometry.page_bytes as u64;
         let lpn_limit = self.ftl.map.lpn_limit();
         let qd = self.cfg.host.device_qd.max(1);
@@ -253,10 +307,14 @@ impl MultiTenantSimulator {
                     let op = self.queues[i].pop().expect("picked head exists");
                     let issue = self.now.max(op.at);
                     let before = self.ftl.ledger;
+                    self.ftl.set_tenant(Some(i as u16));
                     let first_lpn = (op.offset / page) % lpn_limit;
                     let n_pages = (op.len as u64).div_ceil(page).max(1);
                     let contended = arrived > 1;
                     let mut req_end = issue;
+                    // unowned relocation remainder accumulated across
+                    // the request's per-page drains (owner mode)
+                    let mut unowned_moves = MoveCounters::default();
                     match op.kind {
                         OpKind::Write if self.part.enabled() => {
                             for k in 0..n_pages {
@@ -273,6 +331,13 @@ impl MultiTenantSimulator {
                                     grant,
                                 )?;
                                 self.part.charge(i, &self.ftl.ledger.diff(&page_before));
+                                if owner_attr {
+                                    // drain per page so the next page's
+                                    // grant sees releases this page's
+                                    // reclamation already earned
+                                    let u = self.absorb_owner_events(migr_ns, true);
+                                    unowned_moves.add(&u);
+                                }
                                 req_end = req_end.max(c.end);
                             }
                         }
@@ -294,8 +359,20 @@ impl MultiTenantSimulator {
                             }
                         }
                     }
+                    self.ftl.set_tenant(None);
                     let lat = req_end - op.at; // includes queueing in the SQ
-                    let diff = self.ftl.ledger.diff(&before);
+                    let mut diff = self.ftl.ledger.diff(&before);
+                    if owner_attr {
+                        // exact releases + owner-charged relocations; the
+                        // dispatcher keeps only the unowned remainder of
+                        // any migration work its request triggered
+                        let tail = self.absorb_owner_events(migr_ns, true);
+                        unowned_moves.add(&tail);
+                        diff.gc_migrations = unowned_moves.gc_migrations;
+                        diff.slc2tlc_migrations = unowned_moves.slc2tlc_migrations;
+                        diff.agc_reprogram_writes = unowned_moves.agc_reprograms;
+                        diff.coop_reprogram_writes = unowned_moves.coop_reprograms;
+                    }
                     let st = &mut self.stats[i];
                     st.ledger.merge(&diff);
                     st.cache_occupancy_peak =
@@ -357,11 +434,33 @@ impl MultiTenantSimulator {
                             if next > quiesce.saturating_add(idle_threshold) {
                                 let start = quiesce + idle_threshold;
                                 let bg_before = self.ftl.ledger;
+                                // per-tenant eviction first: a tenant over
+                                // its reserved slice reclaims its own
+                                // blocks before generic idle work runs
+                                let start = if owner_attr {
+                                    match self.part.eviction_candidate() {
+                                        Some(t) => self.policy.evict_tenant_blocks(
+                                            &mut self.ftl,
+                                            t as u16,
+                                            start,
+                                            next,
+                                        )?,
+                                        None => start,
+                                    }
+                                } else {
+                                    start
+                                };
                                 self.policy.idle_work(&mut self.ftl, start, next)?;
                                 // background reclamation recycles cache
-                                // capacity owned by no tenant
+                                // capacity owned by no tenant...
                                 self.part
                                     .charge_background(&self.ftl.ledger.diff(&bg_before));
+                                // ...unless the owner table knows better:
+                                // exact releases + owned-move metrics
+                                // (ledger attribution stays background)
+                                if owner_attr {
+                                    let _ = self.absorb_owner_events(migr_ns, false);
+                                }
                             }
                         }
                         next
@@ -374,10 +473,14 @@ impl MultiTenantSimulator {
 
         self.now = self.now.max(last_end);
 
-        // end-of-workload flush (unattributed background work)
+        // end-of-workload flush (unattributed background work, except
+        // that owner attribution charges owned relocations to owners)
         if scenario.flush_at_end() {
             let end = self.policy.flush(&mut self.ftl, self.now)?;
             self.now = self.now.max(end);
+            if owner_attr {
+                let _ = self.absorb_owner_events(migr_ns, false);
+            }
         }
 
         if self.cfg.sim.verify {
@@ -413,6 +516,7 @@ impl MultiTenantSimulator {
             background,
             partitioned: self.part.enabled(),
             qos_mode: self.qos.mode_name().to_string(),
+            attribution: self.cfg.host.attribution.name().to_string(),
             cache_capacity_pages: self.part.capacity(),
             sim_end: self.now,
             host_bytes_written: host_bytes,

@@ -11,7 +11,7 @@
 //! * `list`         — workloads, schemes, presets.
 
 use ips::cache;
-use ips::config::{presets, Config, MixKind, QosMode, SchedKind, Scheme, MS};
+use ips::config::{presets, AttributionMode, Config, MixKind, QosMode, SchedKind, Scheme, MS};
 use ips::coordinator::{experiment, fleet, ExpOptions};
 use ips::host::MultiTenantSimulator;
 use ips::sim::Simulator;
@@ -67,6 +67,13 @@ fn cli() -> Command {
                 .opt("qos-rate", None, "MBPS", "per-tenant sustained rate (MB/s)", None)
                 .opt("qos-burst", None, "KIB", "token-bucket burst budget (KiB)", None)
                 .opt("slo-p99", None, "MS", "victim p99 SLO target (ms, slo mode)", None)
+                .opt(
+                    "attribution",
+                    None,
+                    "A",
+                    "shared-cost attribution: proportional|owner (fleet: owner adds both)",
+                    None,
+                )
                 .flag("verify", None, "run full consistency audits"),
         )
         .subcommand(
@@ -75,7 +82,7 @@ fn cli() -> Command {
                     "what",
                     None,
                     "W",
-                    "cache-size|idle-threshold|group-layers|device-qd",
+                    "cache-size|idle-threshold|group-layers|device-qd|qd-joint",
                     Some("cache-size"),
                 )
                 .opt("scale", None, "N", "geometry divisor", Some("8"))
@@ -239,6 +246,9 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     {
         cfg.host.qos.mode = QosMode::Strict;
     }
+    if let Some(a) = p.get("attribution") {
+        cfg.host.attribution = AttributionMode::parse(a)?;
+    }
     cfg.validate()?;
     // exact per-tenant percentiles need raw capture
     cfg.sim.latency_samples = cfg.sim.latency_samples.max(100_000);
@@ -256,12 +266,20 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         } else {
             vec![fleet::IsolationVariant::Shared]
         };
+        // --attribution owner turns the fleet into a paired
+        // proportional-vs-owner comparison on top of the variant axis
+        let attributions = if cfg.host.attribution == AttributionMode::Owner {
+            AttributionMode::all().to_vec()
+        } else {
+            vec![AttributionMode::Proportional]
+        };
         let spec = fleet::FleetSpec {
             base: cfg,
             schemes: Scheme::all().to_vec(),
             scheds: SchedKind::all().to_vec(),
             mixes: vec![mix],
             variants,
+            attributions,
             scenario: scen,
             seed: opts.seed,
             threads: opts.threads,
@@ -349,6 +367,38 @@ fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
                 cfg.cache.group_layers = layers;
                 run_point(&mut table, format!("{layers} layers"), cfg)?;
             }
+        }
+        "qd-joint" => {
+            // joint host-SQ × device-window ablation (ROADMAP): the two
+            // windows interact — a deep SQ only hurts the victims when
+            // the device window is deep enough to drain it in arrival
+            // order — so each is swept against the other
+            let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+            base.sim.latency_samples = 100_000;
+            let mut joint_table = TextTable::new(&[
+                "queue_depth",
+                "device_qd",
+                "mean_lat_ms",
+                "victim_p99_ms",
+                "wa",
+            ]);
+            for (sq, qd, s) in fleet::qd_joint_sweep(
+                &base,
+                Scenario::Bursty,
+                &[1, 8, 64],
+                &[1, 4, 16],
+            )? {
+                joint_table.row(vec![
+                    sq.to_string(),
+                    qd.to_string(),
+                    format!("{:.3}", s.write_latency.mean() / 1e6),
+                    format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+                    format!("{:.3}", s.wa()),
+                ]);
+            }
+            println!("\n== ablation: qd-joint (aggressor-victims mix) ==");
+            print!("{}", joint_table.render());
+            return Ok(());
         }
         "device-qd" => {
             // multi-tenant: the device window is what makes dispatch

@@ -45,6 +45,16 @@ pub struct TenantStats {
     pub throttle_stalls: u64,
     /// Estimated delay the QoS gate imposed on this tenant (ns).
     pub throttle_stall_ns: u64,
+    /// Pages of *this tenant's data* relocated by GC / reclamation /
+    /// AGC, from the owner side table (0 under proportional
+    /// attribution, where nobody knows whose pages moved).
+    pub migrated_pages_owned: u64,
+    /// Estimated flash service time those relocations cost (ns): each
+    /// page pays one read plus a third of a one-shot TLC word-line
+    /// program. An estimate, not a measurement — relocations batch and
+    /// overlap host work — but it scales the WA charge into latency
+    /// terms the SLO story can reason about.
+    pub migration_ns_owned: u64,
 }
 
 impl TenantStats {
@@ -70,6 +80,8 @@ impl TenantStats {
             slc_denied_pages: 0,
             throttle_stalls: 0,
             throttle_stall_ns: 0,
+            migrated_pages_owned: 0,
+            migration_ns_owned: 0,
         }
     }
 

@@ -1,0 +1,160 @@
+//! Golden-file regression checks for the bench-smoke CI job.
+//!
+//! The simulator is deterministic, so a bench's summary rows (seeds,
+//! latencies, WA, victim tails — everything except wall clock) admit a
+//! **tolerance-free** comparison against a committed snapshot. Under
+//! `IPS_BENCH_SMOKE=1` the fig benches serialize their fleet summaries
+//! ([`crate::coordinator::fleet::summary_json`]) and call [`check`]:
+//!
+//! * snapshot exists and matches → silent pass;
+//! * snapshot exists and differs → `Err` (the bench panics, CI fails) —
+//!   attribution drift now breaks the build instead of silently
+//!   shifting figures;
+//! * snapshot missing → it is **bootstrapped**: the candidate is
+//!   written and reported as `Created`, so the first smoke run on a
+//!   fresh machine produces the files to commit;
+//! * `IPS_GOLDEN_UPDATE=1` → rewrite unconditionally (`Updated`) — the
+//!   blessing path after an intentional behaviour change.
+//!
+//! Snapshots live in `rust/benches/golden/*.json` (override the
+//! directory with `IPS_GOLDEN_DIR`), resolved against
+//! `CARGO_MANIFEST_DIR` so `cargo bench` works from any cwd.
+
+use std::fs;
+use std::path::PathBuf;
+
+/// What [`check`] did.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GoldenOutcome {
+    /// Snapshot existed and matched byte-for-byte.
+    Match,
+    /// No snapshot existed; the candidate was written (commit it).
+    Created(PathBuf),
+    /// `IPS_GOLDEN_UPDATE=1`: the snapshot was rewritten.
+    Updated(PathBuf),
+}
+
+/// Directory the snapshots live in.
+fn golden_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("IPS_GOLDEN_DIR") {
+        return PathBuf::from(d);
+    }
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    PathBuf::from(root).join("rust").join("benches").join("golden")
+}
+
+/// Compare `content` against the committed snapshot `<name>.json`.
+/// Returns `Err(diff summary)` on a mismatch; see the module docs for
+/// the bootstrap/update behaviour.
+pub fn check(name: &str, content: &str) -> Result<GoldenOutcome, String> {
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.json"));
+    let update = std::env::var("IPS_GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false);
+    let write = |outcome: fn(PathBuf) -> GoldenOutcome| -> Result<GoldenOutcome, String> {
+        fs::create_dir_all(&dir).map_err(|e| format!("golden {name}: mkdir: {e}"))?;
+        fs::write(&path, content).map_err(|e| format!("golden {name}: write: {e}"))?;
+        Ok(outcome(path.clone()))
+    };
+    if update {
+        return write(GoldenOutcome::Updated);
+    }
+    match fs::read_to_string(&path) {
+        Ok(want) => {
+            if want == content {
+                Ok(GoldenOutcome::Match)
+            } else {
+                Err(diff_summary(name, &want, content))
+            }
+        }
+        Err(_) => write(GoldenOutcome::Created),
+    }
+}
+
+/// Bench-side wrapper: run [`check`], print the outcome, and panic on
+/// a mismatch (failing the smoke job). One call per bench keeps the
+/// reporting wording in one place.
+pub fn check_and_report(name: &str, content: &str) {
+    match check(name, content) {
+        Ok(GoldenOutcome::Match) => println!("golden {name}: OK"),
+        Ok(GoldenOutcome::Created(p)) => {
+            println!("golden {name}: bootstrapped {} — commit it", p.display());
+        }
+        Ok(GoldenOutcome::Updated(p)) => println!("golden {name}: updated {}", p.display()),
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// First differing line, for an actionable failure message.
+fn diff_summary(name: &str, want: &str, got: &str) -> String {
+    for (i, (w, g)) in want.lines().zip(got.lines()).enumerate() {
+        if w != g {
+            return format!(
+                "golden {name}: mismatch at line {}:\n  committed: {w}\n  measured:  {g}\n\
+                 (rerun with IPS_GOLDEN_UPDATE=1 to bless an intentional change)",
+                i + 1
+            );
+        }
+    }
+    format!(
+        "golden {name}: line count changed ({} committed vs {} measured)\n\
+         (rerun with IPS_GOLDEN_UPDATE=1 to bless an intentional change)",
+        want.lines().count(),
+        got.lines().count()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize the env-var dance: tests in one binary share the
+    /// process environment.
+    fn with_dir<R>(f: impl FnOnce() -> R) -> R {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join(format!(
+            "ips-golden-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        std::env::set_var("IPS_GOLDEN_DIR", &dir);
+        let r = f();
+        std::env::remove_var("IPS_GOLDEN_DIR");
+        let _ = fs::remove_dir_all(&dir);
+        r
+    }
+
+    #[test]
+    fn bootstrap_then_match_then_mismatch() {
+        with_dir(|| {
+            let created = check("smoke", "{\"rows\":[1]}\n").unwrap();
+            assert!(matches!(created, GoldenOutcome::Created(_)), "{created:?}");
+            assert_eq!(check("smoke", "{\"rows\":[1]}\n").unwrap(), GoldenOutcome::Match);
+            let err = check("smoke", "{\"rows\":[2]}\n").unwrap_err();
+            assert!(err.contains("mismatch at line 1"), "{err}");
+            assert!(err.contains("IPS_GOLDEN_UPDATE"), "{err}");
+        });
+    }
+
+    #[test]
+    fn update_blesses_a_change() {
+        with_dir(|| {
+            check("bless", "old\n").unwrap();
+            std::env::set_var("IPS_GOLDEN_UPDATE", "1");
+            let updated = check("bless", "new\n").unwrap();
+            std::env::remove_var("IPS_GOLDEN_UPDATE");
+            assert!(matches!(updated, GoldenOutcome::Updated(_)));
+            assert_eq!(check("bless", "new\n").unwrap(), GoldenOutcome::Match);
+        });
+    }
+
+    #[test]
+    fn line_count_change_is_reported() {
+        with_dir(|| {
+            check("lines", "a\nb\n").unwrap();
+            let err = check("lines", "a\nb\nc\n").unwrap_err();
+            assert!(err.contains("line count changed"), "{err}");
+        });
+    }
+}

@@ -17,11 +17,15 @@
 //!   count, mean/median/p99, throughput) used by `benches/*` with
 //!   `harness = false` (stand-in for `criterion`).
 //! * [`fmt`] — plain-text table rendering + CSV writing for reports.
+//! * [`golden`] — tolerance-free golden-file checks for the bench-smoke
+//!   CI job (bootstraps missing snapshots, `IPS_GOLDEN_UPDATE=1` to
+//!   bless intentional changes).
 //! * [`logging`] — leveled stderr logger honouring `IPS_LOG`.
 
 pub mod bench;
 pub mod cli;
 pub mod fmt;
+pub mod golden;
 pub mod logging;
 pub mod prop;
 pub mod rng;

@@ -114,6 +114,7 @@ fn fleet_sweep_is_thread_count_invariant() {
         scheds: vec![SchedKind::Fifo, SchedKind::RoundRobin],
         mixes: vec![MixKind::AggressorVictims],
         variants: vec![ips::coordinator::fleet::IsolationVariant::Shared],
+        attributions: vec![ips::config::AttributionMode::Proportional],
         scenario: Scenario::Bursty,
         seed: 1234,
         threads,

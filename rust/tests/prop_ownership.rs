@@ -1,0 +1,261 @@
+//! Property tests for the exact per-tenant page-ownership machinery
+//! (`ftl::owner`), with shrinking on the generated op scripts:
+//!
+//! * **owner-tag conservation** — after arbitrary interleavings of
+//!   host writes, overwrites, GC, reprogram conversion, and idle-time
+//!   reclamation, every valid page has exactly one owner, and that
+//!   owner is the tenant whose logical band the page's LPN falls in
+//!   (tenants own disjoint LPN bands, so the map is the oracle);
+//! * **residency accounting** — per tenant, pages charged (SLC cache
+//!   writes) minus pages released (residency-exit events) equals a
+//!   physical scan of the valid SLC-resident pages the tenant owns;
+//! * **engine closure** — full multi-tenant runs under owner
+//!   attribution still conserve the attribution ledger, and the
+//!   partitioner's per-tenant occupancy equals the physical scan:
+//!   Σ per-tenant tagged SLC pages == partitioner occupancy.
+
+use ips::cache::{baseline::Baseline, ips::Ips, CachePolicy};
+use ips::config::{presets, AttributionMode, Config, MixKind, SchedKind, Scheme};
+use ips::flash::{BlockAddr, Lpn, PageKind, PlaneId};
+use ips::ftl::Ftl;
+use ips::host::MultiTenantSimulator;
+use ips::metrics::Ledger;
+use ips::trace::scenario::Scenario;
+use ips::util::prop::{self, Gen};
+use ips::util::rng::Rng;
+
+/// Width of each tenant's private LPN band (the ownership oracle).
+const BAND: u64 = 1000;
+
+/// A generated FTL-level exercise: a scheme, a tenant count, and a
+/// script of (selector, offset) pairs decoded into per-tenant writes,
+/// overwrites, direct TLC writes, and idle windows.
+#[derive(Clone, Debug)]
+struct OwnershipScript {
+    scheme: Scheme,
+    tenants: usize,
+    ops: Vec<(u64, u64)>,
+}
+
+struct OwnershipGen;
+
+impl Gen for OwnershipGen {
+    type Value = OwnershipScript;
+    fn gen(&self, rng: &mut Rng) -> OwnershipScript {
+        OwnershipScript {
+            scheme: if rng.chance(0.5) { Scheme::Ips } else { Scheme::Baseline },
+            tenants: rng.range(1, 4) as usize,
+            ops: (0..rng.range(0, 280) as usize)
+                .map(|_| (rng.below(1 << 16), rng.below(BAND / 2)))
+                .collect(),
+        }
+    }
+    fn shrink(&self, v: &OwnershipScript) -> Vec<OwnershipScript> {
+        let mut out = Vec::new();
+        if !v.ops.is_empty() {
+            let mut w = v.clone();
+            w.ops.truncate(v.ops.len() / 2);
+            out.push(w);
+            let mut w = v.clone();
+            w.ops.pop();
+            out.push(w);
+            let mut w = v.clone();
+            w.ops.remove(0);
+            out.push(w);
+        }
+        if v.tenants > 1 {
+            let mut w = v.clone();
+            w.tenants -= 1;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn script_cfg(scheme: Scheme) -> Config {
+    let mut cfg = presets::small();
+    cfg.cache.scheme = scheme;
+    // shrink both cache flavours so ~300-op scripts reach the
+    // post-exhaustion paths (reprogram conversion / the TLC cliff)
+    cfg.cache.slc_cache_bytes = 128 << 10; // 32 SLC pages (baseline)
+    cfg.cache.ips_block_fraction = 0.05; // 3 blocks/plane of IPS window
+    cfg
+}
+
+/// Physical scan: valid SLC-resident pages owned by `t`.
+fn slc_resident_owned(ftl: &Ftl, t: u16) -> u64 {
+    let g = *ftl.array.geometry();
+    let mut count = 0u64;
+    for p in 0..g.planes() {
+        for b in 0..g.blocks_per_plane {
+            let addr = BlockAddr { plane: PlaneId(p), block: b };
+            let blk = ftl.array.block(addr);
+            for pib in blk.valid_pages() {
+                if blk.page_kind(pib) == PageKind::Slc
+                    && ftl.owner_of(addr.page(&g, pib / 3, (pib % 3) as u8)) == Some(t)
+                {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+#[test]
+fn owner_tags_conserve_and_residency_matches_charges() {
+    prop::check("owner-tag conservation", 48, OwnershipGen, |script| {
+        let cfg = script_cfg(script.scheme);
+        let mut ftl = Ftl::new(&cfg).map_err(|e| e.to_string())?;
+        ftl.set_tenant_count(script.tenants);
+        let mut policy: Box<dyn CachePolicy> = match script.scheme {
+            Scheme::Ips => Box::new(Ips::new(&cfg)),
+            _ => Box::new(Baseline::new(&cfg)),
+        };
+        policy.init(&mut ftl).map_err(|e| e.to_string())?;
+        let mut charged = vec![0u64; script.tenants];
+        let mut released = vec![0u64; script.tenants];
+        let mut now = 0u64;
+        for &(sel, off) in &script.ops {
+            let t = (sel % script.tenants as u64) as usize;
+            let lpn = Lpn(t as u64 * BAND + off);
+            let before = ftl.ledger;
+            match (sel >> 4) % 8 {
+                // mostly cache-path writes (fresh or overwriting)
+                0..=5 => {
+                    ftl.set_tenant(Some(t as u16));
+                    ftl.ledger.host_page();
+                    let c = policy
+                        .host_write_page(&mut ftl, lpn, now)
+                        .map_err(|e| e.to_string())?;
+                    now = now.max(c.end);
+                }
+                // a direct TLC write (bypasses the cache)
+                6 => {
+                    ftl.set_tenant(Some(t as u16));
+                    ftl.ledger.host_page();
+                    let c = ftl.host_write_tlc(lpn, now).map_err(|e| e.to_string())?;
+                    now = now.max(c.end);
+                }
+                // an idle window (baseline reclamation; IPS no-op)
+                _ => {
+                    ftl.set_tenant(None);
+                    now = policy
+                        .idle_work(&mut ftl, now, now + 2_000_000_000)
+                        .map_err(|e| e.to_string())?;
+                }
+            }
+            ftl.set_tenant(None);
+            let diff = ftl.ledger.diff(&before);
+            charged[t] += diff.slc_cache_writes;
+            let ev = ftl.take_owner_events();
+            if ev.released_unowned != 0 {
+                return Err(format!(
+                    "{} unowned releases — every page was written with a tenant context",
+                    ev.released_unowned
+                ));
+            }
+            for (i, &r) in ev.released.iter().enumerate() {
+                released[i] += r;
+            }
+            if ftl.tagged_pages() > ftl.map.live() {
+                return Err(format!(
+                    "{} tags > {} mapped pages",
+                    ftl.tagged_pages(),
+                    ftl.map.live()
+                ));
+            }
+        }
+        // exactly one owner per valid page, and it matches the oracle
+        if ftl.tagged_pages() != ftl.map.live() {
+            return Err(format!(
+                "tagged {} != mapped {} (a valid page lost or never got its owner)",
+                ftl.tagged_pages(),
+                ftl.map.live()
+            ));
+        }
+        for (lpn, ppa) in ftl.map.iter_mapped() {
+            let want = (lpn.0 / BAND) as u16;
+            let got = ftl.owner_of(ppa);
+            if got != Some(want) {
+                return Err(format!("{lpn:?} at {ppa:?}: owner {got:?} != band {want}"));
+            }
+        }
+        // residency closure: charged − released == physical residency
+        for t in 0..script.tenants {
+            let resident = slc_resident_owned(&ftl, t as u16);
+            if charged[t] < released[t] || charged[t] - released[t] != resident {
+                return Err(format!(
+                    "tenant {t}: charged {} − released {} != {} resident SLC pages",
+                    charged[t], released[t], resident
+                ));
+            }
+        }
+        ftl.audit().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+/// Full-engine property: random (scheme, scheduler, mix) cells under
+/// owner attribution + partitioning conserve the attribution ledger,
+/// and the partitioner's occupancy equals the owner-tag scan.
+#[test]
+fn owner_attribution_runs_close_and_occupancy_is_exact() {
+    let schemes = Scheme::all();
+    let scheds = SchedKind::all();
+    let mixes = MixKind::all();
+    prop::check(
+        "owner attribution closure",
+        8,
+        prop::vec_of(prop::usize_in(0, 1000), 3, 3),
+        |draw| {
+            let scheme = schemes[draw[0] % schemes.len()];
+            let sched = scheds[draw[1] % scheds.len()];
+            let mix = mixes[draw[2] % mixes.len()];
+            let mut cfg = presets::small();
+            cfg.cache.scheme = scheme;
+            cfg.cache.slc_cache_bytes = 1 << 20;
+            cfg.host.tenants = 3;
+            cfg.host.scheduler = sched;
+            cfg.host.mix = mix;
+            cfg.host.aggressor_cache_mult = 1.5;
+            cfg.host.attribution = AttributionMode::Owner;
+            cfg.cache.partition.enabled = true;
+            cfg.cache.partition.reserved_frac = 0.6;
+            cfg.sim.verify = true;
+            cfg.sim.seed = (draw[0] * 31 + draw[1] * 7 + draw[2]) as u64;
+            let mut sim = MultiTenantSimulator::new(cfg)
+                .map_err(|e| format!("{scheme:?}/{sched:?}/{mix:?}: {e}"))?;
+            let s = sim
+                .run(Scenario::Bursty)
+                .map_err(|e| format!("{scheme:?}/{sched:?}/{mix:?}: {e}"))?;
+            // attribution closure survives owner re-attribution
+            let mut sum = Ledger::default();
+            for t in &s.tenants {
+                sum.merge(&t.ledger);
+            }
+            sum.merge(&s.background);
+            if sum != s.ledger {
+                return Err(format!("{scheme:?}/{sched:?}/{mix:?}: attribution leak"));
+            }
+            if s.attribution != "owner" {
+                return Err(format!("mislabelled run: {}", s.attribution));
+            }
+            // Σ per-tenant tagged SLC pages == partitioner occupancy
+            let part = sim.partitioner();
+            if part.enabled() {
+                for t in 0..3u16 {
+                    let occ = part.occupancy(t as usize);
+                    let resident = slc_resident_owned(sim.ftl(), t);
+                    if occ != resident {
+                        return Err(format!(
+                            "{scheme:?}/{sched:?}/{mix:?}: tenant {t} occupancy {occ} != \
+                             {resident} tagged SLC-resident pages"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
