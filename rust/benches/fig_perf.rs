@@ -1,0 +1,73 @@
+//! Bench: the PR-4 perf trajectory — victim-index vs linear-scan
+//! wall clock across all five schemes, written to `BENCH_PR4.json`.
+//!
+//! Unlike the figure benches this one measures the *simulator itself*
+//! (host pages per wall-clock second), so each cell is a self-timed
+//! paired run via [`ips::coordinator::perf::run_cell`] rather than a
+//! harness closure: the scan and index runs inside a cell must replay
+//! the identical trace once each, and the cell asserts the two produced
+//! identical simulation results (the differential guarantee).
+//!
+//! Under `IPS_BENCH_SMOKE=1` the matrix shrinks to the small preset so
+//! CI catches bit-rot cheaply; the real trajectory comes from
+//! `ips perf --preset large` (the `perf-smoke` CI job uploads the small
+//! variant as an artifact every run). Override the output path with
+//! `IPS_PERF_OUT`.
+
+use ips::config::Scheme;
+use ips::coordinator::perf;
+use ips::trace::scenario::Scenario;
+use ips::util::bench::fmt_duration;
+
+fn main() {
+    let smoke = std::env::var("IPS_BENCH_SMOKE").map(|s| s == "1").unwrap_or(false);
+    // an optional substring filter, like the harness benches take
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let (preset, volume_mult) = if smoke { ("small", 1.2) } else { ("medium", 2.0) };
+    let base = perf::preset_by_name(preset).unwrap();
+    println!(
+        "fig_perf: preset={preset} volume x{volume_mult} of logical ({} planes x {} blocks)",
+        base.geometry.planes(),
+        base.geometry.blocks_per_plane
+    );
+
+    let mut cells = Vec::new();
+    for scheme in Scheme::all() {
+        for scen in [Scenario::Bursty, Scenario::Daily] {
+            let name = format!("perf/{preset}/{}/{}", scheme.name(), scen.name());
+            if let Some(f) = &filter {
+                if !name.contains(f.as_str()) {
+                    continue;
+                }
+            }
+            let c = perf::run_cell(preset, &base, scheme, scen, volume_mult).unwrap();
+            println!(
+                "{name:<40} scan {:>10}  index {:>10}  speedup {:>6.2}x  {}",
+                fmt_duration(c.scan_wall),
+                fmt_duration(c.index_wall),
+                c.speedup(),
+                if c.identical { "ok" } else { "DIVERGED" }
+            );
+            assert!(
+                c.identical,
+                "{name}: scan and index runs diverged — the index changed simulation results"
+            );
+            cells.push(c);
+        }
+    }
+
+    if !cells.is_empty() {
+        let out = std::env::var("IPS_PERF_OUT").unwrap_or_else(|_| {
+            let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+            format!("{root}/BENCH_PR4.json")
+        });
+        std::fs::write(&out, perf::perf_json(&cells)).unwrap();
+        let bursty_best = cells
+            .iter()
+            .filter(|c| c.scenario == "bursty")
+            .map(|c| c.speedup())
+            .fold(0.0f64, f64::max);
+        println!("\nwrote {out}; best GC-heavy bursty speedup {bursty_best:.2}x");
+    }
+    println!("\n{} perf cell(s) complete.", cells.len());
+}

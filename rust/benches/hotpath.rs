@@ -86,5 +86,36 @@ fn main() {
             black_box(synth::generate_scaled(p, seed, u64::MAX, 1.0 / 20480.0));
         });
     }
+
+    // victim selection over a closed-heavy plane: the linear scan the
+    // index replaced vs the bucket index (same FTL state either way).
+    // greedy_gain is pop_victim's pick without the pop, so this is the
+    // per-decision cost every GC pop / AGC idle step / eviction pays.
+    for (label, use_index) in [("scan", false), ("index", true)] {
+        let mut cfg = presets::bench_medium();
+        cfg.cache.scheme = Scheme::TlcOnly;
+        cfg.sim.victim_index = use_index;
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        use ips::flash::PlaneId;
+        use ips::ftl::gc;
+        // fill plane 0 twice over a bounded LPN range: every block
+        // closes and most carry invalid pages from the overwrites
+        let span = cfg.geometry.pages_per_plane() / 2;
+        let mut t = 0u64;
+        for i in 0..span * 2 {
+            let c = ftl.host_write_tlc_on(PlaneId(0), Lpn(i % span), t).unwrap();
+            t = c.end;
+        }
+        let closed = ftl.closed_count(PlaneId(0));
+        h.bench(
+            &format!("hotpath/victim_pick/{label}/closed={closed}"),
+            Some(1000),
+            || {
+                for _ in 0..1000 {
+                    black_box(gc::greedy_gain(&mut ftl, PlaneId(0)));
+                }
+            },
+        );
+    }
     h.finish();
 }

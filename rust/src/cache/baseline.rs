@@ -21,6 +21,94 @@ use crate::metrics::Attribution;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 
+/// FIFO of used cache blocks with O(1) removal by address (§Perf).
+///
+/// The per-tenant eviction hook reclaims blocks out of FIFO order; with
+/// a plain `VecDeque` every such removal was an O(n) `position()` scan
+/// plus an O(n) `remove(idx)` shift. Here removals tombstone the slot
+/// and a per-block sequence map locates it in O(1); `pop_front`/`front`
+/// skip tombstones (each tombstone is skipped O(1) times amortized, and
+/// `remove` eagerly cleans the head). Iteration order remains exactly
+/// the FIFO order of the surviving blocks, so reclamation ordering —
+/// and therefore every simulation result — is unchanged.
+struct UsedQueue {
+    /// Ring of queued blocks; `None` = removed (tombstone).
+    slots: VecDeque<Option<BlockAddr>>,
+    /// Per-block queue sequence + 1 (0 = not queued). The slot of a
+    /// queued block is `seq_of[block] - 1 - head_seq`.
+    seq_of: Vec<u64>,
+    /// Sequence number of the ring's physical front slot.
+    head_seq: u64,
+    /// Sequence number the next push receives.
+    next_seq: u64,
+    /// Live (non-tombstoned) entries.
+    live: usize,
+}
+
+impl UsedQueue {
+    fn new(blocks_per_plane: u32) -> UsedQueue {
+        UsedQueue {
+            slots: VecDeque::new(),
+            seq_of: vec![0; blocks_per_plane as usize],
+            head_seq: 0,
+            next_seq: 0,
+            live: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn push_back(&mut self, a: BlockAddr) {
+        debug_assert_eq!(self.seq_of[a.block as usize], 0, "block queued twice");
+        self.slots.push_back(Some(a));
+        self.seq_of[a.block as usize] = self.next_seq + 1;
+        self.next_seq += 1;
+        self.live += 1;
+    }
+
+    fn pop_front(&mut self) -> Option<BlockAddr> {
+        while let Some(s) = self.slots.pop_front() {
+            self.head_seq += 1;
+            if let Some(a) = s {
+                self.seq_of[a.block as usize] = 0;
+                self.live -= 1;
+                return Some(a);
+            }
+        }
+        None
+    }
+
+    fn front(&self) -> Option<BlockAddr> {
+        self.slots.iter().flatten().next().copied()
+    }
+
+    /// Remove `a` wherever it sits in the queue; `false` if absent.
+    fn remove(&mut self, a: BlockAddr) -> bool {
+        let seq = self.seq_of[a.block as usize];
+        if seq == 0 {
+            return false;
+        }
+        let idx = (seq - 1 - self.head_seq) as usize;
+        debug_assert_eq!(self.slots[idx], Some(a));
+        self.slots[idx] = None;
+        self.seq_of[a.block as usize] = 0;
+        self.live -= 1;
+        // eager head cleanup keeps front()/pop_front() amortized O(1)
+        while matches!(self.slots.front(), Some(None)) {
+            self.slots.pop_front();
+            self.head_seq += 1;
+        }
+        true
+    }
+
+    /// Iterate live blocks in FIFO order.
+    fn iter(&self) -> impl Iterator<Item = BlockAddr> + '_ {
+        self.slots.iter().flatten().copied()
+    }
+}
+
 /// Per-plane cache pool state.
 struct PlanePool {
     /// Erased cache blocks ready for writes.
@@ -28,7 +116,7 @@ struct PlanePool {
     /// Block currently receiving SLC writes.
     active: Option<BlockAddr>,
     /// Fully written blocks awaiting reclamation (FIFO).
-    used: VecDeque<BlockAddr>,
+    used: UsedQueue,
 }
 
 /// Traditional SLC-cache policy.
@@ -119,24 +207,22 @@ impl Baseline {
 
     /// Reclaim one used block (atomic unit); returns erase completion.
     fn reclaim_one(&mut self, ftl: &mut Ftl, plane: u32, now: Nanos) -> Result<Option<Nanos>> {
-        self.reclaim_at(ftl, plane, 0, now)
-    }
-
-    /// Reclaim the used block at queue index `idx` (atomic unit). Index
-    /// 0 is the FIFO front — `reclaim_one`'s behaviour; the per-tenant
-    /// eviction hook targets deeper entries.
-    fn reclaim_at(
-        &mut self,
-        ftl: &mut Ftl,
-        plane: u32,
-        idx: usize,
-        now: Nanos,
-    ) -> Result<Option<Nanos>> {
-        let pool = &mut self.pools[plane as usize];
-        let addr = match pool.used.remove(idx) {
+        let addr = match self.pools[plane as usize].used.pop_front() {
             Some(a) => a,
             None => return Ok(None),
         };
+        Ok(Some(self.reclaim_addr(ftl, plane, addr, now)?))
+    }
+
+    /// Reclaim `addr` (already removed from the used queue) as one
+    /// atomic unit; returns the erase end time.
+    fn reclaim_addr(
+        &mut self,
+        ftl: &mut Ftl,
+        plane: u32,
+        addr: BlockAddr,
+        now: Nanos,
+    ) -> Result<Nanos> {
         let done = ftl.reclaim_block(addr, Attribution::Slc2Tlc, now)?;
         if self.dynamic {
             // dynamic allocation: return the block to the general pool
@@ -146,7 +232,7 @@ impl Baseline {
             // the block stays in the cache pool
             self.pools[plane as usize].free.push_back(addr);
         }
-        Ok(Some(done.end))
+        Ok(done.end)
     }
 
     /// Used (awaiting-reclamation) block count across planes.
@@ -166,7 +252,7 @@ impl Baseline {
         self.pools
             .iter()
             .enumerate()
-            .find_map(|(p, pool)| pool.used.front().map(|a| (p as u32, *a)))
+            .find_map(|(p, pool)| pool.used.front().map(|a| (p as u32, a)))
     }
 
     /// Pop + erase the front used block of `plane` (must hold no valid
@@ -246,7 +332,11 @@ impl CachePolicy for Baseline {
         // spread evenly: ceil per plane, stop at the total
         let per_plane = blocks_needed.div_ceil(planes);
         self.pools = (0..planes)
-            .map(|_| PlanePool { free: VecDeque::new(), active: None, used: VecDeque::new() })
+            .map(|_| PlanePool {
+                free: VecDeque::new(),
+                active: None,
+                used: UsedQueue::new(g.blocks_per_plane),
+            })
             .collect();
         self.claimed = vec![0; planes as usize];
         self.max_blocks_per_plane = per_plane.min(u32::MAX as u64) as u32;
@@ -315,14 +405,16 @@ impl CachePolicy for Baseline {
         // Candidates are used blocks `tenant` MAJORITY-owns (≥ half the
         // valid pages): reclaiming a block the tenant barely touches
         // would migrate the neighbours' in-reserve cached data — the
-        // cross-eviction the partition invariants forbid. Blocks are
-        // scored once (reclaiming one block never adds the tenant's
-        // pages to another) and reclaimed most-owned first; the stable
-        // sort keeps FIFO order — i.e. coldest first — on ties. Atomic
-        // units issue while there is idle time left, like idle_work.
+        // cross-eviction the partition invariants forbid. Scoring reads
+        // the owner table's per-block histograms (O(owners), no page
+        // scans); blocks are scored once (reclaiming one block never
+        // adds the tenant's pages to another) and reclaimed most-owned
+        // first — the stable sort keeps FIFO order, i.e. coldest first,
+        // on ties — with O(1) queue removal per block. Atomic units
+        // issue while there is idle time left, like idle_work.
         let mut candidates: Vec<(u32, usize, BlockAddr)> = Vec::new();
         for (pi, pool) in self.pools.iter().enumerate() {
-            for &addr in &pool.used {
+            for addr in pool.used.iter() {
                 let owned = ftl.owned_valid_in_block(addr, tenant);
                 if owned > 0 && 2 * owned >= ftl.array.block(addr).valid_count() {
                     candidates.push((owned, pi, addr));
@@ -335,13 +427,10 @@ impl CachePolicy for Baseline {
             if t >= deadline {
                 break;
             }
-            let qi = match self.pools[pi].used.iter().position(|&a| a == addr) {
-                Some(q) => q,
-                None => continue,
-            };
-            if let Some(end) = self.reclaim_at(ftl, pi as u32, qi, t)? {
-                t = t.max(end);
+            if !self.pools[pi].used.remove(addr) {
+                continue;
             }
+            t = t.max(self.reclaim_addr(ftl, pi as u32, addr, t)?);
         }
         Ok(t)
     }
@@ -435,6 +524,29 @@ mod tests {
         let mut b = Baseline::new(&cfg);
         b.init(&mut ftl).unwrap();
         (ftl, b, cfg)
+    }
+
+    #[test]
+    fn used_queue_fifo_with_o1_removal() {
+        let a = |b: u32| BlockAddr { plane: PlaneId(0), block: b };
+        let mut q = UsedQueue::new(8);
+        q.push_back(a(1));
+        q.push_back(a(2));
+        q.push_back(a(3));
+        q.push_back(a(4));
+        assert_eq!(q.len(), 4);
+        assert!(q.remove(a(2)));
+        assert!(!q.remove(a(2)), "double remove refused");
+        assert_eq!(q.iter().map(|x| x.block).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(q.front(), Some(a(1)));
+        assert!(q.remove(a(1)), "head removal cleans tombstones");
+        assert_eq!(q.front(), Some(a(3)));
+        assert_eq!(q.pop_front(), Some(a(3)));
+        q.push_back(a(1)); // re-queue after removal is legal
+        assert_eq!(q.pop_front(), Some(a(4)));
+        assert_eq!(q.pop_front(), Some(a(1)));
+        assert_eq!(q.pop_front(), None);
+        assert_eq!(q.len(), 0);
     }
 
     #[test]

@@ -40,6 +40,8 @@
 use crate::config::{AttributionMode, Config};
 use crate::ftl::OwnerEvents;
 use crate::metrics::Ledger;
+use std::cmp::Reverse;
+use std::collections::BTreeSet;
 
 /// What the partitioner permits one host page write to consume.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +95,23 @@ pub struct CachePartitioner {
     ops_per_conversion: u64,
     /// Per-tenant pages denied an SLC grant (diagnostics).
     denied: Vec<u64>,
+    /// Incremental occupancy index (§Perf): every tenant with
+    /// `occ > 0`, keyed `(occ, Reverse(tenant))` so the last element is
+    /// the release target — highest occupancy, ties to the lowest
+    /// index. Maintained by [`CachePartitioner::set_occ`]; replaces the
+    /// per-page linear scan in [`CachePartitioner::release`].
+    occ_index: BTreeSet<(u64, Reverse<usize>)>,
+    /// Incremental over-budget index: every tenant with
+    /// `occ > reserved` and `reserved < capacity`, keyed
+    /// `(occ - reserved, Reverse(tenant))` — the last element is the
+    /// eviction candidate. Replaces the per-idle-step scan in
+    /// [`CachePartitioner::eviction_candidate`].
+    over_index: BTreeSet<(u64, Reverse<usize>)>,
+    /// Σ per-tenant `occ.saturating_sub(reserved)` (shared-pool use),
+    /// maintained incrementally for the O(1) grant path.
+    shared_used: u64,
+    /// Σ occupancies, maintained incrementally.
+    total_occ: u64,
     /// Release accounting mode: `Proportional` recycles estimated
     /// capacity from the highest-occupancy tenant (PR-2); `Owner`
     /// expects exact residency-exit events from the FTL's owner table
@@ -135,8 +154,40 @@ impl CachePartitioner {
             release_carry: 0,
             ops_per_conversion: cfg.cache.max_reprograms.max(1) as u64,
             denied: vec![0; n],
+            occ_index: BTreeSet::new(),
+            over_index: BTreeSet::new(),
+            shared_used: 0,
+            total_occ: 0,
             mode: cfg.host.attribution,
         }
+    }
+
+    /// The single occupancy mutation point: keeps the occupancy and
+    /// over-budget indices, the shared-pool counter, and the total in
+    /// lockstep with `occ[t]`. O(log tenants).
+    fn set_occ(&mut self, t: usize, new: u64) {
+        let old = self.occ[t];
+        if old == new {
+            return;
+        }
+        let r = self.reserved[t];
+        if old > 0 {
+            self.occ_index.remove(&(old, Reverse(t)));
+        }
+        if new > 0 {
+            self.occ_index.insert((new, Reverse(t)));
+        }
+        if r < self.capacity {
+            if old > r {
+                self.over_index.remove(&(old - r, Reverse(t)));
+            }
+            if new > r {
+                self.over_index.insert((new - r, Reverse(t)));
+            }
+        }
+        self.shared_used = self.shared_used - old.saturating_sub(r) + new.saturating_sub(r);
+        self.total_occ = self.total_occ - old + new;
+        self.occ[t] = new;
     }
 
     /// Is enforcement active?
@@ -163,15 +214,16 @@ impl CachePartitioner {
     pub fn denied(&self, t: usize) -> u64 {
         self.denied[t]
     }
-    /// Sum of all tenants' occupancies.
+    /// Sum of all tenants' occupancies (incrementally maintained).
     pub fn total_occupancy(&self) -> u64 {
-        self.occ.iter().sum()
+        self.total_occ
     }
 
     /// Shared-pool pages currently consumed (occupancy beyond each
     /// tenant's reserved slice spills into the shared pool).
+    /// Incrementally maintained — the grant path reads this per page.
     fn shared_used(&self) -> u64 {
-        self.occ.iter().zip(&self.reserved).map(|(&o, &r)| o.saturating_sub(r)).sum()
+        self.shared_used
     }
 
     /// Decide what tenant `t`'s next page write may consume.
@@ -226,7 +278,7 @@ impl CachePartitioner {
                 // from the owner table release exactly what left.)
                 self.release(1);
             }
-            self.occ[t] += 1;
+            self.set_occ(t, self.occ[t] + 1);
         }
         let reprog_ops =
             diff.reprogram_host_writes + diff.agc_reprogram_writes + diff.coop_reprogram_writes;
@@ -271,7 +323,7 @@ impl CachePartitioner {
         if !self.enabled || t >= self.occ.len() {
             return;
         }
-        self.occ[t] = self.occ[t].saturating_sub(pages);
+        self.set_occ(t, self.occ[t].saturating_sub(pages));
     }
 
     /// Apply a drained batch of owner events: exact per-tenant releases
@@ -300,22 +352,14 @@ impl CachePartitioner {
         if !self.enabled {
             return None;
         }
-        let mut best: Option<(u64, usize)> = None;
-        for (i, (&o, &r)) in self.occ.iter().zip(&self.reserved).enumerate() {
-            // a tenant owning the entire cache has nobody to evict for
-            // (the differential guarantee: it must never see the hook);
-            // the capacity estimate can also undercount residency for
-            // schemes with dynamically claimed blocks, so `occ > r`
-            // alone is not proof of trespass there
-            if o <= r || r >= self.capacity {
-                continue;
-            }
-            let over = o - r;
-            if best.map(|(bo, _)| over > bo).unwrap_or(true) {
-                best = Some((over, i));
-            }
-        }
-        best.map(|(_, i)| i)
+        // The over-budget index holds exactly the tenants with
+        // `occ > reserved` and `reserved < capacity` (a tenant owning
+        // the entire cache has nobody to evict for — the differential
+        // guarantee — and never enters it; see `set_occ`). Its last
+        // element is the tenant furthest over, ties to the lowest
+        // index: the engine reads this every idle window, so it is
+        // O(1) instead of a per-window tenant scan.
+        self.over_index.iter().next_back().map(|&(_, Reverse(i))| i)
     }
 
     /// Reprogram ops → capacity releases (`ops_per_conversion` ops
@@ -339,14 +383,11 @@ impl CachePartitioner {
     /// this accounting, is what protects reserved slices.
     pub fn release(&mut self, pages: u64) {
         for _ in 0..pages {
-            let mut best: Option<(u64, usize)> = None;
-            for (i, &o) in self.occ.iter().enumerate() {
-                if o > 0 && best.map(|(bo, _)| o > bo).unwrap_or(true) {
-                    best = Some((o, i));
-                }
-            }
-            match best {
-                Some((_, i)) => self.occ[i] -= 1,
+            // highest occupancy, ties to the lowest index: the
+            // occupancy index's last element, O(log tenants) per page
+            // instead of a tenant scan
+            match self.occ_index.iter().next_back().copied() {
+                Some((o, Reverse(i))) => self.set_occ(i, o - 1),
                 None => break,
             }
         }
@@ -528,6 +569,35 @@ mod tests {
         assert_eq!(p.eviction_candidate(), Some(0), "now only tenant 0 is over");
         p.release_for(0, 25);
         assert_eq!(p.eviction_candidate(), None);
+    }
+
+    #[test]
+    fn incremental_indices_tie_break_to_the_lowest_tenant() {
+        // 3 tenants, 30 pages, 9 reserved → 3 each; equal occupancies
+        // make both the release target and the eviction candidate a
+        // pure tie, which must go to tenant 0 (the scan rule the
+        // indices replace).
+        let mut p = partitioner(3, 30, 0.3);
+        for t in 0..3 {
+            for _ in 0..5 {
+                p.charge(t, &slc_diff());
+            }
+        }
+        assert_eq!(p.total_occupancy(), 15);
+        assert_eq!(p.eviction_candidate(), Some(0), "equal over-budget ties to tenant 0");
+        p.release(1);
+        assert_eq!(p.occupancy(0), 4, "equal occupancy releases tenant 0 first");
+        assert_eq!(p.occupancy(1), 5);
+        assert_eq!(p.eviction_candidate(), Some(1), "tenant 1 now leads the tie");
+        assert_eq!(p.total_occupancy(), 14);
+        // draining a tenant removes it from both indices
+        p.release_for(1, 5);
+        p.release_for(2, 5);
+        p.release_for(0, 4);
+        assert_eq!(p.total_occupancy(), 0);
+        assert_eq!(p.eviction_candidate(), None);
+        p.release(3); // nothing left to release: must not underflow
+        assert_eq!(p.total_occupancy(), 0);
     }
 
     #[test]

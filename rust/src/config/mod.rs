@@ -575,6 +575,13 @@ pub struct SimConfig {
     pub bandwidth_window: Nanos,
     /// Max background steps to run per idle window (safety valve; 0 = unlimited).
     pub max_idle_steps: u64,
+    /// GC/AGC/eviction victim selection backend: `true` (default) uses
+    /// the incremental invalid-count bucket index
+    /// ([`crate::ftl::VictimIndex`], O(1) amortized per pick); `false`
+    /// keeps the historical linear scan — byte-identical results
+    /// (differential-tested), kept as the oracle and as the `perf`
+    /// harness's baseline.
+    pub victim_index: bool,
 }
 
 impl Default for SimConfig {
@@ -585,6 +592,7 @@ impl Default for SimConfig {
             latency_samples: 0,
             bandwidth_window: 100 * MS,
             max_idle_steps: 0,
+            victim_index: true,
         }
     }
 }
@@ -729,6 +737,7 @@ impl Config {
             latency_samples: v.u64_or("sim.latency_samples", s.latency_samples as u64) as usize,
             bandwidth_window: v.u64_or("sim.bandwidth_window_ns", s.bandwidth_window),
             max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
+            victim_index: v.bool_or("sim.victim_index", s.victim_index),
         };
         let cfg = Config { geometry, timing, cache, host, sim };
         cfg.validate()?;
@@ -792,6 +801,14 @@ mod tests {
         assert_eq!(cfg.cache.scheme, Scheme::Ips);
         assert_eq!(cfg.cache.idle_threshold, 5);
         assert_eq!(cfg.sim.seed, 9);
+    }
+
+    #[test]
+    fn victim_index_defaults_on_and_toml_overrides() {
+        assert!(presets::small().sim.victim_index, "bucket index is the default backend");
+        let cfg =
+            Config::from_toml_str("[sim]\nvictim_index = false", presets::small()).unwrap();
+        assert!(!cfg.sim.victim_index, "scan oracle selectable for differential runs");
     }
 
     #[test]

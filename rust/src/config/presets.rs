@@ -117,6 +117,35 @@ pub fn bench_medium() -> Config {
     }
 }
 
+/// Production-scale geometry for the perf harness (`ips perf`,
+/// `fig_perf`): 64 planes × 1024 blocks/plane (≈ 96 GiB raw) — large
+/// enough that per-plane closed lists hold ~1k blocks, which is what
+/// separates the O(1) victim index from the linear scans it replaced.
+/// The 1 GiB dedicated cache keeps the baseline/coop pool at the same
+/// ~1% of capacity as Table I.
+pub fn large() -> Config {
+    Config {
+        geometry: Geometry {
+            channels: 8,
+            chips_per_channel: 4,
+            dies_per_chip: 1,
+            planes_per_die: 2,
+            blocks_per_plane: 1024,
+            pages_per_block: 384,
+            page_bytes: 4096,
+            wordlines_per_layer: 2,
+        },
+        timing: table1().timing,
+        cache: CacheConfig {
+            slc_cache_bytes: 1 << 30,
+            idle_threshold: 10 * MS,
+            ..CacheConfig::default()
+        },
+        host: HostConfig::default(),
+        sim: SimConfig::default(),
+    }
+}
+
 /// Scale the paper's Table-I geometry down by `factor` (channels and
 /// blocks/plane), keeping timing and relative cache size. Used by
 /// `reproduce --scale N` to trade fidelity for speed.
@@ -141,7 +170,16 @@ mod tests {
         coop64().validate().unwrap();
         small().validate().unwrap();
         bench_medium().validate().unwrap();
+        large().validate().unwrap();
         table1_scaled(8).validate().unwrap();
+    }
+
+    #[test]
+    fn large_preset_meets_the_perf_floor() {
+        let c = large();
+        assert!(c.geometry.planes() >= 64, "≥ 64 planes");
+        assert!(c.geometry.blocks_per_plane >= 1024, "≥ 1k blocks per plane");
+        assert!(c.sim.victim_index, "index on by default; perf flips it off to compare");
     }
 
     #[test]

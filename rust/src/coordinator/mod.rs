@@ -8,6 +8,7 @@
 
 pub mod experiment;
 pub mod fleet;
+pub mod perf;
 pub mod report;
 pub mod runner;
 

@@ -1,0 +1,224 @@
+//! Wall-clock perf harness: the victim index vs the linear-scan oracle
+//! (`ips perf`, `benches/fig_perf.rs` → `BENCH_PR4.json`).
+//!
+//! Each cell runs the *same* (preset, scheme, scenario, trace) twice —
+//! once with `sim.victim_index = false` (the historical scan backend)
+//! and once with the incremental bucket index — and reports simulated
+//! host pages per wall-clock second for both, the speedup, and whether
+//! the two runs produced **identical** simulation results (ledger,
+//! latencies, WA, simulated end time, raw latency samples). The
+//! identity check is the differential guarantee riding along with every
+//! measurement: a speedup that changes a single metric is a bug, not a
+//! win.
+//!
+//! The headline cell is GC-heavy high-utilization bursty on
+//! [`crate::config::presets::large`]: the write volume is a multiple of
+//! the *logical* capacity, so the run overwrites its whole footprint
+//! and inline GC pops victims continuously from ~1k-block closed lists
+//! — exactly where the scan paid O(closed) per pop and the index pays
+//! O(1). The daily scenario adds the AGC idle loop, whose no-victim
+//! sweeps cost O(planes × closed) per idle step under the scan.
+//!
+//! Output is hand-rolled JSON (the crate is dependency-free) written to
+//! `BENCH_PR4.json`; wall-clock fields are measurements, not goldens —
+//! the committed perf trajectory is the *file format plus harness*, and
+//! CI's `perf-smoke` job regenerates and uploads the numbers per run.
+
+use crate::config::{presets, Config, Scheme, SEC};
+use crate::metrics::RunSummary;
+use crate::sim::Simulator;
+use crate::trace::scenario::{self, Scenario};
+use crate::{Error, Result};
+use std::time::Duration;
+
+/// One (preset, scheme, scenario) measurement: scan vs index.
+#[derive(Clone, Debug)]
+pub struct PerfCell {
+    /// Preset name.
+    pub preset: String,
+    /// Scheme name.
+    pub scheme: &'static str,
+    /// Scenario name.
+    pub scenario: &'static str,
+    /// Simulated host pages each run served (identical in both).
+    pub host_pages: u64,
+    /// Wall clock of the linear-scan run.
+    pub scan_wall: Duration,
+    /// Wall clock of the index run.
+    pub index_wall: Duration,
+    /// Did both runs produce identical simulation results?
+    pub identical: bool,
+}
+
+impl PerfCell {
+    /// Simulated host pages per wall-clock second, scan backend.
+    pub fn ops_scan(&self) -> f64 {
+        self.host_pages as f64 / self.scan_wall.as_secs_f64().max(1e-9)
+    }
+    /// Simulated host pages per wall-clock second, index backend.
+    pub fn ops_index(&self) -> f64 {
+        self.host_pages as f64 / self.index_wall.as_secs_f64().max(1e-9)
+    }
+    /// Index speedup over the scan (ops/sec ratio).
+    pub fn speedup(&self) -> f64 {
+        self.scan_wall.as_secs_f64() / self.index_wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Resolve a perf preset by name.
+pub fn preset_by_name(name: &str) -> Result<Config> {
+    match name.to_ascii_lowercase().as_str() {
+        "small" => Ok(presets::small()),
+        "medium" | "bench-medium" => Ok(presets::bench_medium()),
+        "large" => Ok(presets::large()),
+        "table1" => Ok(presets::table1()),
+        other => Err(Error::config(format!(
+            "unknown perf preset {other:?} (want small|medium|large|table1)"
+        ))),
+    }
+}
+
+/// Are two runs of the same cell byte-identical in every simulation
+/// metric? (Wall clock is the only field allowed to differ.)
+pub fn summaries_identical(a: &RunSummary, b: &RunSummary) -> bool {
+    a.ledger == b.ledger
+        && a.sim_end == b.sim_end
+        && a.host_bytes_written == b.host_bytes_written
+        && a.write_latency.count() == b.write_latency.count()
+        && a.write_latency.mean().to_bits() == b.write_latency.mean().to_bits()
+        && a.write_latency.max() == b.write_latency.max()
+        && a.write_latency.percentile(0.50) == b.write_latency.percentile(0.50)
+        && a.write_latency.percentile(0.99) == b.write_latency.percentile(0.99)
+        && a.write_latency.raw_us() == b.write_latency.raw_us()
+        && a.read_latency.count() == b.read_latency.count()
+        && a.read_latency.mean().to_bits() == b.read_latency.mean().to_bits()
+}
+
+/// Build the cell's trace. Bursty: one sequential burst of
+/// `volume_mult ×` the logical capacity (wrapping ⇒ full-footprint
+/// overwrites ⇒ sustained inline GC). Daily: the same volume split into
+/// 8 streams with 30 s idle gaps, so idle-time reclamation/AGC runs.
+fn cell_trace(scen: Scenario, logical_bytes: u64, volume_mult: f64) -> crate::trace::Trace {
+    let volume = ((logical_bytes as f64 * volume_mult) as u64).max(1 << 20);
+    match scen {
+        Scenario::Bursty => scenario::sequential_fill("perf-burst", volume, logical_bytes),
+        Scenario::Daily => scenario::daily_streams(8, volume / 8, 30 * SEC, logical_bytes),
+    }
+}
+
+/// Run one (scheme, scenario) cell on `base`: scan first, then index,
+/// identical traces and seeds. `Err` only on simulation failure — a
+/// *result divergence* is reported via [`PerfCell::identical`] so the
+/// caller decides how loudly to fail.
+pub fn run_cell(
+    preset: &str,
+    base: &Config,
+    scheme: Scheme,
+    scen: Scenario,
+    volume_mult: f64,
+) -> Result<PerfCell> {
+    let mut runs: Vec<RunSummary> = Vec::with_capacity(2);
+    for use_index in [false, true] {
+        let mut cfg = base.clone();
+        cfg.cache.scheme = scheme;
+        cfg.sim.victim_index = use_index;
+        // timing runs measure the hot path, not the end-of-run audit;
+        // the identity check below is the correctness gate
+        cfg.sim.verify = false;
+        let mut sim = Simulator::new(cfg)?;
+        let trace = cell_trace(scen, sim.logical_bytes(), volume_mult);
+        runs.push(sim.run(&trace, scen)?);
+    }
+    let (scan, index) = (&runs[0], &runs[1]);
+    Ok(PerfCell {
+        preset: preset.to_string(),
+        scheme: scheme.name(),
+        scenario: scen.name(),
+        host_pages: index.ledger.host_pages,
+        scan_wall: scan.wall_clock,
+        index_wall: index.wall_clock,
+        identical: summaries_identical(scan, index),
+    })
+}
+
+/// Run the full perf matrix: `schemes × scenarios` on one preset.
+pub fn run_matrix(
+    preset: &str,
+    base: &Config,
+    schemes: &[Scheme],
+    scenarios: &[Scenario],
+    volume_mult: f64,
+) -> Result<Vec<PerfCell>> {
+    let mut cells = Vec::with_capacity(schemes.len() * scenarios.len());
+    for &scheme in schemes {
+        for &scen in scenarios {
+            cells.push(run_cell(preset, base, scheme, scen, volume_mult)?);
+        }
+    }
+    Ok(cells)
+}
+
+/// Serialize cells as the `BENCH_PR4.json` perf-trajectory record.
+/// Deterministic field order; wall-clock values are measurements.
+pub fn perf_json(cells: &[PerfCell]) -> String {
+    let mut out = String::from(
+        "{\"bench\":\"BENCH_PR4\",\"unit\":\"host pages per wall-clock second\",\"rows\":[\n",
+    );
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"preset\":\"{}\",\"scheme\":\"{}\",\"scenario\":\"{}\",\"host_pages\":{},\
+             \"scan_ms\":{:.3},\"index_ms\":{:.3},\"ops_scan\":{:.0},\"ops_index\":{:.0},\
+             \"speedup\":{:.3},\"identical\":{}}}",
+            c.preset,
+            c.scheme,
+            c.scenario,
+            c.host_pages,
+            c.scan_wall.as_secs_f64() * 1e3,
+            c.index_wall.as_secs_f64() * 1e3,
+            c.ops_scan(),
+            c.ops_index(),
+            c.speedup(),
+            c.identical,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_reject() {
+        assert!(preset_by_name("small").is_ok());
+        assert!(preset_by_name("medium").is_ok());
+        assert!(preset_by_name("large").is_ok());
+        assert!(preset_by_name("wat").is_err());
+    }
+
+    #[test]
+    fn one_cell_runs_and_is_identical() {
+        // the smallest meaningful cell: GC-heavy bursty on the small
+        // preset, TLC-only (pure FTL/GC path, no cache scheme noise)
+        let base = presets::small();
+        let cell = run_cell("small", &base, Scheme::TlcOnly, Scenario::Bursty, 1.2).unwrap();
+        assert!(cell.host_pages > 0);
+        assert!(cell.identical, "scan and index runs must agree on every metric");
+        assert!(cell.speedup() > 0.0);
+        let json = perf_json(&[cell]);
+        assert!(json.contains("\"scheme\":\"tlc-only\""));
+        assert!(json.contains("\"identical\":true"));
+        assert!(json.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn daily_cell_exercises_idle_work_identically() {
+        let base = presets::small();
+        let cell = run_cell("small", &base, Scheme::IpsAgc, Scenario::Daily, 0.5).unwrap();
+        assert!(cell.identical, "AGC idle loop must make the same picks on both backends");
+    }
+}

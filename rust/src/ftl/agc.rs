@@ -43,6 +43,13 @@ impl AgcEngine {
     /// fewest free blocks that has an eligible closed block. Victims
     /// are removed from the FTL's closed list so inline GC cannot race
     /// on them.
+    ///
+    /// Runs every idle step. The pressure-first probe and the
+    /// all-planes fallback each ask [`Ftl::pop_victim`], which answers
+    /// from the incremental victim index in O(1) amortized — so a full
+    /// no-victim sweep costs O(planes), where the pre-index scan paid
+    /// O(planes × closed blocks) per step (the §Perf wall-clock sink
+    /// `fig_perf` measures).
     pub fn ensure_victim(&mut self, ftl: &mut Ftl) -> Option<BlockAddr> {
         if let Some(v) = self.victim {
             if ftl.array.block(v).valid_count() > 0 {
@@ -53,7 +60,7 @@ impl AgcEngine {
             self.victim = None;
         }
         // pressure-first: try the plane with the least free space,
-        // then the rest (linear scans — this runs every idle step)
+        // then the rest
         let tightest = (0..ftl.planes())
             .map(PlaneId)
             .min_by_key(|p| ftl.free_blocks(*p));

@@ -29,17 +29,13 @@ pub fn gc_once(ftl: &mut Ftl, plane: PlaneId, now: Nanos) -> Result<bool> {
 }
 
 /// How many pages a GC cycle on the greedy victim would reclaim
-/// (diagnostics / ablation benches).
-pub fn greedy_gain(ftl: &Ftl, plane: PlaneId) -> u32 {
-    let g = ftl.array.geometry();
-    (0..g.blocks_per_plane)
-        .map(|b| {
-            ftl.array
-                .block(crate::flash::BlockAddr { plane, block: b })
-                .invalid_count()
-        })
-        .max()
-        .unwrap_or(0)
+/// (diagnostics / ablation benches). Answered from the victim index
+/// in O(1) amortized; GC can only reclaim *closed* blocks, so the
+/// answer is the invalid count of the block [`Ftl::pop_victim`] would
+/// actually pick (the old implementation scanned every block in the
+/// plane, including active and cache-pool blocks GC cannot touch).
+pub fn greedy_gain(ftl: &mut Ftl, plane: PlaneId) -> u32 {
+    ftl.peek_victim_gain(plane)
 }
 
 #[cfg(test)]
@@ -109,6 +105,30 @@ mod tests {
         assert_eq!(gv, av, "equal debts must reproduce the greedy pick");
         assert_eq!(gv, ga, "greedy tie goes to the first block at the max");
         let _ = aa;
+    }
+
+    #[test]
+    fn greedy_gain_reports_the_actual_victims_reclaim() {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+        let mut f = Ftl::new(&cfg).unwrap();
+        assert_eq!(greedy_gain(&mut f, PlaneId(0)), 0, "no closed blocks, no gain");
+        let a = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        let b = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        for i in 0..6u64 {
+            f.program_slc_into(a, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+        }
+        for i in 10..16u64 {
+            f.program_slc_into(b, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+        }
+        for i in [0u64, 1, 10, 11, 12] {
+            f.host_write_tlc(Lpn(i), 0).unwrap();
+        }
+        f.register_closed(a);
+        f.register_closed(b);
+        assert_eq!(greedy_gain(&mut f, PlaneId(0)), 3, "b leads with 3 invalid pages");
+        assert!(gc_once(&mut f, PlaneId(0), 0).unwrap());
+        assert_eq!(greedy_gain(&mut f, PlaneId(0)), 2, "a remains with 2");
     }
 
     #[test]

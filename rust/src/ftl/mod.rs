@@ -21,10 +21,12 @@ pub mod agc;
 pub mod gc;
 pub mod mapping;
 pub mod owner;
+pub mod victim_index;
 pub mod wear;
 
 pub use mapping::Mapping;
 pub use owner::{MoveCounters, OwnerEvents, OwnerTable};
+pub use victim_index::VictimIndex;
 
 use crate::config::{Config, Nanos};
 use crate::flash::array::Completion;
@@ -89,6 +91,11 @@ pub struct Ftl {
     tenant_ctx: Option<u16>,
     /// Victim-selection policy for [`Ftl::pop_victim`].
     victim_policy: VictimPolicy,
+    /// Incremental invalid-count bucket index over the closed lists
+    /// (`sim.victim_index`, the default). `None` = the historical
+    /// linear-scan backend, kept as the differential oracle and the
+    /// perf harness's baseline.
+    vindex: Option<VictimIndex>,
     /// Per-tenant SLC-residency releases since the last drain.
     owner_releases: Vec<u64>,
     /// Residency releases of pages with no recorded owner.
@@ -133,6 +140,11 @@ impl Ftl {
         let low = ((g.blocks_per_plane as f64 * cfg.cache.gc_low_watermark) as usize).max(2);
         let high = ((g.blocks_per_plane as f64 * cfg.cache.gc_high_watermark) as usize)
             .max(low + 1);
+        let vindex = if cfg.sim.victim_index {
+            Some(VictimIndex::new(n_planes, g.blocks_per_plane, g.pages_per_block))
+        } else {
+            None
+        };
         Ok(Ftl {
             array,
             map: Mapping::new(lpn_limit, total_pages)?,
@@ -144,10 +156,11 @@ impl Ftl {
             n_planes,
             gc_low_blocks: low,
             gc_high_blocks: high,
-            owners: OwnerTable::new(total_pages),
+            owners: OwnerTable::new(total_pages, g.pages_per_block),
             track_owners: false,
             tenant_ctx: None,
             victim_policy: VictimPolicy::Greedy,
+            vindex,
             owner_releases: Vec::new(),
             owner_releases_unowned: 0,
             owner_moves: Vec::new(),
@@ -214,30 +227,26 @@ impl Ftl {
         }
     }
 
-    /// Valid pages of `addr` owned by tenant `t` (eviction scoring).
-    pub fn owned_valid_in_block(&self, addr: BlockAddr, t: u16) -> u32 {
+    /// Flat block index of `addr` (the owner table's histogram key).
+    fn block_index(&self, addr: BlockAddr) -> usize {
         let g = self.array.geometry();
-        let blk = self.array.block(addr);
-        blk.valid_pages()
-            .filter(|&pib| self.owners.get(addr.page(g, pib / 3, (pib % 3) as u8)) == Some(t))
-            .count() as u32
+        (addr.plane.0 as u64 * g.blocks_per_plane as u64 + addr.block as u64) as usize
+    }
+
+    /// Valid pages of `addr` owned by tenant `t` (eviction scoring).
+    /// Answered from the owner table's per-block histogram — O(distinct
+    /// owners in the block), not O(valid pages). Tags are cleared
+    /// before invalidation, so tagged ⊆ valid and the histogram equals
+    /// a fresh scan (pinned by `tests/prop_victim_index.rs`).
+    pub fn owned_valid_in_block(&self, addr: BlockAddr, t: u16) -> u32 {
+        self.owners.owned_in_block(self.block_index(addr), t)
     }
 
     /// The tenant owning the plurality of `addr`'s valid pages (ties
     /// break to the lowest tenant id; `None` if nothing is tagged).
+    /// Histogram-backed; see [`Ftl::owned_valid_in_block`].
     pub fn dominant_owner(&self, addr: BlockAddr) -> Option<u16> {
-        let g = self.array.geometry();
-        let blk = self.array.block(addr);
-        let mut counts: Vec<(u16, u32)> = Vec::new();
-        for pib in blk.valid_pages() {
-            if let Some(o) = self.owners.get(addr.page(g, pib / 3, (pib % 3) as u8)) {
-                match counts.iter_mut().find(|(t, _)| *t == o) {
-                    Some((_, c)) => *c += 1,
-                    None => counts.push((o, 1)),
-                }
-            }
-        }
-        counts.into_iter().max_by_key(|&(t, c)| (c, std::cmp::Reverse(t))).map(|(t, _)| t)
+        self.owners.dominant_in_block(self.block_index(addr))
     }
 
     /// Record a residency release for `owner` (or the unowned pool).
@@ -315,12 +324,43 @@ impl Ftl {
 
     /// Register a fully written block as GC-eligible.
     pub fn register_closed(&mut self, addr: BlockAddr) {
-        self.closed[addr.plane.0 as usize].push(addr.block);
+        let slot = addr.plane.0 as usize;
+        self.closed[slot].push(addr.block);
+        if self.vindex.is_some() {
+            let pos = self.closed[slot].len() - 1;
+            let inv = self.array.block(addr).invalid_count();
+            self.vindex.as_mut().expect("checked").insert(addr, pos, inv);
+        }
     }
 
     /// Closed-block count in a plane (diagnostics).
     pub fn closed_count(&self, plane: PlaneId) -> usize {
         self.closed[plane.0 as usize].len()
+    }
+
+    /// The plane's closed list in its current (swap_remove-permuted)
+    /// order — tie order for victim selection. Exposed for the
+    /// differential oracle in `tests/prop_victim_index.rs`.
+    pub fn closed_blocks(&self, plane: PlaneId) -> &[u32] {
+        &self.closed[plane.0 as usize]
+    }
+
+    /// Is the incremental victim index active (vs the scan oracle)?
+    pub fn victim_index_enabled(&self) -> bool {
+        self.vindex.is_some()
+    }
+
+    /// Invalidate one physical page, keeping the victim index's bucket
+    /// for the owning block current. Every FTL-internal invalidation
+    /// MUST go through here — a direct `array.invalidate` on a closed
+    /// block would silently stale the index (the audit catches it).
+    fn invalidate_page(&mut self, ppa: Ppa) -> Result<()> {
+        self.array.invalidate(ppa)?;
+        if let Some(ix) = &mut self.vindex {
+            let pa = ppa.expand(self.array.geometry());
+            ix.note_invalidate(pa.plane, pa.block);
+        }
+        Ok(())
     }
 
     /// Pop the next GC victim from a plane's closed list. The primary
@@ -329,13 +369,55 @@ impl Ftl {
     /// victims break toward the block whose dominant owner carries the
     /// most GC debt. Returns `None` when no closed block has any
     /// invalid page.
+    ///
+    /// With the victim index (the default) the pick is O(1) amortized;
+    /// the linear-scan backend is kept as the byte-identical oracle
+    /// (`sim.victim_index = false`, differential-tested).
     pub fn pop_victim(&mut self, plane: PlaneId) -> Option<BlockAddr> {
-        let idx = self.pick_victim_index(plane)?;
-        let block = self.closed[plane.0 as usize].swap_remove(idx);
+        let idx = if self.vindex.is_some() {
+            self.pick_victim_indexed(plane)?
+        } else {
+            self.pick_victim_scan(plane)?
+        };
+        let slot = plane.0 as usize;
+        let block = self.closed[slot].swap_remove(idx);
+        if let Some(ix) = &mut self.vindex {
+            ix.remove(BlockAddr { plane, block });
+            // swap_remove moved the list's last block into the hole:
+            // re-key it so tie order keeps tracking the list
+            if idx < self.closed[slot].len() {
+                ix.reposition(BlockAddr { plane, block: self.closed[slot][idx] }, idx);
+            }
+        }
         Some(BlockAddr { plane, block })
     }
 
-    fn pick_victim_index(&self, plane: PlaneId) -> Option<usize> {
+    /// Index-backed pick: the max bucket's first-in-list block; the
+    /// tenant-aware tie-break walks only that bucket, in the exact
+    /// closed-list order the scan used.
+    fn pick_victim_indexed(&mut self, plane: PlaneId) -> Option<usize> {
+        let (pos, block, max_inv) = self.vindex.as_mut().expect("indexed mode").peek_max(plane)?;
+        if self.victim_policy == VictimPolicy::Greedy || !self.track_owners {
+            return Some(pos as usize);
+        }
+        let mut pick = pos;
+        let mut pick_debt = self.victim_debt(BlockAddr { plane, block });
+        let ix = self.vindex.as_ref().expect("indexed mode");
+        for (p2, b2) in ix.ties(plane, max_inv) {
+            if p2 == pos {
+                continue; // the greedy pick itself
+            }
+            let debt = self.victim_debt(BlockAddr { plane, block: b2 });
+            if debt > pick_debt {
+                pick = p2;
+                pick_debt = debt;
+            }
+        }
+        Some(pick as usize)
+    }
+
+    /// Linear-scan pick (the historical hot path; now the oracle).
+    fn pick_victim_scan(&self, plane: PlaneId) -> Option<usize> {
         let list = &self.closed[plane.0 as usize];
         let mut best: Option<(usize, u32)> = None;
         for (i, &b) in list.iter().enumerate() {
@@ -498,14 +580,14 @@ impl Ftl {
         let old = self.map.set(lpn, ppa)?;
         if !self.track_owners {
             if let Some(old) = old {
-                self.array.invalidate(old)?;
+                self.invalidate_page(old)?;
             }
             return Ok(None);
         }
         let mut prev_owner = None;
         if let Some(old) = old {
             prev_owner = self.note_page_exit(old);
-            self.array.invalidate(old)?;
+            self.invalidate_page(old)?;
             if let Some(t) = self.tenant_ctx {
                 if let Some(d) = self.invalidation_debt.get_mut(t as usize) {
                     *d += 1;
@@ -594,7 +676,7 @@ impl Ftl {
                 }
                 self.note_move(owner, attr);
             }
-            self.array.invalidate(*src)?;
+            self.invalidate_page(*src)?;
             self.map.set(*lpn, *new)?;
             self.ledger.program(attr);
         }
@@ -675,6 +757,21 @@ impl Ftl {
         self.gc_low_blocks
     }
 
+    /// Invalid-page count of the block [`Ftl::pop_victim`] would pick
+    /// (0 when no closed block is GC-eligible) — the greedy GC gain,
+    /// without popping. O(1) amortized from the index; the scan
+    /// backend rescans the closed list.
+    pub fn peek_victim_gain(&mut self, plane: PlaneId) -> u32 {
+        match &mut self.vindex {
+            Some(ix) => ix.peek_max(plane).map(|(_, _, inv)| inv).unwrap_or(0),
+            None => self.closed[plane.0 as usize]
+                .iter()
+                .map(|&b| self.array.block(BlockAddr { plane, block: b }).invalid_count())
+                .max()
+                .unwrap_or(0),
+        }
+    }
+
     /// Inline GC: if the plane is below the low watermark, run greedy
     /// GC cycles until the high watermark (or no victim). Host writes
     /// behind it queue on the plane — the realistic GC stall.
@@ -717,6 +814,16 @@ impl Ftl {
         let g = *self.array.geometry();
         for p in 0..self.n_planes {
             self.array.audit_plane(PlaneId(p))?;
+        }
+        if let Some(ix) = &self.vindex {
+            // the incremental index must equal a fresh rescan of every
+            // closed list (positions, buckets, membership)
+            for p in 0..self.n_planes {
+                let plane = PlaneId(p);
+                ix.audit(plane, &self.closed[p as usize], |b| {
+                    self.array.block(BlockAddr { plane, block: b }).invalid_count()
+                })?;
+            }
         }
         if self.track_owners && self.owners.tagged() > self.map.live() {
             return Err(Error::invariant(format!(

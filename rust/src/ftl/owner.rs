@@ -14,6 +14,17 @@
 //! SSD has ~100 M physical pages, so a dense `Vec<u16>` would cost
 //! 200 MB up front; 64 Ki-entry chunks allocate on first touch instead.
 //!
+//! **Per-block owner histograms** (§Perf): `dominant_owner` and the
+//! eviction hook's `owned_valid_in_block` used to rescan every valid
+//! page of a block on every tenant-aware GC tie-break and every
+//! eviction-candidate pass. The table now maintains a small
+//! `(tenant, count)` histogram per block, updated O(distinct owners)
+//! on every tag/transfer/clear, so those queries stop touching pages
+//! entirely. Tags are cleared *before* invalidation (see
+//! [`super::Ftl`]'s page-exit path), so tagged ⊆ valid and the
+//! histogram always equals a fresh valid-page scan — the property
+//! suite pins this.
+//!
 //! Invariants (property-tested in `tests/prop_ownership.rs`):
 //! * a page has an owner iff it is valid and was written while owner
 //!   tracking was enabled — exactly one owner, never two;
@@ -29,18 +40,32 @@ const CHUNK: usize = 1 << CHUNK_BITS;
 /// Sentinel for "no owner" inside a chunk.
 const NO_OWNER: u16 = u16::MAX;
 
-/// Chunked physical-page → owning-tenant side table.
+/// Chunked physical-page → owning-tenant side table, with per-block
+/// owner histograms.
 #[derive(Debug, Default)]
 pub struct OwnerTable {
     chunks: Vec<Option<Box<[u16; CHUNK]>>>,
     tagged: u64,
+    /// Per-block `(tenant, tagged pages)` histogram; the outer vec is
+    /// allocated on the first tag (single-stream runs never pay it).
+    hist: Vec<Vec<(u16, u32)>>,
+    n_blocks: usize,
+    pages_per_block: u64,
 }
 
 impl OwnerTable {
-    /// Table covering physical pages `[0, total_pages)`.
-    pub fn new(total_pages: u64) -> OwnerTable {
+    /// Table covering physical pages `[0, total_pages)` grouped into
+    /// blocks of `pages_per_block` (the histogram key).
+    pub fn new(total_pages: u64, pages_per_block: u32) -> OwnerTable {
         let n_chunks = (total_pages as usize).div_ceil(CHUNK);
-        OwnerTable { chunks: (0..n_chunks).map(|_| None).collect(), tagged: 0 }
+        let ppb = pages_per_block.max(1) as u64;
+        OwnerTable {
+            chunks: (0..n_chunks).map(|_| None).collect(),
+            tagged: 0,
+            hist: Vec::new(),
+            n_blocks: total_pages.div_ceil(ppb) as usize,
+            pages_per_block: ppb,
+        }
     }
 
     /// Number of currently tagged pages.
@@ -80,28 +105,90 @@ impl OwnerTable {
             return;
         }
         let chunk = self.chunks[c].get_or_insert_with(|| Box::new([NO_OWNER; CHUNK]));
-        if chunk[o] == NO_OWNER {
-            self.tagged += 1;
+        let prev = chunk[o];
+        if prev == owner {
+            return;
         }
         chunk[o] = owner;
+        if prev == NO_OWNER {
+            self.tagged += 1;
+        } else {
+            self.hist_sub(ppa, prev);
+        }
+        self.hist_add(ppa, owner);
     }
 
     /// Clear `ppa`'s tag and return the previous owner, if any.
     pub fn take(&mut self, ppa: Ppa) -> Option<u16> {
         let (c, o) = Self::split(ppa);
-        match self.chunks.get_mut(c)? {
+        let v = match self.chunks.get_mut(c)? {
             Some(chunk) => {
                 let v = chunk[o];
                 if v == NO_OWNER {
-                    None
-                } else {
-                    chunk[o] = NO_OWNER;
-                    self.tagged -= 1;
-                    Some(v)
+                    return None;
                 }
+                chunk[o] = NO_OWNER;
+                v
             }
-            None => None,
+            None => return None,
+        };
+        self.tagged -= 1;
+        self.hist_sub(ppa, v);
+        Some(v)
+    }
+
+    // --- per-block owner histograms --------------------------------
+
+    #[inline]
+    fn block_of(&self, ppa: Ppa) -> usize {
+        (ppa.0 / self.pages_per_block) as usize
+    }
+
+    fn hist_add(&mut self, ppa: Ppa, owner: u16) {
+        let b = self.block_of(ppa);
+        if b >= self.n_blocks {
+            return;
         }
+        if self.hist.is_empty() {
+            self.hist = vec![Vec::new(); self.n_blocks];
+        }
+        let h = &mut self.hist[b];
+        match h.iter_mut().find(|(t, _)| *t == owner) {
+            Some((_, c)) => *c += 1,
+            None => h.push((owner, 1)),
+        }
+    }
+
+    fn hist_sub(&mut self, ppa: Ppa, owner: u16) {
+        let b = self.block_of(ppa);
+        if b >= self.n_blocks || self.hist.is_empty() {
+            return;
+        }
+        let h = &mut self.hist[b];
+        if let Some(i) = h.iter().position(|&(t, _)| t == owner) {
+            h[i].1 -= 1;
+            if h[i].1 == 0 {
+                h.swap_remove(i);
+            }
+        }
+    }
+
+    /// Tagged pages of `owner` in flat block `block_index` — what
+    /// `owned_valid_in_block` used to count by scanning valid pages.
+    pub fn owned_in_block(&self, block_index: usize, owner: u16) -> u32 {
+        self.hist
+            .get(block_index)
+            .and_then(|h| h.iter().find(|&&(t, _)| t == owner))
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    /// The tenant with the most tagged pages in flat block
+    /// `block_index` (ties to the lowest tenant id), `None` when the
+    /// block holds no tags — `dominant_owner`'s histogram backend.
+    pub fn dominant_in_block(&self, block_index: usize) -> Option<u16> {
+        let h = self.hist.get(block_index)?;
+        h.iter().copied().max_by_key(|&(t, c)| (c, std::cmp::Reverse(t))).map(|(t, _)| t)
     }
 
     /// Resident memory estimate in bytes (for reports).
@@ -176,7 +263,7 @@ mod tests {
 
     #[test]
     fn set_get_take_roundtrip() {
-        let mut t = OwnerTable::new(1 << 20);
+        let mut t = OwnerTable::new(1 << 20, 96);
         assert_eq!(t.get(Ppa(5)), None);
         t.set(Ppa(5), 3);
         assert_eq!(t.get(Ppa(5)), Some(3));
@@ -191,7 +278,7 @@ mod tests {
 
     #[test]
     fn chunks_allocate_lazily() {
-        let mut t = OwnerTable::new(1 << 24);
+        let mut t = OwnerTable::new(1 << 24, 96);
         let empty = t.memory_bytes();
         t.set(Ppa(0), 1);
         t.set(Ppa(1), 2);
@@ -202,11 +289,44 @@ mod tests {
 
     #[test]
     fn out_of_range_is_inert() {
-        let mut t = OwnerTable::new(100);
+        let mut t = OwnerTable::new(100, 96);
         t.set(Ppa(1 << 40), 1);
         assert_eq!(t.get(Ppa(1 << 40)), None);
         assert_eq!(t.take(Ppa(1 << 40)), None);
         assert_eq!(t.tagged(), 0);
+        assert_eq!(t.dominant_in_block(0), None);
+    }
+
+    #[test]
+    fn histograms_track_tag_transfer_and_clear() {
+        // 96 pages per block: Ppa 0..96 = block 0, 96..192 = block 1
+        let mut t = OwnerTable::new(1 << 20, 96);
+        assert_eq!(t.dominant_in_block(0), None, "untouched table has no histogram");
+        t.set(Ppa(0), 2);
+        t.set(Ppa(1), 2);
+        t.set(Ppa(2), 1);
+        t.set(Ppa(96), 1); // lands in block 1
+        assert_eq!(t.owned_in_block(0, 2), 2);
+        assert_eq!(t.owned_in_block(0, 1), 1);
+        assert_eq!(t.owned_in_block(1, 1), 1);
+        assert_eq!(t.dominant_in_block(0), Some(2));
+        assert_eq!(t.dominant_in_block(1), Some(1));
+        // retag transfers the count between tenants
+        t.set(Ppa(1), 1);
+        assert_eq!(t.owned_in_block(0, 2), 1);
+        assert_eq!(t.owned_in_block(0, 1), 2);
+        assert_eq!(t.dominant_in_block(0), Some(1));
+        // a (count) tie breaks to the lowest tenant id
+        t.set(Ppa(3), 2);
+        assert_eq!(t.owned_in_block(0, 1), t.owned_in_block(0, 2));
+        assert_eq!(t.dominant_in_block(0), Some(1));
+        // clears drain the histogram back to empty
+        for p in [0u64, 1, 2, 3] {
+            t.take(Ppa(p));
+        }
+        assert_eq!(t.dominant_in_block(0), None);
+        assert_eq!(t.owned_in_block(0, 1), 0);
+        assert_eq!(t.dominant_in_block(1), Some(1), "other blocks unaffected");
     }
 
     #[test]

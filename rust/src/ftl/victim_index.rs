@@ -1,0 +1,275 @@
+//! Incremental GC/AGC victim-selection index (§Perf).
+//!
+//! The scan-based hot path ([`super::Ftl::pop_victim`] before this
+//! module existed) re-read every closed block's invalid count on every
+//! GC pop, every AGC idle step, and every partition-driven eviction —
+//! O(closed blocks) per decision, hostile to production-scale
+//! geometries (`presets::large` keeps ≥ 1k closed blocks per plane).
+//! [`VictimIndex`] replaces the scan with per-plane **invalid-count
+//! buckets** maintained incrementally:
+//!
+//! * [`VictimIndex::insert`] on block close — O(log closed);
+//! * [`VictimIndex::note_invalidate`] on every page invalidation that
+//!   hits a closed block — moves the block up one bucket, O(log closed);
+//! * [`VictimIndex::peek_max`] — the greedy victim, O(1) amortized
+//!   (the max-bucket hint only decays across pops, and every decay was
+//!   paid for by the insert/invalidate that raised it);
+//! * [`VictimIndex::remove`] / [`VictimIndex::reposition`] mirror the
+//!   closed list's `swap_remove` so tie order stays **byte-identical**
+//!   to the historical scan.
+//!
+//! Tie order is the load-bearing subtlety: the old scan picked the
+//! *first* block at the maximal invalid count in closed-list order, and
+//! the tenant-aware tie-break re-scanned the ties in that same order.
+//! Buckets therefore store `(closed-list position, block)` pairs in a
+//! `BTreeSet`, whose in-order iteration *is* closed-list order; when
+//! `swap_remove` moves the list's last element into a hole, the moved
+//! block is re-keyed with [`VictimIndex::reposition`]. The property
+//! suite (`tests/prop_victim_index.rs`) drives random
+//! write/invalidate/close/erase sequences against the linear-scan
+//! oracle and shrinks any divergence.
+
+use crate::flash::{BlockAddr, PlaneId};
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+
+/// Sentinel for "block not in the closed list".
+const NONE: u32 = u32::MAX;
+
+/// Per-plane state: positions, current buckets, and the bucket sets.
+struct PlaneIndex {
+    /// Closed-list position per block (`NONE` = not closed).
+    pos: Vec<u32>,
+    /// Invalid-count bucket per block (`NONE` = not closed).
+    bucket_of: Vec<u32>,
+    /// `(closed-list position, block)` per invalid count; in-order
+    /// iteration reproduces the scan's tie order exactly.
+    buckets: Vec<BTreeSet<(u32, u32)>>,
+    /// Upper bound on the highest non-empty GC-eligible bucket (≥ 1).
+    /// Decays lazily in [`PlaneIndex::peek`]; raised eagerly on
+    /// insert/invalidate, so the decay is amortized O(1).
+    max_hint: u32,
+}
+
+impl PlaneIndex {
+    fn new(blocks_per_plane: u32, pages_per_block: u32) -> PlaneIndex {
+        PlaneIndex {
+            pos: vec![NONE; blocks_per_plane as usize],
+            bucket_of: vec![NONE; blocks_per_plane as usize],
+            buckets: (0..=pages_per_block).map(|_| BTreeSet::new()).collect(),
+            max_hint: 0,
+        }
+    }
+
+    fn peek(&mut self) -> Option<(u32, u32, u32)> {
+        while self.max_hint >= 1 {
+            if let Some(&(pos, block)) = self.buckets[self.max_hint as usize].iter().next() {
+                return Some((pos, block, self.max_hint));
+            }
+            self.max_hint -= 1;
+        }
+        None
+    }
+}
+
+/// The per-plane invalid-count bucket index (see the module docs).
+pub struct VictimIndex {
+    planes: Vec<PlaneIndex>,
+}
+
+impl VictimIndex {
+    /// Index covering `planes × blocks_per_plane` blocks with invalid
+    /// counts in `[0, pages_per_block]`.
+    pub fn new(planes: u32, blocks_per_plane: u32, pages_per_block: u32) -> VictimIndex {
+        VictimIndex {
+            planes: (0..planes)
+                .map(|_| PlaneIndex::new(blocks_per_plane, pages_per_block))
+                .collect(),
+        }
+    }
+
+    /// A block entered the closed list at position `pos` with `invalid`
+    /// invalid pages.
+    pub fn insert(&mut self, addr: BlockAddr, pos: usize, invalid: u32) {
+        let p = &mut self.planes[addr.plane.0 as usize];
+        let b = addr.block as usize;
+        debug_assert_eq!(p.pos[b], NONE, "block {b} closed twice");
+        p.pos[b] = pos as u32;
+        p.bucket_of[b] = invalid;
+        p.buckets[invalid as usize].insert((pos as u32, addr.block));
+        if invalid >= 1 {
+            p.max_hint = p.max_hint.max(invalid);
+        }
+    }
+
+    /// One page of `(plane, block)` was invalidated; if the block is
+    /// closed, move it up one bucket. No-op otherwise (active blocks,
+    /// cache-pool blocks, and popped victims are not indexed).
+    #[inline]
+    pub fn note_invalidate(&mut self, plane: PlaneId, block: u32) {
+        let p = &mut self.planes[plane.0 as usize];
+        let b = block as usize;
+        let cur = p.bucket_of[b];
+        if cur == NONE {
+            return;
+        }
+        let pos = p.pos[b];
+        let next = cur + 1;
+        debug_assert!((next as usize) < p.buckets.len(), "invalid > pages_per_block");
+        p.buckets[cur as usize].remove(&(pos, block));
+        p.buckets[next as usize].insert((pos, block));
+        p.bucket_of[b] = next;
+        p.max_hint = p.max_hint.max(next);
+    }
+
+    /// The greedy pick: `(closed-list position, block, invalid count)`
+    /// of the first-in-list block at the maximal non-zero invalid
+    /// count, or `None` when no closed block is GC-eligible.
+    pub fn peek_max(&mut self, plane: PlaneId) -> Option<(u32, u32, u32)> {
+        self.planes[plane.0 as usize].peek()
+    }
+
+    /// Iterate every closed block at invalid count `inv` in closed-list
+    /// order (the tenant-aware tie-break walks these).
+    pub fn ties(&self, plane: PlaneId, inv: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.planes[plane.0 as usize].buckets[inv as usize].iter().copied()
+    }
+
+    /// A block left the closed list (popped as a victim).
+    pub fn remove(&mut self, addr: BlockAddr) {
+        let p = &mut self.planes[addr.plane.0 as usize];
+        let b = addr.block as usize;
+        let cur = p.bucket_of[b];
+        if cur == NONE {
+            return;
+        }
+        p.buckets[cur as usize].remove(&(p.pos[b], addr.block));
+        p.pos[b] = NONE;
+        p.bucket_of[b] = NONE;
+    }
+
+    /// The closed list's `swap_remove` moved `addr` to `new_pos`;
+    /// re-key its bucket entry so tie order keeps tracking the list.
+    pub fn reposition(&mut self, addr: BlockAddr, new_pos: usize) {
+        let p = &mut self.planes[addr.plane.0 as usize];
+        let b = addr.block as usize;
+        let cur = p.bucket_of[b];
+        if cur == NONE || p.pos[b] == new_pos as u32 {
+            return;
+        }
+        let set = &mut p.buckets[cur as usize];
+        set.remove(&(p.pos[b], addr.block));
+        set.insert((new_pos as u32, addr.block));
+        p.pos[b] = new_pos as u32;
+    }
+
+    /// Full-consistency audit against a fresh rescan of the closed
+    /// list: every closed block is present at its exact position and
+    /// bucket (`inv(block)`), and nothing else is indexed. Slow; used
+    /// by [`super::Ftl::audit`] and the property suite.
+    pub fn audit<F: Fn(u32) -> u32>(
+        &self,
+        plane: PlaneId,
+        closed: &[u32],
+        inv: F,
+    ) -> Result<()> {
+        let p = &self.planes[plane.0 as usize];
+        let total: usize = p.buckets.iter().map(|s| s.len()).sum();
+        if total != closed.len() {
+            return Err(Error::invariant(format!(
+                "plane {}: index holds {total} blocks, closed list {}",
+                plane.0,
+                closed.len()
+            )));
+        }
+        for (i, &b) in closed.iter().enumerate() {
+            if p.pos[b as usize] != i as u32 {
+                return Err(Error::invariant(format!(
+                    "plane {} block {b}: index position {} != list position {i}",
+                    plane.0, p.pos[b as usize]
+                )));
+            }
+            let want = inv(b);
+            if p.bucket_of[b as usize] != want {
+                return Err(Error::invariant(format!(
+                    "plane {} block {b}: bucket {} != invalid count {want}",
+                    plane.0, p.bucket_of[b as usize]
+                )));
+            }
+            if !p.buckets[want as usize].contains(&(i as u32, b)) {
+                return Err(Error::invariant(format!(
+                    "plane {} block {b}: missing from bucket {want}",
+                    plane.0
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(plane: u32, block: u32) -> BlockAddr {
+        BlockAddr { plane: PlaneId(plane), block }
+    }
+
+    #[test]
+    fn insert_peek_remove_roundtrip() {
+        let mut ix = VictimIndex::new(2, 8, 12);
+        assert_eq!(ix.peek_max(PlaneId(0)), None);
+        ix.insert(addr(0, 3), 0, 2);
+        ix.insert(addr(0, 5), 1, 4);
+        ix.insert(addr(0, 1), 2, 0); // closed but not eligible
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 5, 4)));
+        assert_eq!(ix.peek_max(PlaneId(1)), None, "planes are independent");
+        ix.remove(addr(0, 5));
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 3, 2)));
+        ix.remove(addr(0, 3));
+        assert_eq!(ix.peek_max(PlaneId(0)), None, "bucket-0 blocks never qualify");
+        ix.audit(PlaneId(0), &[1], |_| 0).unwrap();
+    }
+
+    #[test]
+    fn invalidate_moves_buckets_and_ties_stay_in_list_order() {
+        let mut ix = VictimIndex::new(1, 8, 12);
+        ix.insert(addr(0, 2), 0, 1);
+        ix.insert(addr(0, 6), 1, 1);
+        // a tie at 1: the first-in-list block (pos 0) wins
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 2, 1)));
+        let ties: Vec<(u32, u32)> = ix.ties(PlaneId(0), 1).collect();
+        assert_eq!(ties, vec![(0, 2), (1, 6)]);
+        // block 6 gains an invalid page and takes the lead
+        ix.note_invalidate(PlaneId(0), 6);
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
+        // invalidations of unindexed blocks are inert
+        ix.note_invalidate(PlaneId(0), 7);
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
+        ix.audit(PlaneId(0), &[2, 6], |b| if b == 6 { 2 } else { 1 }).unwrap();
+    }
+
+    #[test]
+    fn reposition_mirrors_swap_remove() {
+        let mut ix = VictimIndex::new(1, 8, 12);
+        ix.insert(addr(0, 2), 0, 3);
+        ix.insert(addr(0, 6), 1, 3);
+        ix.insert(addr(0, 4), 2, 3);
+        // pop the pos-0 block the way Ftl does: swap_remove(0) moves
+        // the last block (4) into position 0
+        ix.remove(addr(0, 2));
+        ix.reposition(addr(0, 4), 0);
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 4, 3)), "moved block leads the tie");
+        ix.audit(PlaneId(0), &[4, 6], |_| 3).unwrap();
+    }
+
+    #[test]
+    fn audit_catches_divergence() {
+        let mut ix = VictimIndex::new(1, 8, 12);
+        ix.insert(addr(0, 2), 0, 1);
+        assert!(ix.audit(PlaneId(0), &[2], |_| 1).is_ok());
+        assert!(ix.audit(PlaneId(0), &[2], |_| 2).is_err(), "stale bucket detected");
+        assert!(ix.audit(PlaneId(0), &[2, 3], |_| 1).is_err(), "missing block detected");
+        assert!(ix.audit(PlaneId(0), &[], |_| 1).is_err(), "extra block detected");
+    }
+}

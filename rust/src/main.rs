@@ -90,6 +90,20 @@ fn cli() -> Command {
                 .opt("workload", Some('w'), "NAME", "workload", Some("HM_0")),
         )
         .subcommand(
+            Command::new("perf", "victim-index perf harness: scan vs index, all schemes")
+                .opt("preset", Some('p'), "P", "small|medium|large|table1", Some("large"))
+                .opt("scenario", None, "X", "bursty|daily|both", Some("both"))
+                .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop|all", Some("all"))
+                .opt(
+                    "volume-mult",
+                    None,
+                    "F",
+                    "write volume as a multiple of logical capacity",
+                    Some("2.0"),
+                )
+                .opt("out", Some('o'), "FILE", "JSON perf-trajectory output", Some("BENCH_PR4.json")),
+        )
+        .subcommand(
             Command::new("audit", "reprogram reliability audit (PJRT artifact)")
                 .opt("sigma", None, "F", "process variation", Some("0.3"))
                 .opt("alpha", None, "F", "interference coupling", Some("0.02"))
@@ -106,6 +120,7 @@ fn main() {
         Some("run") => cmd_run(parsed.sub().unwrap()),
         Some("multi-tenant") => cmd_multitenant(parsed.sub().unwrap()),
         Some("sweep") => cmd_sweep(parsed.sub().unwrap()),
+        Some("perf") => cmd_perf(parsed.sub().unwrap()),
         Some("audit") => cmd_audit(parsed.sub().unwrap()),
         Some("list") => cmd_list(),
         _ => {
@@ -432,6 +447,88 @@ fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     }
     println!("\n== ablation: {what} (workload {workload}) ==");
     print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_perf(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    use ips::coordinator::perf;
+    let preset = p.get("preset").unwrap_or("large").to_string();
+    let base = perf::preset_by_name(&preset)?;
+    let volume_mult = p.get_f64("volume-mult").map_err(ips::Error::config)?;
+    let schemes: Vec<Scheme> = match p.get("scheme").unwrap_or("all") {
+        "all" => Scheme::all().to_vec(),
+        s => vec![Scheme::parse(s)?],
+    };
+    let scenarios: Vec<Scenario> = match p.get("scenario").unwrap_or("both") {
+        "both" => vec![Scenario::Bursty, Scenario::Daily],
+        s => vec![Scenario::parse(s)?],
+    };
+    println!(
+        "perf: preset={preset} ({} planes x {} blocks/plane), volume x{volume_mult} of \
+         logical, {} scheme(s) x {} scenario(s), scan vs index",
+        base.geometry.planes(),
+        base.geometry.blocks_per_plane,
+        schemes.len(),
+        scenarios.len()
+    );
+    let mut table = TextTable::new(&[
+        "preset",
+        "scheme",
+        "scenario",
+        "host_pages",
+        "scan_kops",
+        "index_kops",
+        "speedup",
+        "identical",
+    ]);
+    let mut cells = Vec::new();
+    for &scheme in &schemes {
+        for &scen in &scenarios {
+            let c = perf::run_cell(&preset, &base, scheme, scen, volume_mult)?;
+            println!(
+                "  {:<9} {:<6}  scan {:>8.1}ms  index {:>8.1}ms  speedup {:>6.2}x  {}",
+                c.scheme,
+                c.scenario,
+                c.scan_wall.as_secs_f64() * 1e3,
+                c.index_wall.as_secs_f64() * 1e3,
+                c.speedup(),
+                if c.identical { "ok" } else { "DIVERGED" }
+            );
+            table.row(vec![
+                c.preset.clone(),
+                c.scheme.into(),
+                c.scenario.into(),
+                c.host_pages.to_string(),
+                format!("{:.1}", c.ops_scan() / 1e3),
+                format!("{:.1}", c.ops_index() / 1e3),
+                format!("{:.2}x", c.speedup()),
+                c.identical.to_string(),
+            ]);
+            cells.push(c);
+        }
+    }
+    println!("\n== perf: victim index vs linear scan ==");
+    print!("{}", table.render());
+    let gc_heavy: Vec<&ips::coordinator::perf::PerfCell> =
+        cells.iter().filter(|c| c.scenario == "bursty").collect();
+    if let Some(best) = gc_heavy
+        .iter()
+        .max_by(|a, b| a.speedup().partial_cmp(&b.speedup()).unwrap_or(std::cmp::Ordering::Equal))
+    {
+        println!(
+            "GC-heavy bursty headline: {} at {:.2}x ops/sec (target >= 2x on presets::large)",
+            best.scheme,
+            best.speedup()
+        );
+    }
+    let out = p.get("out").unwrap_or("BENCH_PR4.json");
+    std::fs::write(out, perf::perf_json(&cells))?;
+    println!("wrote {out}");
+    if cells.iter().any(|c| !c.identical) {
+        return Err(ips::Error::invariant(
+            "scan and index runs diverged — the victim index changed simulation results",
+        ));
+    }
     Ok(())
 }
 

@@ -1,0 +1,183 @@
+//! Differential guarantee for the victim-selection index: with
+//! `sim.victim_index` on vs off, every scheme must produce **byte
+//! identical** run summaries — ledger counters, latency statistics
+//! (counts, means, percentiles, raw samples), WA, simulated end time —
+//! on bursty and daily scenarios, single- and multi-tenant, under both
+//! attribution modes. The index is a pure performance change; any
+//! divergence is a bug.
+
+use ips::config::{presets, AttributionMode, Config, MixKind, SchedKind, Scheme, MS, SEC};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::metrics::RunSummary;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+
+fn single_cfg(scheme: Scheme, index: bool) -> Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.sim.verify = true; // audits the index against a fresh rescan
+    c.sim.latency_samples = 4096;
+    c.sim.victim_index = index;
+    c
+}
+
+fn run_single(scheme: Scheme, scen: Scenario, index: bool) -> RunSummary {
+    let mut sim = Simulator::new(single_cfg(scheme, index)).unwrap();
+    let trace = match scen {
+        // 4× the cache: over the cliff, GC-heavy
+        Scenario::Bursty => scenario::sequential_fill("seq", 4 << 20, sim.logical_bytes()),
+        // idle gaps drive reclamation / AGC / coop background pipelines
+        Scenario::Daily => scenario::daily_streams(3, 1 << 20, 60 * SEC, sim.logical_bytes()),
+    };
+    sim.run(&trace, scen).unwrap()
+}
+
+fn assert_summaries_match(a: &RunSummary, b: &RunSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.write_latency.count(), b.write_latency.count(), "{label}: write count");
+    assert_eq!(
+        a.write_latency.mean().to_bits(),
+        b.write_latency.mean().to_bits(),
+        "{label}: mean write latency"
+    );
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            a.write_latency.percentile(q),
+            b.write_latency.percentile(q),
+            "{label}: p{q} write latency"
+        );
+    }
+    assert_eq!(a.write_latency.raw_us(), b.write_latency.raw_us(), "{label}: raw samples");
+    assert_eq!(a.read_latency.count(), b.read_latency.count(), "{label}: read count");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA");
+}
+
+#[test]
+fn five_schemes_bursty_identical_with_and_without_index() {
+    for scheme in Scheme::all() {
+        let with = run_single(scheme, Scenario::Bursty, true);
+        let without = run_single(scheme, Scenario::Bursty, false);
+        assert_summaries_match(&with, &without, &format!("{scheme:?}/bursty"));
+    }
+}
+
+#[test]
+fn five_schemes_daily_identical_with_and_without_index() {
+    for scheme in Scheme::all() {
+        let with = run_single(scheme, Scenario::Daily, true);
+        let without = run_single(scheme, Scenario::Daily, false);
+        assert_summaries_match(&with, &without, &format!("{scheme:?}/daily"));
+    }
+}
+
+// --- multi-tenant ---------------------------------------------------
+
+fn mt_cfg(scheme: Scheme, tenants: u32, attr: AttributionMode, index: bool) -> Config {
+    let mut cfg = presets::small();
+    cfg.cache.scheme = scheme;
+    cfg.cache.slc_cache_bytes = 1 << 20;
+    cfg.cache.idle_threshold = MS;
+    cfg.host.tenants = tenants;
+    cfg.host.scheduler = SchedKind::RoundRobin;
+    cfg.host.mix = MixKind::AggressorVictims;
+    cfg.host.attribution = attr;
+    if attr == AttributionMode::Owner {
+        // exercise the partitioner's eviction path (eviction_candidate
+        // → evict_tenant_blocks) on top of the tenant-aware victims
+        cfg.cache.partition.enabled = true;
+        cfg.cache.partition.reserved_frac = 0.5;
+    }
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000;
+    cfg.sim.victim_index = index;
+    cfg
+}
+
+fn assert_mt_match(a: &MultiTenantSummary, b: &MultiTenantSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: device ledger diverged");
+    assert_eq!(a.background, b.background, "{label}: background ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.ledger, y.ledger, "{label}/{}: tenant ledger", x.name);
+        assert_eq!(
+            x.write_latency.count(),
+            y.write_latency.count(),
+            "{label}/{}: write count",
+            x.name
+        );
+        assert_eq!(
+            x.p99_write_latency(),
+            y.p99_write_latency(),
+            "{label}/{}: p99",
+            x.name
+        );
+        assert_eq!(
+            x.migrated_pages_owned, y.migrated_pages_owned,
+            "{label}/{}: owned moves",
+            x.name
+        );
+    }
+}
+
+#[test]
+fn multi_tenant_proportional_identical() {
+    for scen in [Scenario::Bursty, Scenario::Daily] {
+        for scheme in [Scheme::Baseline, Scheme::Ips] {
+            let a = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Proportional, true),
+                scen,
+            )
+            .unwrap();
+            let b = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Proportional, false),
+                scen,
+            )
+            .unwrap();
+            assert_mt_match(&a, &b, &format!("{scheme:?}/{scen:?}/proportional"));
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_owner_attribution_identical() {
+    // owner attribution turns on the TenantAware victim policy and the
+    // eviction hook — the index's tie-break and the owner histograms
+    // both sit on this path
+    for scen in [Scenario::Bursty, Scenario::Daily] {
+        for scheme in [Scheme::Baseline, Scheme::IpsAgc] {
+            let a = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Owner, true),
+                scen,
+            )
+            .unwrap();
+            let b = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Owner, false),
+                scen,
+            )
+            .unwrap();
+            assert_mt_match(&a, &b, &format!("{scheme:?}/{scen:?}/owner"));
+        }
+    }
+}
+
+#[test]
+fn single_tenant_owner_identical() {
+    let a = MultiTenantSimulator::run_once(
+        mt_cfg(Scheme::Baseline, 1, AttributionMode::Owner, true),
+        Scenario::Daily,
+    )
+    .unwrap();
+    let b = MultiTenantSimulator::run_once(
+        mt_cfg(Scheme::Baseline, 1, AttributionMode::Owner, false),
+        Scenario::Daily,
+    )
+    .unwrap();
+    assert_mt_match(&a, &b, "baseline/daily/owner/single-tenant");
+}

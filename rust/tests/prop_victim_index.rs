@@ -1,0 +1,246 @@
+//! Property suite for the incremental victim-selection index: random
+//! write / invalidate / close / pop sequences drive **two FTLs in
+//! lockstep** — one on the bucket index, one on the historical linear
+//! scan — and every observable (each pop's pick, completions, ledgers,
+//! closed-list order, the greedy gain peek) must match exactly, under
+//! both `Greedy` and `TenantAware` policies with 1 and 4 tenants.
+//! Bucket membership is additionally checked against a fresh rescan
+//! through `Ftl::audit` (the index audit), and the owner histograms
+//! behind `dominant_owner` / `owned_valid_in_block` are checked against
+//! a valid-page scan oracle. Failures shrink to a minimal op sequence.
+
+use ips::config::{presets, Scheme};
+use ips::flash::{BlockAddr, BlockMode, Lpn, PlaneId};
+use ips::ftl::{gc, Ftl, VictimPolicy};
+use ips::metrics::Attribution;
+use ips::util::prop::{self, tuple2, u64_up_to, vec_of};
+use std::cmp::Reverse;
+
+/// Raw generated op: `(kind, argument)`, interpreted by `step`.
+type RawOp = (u64, u64);
+
+const LPN_SPAN: u64 = 512;
+/// First LPN used for cache-block fills (disjoint from host writes).
+const CACHE_BASE: u64 = 100_000;
+
+struct Pair {
+    /// Index-backed FTL (the implementation under test).
+    a: Ftl,
+    /// Scan-backed oracle FTL.
+    b: Ftl,
+    /// LPNs written into cache blocks so far (overwrite targets).
+    cache_lpns: Vec<u64>,
+    /// Monotonic counter for fresh cache LPNs.
+    next_cache: u64,
+    tenants: usize,
+}
+
+fn build_pair(tenants: usize, policy: VictimPolicy) -> Pair {
+    let mk = |use_index: bool| {
+        let mut cfg = presets::small();
+        cfg.cache.scheme = Scheme::TlcOnly;
+        cfg.sim.victim_index = use_index;
+        let mut f = Ftl::new(&cfg).unwrap();
+        if tenants > 0 {
+            f.set_tenant_count(tenants);
+            f.set_victim_policy(policy);
+            f.set_tenant(Some(0));
+        }
+        f
+    };
+    Pair { a: mk(true), b: mk(false), cache_lpns: Vec::new(), next_cache: 0, tenants }
+}
+
+/// Apply one op to both FTLs; `Err` on any observable divergence.
+fn step(p: &mut Pair, op: RawOp) -> Result<(), String> {
+    let planes = p.a.planes() as u64;
+    let (kind, arg) = op;
+    match kind % 5 {
+        // host TLC write (overwrites invalidate, GC may run inline)
+        0 => {
+            let lpn = Lpn(arg % LPN_SPAN);
+            let ra = p.a.host_write_tlc(lpn, 0);
+            let rb = p.b.host_write_tlc(lpn, 0);
+            match (ra, rb) {
+                (Ok(ca), Ok(cb)) if ca == cb => {}
+                (Err(_), Err(_)) => {}
+                (ca, cb) => return Err(format!("host write diverged: {ca:?} vs {cb:?}")),
+            }
+        }
+        // fill a fresh SLC block on a plane and close it
+        1 => {
+            let plane = PlaneId((arg % planes) as u32);
+            let ra = p.a.alloc_block(plane, BlockMode::Slc);
+            let rb = p.b.alloc_block(plane, BlockMode::Slc);
+            let (ba, bb) = match (ra, rb) {
+                (Ok(x), Ok(y)) => (x, y),
+                (Err(_), Err(_)) => return Ok(()),
+                (x, y) => return Err(format!("alloc diverged: {x:?} vs {y:?}")),
+            };
+            if ba != bb {
+                return Err(format!("alloc picked different blocks: {ba:?} vs {bb:?}"));
+            }
+            for i in 0..4u64 {
+                let lpn = Lpn(CACHE_BASE + p.next_cache * 4 + i);
+                p.cache_lpns.push(lpn.0);
+                p.a.program_slc_into(ba, lpn, Attribution::SlcCacheWrite, 0)
+                    .map_err(|e| format!("a: slc program: {e}"))?;
+                p.b.program_slc_into(bb, lpn, Attribution::SlcCacheWrite, 0)
+                    .map_err(|e| format!("b: slc program: {e}"))?;
+            }
+            p.next_cache += 1;
+            p.a.register_closed(ba);
+            p.b.register_closed(bb);
+        }
+        // overwrite a previously cached LPN: invalidates a page that
+        // may sit inside a closed block (the index's hot update)
+        2 => {
+            if p.cache_lpns.is_empty() {
+                return Ok(());
+            }
+            let lpn = Lpn(p.cache_lpns[(arg as usize) % p.cache_lpns.len()]);
+            let ra = p.a.host_write_tlc(lpn, 0);
+            let rb = p.b.host_write_tlc(lpn, 0);
+            match (ra, rb) {
+                (Ok(ca), Ok(cb)) if ca == cb => {}
+                (Err(_), Err(_)) => {}
+                (ca, cb) => return Err(format!("overwrite diverged: {ca:?} vs {cb:?}")),
+            }
+        }
+        // explicit victim pop: the pick itself must match
+        3 => {
+            let plane = PlaneId((arg % planes) as u32);
+            let va = p.a.pop_victim(plane);
+            let vb = p.b.pop_victim(plane);
+            if va != vb {
+                return Err(format!("pop_victim({plane:?}) diverged: {va:?} vs {vb:?}"));
+            }
+            // a popped (unreclaimed) victim stays erasable later only
+            // through GC paths; leave it orphaned on both sides alike
+        }
+        // switch the writing tenant (tenant-aware debt accounting)
+        _ => {
+            if p.tenants > 0 {
+                let t = (arg % p.tenants as u64) as u16;
+                p.a.set_tenant(Some(t));
+                p.b.set_tenant(Some(t));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Valid-page scan oracle for the owner histograms.
+fn dominant_oracle(f: &Ftl, addr: BlockAddr) -> Option<u16> {
+    let g = *f.array.geometry();
+    let blk = f.array.block(addr);
+    let mut counts: Vec<(u16, u32)> = Vec::new();
+    for pib in blk.valid_pages() {
+        if let Some(o) = f.owner_of(addr.page(&g, pib / 3, (pib % 3) as u8)) {
+            match counts.iter_mut().find(|(t, _)| *t == o) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((o, 1)),
+            }
+        }
+    }
+    counts.into_iter().max_by_key(|&(t, c)| (c, Reverse(t))).map(|(t, _)| t)
+}
+
+fn owned_oracle(f: &Ftl, addr: BlockAddr, t: u16) -> u32 {
+    let g = *f.array.geometry();
+    let blk = f.array.block(addr);
+    blk.valid_pages()
+        .filter(|&pib| f.owner_of(addr.page(&g, pib / 3, (pib % 3) as u8)) == Some(t))
+        .count() as u32
+}
+
+fn final_checks(p: &mut Pair) -> Result<(), String> {
+    if p.a.ledger != p.b.ledger {
+        return Err(format!("ledgers diverged:\n  {:?}\n  {:?}", p.a.ledger, p.b.ledger));
+    }
+    for pl in 0..p.a.planes() {
+        let plane = PlaneId(pl);
+        if p.a.closed_blocks(plane) != p.b.closed_blocks(plane) {
+            return Err(format!(
+                "closed list diverged on plane {pl}: {:?} vs {:?}",
+                p.a.closed_blocks(plane),
+                p.b.closed_blocks(plane)
+            ));
+        }
+        // the greedy-gain peek answers from the index on one side and
+        // a closed-list rescan on the other
+        let ga = gc::greedy_gain(&mut p.a, plane);
+        let gb = gc::greedy_gain(&mut p.b, plane);
+        if ga != gb {
+            return Err(format!("greedy_gain diverged on plane {pl}: {ga} vs {gb}"));
+        }
+        // owner histograms == valid-page scan, per closed block
+        for &b in p.a.closed_blocks(plane) {
+            let addr = BlockAddr { plane, block: b };
+            if p.a.dominant_owner(addr) != dominant_oracle(&p.a, addr) {
+                return Err(format!("dominant_owner({addr:?}) != scan oracle"));
+            }
+            for t in 0..p.tenants.max(1) as u16 {
+                if p.a.owned_valid_in_block(addr, t) != owned_oracle(&p.a, addr, t) {
+                    return Err(format!("owned_valid_in_block({addr:?}, {t}) != scan oracle"));
+                }
+            }
+        }
+    }
+    // bucket membership must match a fresh rescan (Ftl::audit runs the
+    // index audit on the indexed side)
+    p.a.audit().map_err(|e| format!("indexed audit: {e}"))?;
+    p.b.audit().map_err(|e| format!("oracle audit: {e}"))?;
+    // drain every plane: the full pop sequence must agree
+    for pl in 0..p.a.planes() {
+        let plane = PlaneId(pl);
+        loop {
+            let va = p.a.pop_victim(plane);
+            let vb = p.b.pop_victim(plane);
+            if va != vb {
+                return Err(format!("drain pop diverged on plane {pl}: {va:?} vs {vb:?}"));
+            }
+            if va.is_none() {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_property(name: &'static str, tenants: usize, policy: VictimPolicy) {
+    prop::check(
+        name,
+        48,
+        vec_of(tuple2(u64_up_to(4), u64_up_to(1 << 16)), 0, 96),
+        |ops| {
+            let mut pair = build_pair(tenants, policy);
+            for &op in ops {
+                step(&mut pair, op)?;
+            }
+            final_checks(&mut pair)
+        },
+    );
+}
+
+#[test]
+fn index_matches_scan_untracked_greedy() {
+    run_property("victim index == scan (no tenants, greedy)", 0, VictimPolicy::Greedy);
+}
+
+#[test]
+fn index_matches_scan_single_tenant_greedy() {
+    run_property("victim index == scan (1 tenant, greedy)", 1, VictimPolicy::Greedy);
+}
+
+#[test]
+fn index_matches_scan_single_tenant_aware() {
+    // with one tenant every debt is equal: tenant-aware must reduce to
+    // greedy on both backends
+    run_property("victim index == scan (1 tenant, tenant-aware)", 1, VictimPolicy::TenantAware);
+}
+
+#[test]
+fn index_matches_scan_four_tenants_aware() {
+    run_property("victim index == scan (4 tenants, tenant-aware)", 4, VictimPolicy::TenantAware);
+}
