@@ -3,7 +3,7 @@
 //! device-side queue depth (`host.device_qd`) that decides how much a
 //! scheduler's dispatch order can matter to the victims' tail.
 use ips::config::{Scheme, MS};
-use ips::coordinator::fleet::{device_qd_sweep, qd_joint_sweep};
+use ips::coordinator::fleet::{device_qd_sweep, interconnect_sweep, qd_joint_sweep};
 use ips::coordinator::{experiment, ExpOptions};
 use ips::sim::Simulator;
 use ips::trace::scenario::Scenario;
@@ -87,6 +87,41 @@ fn main() {
                     s.write_latency.percentile_best(0.99) as f64 / 1e6,
                     s.max_victim_p99() as f64 / 1e6,
                     s.wa()
+                );
+            }
+        }
+    }
+
+    // channel/die scaling under the interconnect timing model: the
+    // ablation axis PR 5 opens — victim tails and the per-phase
+    // (queued/transfer/array) breakdown against real parallelism
+    {
+        let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+        base.host.tenants = 4;
+        base.sim.latency_samples = 100_000;
+        let channels = [1u32, 2, 4];
+        let dies = [1u32, 2];
+        let mut points = Vec::new();
+        h.bench(
+            "ablation/interconnect/sweep",
+            Some((channels.len() * dies.len()) as u64),
+            || {
+                points =
+                    interconnect_sweep(&base, Scenario::Bursty, &channels, &dies).unwrap();
+            },
+        );
+        if !points.is_empty() {
+            println!("\n== ablation: interconnect channel/die scaling (aggressor+victims) ==");
+            for (ch, dies, s) in &points {
+                println!(
+                    "  ch {:>2} x dies {:>2}: victim p99 {:>9.3} ms  q {:>7.3}  xfer {:>7.3}  \
+                     arr {:>7.3} ms/op",
+                    ch,
+                    dies,
+                    s.max_victim_p99() as f64 / 1e6,
+                    s.write_phases.mean_queued_ns() / 1e6,
+                    s.write_phases.mean_transfer_ns() / 1e6,
+                    s.write_phases.mean_array_ns() / 1e6,
                 );
             }
         }

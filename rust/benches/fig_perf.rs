@@ -70,4 +70,42 @@ fn main() {
         println!("\nwrote {out}; best GC-heavy bursty speedup {bursty_best:.2}x");
     }
     println!("\n{} perf cell(s) complete.", cells.len());
+
+    // PR-5 trajectory: the same matrix as a lump-vs-interconnect
+    // comparison — NOT a differential (the models legitimately
+    // diverge); the record is wall-clock overhead + the simulated-time
+    // contention the lump was hiding. Skipped when a filter excluded
+    // everything above.
+    let mut timing_cells = Vec::new();
+    for scheme in Scheme::all() {
+        for scen in [Scenario::Bursty, Scenario::Daily] {
+            let name = format!("timing/{preset}/{}/{}", scheme.name(), scen.name());
+            if let Some(f) = &filter {
+                if !name.contains(f.as_str()) {
+                    continue;
+                }
+            }
+            let c = perf::run_timing_cell(preset, &base, scheme, scen, volume_mult).unwrap();
+            println!(
+                "{name:<40} lump {:>10}  ic {:>10}  overhead {:>5.2}x  sim-time {:>6.4}x",
+                fmt_duration(c.lump_wall),
+                fmt_duration(c.ic_wall),
+                c.overhead(),
+                c.sim_end_ratio(),
+            );
+            // no monotonicity assert here: daily idle windows and the
+            // multi-plane batched flush legitimately reshape simulated
+            // time in both directions (the ratio is the measurement)
+            timing_cells.push(c);
+        }
+    }
+    if !timing_cells.is_empty() {
+        let out = std::env::var("IPS_PERF5_OUT").unwrap_or_else(|_| {
+            let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+            format!("{root}/BENCH_PR5.json")
+        });
+        std::fs::write(&out, perf::timing_json(&timing_cells)).unwrap();
+        println!("\nwrote {out}");
+    }
+    println!("{} timing cell(s) complete.", timing_cells.len());
 }

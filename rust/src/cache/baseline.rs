@@ -205,33 +205,59 @@ impl Baseline {
         None
     }
 
+    /// Return a reclaimed (erased) block to its home: the general pool
+    /// in dynamic mode (releasing the claim), the plane's cache pool
+    /// otherwise. The single sync point for claim accounting.
+    fn return_to_pool(&mut self, ftl: &mut Ftl, addr: BlockAddr) -> Result<()> {
+        let plane = addr.plane.0 as usize;
+        if self.dynamic {
+            ftl.array.push_free(addr)?;
+            self.claimed[plane] = self.claimed[plane].saturating_sub(1);
+        } else {
+            self.pools[plane].free.push_back(addr);
+        }
+        Ok(())
+    }
+
     /// Reclaim one used block (atomic unit); returns erase completion.
     fn reclaim_one(&mut self, ftl: &mut Ftl, plane: u32, now: Nanos) -> Result<Option<Nanos>> {
         let addr = match self.pools[plane as usize].used.pop_front() {
             Some(a) => a,
             None => return Ok(None),
         };
-        Ok(Some(self.reclaim_addr(ftl, plane, addr, now)?))
+        Ok(Some(self.reclaim_addr(ftl, addr, now)?))
+    }
+
+    /// Multi-plane batched reclamation round (interconnect model with
+    /// multi-plane dies only): pop the front used block of every plane
+    /// that has one and drain them as one lockstep group — same-die
+    /// one-shots interleave, distinct dies/channels proceed in parallel
+    /// ([`Ftl::reclaim_blocks_group`]). This is the flush-path batching
+    /// the lump model could never express: under it, reclamation units
+    /// ran strictly one after another. Returns the round's end, or
+    /// `None` when no plane had a used block.
+    fn reclaim_round_batched(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Option<Nanos>> {
+        let mut batch: Vec<BlockAddr> = Vec::new();
+        for pool in &mut self.pools {
+            if let Some(a) = pool.used.pop_front() {
+                batch.push(a);
+            }
+        }
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        let end = ftl.reclaim_blocks_group(&batch, Attribution::Slc2Tlc, now)?;
+        for addr in batch {
+            self.return_to_pool(ftl, addr)?;
+        }
+        Ok(Some(end))
     }
 
     /// Reclaim `addr` (already removed from the used queue) as one
     /// atomic unit; returns the erase end time.
-    fn reclaim_addr(
-        &mut self,
-        ftl: &mut Ftl,
-        plane: u32,
-        addr: BlockAddr,
-        now: Nanos,
-    ) -> Result<Nanos> {
+    fn reclaim_addr(&mut self, ftl: &mut Ftl, addr: BlockAddr, now: Nanos) -> Result<Nanos> {
         let done = ftl.reclaim_block(addr, Attribution::Slc2Tlc, now)?;
-        if self.dynamic {
-            // dynamic allocation: return the block to the general pool
-            ftl.array.push_free(addr)?;
-            self.claimed[plane as usize] = self.claimed[plane as usize].saturating_sub(1);
-        } else {
-            // the block stays in the cache pool
-            self.pools[plane as usize].free.push_back(addr);
-        }
+        self.return_to_pool(ftl, addr)?;
         Ok(done.end)
     }
 
@@ -268,12 +294,7 @@ impl Baseline {
             .pop_front()
             .ok_or_else(|| Error::invariant("erase_used_front on empty pool"))?;
         let done = ftl.array.erase(addr, now)?;
-        if self.dynamic {
-            ftl.array.push_free(addr)?;
-            self.claimed[plane as usize] = self.claimed[plane as usize].saturating_sub(1);
-        } else {
-            self.pools[plane as usize].free.push_back(addr);
-        }
+        self.return_to_pool(ftl, addr)?;
         Ok(done.end)
     }
 
@@ -409,28 +430,34 @@ impl CachePolicy for Baseline {
         // the owner table's per-block histograms (O(owners), no page
         // scans); blocks are scored once (reclaiming one block never
         // adds the tenant's pages to another) and reclaimed most-owned
-        // first — the stable sort keeps FIFO order, i.e. coldest first,
-        // on ties — with O(1) queue removal per block. Atomic units
-        // issue while there is idle time left, like idle_work.
-        let mut candidates: Vec<(u32, usize, BlockAddr)> = Vec::new();
+        // first, then explicitly COLDEST first — the FTL's per-block
+        // last-write timestamp, not the queue-order proxy (for
+        // FIFO-filled pools the two orders coincide, unit-tested; a
+        // block re-written out of queue order is now correctly treated
+        // as hot). Scan order breaks exact-timestamp ties, preserving
+        // the historical order. O(1) queue removal per block; atomic
+        // units issue while there is idle time left, like idle_work.
+        let mut candidates: Vec<(u32, Nanos, usize, usize, BlockAddr)> = Vec::new();
+        let mut seq = 0usize;
         for (pi, pool) in self.pools.iter().enumerate() {
             for addr in pool.used.iter() {
                 let owned = ftl.owned_valid_in_block(addr, tenant);
                 if owned > 0 && 2 * owned >= ftl.array.block(addr).valid_count() {
-                    candidates.push((owned, pi, addr));
+                    candidates.push((owned, ftl.last_block_write(addr), seq, pi, addr));
                 }
+                seq += 1;
             }
         }
-        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
         let mut t = now;
-        for (_, pi, addr) in candidates {
+        for (_, _, _, pi, addr) in candidates {
             if t >= deadline {
                 break;
             }
             if !self.pools[pi].used.remove(addr) {
                 continue;
             }
-            t = t.max(self.reclaim_addr(ftl, pi as u32, addr, t)?);
+            t = t.max(self.reclaim_addr(ftl, addr, t)?);
         }
         Ok(t)
     }
@@ -445,9 +472,24 @@ impl CachePolicy for Baseline {
                 }
             }
         }
-        // Start atomic reclamation units while there is still idle time
-        // at issue; a unit in flight may overrun the deadline.
         let mut t = now;
+        // Multi-plane batched mode: one reclamation round per idle step
+        // drains a block on every plane concurrently (same-die one-shot
+        // programs interleave). A round issued before the deadline may
+        // overrun it — the same conflict-window semantics as the
+        // sequential units, just with the hardware's real parallelism.
+        if ftl.array.multiplane_enabled() {
+            while t < deadline {
+                match self.reclaim_round_batched(ftl, t)? {
+                    Some(end) => t = t.max(end),
+                    None => break,
+                }
+            }
+            return Ok(t);
+        }
+        // Lump model: start atomic reclamation units strictly one after
+        // another while there is still idle time at issue; a unit in
+        // flight may overrun the deadline.
         let planes = self.pools.len() as u32;
         'outer: while t < deadline {
             // round-robin planes for the next used block
@@ -473,14 +515,14 @@ impl CachePolicy for Baseline {
         // active blocks (paper §III: at the end of each workload all
         // cache data is migrated and used blocks erased).
         let mut t = now;
-        for p in 0..self.pools.len() {
-            if let Some(a) = self.pools[p].active.take() {
-                if ftl.array.block(a).written_count() > 0 {
-                    self.pools[p].used.push_back(a);
-                } else {
-                    self.pools[p].free.push_back(a);
-                }
+        self.retire_active(ftl);
+        if ftl.array.multiplane_enabled() {
+            while let Some(end) = self.reclaim_round_batched(ftl, t)? {
+                t = t.max(end);
             }
+            return Ok(t);
+        }
+        for p in 0..self.pools.len() {
             while let Some(end) = self.reclaim_one(ftl, p as u32, t)? {
                 t = t.max(end);
             }
@@ -618,6 +660,117 @@ mod tests {
         assert_eq!(ftl.ledger.slc2tlc_migrations, 3);
         let cap = b.slc_free_pages(&ftl);
         assert!(cap > 0);
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn batched_idle_reclamation_restores_cache_under_interconnect() {
+        // interconnect + multi-plane dies: idle rounds drain one block
+        // per plane concurrently; the logical outcome must match the
+        // sequential units — cache fully restored, every page migrated
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::Baseline;
+        cfg.cache.slc_cache_bytes = 512 << 10;
+        cfg.sim.interconnect = true;
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        assert!(ftl.array.multiplane_enabled());
+        let mut b = Baseline::new(&cfg);
+        b.init(&mut ftl).unwrap();
+        let capacity = b.slc_free_pages(&ftl);
+        let mut t = 0;
+        for i in 0..capacity {
+            ftl.ledger.host_page();
+            let c = b.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = t.max(c.end);
+        }
+        assert_eq!(b.slc_free_pages(&ftl), 0);
+        let end = b.idle_work(&mut ftl, t, t + 60_000 * MS).unwrap();
+        assert!(end > t);
+        assert_eq!(b.slc_free_pages(&ftl), capacity, "cache fully restored");
+        assert_eq!(ftl.ledger.slc2tlc_migrations, capacity, "every page migrated");
+        for i in 0..capacity {
+            assert!(ftl.map.get(Lpn(i)).is_some());
+        }
+        ftl.audit().unwrap();
+    }
+
+    /// One-plane geometry (one pool): FIFO fill order and last-write
+    /// timestamps agree, so the explicit-coldest eviction must pick the
+    /// FIFO front — the historical order, unchanged.
+    #[test]
+    fn coldest_eviction_matches_fifo_for_fifo_equivalent_fills() {
+        let mut cfg = presets::small();
+        cfg.geometry.channels = 1;
+        cfg.geometry.planes_per_die = 1;
+        cfg.cache.scheme = crate::config::Scheme::Baseline;
+        cfg.cache.slc_cache_bytes = 256 << 10; // two 32-page SLC blocks
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        ftl.set_tenant_count(1);
+        let mut b = Baseline::new(&cfg);
+        b.init(&mut ftl).unwrap();
+        ftl.set_tenant(Some(0));
+        let mut t = 0;
+        for i in 0..64u64 {
+            let c = b.host_write_page(&mut ftl, Lpn(i), t).unwrap();
+            t = t.max(c.end);
+        }
+        ftl.set_tenant(None);
+        b.idle_work(&mut ftl, t, t).unwrap(); // retire actives only
+        let front = b.pools[0].used.front().unwrap();
+        let ts_front = ftl.last_block_write(front);
+        // a 1 ns window admits exactly one atomic unit
+        let end = b.evict_tenant_blocks(&mut ftl, 0, t, t + 1).unwrap();
+        assert!(end > t);
+        assert!(ftl.array.block(front).is_erased(), "FIFO front evicted first");
+        // the surviving used block is strictly hotter
+        let survivor = b.pools[0].used.front().unwrap();
+        assert!(ftl.last_block_write(survivor) > ts_front);
+    }
+
+    /// Two pools with inverted write times: queue order says pool 0
+    /// first, the timestamps say pool 1's block is coldest. The
+    /// explicit signal must win — the old queue-order proxy could not
+    /// see cross-pool coldness at all.
+    #[test]
+    fn coldest_eviction_prefers_the_explicitly_coldest_block() {
+        let mut cfg = presets::small();
+        cfg.geometry.channels = 2;
+        cfg.geometry.planes_per_die = 1;
+        cfg.cache.scheme = crate::config::Scheme::Baseline;
+        cfg.cache.slc_cache_bytes = 512 << 10; // 4 blocks over 2 planes
+        let mut ftl = Ftl::new(&cfg).unwrap();
+        ftl.set_tenant_count(1);
+        let mut b = Baseline::new(&cfg);
+        b.init(&mut ftl).unwrap();
+        ftl.set_tenant(Some(0));
+        // writes alternate planes (round-robin); give plane-0 writes a
+        // far-future clock so every plane-1 block is older than every
+        // plane-0 block despite pool 0 coming first in scan order
+        const LATE: u64 = 1_000_000 * MS;
+        for i in 0..128u64 {
+            let at = if i % 2 == 0 { LATE + i * MS } else { i * MS };
+            b.host_write_page(&mut ftl, Lpn(i), at).unwrap();
+        }
+        ftl.set_tenant(None);
+        let t = LATE + 200 * MS;
+        b.idle_work(&mut ftl, t, t).unwrap(); // retire actives only
+        assert_eq!(b.used_blocks(), 4);
+        let end = b.evict_tenant_blocks(&mut ftl, 0, t, t + 1).unwrap();
+        assert!(end > t);
+        // exactly one block reclaimed, and it lives on plane 1 — the
+        // globally coldest, not the first pool's front
+        let g = *ftl.array.geometry();
+        let mut erased = Vec::new();
+        for p in 0..g.planes() {
+            for blk in 0..g.blocks_per_plane {
+                let addr = BlockAddr { plane: PlaneId(p), block: blk };
+                if ftl.array.block(addr).erase_count() > 0 {
+                    erased.push(addr);
+                }
+            }
+        }
+        assert_eq!(erased.len(), 1);
+        assert_eq!(erased[0].plane, PlaneId(1), "coldest block lived in pool 1");
         ftl.audit().unwrap();
     }
 

@@ -111,6 +111,11 @@ pub struct Timing {
     pub reprogram: Nanos,
     /// Block erase.
     pub erase: Nanos,
+    /// Channel-bus data-transfer time per 4 KiB page (interconnect
+    /// model only; the lump model never moves data over a bus). 0
+    /// disables the transfer phase entirely — the degenerate-identity
+    /// oracle of `tests/integration_interconnect.rs`.
+    pub bus_ns_per_page: Nanos,
 }
 
 impl Timing {
@@ -124,6 +129,16 @@ impl Timing {
         }
         if self.slc_prog > self.tlc_prog {
             return Err(Error::config("slc_prog must be <= tlc_prog"));
+        }
+        if self.bus_ns_per_page > self.tlc_prog {
+            // a channel that moves one page slower than the array
+            // programs a word line is a geometry/timing mismatch, not a
+            // plausible device — reject it loudly rather than simulate
+            // a transfer-bound SSD by accident
+            return Err(Error::config(
+                "bus_ns_per_page must be <= tlc_prog (the bus must be faster than \
+                 the array's program phase)",
+            ));
         }
         Ok(())
     }
@@ -582,6 +597,15 @@ pub struct SimConfig {
     /// (differential-tested), kept as the oracle and as the `perf`
     /// harness's baseline.
     pub victim_index: bool,
+    /// Timing backend: `true` arbitrates every flash operation through
+    /// the channel-bus / die / plane interconnect model
+    /// ([`crate::flash::Interconnect`]) with phase-split completions
+    /// and multi-plane batching; `false` (default for now, so goldens
+    /// stay comparable) keeps the historical per-plane lump — which the
+    /// interconnect backend must reproduce byte-for-byte under
+    /// `bus_ns_per_page = 0` and one plane per die per channel (the
+    /// differential oracle).
+    pub interconnect: bool,
 }
 
 impl Default for SimConfig {
@@ -593,6 +617,7 @@ impl Default for SimConfig {
             bandwidth_window: 100 * MS,
             max_idle_steps: 0,
             victim_index: true,
+            interconnect: false,
         }
     }
 }
@@ -674,6 +699,7 @@ impl Config {
             tlc_prog: v.u64_or("timing.tlc_prog_ns", t.tlc_prog),
             reprogram: v.u64_or("timing.reprogram_ns", t.reprogram),
             erase: v.u64_or("timing.erase_ns", t.erase),
+            bus_ns_per_page: v.u64_or("timing.bus_ns_per_page", t.bus_ns_per_page),
         };
         let c = &base.cache;
         let scheme = match v.lookup("cache.scheme") {
@@ -738,6 +764,7 @@ impl Config {
             bandwidth_window: v.u64_or("sim.bandwidth_window_ns", s.bandwidth_window),
             max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
             victim_index: v.bool_or("sim.victim_index", s.victim_index),
+            interconnect: v.bool_or("sim.interconnect", s.interconnect),
         };
         let cfg = Config { geometry, timing, cache, host, sim };
         cfg.validate()?;
@@ -809,6 +836,29 @@ mod tests {
         let cfg =
             Config::from_toml_str("[sim]\nvictim_index = false", presets::small()).unwrap();
         assert!(!cfg.sim.victim_index, "scan oracle selectable for differential runs");
+    }
+
+    #[test]
+    fn interconnect_defaults_off_and_toml_overrides() {
+        let c = presets::small();
+        assert!(!c.sim.interconnect, "lump model is the default for now (goldens)");
+        assert!(c.timing.bus_ns_per_page > 0, "presets carry a realistic bus cost");
+        let cfg = Config::from_toml_str(
+            "[sim]\ninterconnect = true\n[timing]\nbus_ns_per_page = 12000",
+            presets::small(),
+        )
+        .unwrap();
+        assert!(cfg.sim.interconnect);
+        assert_eq!(cfg.timing.bus_ns_per_page, 12_000);
+    }
+
+    #[test]
+    fn transfer_bound_bus_rejected() {
+        let mut c = presets::small();
+        c.timing.bus_ns_per_page = c.timing.tlc_prog + 1;
+        assert!(c.validate().is_err(), "bus slower than the array program is a mismatch");
+        c.timing.bus_ns_per_page = 0;
+        c.validate().unwrap();
     }
 
     #[test]

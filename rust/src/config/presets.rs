@@ -30,6 +30,9 @@ pub fn table1() -> Config {
             tlc_prog: 3 * MS,
             reprogram: 3 * MS, // conservatively TLC program (paper §IV-B)
             erase: 10 * MS,
+            // 4 KiB over a ~400 MB/s DDR NAND channel bus; inert until
+            // `sim.interconnect` turns the three-level model on
+            bus_ns_per_page: 10 * US,
         },
         cache: CacheConfig { slc_cache_bytes: 4 << 30, ..CacheConfig::default() },
         host: HostConfig::default(),
@@ -79,6 +82,7 @@ pub fn small() -> Config {
             tlc_prog: 3 * MS,
             reprogram: 3 * MS,
             erase: 10 * MS,
+            bus_ns_per_page: 10 * US,
         },
         cache: CacheConfig {
             // 1 MiB traditional cache on the small geometry

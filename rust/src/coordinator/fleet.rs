@@ -241,9 +241,70 @@ pub fn qd_joint_sweep(
     Ok(out)
 }
 
+/// The channel/die-count scaling sweep the interconnect model opens
+/// up: the same multi-tenant cell re-run at every (channels,
+/// dies_per_chip) grid point with `sim.interconnect` forced on, so the
+/// victim tail and the queued/transfer/array phase split can be read
+/// against the hardware's real parallelism. Every cell keeps the base
+/// seed (paired comparisons — the geometry changes logical capacity,
+/// so traces scale with it, but seed-derived arrival patterns match).
+/// Returns `(channels, dies_per_chip, summary)` rows in channel-major
+/// order.
+pub fn interconnect_sweep(
+    base: &Config,
+    scenario: Scenario,
+    channels: &[u32],
+    dies_per_chip: &[u32],
+) -> Result<Vec<(u32, u32, MultiTenantSummary)>> {
+    let mut out = Vec::with_capacity(channels.len() * dies_per_chip.len());
+    for &ch in channels {
+        for &dies in dies_per_chip {
+            let mut cfg = base.clone();
+            // no silent clamping: a zero channel/die count is a grid
+            // mistake and geometry validation rejects it loudly
+            cfg.geometry.channels = ch;
+            cfg.geometry.dies_per_chip = dies;
+            cfg.sim.interconnect = true;
+            cfg.validate()?;
+            out.push((ch, dies, MultiTenantSimulator::run_once(cfg, scenario)?));
+        }
+    }
+    Ok(out)
+}
+
+/// Render an interconnect sweep with the per-phase latency breakdown.
+pub fn interconnect_table(points: &[(u32, u32, MultiTenantSummary)]) -> TextTable {
+    let mut table = TextTable::new(&[
+        "channels",
+        "dies",
+        "scheme",
+        "mean_ms",
+        "victim_p99_ms",
+        "q_ms",
+        "xfer_ms",
+        "arr_ms",
+        "wa",
+    ]);
+    for (ch, dies, s) in points {
+        table.row(vec![
+            ch.to_string(),
+            dies.to_string(),
+            s.scheme.clone(),
+            format!("{:.3}", s.write_latency.mean() / 1e6),
+            format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+            format!("{:.3}", s.write_phases.mean_queued_ns() / 1e6),
+            format!("{:.3}", s.write_phases.mean_transfer_ns() / 1e6),
+            format!("{:.3}", s.write_phases.mean_array_ns() / 1e6),
+            format!("{:.3}", s.wa()),
+        ]);
+    }
+    table
+}
+
 /// Render a sweep as the paper-style summary table (deterministic:
 /// wall-clock is deliberately excluded so serial and parallel sweeps
-/// render byte-identically).
+/// render byte-identically). The q/xfer/arr columns are the
+/// device-wide per-phase write-latency breakdown (mean per flash op).
 pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
     let mut table = TextTable::new(&[
         "scheme",
@@ -256,6 +317,9 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
         "p99_ms",
         "wa",
         "victim_p99_ms",
+        "q_ms",
+        "xfer_ms",
+        "arr_ms",
         "stalls",
         "bg_pages",
     ]);
@@ -271,6 +335,9 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
             format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
             format!("{:.3}", s.wa()),
             format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+            format!("{:.3}", s.write_phases.mean_queued_ns() / 1e6),
+            format!("{:.3}", s.write_phases.mean_transfer_ns() / 1e6),
+            format!("{:.3}", s.write_phases.mean_array_ns() / 1e6),
             s.total_throttle_stalls().to_string(),
             s.background.total_programs().to_string(),
         ]);
@@ -292,19 +359,24 @@ pub fn summary_json(results: &[MultiTenantSummary]) -> String {
         }
         out.push_str(&format!(
             "{{\"scheme\":\"{}\",\"scheduler\":\"{}\",\"mix\":\"{}\",\"variant\":\"{}\",\
-             \"attr\":\"{}\",\"seed\":\"{:#018x}\",\"mean_ms\":\"{:.3}\",\"p99_ms\":\"{:.3}\",\
-             \"wa\":\"{:.3}\",\"victim_p99_ms\":\"{:.3}\",\"stalls\":{},\"bg_pages\":{},\
-             \"host_bytes\":{},\"sim_end\":{}}}",
+             \"attr\":\"{}\",\"timing\":\"{}\",\"seed\":\"{:#018x}\",\"mean_ms\":\"{:.3}\",\
+             \"p99_ms\":\"{:.3}\",\"wa\":\"{:.3}\",\"victim_p99_ms\":\"{:.3}\",\
+             \"q_ms\":\"{:.3}\",\"xfer_ms\":\"{:.3}\",\"arr_ms\":\"{:.3}\",\"stalls\":{},\
+             \"bg_pages\":{},\"host_bytes\":{},\"sim_end\":{}}}",
             s.scheme,
             s.scheduler,
             s.mix,
             s.variant_name(),
             s.attribution,
+            s.timing_model,
             s.seed,
             s.write_latency.mean() / 1e6,
             s.write_latency.percentile_best(0.99) as f64 / 1e6,
             s.wa(),
             s.max_victim_p99() as f64 / 1e6,
+            s.write_phases.mean_queued_ns() / 1e6,
+            s.write_phases.mean_transfer_ns() / 1e6,
+            s.write_phases.mean_array_ns() / 1e6,
             s.total_throttle_stalls(),
             s.background.total_programs(),
             s.host_bytes_written,
@@ -316,7 +388,9 @@ pub fn summary_json(results: &[MultiTenantSummary]) -> String {
 }
 
 /// Render one run's per-tenant breakdown (the `multi-tenant`
-/// subcommand's detail view).
+/// subcommand's detail view). The q/xfer/arr columns are each tenant's
+/// per-phase write-latency attribution (mean ms per flash op) from the
+/// interconnect model — all-array with zero transfer under the lump.
 pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
     let mut table = TextTable::new(&[
         "tenant",
@@ -326,6 +400,9 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "mean_ms",
         "p50_ms",
         "p99_ms",
+        "q_ms",
+        "xfer_ms",
+        "arr_ms",
         "mb_s",
         "wa",
         "res_pg",
@@ -344,6 +421,9 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
             format!("{:.3}", t.mean_write_latency() / 1e6),
             format!("{:.3}", t.p50_write_latency() as f64 / 1e6),
             format!("{:.3}", t.p99_write_latency() as f64 / 1e6),
+            format!("{:.3}", t.write_phases.mean_queued_ns() / 1e6),
+            format!("{:.3}", t.write_phases.mean_transfer_ns() / 1e6),
+            format!("{:.3}", t.write_phases.mean_array_ns() / 1e6),
             format!("{:.1}", t.host_bytes_written as f64 / 1e6 / span_s),
             format!("{:.3}", t.wa()),
             t.cache_reserved_pages.to_string(),
@@ -361,6 +441,9 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         format!("{:.3}", s.write_latency.mean() / 1e6),
         format!("{:.3}", s.write_latency.percentile_best(0.50) as f64 / 1e6),
         format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
+        format!("{:.3}", s.write_phases.mean_queued_ns() / 1e6),
+        format!("{:.3}", s.write_phases.mean_transfer_ns() / 1e6),
+        format!("{:.3}", s.write_phases.mean_array_ns() / 1e6),
         format!("{:.1}", s.host_bytes_written as f64 / 1e6 / span_s),
         format!("{:.3}", s.wa()),
         s.cache_capacity_pages.to_string(),
@@ -371,6 +454,9 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
     ]);
     table.row(vec![
         "(background)".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),
@@ -520,6 +606,27 @@ mod tests {
         assert!(points.windows(2).all(|w| {
             w[0].2.host_bytes_written == w[1].2.host_bytes_written
         }));
+    }
+
+    #[test]
+    fn interconnect_sweep_covers_the_grid_with_phases() {
+        let mut base = presets::small();
+        base.cache.slc_cache_bytes = 1 << 20;
+        base.host.tenants = 3;
+        base.host.aggressor_cache_mult = 1.5;
+        base.sim.latency_samples = 100_000;
+        let points =
+            interconnect_sweep(&base, Scenario::Bursty, &[1, 2], &[1, 2]).unwrap();
+        assert_eq!(points.len(), 4, "2 x 2 grid, one run per cell");
+        let coords: Vec<(u32, u32)> = points.iter().map(|&(c, d, _)| (c, d)).collect();
+        assert_eq!(coords, vec![(1, 1), (1, 2), (2, 1), (2, 2)]);
+        for (ch, dies, s) in &points {
+            assert_eq!(s.timing_model, "interconnect", "cell ({ch},{dies})");
+            assert!(s.host_bytes_written > 0);
+            assert!(s.write_phases.transfer_ns > 0, "bus time visible at ({ch},{dies})");
+        }
+        let rendered = interconnect_table(&points).render();
+        assert!(rendered.contains("xfer_ms"));
     }
 
     #[test]

@@ -158,6 +158,133 @@ pub fn run_matrix(
     Ok(cells)
 }
 
+// --- timing-model comparison (BENCH_PR5) ---------------------------
+
+/// One (preset, scheme, scenario) measurement: lump vs interconnect.
+///
+/// Unlike the victim-index cells this is NOT a differential — the two
+/// backends model different hardware, so simulated results legitimately
+/// diverge (that divergence is the feature). The record captures the
+/// interconnect model's wall-clock overhead (host pages per second on
+/// both backends) plus the simulated-time ratio, the "how much
+/// contention was invisible before" headline.
+#[derive(Clone, Debug)]
+pub struct TimingCell {
+    /// Preset name.
+    pub preset: String,
+    /// Scheme name.
+    pub scheme: &'static str,
+    /// Scenario name.
+    pub scenario: &'static str,
+    /// Simulated host pages served (identical offered load).
+    pub host_pages: u64,
+    /// Wall clock of the plane-lump run.
+    pub lump_wall: Duration,
+    /// Wall clock of the interconnect run.
+    pub ic_wall: Duration,
+    /// Simulated end time under the lump.
+    pub lump_sim_end: u64,
+    /// Simulated end time under the interconnect model.
+    pub ic_sim_end: u64,
+}
+
+impl TimingCell {
+    /// Simulated host pages per wall-clock second, lump backend.
+    pub fn ops_lump(&self) -> f64 {
+        self.host_pages as f64 / self.lump_wall.as_secs_f64().max(1e-9)
+    }
+    /// Simulated host pages per wall-clock second, interconnect.
+    pub fn ops_ic(&self) -> f64 {
+        self.host_pages as f64 / self.ic_wall.as_secs_f64().max(1e-9)
+    }
+    /// Wall-clock overhead of the interconnect model (>1 = slower).
+    pub fn overhead(&self) -> f64 {
+        self.ic_wall.as_secs_f64() / self.lump_wall.as_secs_f64().max(1e-9)
+    }
+    /// Simulated-time ratio (>1 = the lump was hiding contention).
+    pub fn sim_end_ratio(&self) -> f64 {
+        self.ic_sim_end as f64 / (self.lump_sim_end as f64).max(1e-9)
+    }
+}
+
+/// Run one (scheme, scenario) cell on `base` twice — plane-lump, then
+/// interconnect — over the identical trace and seed.
+pub fn run_timing_cell(
+    preset: &str,
+    base: &Config,
+    scheme: Scheme,
+    scen: Scenario,
+    volume_mult: f64,
+) -> Result<TimingCell> {
+    let mut runs: Vec<RunSummary> = Vec::with_capacity(2);
+    for use_interconnect in [false, true] {
+        let mut cfg = base.clone();
+        cfg.cache.scheme = scheme;
+        cfg.sim.interconnect = use_interconnect;
+        cfg.sim.verify = false;
+        let mut sim = Simulator::new(cfg)?;
+        let trace = cell_trace(scen, sim.logical_bytes(), volume_mult);
+        runs.push(sim.run(&trace, scen)?);
+    }
+    let (lump, ic) = (&runs[0], &runs[1]);
+    Ok(TimingCell {
+        preset: preset.to_string(),
+        scheme: scheme.name(),
+        scenario: scen.name(),
+        host_pages: ic.ledger.host_pages,
+        lump_wall: lump.wall_clock,
+        ic_wall: ic.wall_clock,
+        lump_sim_end: lump.sim_end,
+        ic_sim_end: ic.sim_end,
+    })
+}
+
+/// Run the timing-model matrix: `schemes × scenarios` on one preset.
+pub fn run_timing_matrix(
+    preset: &str,
+    base: &Config,
+    schemes: &[Scheme],
+    scenarios: &[Scenario],
+    volume_mult: f64,
+) -> Result<Vec<TimingCell>> {
+    let mut cells = Vec::with_capacity(schemes.len() * scenarios.len());
+    for &scheme in schemes {
+        for &scen in scenarios {
+            cells.push(run_timing_cell(preset, base, scheme, scen, volume_mult)?);
+        }
+    }
+    Ok(cells)
+}
+
+/// Serialize timing cells as the `BENCH_PR5.json` trajectory record.
+pub fn timing_json(cells: &[TimingCell]) -> String {
+    let mut out = String::from(
+        "{\"bench\":\"BENCH_PR5\",\"unit\":\"host pages per wall-clock second\",\"rows\":[\n",
+    );
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"preset\":\"{}\",\"scheme\":\"{}\",\"scenario\":\"{}\",\"host_pages\":{},\
+             \"lump_ms\":{:.3},\"ic_ms\":{:.3},\"ops_lump\":{:.0},\"ops_ic\":{:.0},\
+             \"overhead\":{:.3},\"sim_end_ratio\":{:.4}}}",
+            c.preset,
+            c.scheme,
+            c.scenario,
+            c.host_pages,
+            c.lump_wall.as_secs_f64() * 1e3,
+            c.ic_wall.as_secs_f64() * 1e3,
+            c.ops_lump(),
+            c.ops_ic(),
+            c.overhead(),
+            c.sim_end_ratio(),
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
 /// Serialize cells as the `BENCH_PR4.json` perf-trajectory record.
 /// Deterministic field order; wall-clock values are measurements.
 pub fn perf_json(cells: &[PerfCell]) -> String {
@@ -220,5 +347,25 @@ mod tests {
         let base = presets::small();
         let cell = run_cell("small", &base, Scheme::IpsAgc, Scenario::Daily, 0.5).unwrap();
         assert!(cell.identical, "AGC idle loop must make the same picks on both backends");
+    }
+
+    #[test]
+    fn timing_cell_shows_the_contention_the_lump_hid() {
+        // small geometry has 2 planes/die and a 10 µs bus: the
+        // interconnect run must serve the same offered load in MORE
+        // simulated time (die exclusivity + bus transfers), never less
+        let base = presets::small();
+        let cell =
+            run_timing_cell("small", &base, Scheme::TlcOnly, Scenario::Bursty, 1.0).unwrap();
+        assert!(cell.host_pages > 0);
+        assert!(
+            cell.sim_end_ratio() >= 1.0,
+            "added contention cannot shrink simulated time: {}",
+            cell.sim_end_ratio()
+        );
+        let json = timing_json(&[cell]);
+        assert!(json.contains("\"bench\":\"BENCH_PR5\""));
+        assert!(json.contains("\"sim_end_ratio\""));
+        assert!(json.trim_end().ends_with("]}"));
     }
 }

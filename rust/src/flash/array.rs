@@ -1,30 +1,24 @@
-//! The timed flash array: every plane's blocks plus per-plane service
-//! timelines and raw operation counters.
+//! The timed flash array: every plane's blocks plus the interconnect
+//! timing model and raw operation counters.
 //!
 //! The array is the single owner of all [`Block`] state. Callers (FTL,
 //! cache schemes) express *logical* intent (`program_slc`, `reprogram`,
 //! `erase`, …); the array applies the state change, charges the
-//! Table-I latency against the owning plane's timeline, and returns the
-//! `[start, end)` service interval. Planes are the unit of parallelism
-//! (paper §II-A: channel → chip → die → plane; plane is the innermost
-//! level at which flash operations serialize).
+//! Table-I latency through the [`Interconnect`] resource model
+//! (channel bus → die → plane under `sim.interconnect`, the historical
+//! per-plane lump otherwise), and returns the phase-split
+//! [`Completion`] (paper §II-A: channel → chip → die → plane).
 
 use super::block::Block;
 #[cfg(test)]
 use super::block::BlockMode;
 use super::geometry::{BlockAddr, Lpn, PlaneId, Ppa};
+use super::interconnect::{Interconnect, OpClass};
 use crate::config::{Config, Geometry, Nanos, Timing};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 
-/// A scheduled flash operation's service interval.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Completion {
-    /// Service start (≥ issue time; queueing shows up as `start > now`).
-    pub start: Nanos,
-    /// Service end — when the data is durable / the plane frees up.
-    pub end: Nanos,
-}
+pub use super::interconnect::Completion;
 
 /// Kinds of raw flash operations (for counters and audits).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,7 +65,6 @@ impl FlashCounters {
 
 struct PlaneState {
     blocks: Vec<Block>,
-    busy_until: Nanos,
     free_blocks: VecDeque<u32>,
 }
 
@@ -81,6 +74,8 @@ pub struct FlashArray {
     timing: Timing,
     max_reprograms: u32,
     planes: Vec<PlaneState>,
+    /// The timing model: channel/die/plane occupancy (or the lump).
+    ic: Interconnect,
     counters: FlashCounters,
 }
 
@@ -93,7 +88,6 @@ impl FlashArray {
                 blocks: (0..g.blocks_per_plane)
                     .map(|_| Block::new(&g, cfg.cache.group_layers))
                     .collect(),
-                busy_until: 0,
                 free_blocks: (0..g.blocks_per_plane).collect(),
             })
             .collect();
@@ -102,6 +96,7 @@ impl FlashArray {
             timing: cfg.timing,
             max_reprograms: cfg.cache.max_reprograms,
             planes,
+            ic: Interconnect::new(cfg),
             counters: FlashCounters::default(),
         }
     }
@@ -130,12 +125,23 @@ impl FlashArray {
 
     /// When the plane becomes free.
     pub fn plane_busy_until(&self, plane: PlaneId) -> Nanos {
-        self.planes[plane.0 as usize].busy_until
+        self.ic.plane_busy_until(plane.0)
     }
 
-    /// Latest busy-until across all planes (drain point).
+    /// Latest busy-until across all resources (drain point).
     pub fn all_idle_at(&self) -> Nanos {
-        self.planes.iter().map(|p| p.busy_until).max().unwrap_or(0)
+        self.ic.all_idle_at()
+    }
+
+    /// Is the channel/die/plane interconnect model active (vs the
+    /// historical per-plane lump)?
+    pub fn interconnect_enabled(&self) -> bool {
+        self.ic.enabled()
+    }
+
+    /// Can same-die sibling planes interleave as multi-plane groups?
+    pub fn multiplane_enabled(&self) -> bool {
+        self.ic.multiplane()
     }
 
     /// Free (erased, unassigned) blocks in a plane.
@@ -181,18 +187,11 @@ impl FlashArray {
         Ok(())
     }
 
-    #[inline]
-    fn occupy(&mut self, plane: PlaneId, now: Nanos, latency: Nanos) -> Completion {
-        let p = &mut self.planes[plane.0 as usize];
-        let start = now.max(p.busy_until);
-        let end = start + latency;
-        p.busy_until = end;
-        Completion { start, end }
-    }
-
     // --- timed operations -------------------------------------------
 
     /// Read one page; latency depends on the word line's current kind.
+    /// The data-out transfer crosses the channel bus after the array
+    /// phase (interconnect model; the lump charges the array only).
     pub fn read(&mut self, ppa: Ppa, now: Nanos) -> Result<Completion> {
         let pa = ppa.expand(&self.geometry);
         let block = &self.planes[pa.plane.0 as usize].blocks[pa.block as usize];
@@ -204,7 +203,7 @@ impl FlashArray {
             super::cell::PageKind::Tlc => (self.timing.tlc_read, FlashOp::ReadTlc),
         };
         self.count(op, 1);
-        Ok(self.occupy(pa.plane, now, latency))
+        Ok(self.ic.occupy(pa.plane.0, OpClass::Read, latency, 1, now))
     }
 
     /// Program one SLC page at `addr`'s write pointer.
@@ -217,7 +216,7 @@ impl FlashArray {
         let g = self.geometry;
         let pib = self.block_mut(addr).program_slc(lpn)?;
         self.count(FlashOp::ProgSlc, 1);
-        let done = self.occupy(addr.plane, now, self.timing.slc_prog);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.slc_prog, 1, now);
         Ok((addr.page(&g, pib / 3, 0), done))
     }
 
@@ -232,9 +231,51 @@ impl FlashArray {
         let slots = self.block_mut(addr).program_tlc_oneshot(lpns)?;
         self.counters.progs_tlc_wl += 1;
         self.counters.progs_tlc_pages += slots.len() as u64;
-        let done = self.occupy(addr.plane, now, self.timing.tlc_prog);
+        let done = self.ic.occupy(
+            addr.plane.0,
+            OpClass::Program,
+            self.timing.tlc_prog,
+            slots.len() as u32,
+            now,
+        );
         let ppas = slots.iter().map(|&pib| addr.page(&g, pib / 3, (pib % 3) as u8)).collect();
         Ok((ppas, done))
+    }
+
+    /// One-shot TLC programs on **distinct planes**, issued together at
+    /// `now` as multi-plane interleaved groups: members on sibling
+    /// planes of one die share a single die window, distinct dies and
+    /// channels proceed in parallel (see
+    /// [`Interconnect::occupy_program_group`]). Under the lump model —
+    /// or with one plane per die — this is byte-identical to calling
+    /// [`FlashArray::program_tlc`] for every member at `now`.
+    pub fn program_tlc_group(
+        &mut self,
+        ops: &[(BlockAddr, &[Lpn])],
+        now: Nanos,
+    ) -> Result<Vec<(Vec<Ppa>, Completion)>> {
+        let g = self.geometry;
+        let mut metas: Vec<(BlockAddr, Vec<u32>)> = Vec::with_capacity(ops.len());
+        for (addr, lpns) in ops {
+            let slots = self.block_mut(*addr).program_tlc_oneshot(lpns)?;
+            self.counters.progs_tlc_wl += 1;
+            self.counters.progs_tlc_pages += slots.len() as u64;
+            metas.push((*addr, slots));
+        }
+        let sched: Vec<(u32, Nanos, u32)> = metas
+            .iter()
+            .map(|(addr, slots)| (addr.plane.0, self.timing.tlc_prog, slots.len() as u32))
+            .collect();
+        let comps = self.ic.occupy_program_group(&sched, now);
+        Ok(metas
+            .into_iter()
+            .zip(comps)
+            .map(|((addr, slots), done)| {
+                let ppas =
+                    slots.iter().map(|&pib| addr.page(&g, pib / 3, (pib % 3) as u8)).collect();
+                (ppas, done)
+            })
+            .collect())
     }
 
     /// Page-granular TLC program of the next page slot (host path;
@@ -248,7 +289,7 @@ impl FlashArray {
         let g = self.geometry;
         let pib = self.block_mut(addr).program_tlc_page(lpn)?;
         self.counters.progs_tlc_pages += 1;
-        let done = self.occupy(addr.plane, now, self.timing.tlc_prog);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.tlc_prog, 1, now);
         Ok((addr.page(&g, pib / 3, (pib % 3) as u8), done))
     }
 
@@ -265,19 +306,19 @@ impl FlashArray {
         let max = self.max_reprograms;
         let (pib, full) = self.block_mut(addr).reprogram_next(lpn, max)?;
         self.count(FlashOp::Reprogram, 1);
-        let done = self.occupy(addr.plane, now, self.timing.reprogram);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.reprogram, 1, now);
         Ok((addr.page(&g, pib / 3, (pib % 3) as u8), full, done))
     }
 
-    /// Erase a block (must hold no valid pages). The block is NOT
-    /// returned to the free list — the owner decides whether it goes
-    /// back to general allocation ([`FlashArray::push_free`]) or stays
-    /// claimed (e.g. as an SLC-cache block awaiting reuse).
+    /// Erase a block (must hold no valid pages). No data crosses the
+    /// bus. The block is NOT returned to the free list — the owner
+    /// decides whether it goes back to general allocation
+    /// ([`FlashArray::push_free`]) or stays claimed (e.g. as an
+    /// SLC-cache block awaiting reuse).
     pub fn erase(&mut self, addr: BlockAddr, now: Nanos) -> Result<Completion> {
         self.block_mut(addr).erase()?;
         self.count(FlashOp::Erase, 1);
-        let done = self.occupy(addr.plane, now, self.timing.erase);
-        Ok(done)
+        Ok(self.ic.occupy(addr.plane.0, OpClass::ArrayOnly, self.timing.erase, 0, now))
     }
 
     /// Invalidate a page (timing-neutral metadata update).
@@ -423,6 +464,56 @@ mod tests {
     fn unwritten_read_rejected() {
         let mut a = array();
         assert!(a.read(Ppa(0), 0).is_err());
+    }
+
+    #[test]
+    fn interconnect_mode_splits_phases_and_serializes_the_die() {
+        // small geometry: planes_per_die = 2, so planes 0 and 1 share a
+        // die; give the bus a nonzero per-page cost
+        let mut cfg = presets::small();
+        cfg.sim.interconnect = true;
+        cfg.timing.bus_ns_per_page = 10_000;
+        let mut a = FlashArray::new(&cfg);
+        assert!(a.interconnect_enabled() && a.multiplane_enabled());
+        let t = *a.timing();
+        let b0 = a.pop_free(PlaneId(0)).unwrap();
+        let b1 = a.pop_free(PlaneId(1)).unwrap();
+        a.block_mut(b0).set_mode(BlockMode::Slc).unwrap();
+        a.block_mut(b1).set_mode(BlockMode::Slc).unwrap();
+        let (_p, c0) = a.program_slc(b0, Lpn(1), 0).unwrap();
+        assert_eq!(c0.transfer_ns, 10_000, "data-in crosses the bus");
+        assert_eq!(c0.array_ns, t.slc_prog);
+        assert_eq!(c0.end, 10_000 + t.slc_prog);
+        // the sibling plane's program waits for the die (and the bus)
+        let (_p, c1) = a.program_slc(b1, Lpn(2), 0).unwrap();
+        assert_eq!(c1.start, 10_000, "second transfer queues on the bus");
+        assert_eq!(c1.end, c0.end + t.slc_prog, "die serializes the array phases");
+        assert!(c1.queued_ns > 0);
+    }
+
+    #[test]
+    fn program_group_matches_individual_issue_under_the_lump() {
+        // lump model: a group is byte-identical to member-wise issue
+        let mk = || {
+            let mut a = array();
+            let b0 = a.pop_free(PlaneId(0)).unwrap();
+            let b1 = a.pop_free(PlaneId(1)).unwrap();
+            a.block_mut(b0).set_mode(BlockMode::Tlc).unwrap();
+            a.block_mut(b1).set_mode(BlockMode::Tlc).unwrap();
+            (a, b0, b1)
+        };
+        let (mut ga, b0, b1) = mk();
+        let wl3 = [Lpn(1), Lpn(2), Lpn(3)];
+        let wl1 = [Lpn(4)];
+        let group = ga
+            .program_tlc_group(&[(b0, &wl3[..]), (b1, &wl1[..])], 5)
+            .unwrap();
+        let (mut ia, c0, c1) = mk();
+        let one = ia.program_tlc(c0, &[Lpn(1), Lpn(2), Lpn(3)], 5).unwrap();
+        let two = ia.program_tlc(c1, &[Lpn(4)], 5).unwrap();
+        assert_eq!(group[0], one);
+        assert_eq!(group[1], two);
+        assert_eq!(ga.counters(), ia.counters());
     }
 
     #[test]

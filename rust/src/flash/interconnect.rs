@@ -1,0 +1,481 @@
+//! The interconnect resource model: channel bus, die, and plane
+//! occupancy (paper §II-A: channel → chip → die → plane).
+//!
+//! The historical timing model charged every flash operation against a
+//! single per-plane `busy_until` lump, which makes channel-bus transfer
+//! time and die-level exclusivity — the contention that shapes tail
+//! latency once many tenants share a device — invisible. This module
+//! is the explicit three-level replacement:
+//!
+//! * **channel bus** — the data-transfer phase. Moving one page over a
+//!   channel costs `timing.bus_ns_per_page`; transfers on one channel
+//!   serialize (all chips of a channel share its bus), transfers on
+//!   different channels proceed in parallel. Programs transfer *before*
+//!   their array phase (host → die data-in), reads transfer *after*
+//!   (die → host data-out). Erases move no data.
+//! * **die** — one array operation at a time per die: while a plane of
+//!   a die is programming/reading/erasing, its sibling planes wait
+//!   (single charge-pump/control logic), *unless* the operations were
+//!   issued as one multi-plane interleaved group (see
+//!   [`Interconnect::occupy_program_group`]).
+//! * **plane** — the array phase itself, the innermost serialization
+//!   level (this is the only level the lump model knew about).
+//!
+//! Every scheduled operation returns a phase-split [`Completion`]:
+//! `queued_ns` (time spent waiting for any of the three resources),
+//! `transfer_ns` (bus), `array_ns` (in-array), plus the `start`/`end`
+//! interval the rest of the stack always consumed.
+//!
+//! **Differential contract** (`sim.interconnect = false`, the default):
+//! the legacy plane-lump arbitration survives unchanged behind the same
+//! API and is the byte-for-byte oracle. With the model enabled,
+//! `bus_ns_per_page = 0` and a degenerate geometry (one plane per die
+//! per channel), the three levels collapse onto the plane level and the
+//! new backend reproduces the lump completions exactly — pinned by
+//! `tests/prop_interconnect.rs` and `tests/integration_interconnect.rs`.
+
+use crate::config::{Config, Nanos};
+
+/// A scheduled flash operation's service record.
+///
+/// `start`/`end` are the service interval (queueing shows up as
+/// `start > issue`); the three `*_ns` fields split the operation's cost
+/// by phase so engines can attribute request latency to waiting,
+/// bus transfer, and array time. For composite FTL operations that fold
+/// a dependent pre-read into one record (reprogram), the phase fields
+/// cover the whole composite, so `queued + transfer + array` may exceed
+/// `end - start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Completion {
+    /// Service start (≥ issue time; queueing shows up as `start > now`).
+    pub start: Nanos,
+    /// Service end — when the data is durable / the resources free up.
+    pub end: Nanos,
+    /// Time spent waiting on busy resources (bus, die, plane).
+    pub queued_ns: Nanos,
+    /// Channel-bus data-transfer phase (0 under the lump model).
+    pub transfer_ns: Nanos,
+    /// In-array phase (the Table-I operation latency).
+    pub array_ns: Nanos,
+}
+
+impl Completion {
+    /// A zero-cost completion at `now` (controller-served, no flash).
+    pub fn instant(now: Nanos) -> Completion {
+        Completion { start: now, end: now, queued_ns: 0, transfer_ns: 0, array_ns: 0 }
+    }
+
+    /// Service time (`end - start`).
+    pub fn service_ns(&self) -> Nanos {
+        self.end - self.start
+    }
+
+    /// Fold another operation's phase split into this record (composite
+    /// FTL ops: reprogram's mandatory pre-read). `start`/`end` keep
+    /// describing the final operation's service interval.
+    pub fn fold_phases(&mut self, other: &Completion) {
+        self.queued_ns += other.queued_ns;
+        self.transfer_ns += other.transfer_ns;
+        self.array_ns += other.array_ns;
+    }
+}
+
+/// How an operation uses the channel bus relative to its array phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    /// Array phase first, then data out over the bus (reads).
+    Read,
+    /// Data in over the bus first, then the array phase (programs).
+    Program,
+    /// Array phase only, no data moves (erase).
+    ArrayOnly,
+}
+
+/// The three-level occupancy model (plus the legacy plane-lump mode).
+pub struct Interconnect {
+    /// `true` = channel/die/plane arbitration; `false` = the historical
+    /// plane-lump oracle.
+    enabled: bool,
+    bus_ns_per_page: Nanos,
+    planes_per_die: u32,
+    planes_per_channel: u32,
+    plane_busy: Vec<Nanos>,
+    die_busy: Vec<Nanos>,
+    channel_busy: Vec<Nanos>,
+}
+
+impl Interconnect {
+    /// Build from a config (geometry + timing + `sim.interconnect`).
+    pub fn new(cfg: &Config) -> Interconnect {
+        let g = cfg.geometry;
+        let planes = g.planes() as usize;
+        let planes_per_die = g.planes_per_die;
+        let planes_per_channel = g.chips_per_channel * g.dies_per_chip * g.planes_per_die;
+        let dies = planes / planes_per_die as usize;
+        Interconnect {
+            enabled: cfg.sim.interconnect,
+            bus_ns_per_page: cfg.timing.bus_ns_per_page,
+            planes_per_die,
+            planes_per_channel,
+            plane_busy: vec![0; planes],
+            die_busy: vec![0; dies],
+            channel_busy: vec![0; g.channels as usize],
+        }
+    }
+
+    /// Is the three-level model active (vs the plane-lump oracle)?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Can operations on sibling planes of one die interleave as a
+    /// multi-plane group? Requires the model *and* actual multi-plane
+    /// dies — with one plane per die there is nothing to interleave,
+    /// and the degenerate-geometry identity oracle relies on the
+    /// batched paths reducing to the legacy issue order.
+    pub fn multiplane(&self) -> bool {
+        self.enabled && self.planes_per_die >= 2
+    }
+
+    /// Bus cost per page in force.
+    pub fn bus_ns_per_page(&self) -> Nanos {
+        self.bus_ns_per_page
+    }
+
+    #[inline]
+    fn die_of(&self, plane: u32) -> usize {
+        (plane / self.planes_per_die) as usize
+    }
+
+    #[inline]
+    fn channel_of(&self, plane: u32) -> usize {
+        (plane / self.planes_per_channel) as usize
+    }
+
+    /// When the plane's array next frees up.
+    pub fn plane_busy_until(&self, plane: u32) -> Nanos {
+        self.plane_busy[plane as usize]
+    }
+
+    /// Latest busy-until across every resource (drain point).
+    pub fn all_idle_at(&self) -> Nanos {
+        let p = self.plane_busy.iter().copied().max().unwrap_or(0);
+        let d = self.die_busy.iter().copied().max().unwrap_or(0);
+        let c = self.channel_busy.iter().copied().max().unwrap_or(0);
+        p.max(d).max(c)
+    }
+
+    /// Schedule one flash operation on `plane` issued at `now`:
+    /// `array_ns` of array time, `pages` pages over the bus (per the
+    /// class). Returns the phase-split completion.
+    pub fn occupy(
+        &mut self,
+        plane: u32,
+        class: OpClass,
+        array_ns: Nanos,
+        pages: u32,
+        now: Nanos,
+    ) -> Completion {
+        if !self.enabled {
+            // the historical lump: one per-plane timeline, everything
+            // attributed to the array phase
+            let start = now.max(self.plane_busy[plane as usize]);
+            let end = start + array_ns;
+            self.plane_busy[plane as usize] = end;
+            return Completion {
+                start,
+                end,
+                queued_ns: start - now,
+                transfer_ns: 0,
+                array_ns,
+            };
+        }
+        let die = self.die_of(plane);
+        let ch = self.channel_of(plane);
+        let xfer = self.bus_ns_per_page * pages as Nanos;
+        match class {
+            OpClass::Program if xfer > 0 => {
+                // data-in over the bus, then the array phase
+                let t0 = now.max(self.channel_busy[ch]);
+                let t1 = t0 + xfer;
+                self.channel_busy[ch] = t1;
+                let a0 = t1.max(self.die_busy[die]).max(self.plane_busy[plane as usize]);
+                let a1 = a0 + array_ns;
+                self.die_busy[die] = a1;
+                self.plane_busy[plane as usize] = a1;
+                Completion {
+                    start: t0,
+                    end: a1,
+                    queued_ns: (t0 - now) + (a0 - t1),
+                    transfer_ns: xfer,
+                    array_ns,
+                }
+            }
+            OpClass::Read if xfer > 0 => {
+                // array phase, then data-out over the bus
+                let a0 = now.max(self.die_busy[die]).max(self.plane_busy[plane as usize]);
+                let a1 = a0 + array_ns;
+                self.die_busy[die] = a1;
+                self.plane_busy[plane as usize] = a1;
+                let t0 = a1.max(self.channel_busy[ch]);
+                let t1 = t0 + xfer;
+                self.channel_busy[ch] = t1;
+                Completion {
+                    start: a0,
+                    end: t1,
+                    queued_ns: (a0 - now) + (t0 - a1),
+                    transfer_ns: xfer,
+                    array_ns,
+                }
+            }
+            // erase, or zero bus time: array phase only (a zero-length
+            // transfer must not serialize anything — this is what makes
+            // the bus_ns = 0 degenerate case collapse onto the lump)
+            _ => {
+                let a0 = now.max(self.die_busy[die]).max(self.plane_busy[plane as usize]);
+                let a1 = a0 + array_ns;
+                self.die_busy[die] = a1;
+                self.plane_busy[plane as usize] = a1;
+                Completion {
+                    start: a0,
+                    end: a1,
+                    queued_ns: a0 - now,
+                    transfer_ns: 0,
+                    array_ns,
+                }
+            }
+        }
+    }
+
+    /// Schedule a batch of program operations on **distinct planes**,
+    /// issued together at `now`, as multi-plane interleaved groups:
+    /// members on sibling planes of one die share a single die window
+    /// (duration = the slowest member — the interleaved command of
+    /// multi-plane NAND), members on distinct dies/channels proceed in
+    /// parallel. Bus transfers still serialize per channel in member
+    /// order. Under the lump model (or with nothing to interleave) this
+    /// degenerates to issuing every member independently at `now`.
+    ///
+    /// `ops` entries are `(plane, array_ns, pages)`; completions come
+    /// back in member order.
+    pub fn occupy_program_group(
+        &mut self,
+        ops: &[(u32, Nanos, u32)],
+        now: Nanos,
+    ) -> Vec<Completion> {
+        if !self.multiplane() {
+            return ops
+                .iter()
+                .map(|&(plane, array_ns, pages)| {
+                    self.occupy(plane, OpClass::Program, array_ns, pages, now)
+                })
+                .collect();
+        }
+        debug_assert!(
+            {
+                let mut planes: Vec<u32> = ops.iter().map(|o| o.0).collect();
+                planes.sort_unstable();
+                planes.windows(2).all(|w| w[0] != w[1])
+            },
+            "group members must target distinct planes"
+        );
+        // phase 1: bus transfers serialize per channel in member order
+        let mut xfer_done: Vec<(Nanos, Nanos)> = Vec::with_capacity(ops.len()); // (t0, t1)
+        for &(plane, _, pages) in ops {
+            let xfer = self.bus_ns_per_page * pages as Nanos;
+            if xfer == 0 {
+                xfer_done.push((now, now));
+                continue;
+            }
+            let ch = self.channel_of(plane);
+            let t0 = now.max(self.channel_busy[ch]);
+            let t1 = t0 + xfer;
+            self.channel_busy[ch] = t1;
+            xfer_done.push((t0, t1));
+        }
+        // phase 2: one interleaved array window per die
+        let mut out = vec![Completion::instant(now); ops.len()];
+        let member_dies: Vec<usize> = ops.iter().map(|o| self.die_of(o.0)).collect();
+        let mut order: Vec<usize> = (0..ops.len()).collect();
+        order.sort_by_key(|&i| (member_dies[i], i));
+        let mut i = 0;
+        while i < order.len() {
+            let die = member_dies[order[i]];
+            let mut j = i;
+            while j < order.len() && member_dies[order[j]] == die {
+                j += 1;
+            }
+            let members = &order[i..j];
+            let mut ready = self.die_busy[die];
+            let mut window = 0;
+            for &m in members {
+                let (_, t1) = xfer_done[m];
+                ready = ready.max(t1).max(self.plane_busy[ops[m].0 as usize]);
+                window = window.max(ops[m].1);
+            }
+            let a0 = ready;
+            let a1 = a0 + window;
+            self.die_busy[die] = a1;
+            for &m in members {
+                self.plane_busy[ops[m].0 as usize] = a1;
+                let (t0, t1) = xfer_done[m];
+                let xfer = t1 - t0;
+                out[m] = Completion {
+                    start: if xfer > 0 { t0 } else { a0 },
+                    end: a1,
+                    queued_ns: (t0 - now) + (a0 - t1),
+                    transfer_ns: xfer,
+                    array_ns: ops[m].1,
+                };
+            }
+            i = j;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, US};
+
+    /// Degenerate geometry: one plane per die per channel, bus = 0.
+    fn degenerate_cfg(interconnect: bool) -> Config {
+        let mut cfg = presets::small();
+        cfg.geometry.channels = 4;
+        cfg.geometry.chips_per_channel = 1;
+        cfg.geometry.dies_per_chip = 1;
+        cfg.geometry.planes_per_die = 1;
+        cfg.timing.bus_ns_per_page = 0;
+        cfg.sim.interconnect = interconnect;
+        cfg
+    }
+
+    /// Contended geometry: 2 dies/chip × 2 planes/die share channels.
+    fn contended_cfg() -> Config {
+        let mut cfg = presets::small();
+        cfg.geometry.channels = 2;
+        cfg.geometry.chips_per_channel = 1;
+        cfg.geometry.dies_per_chip = 2;
+        cfg.geometry.planes_per_die = 2;
+        cfg.timing.bus_ns_per_page = 10 * US;
+        cfg.sim.interconnect = true;
+        cfg
+    }
+
+    #[test]
+    fn lump_mode_reproduces_plane_lump_math() {
+        let mut cfg = presets::small();
+        cfg.sim.interconnect = false;
+        let mut ic = Interconnect::new(&cfg);
+        let c1 = ic.occupy(0, OpClass::Program, 500, 1, 0);
+        assert_eq!((c1.start, c1.end), (0, 500));
+        assert_eq!((c1.queued_ns, c1.transfer_ns, c1.array_ns), (0, 0, 500));
+        // second op on the same plane queues behind the first
+        let c2 = ic.occupy(0, OpClass::Program, 500, 1, 0);
+        assert_eq!((c2.start, c2.end, c2.queued_ns), (500, 1000, 500));
+        // another plane runs in parallel, even same-die in lump mode
+        let c3 = ic.occupy(1, OpClass::Read, 66, 1, 0);
+        assert_eq!(c3.start, 0);
+    }
+
+    #[test]
+    fn degenerate_interconnect_matches_lump_exactly() {
+        let mut lump = Interconnect::new(&degenerate_cfg(false));
+        let mut ic = Interconnect::new(&degenerate_cfg(true));
+        let script: &[(u32, OpClass, Nanos, u32, Nanos)] = &[
+            (0, OpClass::Program, 500, 1, 0),
+            (0, OpClass::Read, 66, 1, 0),
+            (1, OpClass::Program, 3000, 3, 100),
+            (0, OpClass::ArrayOnly, 10_000, 0, 200),
+            (1, OpClass::Read, 66, 1, 4000),
+            (2, OpClass::Program, 500, 1, 50),
+        ];
+        for &(p, class, ns, pages, now) in script {
+            let a = lump.occupy(p, class, ns, pages, now);
+            let b = ic.occupy(p, class, ns, pages, now);
+            assert_eq!(a, b, "degenerate geometry + bus 0 must be byte-identical");
+        }
+        assert_eq!(lump.all_idle_at(), ic.all_idle_at());
+    }
+
+    #[test]
+    fn die_exclusivity_serializes_sibling_planes() {
+        let mut ic = Interconnect::new(&contended_cfg());
+        // planes 0 and 1 share die 0; plane 2 is die 1
+        let a = ic.occupy(0, OpClass::ArrayOnly, 1000, 0, 0);
+        let b = ic.occupy(1, OpClass::ArrayOnly, 1000, 0, 0);
+        let c = ic.occupy(2, OpClass::ArrayOnly, 1000, 0, 0);
+        assert_eq!(a.end, 1000);
+        assert_eq!(b.start, 1000, "sibling plane waits for the die");
+        assert_eq!(b.queued_ns, 1000);
+        assert_eq!(c.start, 0, "distinct die proceeds in parallel");
+    }
+
+    #[test]
+    fn channel_bus_serializes_transfers_and_splits_phases() {
+        let mut ic = Interconnect::new(&contended_cfg());
+        // dies 0 and 1 share channel 0: array phases overlap, but the
+        // two programs' data-in transfers serialize on the bus
+        let a = ic.occupy(0, OpClass::Program, 500_000, 1, 0);
+        let b = ic.occupy(2, OpClass::Program, 500_000, 1, 0);
+        assert_eq!(a.transfer_ns, 10_000);
+        assert_eq!(a.start, 0);
+        assert_eq!(a.end, 10_000 + 500_000);
+        assert_eq!(b.start, 10_000, "second transfer waits for the bus");
+        assert_eq!(b.queued_ns, 10_000);
+        assert_eq!(b.end, 20_000 + 500_000);
+        // a read's data-out also crosses the bus, after the array phase
+        let r = ic.occupy(4, OpClass::Read, 66_000, 1, 0);
+        assert_eq!(r.transfer_ns, 10_000);
+        assert_eq!(r.end, 66_000 + 10_000, "channel 1 bus was free");
+    }
+
+    #[test]
+    fn program_group_interleaves_same_die_and_parallelizes_dies() {
+        let mut ic = Interconnect::new(&contended_cfg());
+        // members: planes 0+1 (die 0), plane 2 (die 1) — one channel
+        let comps = ic.occupy_program_group(
+            &[(0, 3_000_000, 3), (1, 3_000_000, 3), (2, 3_000_000, 3)],
+            0,
+        );
+        // transfers serialize on channel 0: 30 µs each
+        assert_eq!(comps[0].transfer_ns, 30_000);
+        assert_eq!(comps[0].start, 0);
+        assert_eq!(comps[1].start, 30_000);
+        assert_eq!(comps[2].start, 60_000);
+        // die 0 runs planes 0+1 as ONE interleaved window (ready after
+        // the second member's transfer), die 1 in parallel
+        assert_eq!(comps[0].end, comps[1].end, "same die, one window");
+        assert_eq!(comps[0].end, 60_000 + 3_000_000);
+        assert_eq!(comps[2].end, 90_000 + 3_000_000);
+        // vs sequential: two separate die-0 programs would cost 6 ms
+        assert!(comps[1].end < 30_000 + 2 * 3_000_000);
+    }
+
+    #[test]
+    fn group_without_multiplane_dies_degenerates_to_individual_issue() {
+        let mut a = Interconnect::new(&degenerate_cfg(true));
+        let mut b = Interconnect::new(&degenerate_cfg(true));
+        let ops: [(u32, Nanos, u32); 3] = [(0, 3000, 3), (1, 3000, 3), (2, 3000, 2)];
+        let grouped = a.occupy_program_group(&ops, 7);
+        let individual: Vec<Completion> = ops
+            .iter()
+            .map(|&(p, ns, pages)| b.occupy(p, OpClass::Program, ns, pages, 7))
+            .collect();
+        assert_eq!(grouped, individual);
+        assert!(!a.multiplane(), "one plane per die: nothing to interleave");
+    }
+
+    #[test]
+    fn queued_transfer_array_split_accounts_for_waits() {
+        let mut ic = Interconnect::new(&contended_cfg());
+        let _ = ic.occupy(0, OpClass::ArrayOnly, 1_000_000, 0, 0); // die 0 busy 1 ms
+        let c = ic.occupy(1, OpClass::Program, 500_000, 1, 0);
+        // transfer runs immediately (bus free), array waits for the die
+        assert_eq!(c.transfer_ns, 10_000);
+        assert_eq!(c.array_ns, 500_000);
+        assert_eq!(c.queued_ns, 1_000_000 - 10_000, "die wait after the transfer");
+        assert_eq!(c.end, 1_000_000 + 500_000);
+    }
+}

@@ -22,8 +22,10 @@ pub mod array;
 pub mod block;
 pub mod cell;
 pub mod geometry;
+pub mod interconnect;
 
 pub use array::{FlashArray, FlashCounters, FlashOp};
 pub use block::{Block, BlockMode};
 pub use cell::{PageKind, WlState};
 pub use geometry::{BlockAddr, Lpn, PageAddr, PlaneId, Ppa};
+pub use interconnect::{Completion, Interconnect, OpClass};

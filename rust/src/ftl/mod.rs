@@ -10,8 +10,10 @@
 //!   (page-granular, Table-I 3 ms), striped round-robin over planes;
 //! * [`Ftl::program_slc_into`] / [`Ftl::reprogram_into`] — cache
 //!   writes into scheme-chosen blocks;
-//! * [`Ftl::migrate_page`] + [`Ftl::flush_migration`] — valid-page
-//!   migration batched into one-shot TLC word-line programs;
+//! * [`Ftl::migrate_page`] + [`Ftl::flush_migration_plane`] — valid-page
+//!   migration batched into one-shot TLC word-line programs (and
+//!   [`Ftl::flush_migration_group`] / [`Ftl::reclaim_blocks_group`] —
+//!   multi-plane die-interleaved batching under the interconnect model);
 //! * [`Ftl::reclaim_block`] — the baseline's atomic block-reclamation
 //!   unit (migrate every valid page, then erase);
 //! * [`Ftl::maybe_gc`] / [`gc::gc_once`] — greedy inline GC under
@@ -91,6 +93,12 @@ pub struct Ftl {
     tenant_ctx: Option<u16>,
     /// Victim-selection policy for [`Ftl::pop_victim`].
     victim_policy: VictimPolicy,
+    /// Per-block last-write timestamp (flat block index → the end time
+    /// of the newest program that landed in the block). Makes "coldest
+    /// block" an explicit signal for eviction instead of a queue-order
+    /// proxy; stale after an erase until the block's first reuse write,
+    /// which only eviction paths over *written* blocks ever consult.
+    block_write_ns: Vec<Nanos>,
     /// Incremental invalid-count bucket index over the closed lists
     /// (`sim.victim_index`, the default). `None` = the historical
     /// linear-scan backend, kept as the differential oracle and the
@@ -160,6 +168,7 @@ impl Ftl {
             track_owners: false,
             tenant_ctx: None,
             victim_policy: VictimPolicy::Greedy,
+            block_write_ns: vec![0; g.blocks() as usize],
             vindex,
             owner_releases: Vec::new(),
             owner_releases_unowned: 0,
@@ -231,6 +240,21 @@ impl Ftl {
     fn block_index(&self, addr: BlockAddr) -> usize {
         let g = self.array.geometry();
         (addr.plane.0 as u64 * g.blocks_per_plane as u64 + addr.block as u64) as usize
+    }
+
+    /// Record that a program landed in `addr`, completing at `at`.
+    fn note_block_write(&mut self, addr: BlockAddr, at: Nanos) {
+        let i = self.block_index(addr);
+        self.block_write_ns[i] = at;
+    }
+
+    /// End time of the newest program that landed in `addr` (0 if the
+    /// block was never written). The explicit "coldness" signal the
+    /// baseline/partitioner eviction sorts by — for FIFO-filled blocks
+    /// it is monotone in queue order, so FIFO-equivalent workloads see
+    /// the historical eviction order unchanged (unit-tested).
+    pub fn last_block_write(&self, addr: BlockAddr) -> Nanos {
+        self.block_write_ns[self.block_index(addr)]
     }
 
     /// Valid pages of `addr` owned by tenant `t` (eviction scoring).
@@ -476,6 +500,7 @@ impl Ftl {
         self.maybe_gc(plane, now)?;
         let addr = self.ensure_host_block(plane)?;
         let (ppa, done) = self.array.program_tlc_page(addr, lpn, now)?;
+        self.note_block_write(addr, done.end);
         self.remap_host(lpn, ppa)?;
         self.ledger.program(Attribution::TlcDirectWrite);
         Ok(done)
@@ -506,6 +531,7 @@ impl Ftl {
         now: Nanos,
     ) -> Result<Completion> {
         let (ppa, done) = self.array.program_slc(addr, lpn, now)?;
+        self.note_block_write(addr, done.end);
         self.remap_host(lpn, ppa)?;
         self.ledger.program(attr);
         Ok(done)
@@ -524,14 +550,19 @@ impl Ftl {
     ) -> Result<(Ppa, bool, Completion)> {
         // Charge the pre-read of the word line's existing content
         // (the reprogram procedure reads the original data first,
-        // §IV-A).
+        // §IV-A). Its phase split is folded into the returned
+        // completion so the engines attribute the whole composite.
         let g = *self.array.geometry();
         let target_wl = self.array.block(addr).next_reprogram_wl();
+        let mut pre_read: Option<Completion> = None;
         let now = match target_wl {
             Some(w) => {
                 let lsb = addr.page(&g, w, 0);
                 match self.array.read(lsb, now) {
-                    Ok(c) => c.end,
+                    Ok(c) => {
+                        pre_read = Some(c);
+                        c.end
+                    }
                     Err(_) => now,
                 }
             }
@@ -555,7 +586,11 @@ impl Ftl {
         } else {
             None
         };
-        let (ppa, full, done) = self.array.reprogram(addr, lpn, now)?;
+        let (ppa, full, mut done) = self.array.reprogram(addr, lpn, now)?;
+        if let Some(r) = pre_read {
+            done.fold_phases(&r);
+        }
+        self.note_block_write(addr, done.end);
         let prev_owner = self.remap_host(lpn, ppa)?;
         if let Some(owner) = lsb_exit {
             self.release_event(owner);
@@ -606,7 +641,7 @@ impl Ftl {
         self.ledger.host_reads += 1;
         match self.map.get(lpn) {
             Some(ppa) => self.array.read(ppa, now),
-            None => Ok(Completion { start: now, end: now }),
+            None => Ok(Completion::instant(now)),
         }
     }
 
@@ -614,7 +649,7 @@ impl Ftl {
 
     /// Queue one valid page for migration to TLC space in its own
     /// plane (read is charged immediately; the program happens when the
-    /// one-shot batch fills or [`Ftl::flush_migration`] runs).
+    /// one-shot batch fills or [`Ftl::flush_migration_plane`] runs).
     /// Returns the read completion.
     pub fn migrate_page(
         &mut self,
@@ -622,6 +657,17 @@ impl Ftl {
         attr: Attribution,
         now: Nanos,
     ) -> Result<Completion> {
+        let (plane, read_done) = self.queue_migration_read(src, now)?;
+        if self.migr[plane.0 as usize].pending.len() >= 3 {
+            self.flush_migration_plane(plane, read_done.end, attr)?;
+        }
+        Ok(read_done)
+    }
+
+    /// Read `src` and queue it on its plane's migration stream WITHOUT
+    /// the automatic batch flush (the grouped reclamation path flushes
+    /// whole plane sets as multi-plane one-shots instead).
+    fn queue_migration_read(&mut self, src: Ppa, now: Nanos) -> Result<(PlaneId, Completion)> {
         let g = *self.array.geometry();
         let pa = src.expand(&g);
         let lpn = self
@@ -630,23 +676,16 @@ impl Ftl {
             .lpn_at(pa.page_in_block())
             .ok_or_else(|| Error::invariant("migrate_page of page with no LPN"))?;
         let read_done = self.array.read(src, now)?;
-        let stream = &mut self.migr[pa.plane.0 as usize];
-        stream.pending.push((lpn, src));
-        if stream.pending.len() >= 3 {
-            self.flush_migration_plane(pa.plane, read_done.end, attr)?;
-        }
-        Ok(read_done)
+        self.migr[pa.plane.0 as usize].pending.push((lpn, src));
+        Ok((pa.plane, read_done))
     }
 
-    /// Flush a plane's pending migration batch (partial one-shot if
-    /// fewer than 3 pages). Returns the program completion if anything
-    /// was written.
-    pub fn flush_migration_plane(
+    /// Take a plane's pending batch, drop stale entries, and claim the
+    /// destination block. `None` when nothing live is pending.
+    fn prepare_migration_flush(
         &mut self,
         plane: PlaneId,
-        now: Nanos,
-        attr: Attribution,
-    ) -> Result<Option<Completion>> {
+    ) -> Result<Option<(BlockAddr, Vec<Lpn>, Vec<Ppa>)>> {
         let pending = std::mem::take(&mut self.migr[plane.0 as usize].pending);
         if pending.is_empty() {
             return Ok(None);
@@ -664,7 +703,18 @@ impl Ftl {
             return Ok(None);
         }
         let addr = self.ensure_migr_block(plane)?;
-        let (ppas, done) = self.array.program_tlc(addr, &lpns, now)?;
+        Ok(Some((addr, lpns, srcs)))
+    }
+
+    /// Post-program bookkeeping of one flushed batch: owner transfer,
+    /// source invalidation, remap, attribution.
+    fn commit_migration_flush(
+        &mut self,
+        lpns: &[Lpn],
+        srcs: &[Ppa],
+        ppas: &[Ppa],
+        attr: Attribution,
+    ) -> Result<()> {
         for ((lpn, src), new) in lpns.iter().zip(srcs.iter()).zip(ppas.iter()) {
             if self.track_owners {
                 // the destination inherits the source page's owner; an
@@ -680,18 +730,75 @@ impl Ftl {
             self.map.set(*lpn, *new)?;
             self.ledger.program(attr);
         }
+        Ok(())
+    }
+
+    /// Flush a plane's pending migration batch (partial one-shot if
+    /// fewer than 3 pages). Returns the program completion if anything
+    /// was written.
+    pub fn flush_migration_plane(
+        &mut self,
+        plane: PlaneId,
+        now: Nanos,
+        attr: Attribution,
+    ) -> Result<Option<Completion>> {
+        let Some((addr, lpns, srcs)) = self.prepare_migration_flush(plane)? else {
+            return Ok(None);
+        };
+        let (ppas, done) = self.array.program_tlc(addr, &lpns, now)?;
+        self.note_block_write(addr, done.end);
+        self.commit_migration_flush(&lpns, &srcs, &ppas, attr)?;
         Ok(Some(done))
     }
 
-    /// Flush all planes' migration batches.
-    pub fn flush_all_migration(&mut self, now: Nanos, attr: Attribution) -> Result<Nanos> {
+    /// Flush the pending migration batches of a set of planes, all
+    /// issued at `now`. With multi-plane batching available
+    /// ([`FlashArray::multiplane_enabled`]) the one-shot programs of
+    /// sibling planes issue as die-interleaved groups; otherwise each
+    /// plane flushes independently at `now` (byte-identical to the
+    /// historical per-plane loop — distinct planes never queued on each
+    /// other under the lump). Returns the latest program end.
+    pub fn flush_migration_group(
+        &mut self,
+        planes: &[PlaneId],
+        now: Nanos,
+        attr: Attribution,
+    ) -> Result<Nanos> {
         let mut end = now;
-        for p in 0..self.n_planes {
-            if let Some(c) = self.flush_migration_plane(PlaneId(p), now, attr)? {
-                end = end.max(c.end);
+        if !self.array.multiplane_enabled() {
+            for &p in planes {
+                if let Some(c) = self.flush_migration_plane(p, now, attr)? {
+                    end = end.max(c.end);
+                }
+            }
+            return Ok(end);
+        }
+        let mut preps: Vec<(BlockAddr, Vec<Lpn>, Vec<Ppa>)> = Vec::new();
+        for &p in planes {
+            if let Some(prep) = self.prepare_migration_flush(p)? {
+                preps.push(prep);
             }
         }
+        if preps.is_empty() {
+            return Ok(end);
+        }
+        let ops: Vec<(BlockAddr, &[Lpn])> =
+            preps.iter().map(|(addr, lpns, _)| (*addr, lpns.as_slice())).collect();
+        let results = self.array.program_tlc_group(&ops, now)?;
+        drop(ops);
+        for ((addr, lpns, srcs), (ppas, done)) in preps.into_iter().zip(results) {
+            self.note_block_write(addr, done.end);
+            self.commit_migration_flush(&lpns, &srcs, &ppas, attr)?;
+            end = end.max(done.end);
+        }
         Ok(end)
+    }
+
+    /// Flush all planes' migration batches (multi-plane batched when
+    /// the interconnect model allows it).
+    pub fn flush_all_migration(&mut self, now: Nanos, attr: Attribution) -> Result<Nanos> {
+        let planes: Vec<PlaneId> = (0..self.n_planes).map(PlaneId).collect();
+        self.flush_migration_group(&planes, now, attr)
     }
 
     fn ensure_migr_block(&mut self, plane: PlaneId) -> Result<BlockAddr> {
@@ -709,6 +816,19 @@ impl Ftl {
         Ok(fresh)
     }
 
+    /// Up to one word-line batch (3 pages) of `addr`'s valid pages —
+    /// the per-round migration unit shared by the sequential and the
+    /// grouped reclamation paths (one-shot programs take ≤ 3 pages).
+    fn next_wl_victims(&self, addr: BlockAddr) -> Vec<Ppa> {
+        let g = self.array.geometry();
+        self.array
+            .block(addr)
+            .valid_pages()
+            .take(3)
+            .map(|pib| addr.page(g, pib / 3, (pib % 3) as u8))
+            .collect()
+    }
+
     /// The baseline's atomic reclamation unit: migrate every valid
     /// page of `addr` to TLC space and erase it. Once started it runs
     /// to completion (paper §IV-B: a host write arriving mid-unit
@@ -720,17 +840,9 @@ impl Ftl {
         attr: Attribution,
         now: Nanos,
     ) -> Result<Completion> {
-        let g = *self.array.geometry();
         let mut t = now;
         loop {
-            // take up to one word-line batch of valid pages at a time
-            let victims: Vec<Ppa> = {
-                let blk = self.array.block(addr);
-                blk.valid_pages()
-                    .take(3)
-                    .map(|pib| addr.page(&g, pib / 3, (pib % 3) as u8))
-                    .collect()
-            };
+            let victims = self.next_wl_victims(addr);
             if victims.is_empty() {
                 break;
             }
@@ -743,6 +855,78 @@ impl Ftl {
             }
         }
         self.array.erase(addr, t)
+    }
+
+    /// Multi-plane batched reclamation: drain a set of blocks on
+    /// **distinct planes** in lockstep word-line rounds — each round
+    /// reads up to one word line's worth of valid pages per block (the
+    /// reads proceed in parallel on their planes), then flushes every
+    /// participating plane's batch as one multi-plane interleaved
+    /// one-shot group; emptied blocks are erased together at the end.
+    /// Distinct dies/channels proceed in parallel throughout.
+    ///
+    /// Requires the interconnect's multi-plane capability; without it
+    /// the blocks are reclaimed as the historical sequential atomic
+    /// units (byte-identical to calling [`Ftl::reclaim_block`] in
+    /// order), so the degenerate-geometry differential holds. Returns
+    /// the last erase end.
+    pub fn reclaim_blocks_group(
+        &mut self,
+        addrs: &[BlockAddr],
+        attr: Attribution,
+        now: Nanos,
+    ) -> Result<Nanos> {
+        if !self.array.multiplane_enabled() || addrs.len() <= 1 {
+            let mut t = now;
+            for &addr in addrs {
+                t = t.max(self.reclaim_block(addr, attr, t)?.end);
+            }
+            return Ok(t);
+        }
+        debug_assert!(
+            {
+                let mut planes: Vec<u32> = addrs.iter().map(|a| a.plane.0).collect();
+                planes.sort_unstable();
+                planes.windows(2).all(|w| w[0] != w[1])
+            },
+            "grouped reclamation takes at most one block per plane"
+        );
+        let g = *self.array.geometry();
+        // settle any pre-existing pending entries on the involved
+        // planes first, so each round's batch stays one-shot-sized
+        let planes: Vec<PlaneId> = addrs.iter().map(|a| a.plane).collect();
+        let mut t = self.flush_migration_group(&planes, now, attr)?;
+        let mut guard = 0u32;
+        loop {
+            let mut round_planes: Vec<PlaneId> = Vec::new();
+            let mut reads_end = t;
+            for &addr in addrs {
+                let victims = self.next_wl_victims(addr);
+                if victims.is_empty() {
+                    continue;
+                }
+                let mut tb = t;
+                for src in victims {
+                    let (_plane, c) = self.queue_migration_read(src, tb)?;
+                    tb = c.end;
+                }
+                reads_end = reads_end.max(tb);
+                round_planes.push(addr.plane);
+            }
+            if round_planes.is_empty() {
+                break;
+            }
+            t = self.flush_migration_group(&round_planes, reads_end, attr)?;
+            guard += 1;
+            if guard > g.pages_per_block {
+                return Err(Error::invariant("grouped reclamation did not converge"));
+            }
+        }
+        let mut end = t;
+        for &addr in addrs {
+            end = end.max(self.array.erase(addr, t)?.end);
+        }
+        Ok(end)
     }
 
     // --- garbage collection ---------------------------------------------
@@ -1079,6 +1263,89 @@ mod tests {
         assert_eq!(f.pop_victim(PlaneId(0)), Some(b));
         // with equal remaining candidates the next pick is `a`
         assert_eq!(f.pop_victim(PlaneId(0)), Some(a));
+    }
+
+    #[test]
+    fn last_block_write_tracks_program_completions() {
+        let mut f = ftl();
+        let addr = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        assert_eq!(f.last_block_write(addr), 0, "never written");
+        let c1 = f.program_slc_into(addr, Lpn(1), Attribution::SlcCacheWrite, 0).unwrap();
+        assert_eq!(f.last_block_write(addr), c1.end);
+        let c2 = f.program_slc_into(addr, Lpn(2), Attribution::SlcCacheWrite, c1.end).unwrap();
+        assert_eq!(f.last_block_write(addr), c2.end, "newest write wins");
+        // TLC host writes stamp their block too
+        let c3 = f.host_write_tlc_on(PlaneId(1), Lpn(50), 0).unwrap();
+        let ppa = f.map.get(Lpn(50)).unwrap();
+        let blk = ppa.block(f.array.geometry());
+        assert_eq!(f.last_block_write(blk), c3.end);
+    }
+
+    #[test]
+    fn grouped_reclamation_without_multiplane_equals_serial_units() {
+        // lump model (and degenerate dies): the group API must be the
+        // exact sequential atomic units
+        let build = || {
+            let mut cfg = presets::small();
+            cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+            let mut f = Ftl::new(&cfg).unwrap();
+            let a = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+            let b = f.alloc_block(PlaneId(1), BlockMode::Slc).unwrap();
+            for i in 0..6u64 {
+                f.program_slc_into(a, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+                f.program_slc_into(b, Lpn(100 + i), Attribution::SlcCacheWrite, 0).unwrap();
+            }
+            (f, a, b)
+        };
+        let (mut grouped, ga, gb) = build();
+        assert!(!grouped.array.multiplane_enabled());
+        let g_end =
+            grouped.reclaim_blocks_group(&[ga, gb], Attribution::Slc2Tlc, 0).unwrap();
+        let (mut serial, sa, sb) = build();
+        let mut s_end = serial.reclaim_block(sa, Attribution::Slc2Tlc, 0).unwrap().end;
+        s_end = s_end.max(serial.reclaim_block(sb, Attribution::Slc2Tlc, s_end).unwrap().end);
+        assert_eq!(g_end, s_end, "fallback is the sequential unit chain");
+        assert_eq!(grouped.ledger, serial.ledger);
+        grouped.audit().unwrap();
+    }
+
+    #[test]
+    fn grouped_reclamation_interleaves_sibling_planes() {
+        // interconnect + 2 planes/die: the group drains two sibling
+        // blocks faster than sequential units would, and leaves the
+        // same logical state
+        let mut cfg = presets::small();
+        cfg.cache.scheme = crate::config::Scheme::TlcOnly;
+        cfg.sim.interconnect = true;
+        let mut f = Ftl::new(&cfg).unwrap();
+        assert!(f.array.multiplane_enabled());
+        // planes 0 and 1 share die 0 on the small geometry
+        let a = f.alloc_block(PlaneId(0), BlockMode::Slc).unwrap();
+        let b = f.alloc_block(PlaneId(1), BlockMode::Slc).unwrap();
+        for i in 0..6u64 {
+            f.program_slc_into(a, Lpn(i), Attribution::SlcCacheWrite, 0).unwrap();
+            f.program_slc_into(b, Lpn(100 + i), Attribution::SlcCacheWrite, 0).unwrap();
+        }
+        let t0 = f.array.all_idle_at();
+        let end = f.reclaim_blocks_group(&[a, b], Attribution::Slc2Tlc, t0).unwrap();
+        assert!(end > t0);
+        assert!(f.array.block(a).is_erased() && f.array.block(b).is_erased());
+        assert_eq!(f.ledger.slc2tlc_migrations, 12, "every valid page moved");
+        for i in 0..6u64 {
+            assert!(f.map.get(Lpn(i)).is_some());
+            assert!(f.map.get(Lpn(100 + i)).is_some());
+        }
+        // the die-interleaved one-shots beat two sequential block units:
+        // sequential would pay at least 2 blocks x 2 rounds x tlc_prog
+        // of array time on one die; the group shares each round's window
+        let serial_floor = 2 * 2 * cfg.timing.tlc_prog;
+        assert!(
+            end - t0 < serial_floor + 2 * cfg.timing.erase,
+            "grouped drain must undercut the sequential floor: {} vs {}",
+            end - t0,
+            serial_floor + 2 * cfg.timing.erase,
+        );
+        f.audit().unwrap();
     }
 
     #[test]

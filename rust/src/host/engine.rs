@@ -24,7 +24,7 @@ use crate::cache::{self, CachePartitioner, CachePolicy};
 use crate::config::{AttributionMode, Config, Nanos};
 use crate::flash::Lpn;
 use crate::ftl::{Ftl, MoveCounters, VictimPolicy};
-use crate::metrics::{BandwidthTimeline, LatencyStats, Ledger, TenantStats};
+use crate::metrics::{BandwidthTimeline, LatencyStats, Ledger, PhaseStats, TenantStats};
 use crate::trace::scenario::Scenario;
 use crate::trace::OpKind;
 use crate::Result;
@@ -66,6 +66,13 @@ pub struct MultiTenantSummary {
     pub write_latency: LatencyStats,
     /// Device-wide read-request latencies.
     pub read_latency: LatencyStats,
+    /// Device-wide phase split (queued / bus transfer / array) of the
+    /// flash ops behind host writes.
+    pub write_phases: PhaseStats,
+    /// Device-wide phase split of the flash ops behind host reads.
+    pub read_phases: PhaseStats,
+    /// Timing backend the run used ("lump" | "interconnect").
+    pub timing_model: String,
     /// Device-wide host write bandwidth.
     pub bandwidth: BandwidthTimeline,
     /// Device-wide ledger (everything the flash programmed).
@@ -243,6 +250,8 @@ impl MultiTenantSimulator {
         let qd = self.cfg.host.device_qd.max(1);
         let mut write_latency = LatencyStats::new(self.cfg.sim.latency_samples);
         let mut read_latency = LatencyStats::new(self.cfg.sim.latency_samples);
+        let mut write_phases = PhaseStats::default();
+        let mut read_phases = PhaseStats::default();
         let mut bandwidth = BandwidthTimeline::new(self.cfg.sim.bandwidth_window);
         let mut host_bytes = 0u64;
         let mut last_end: Nanos = 0;
@@ -312,6 +321,9 @@ impl MultiTenantSimulator {
                     let n_pages = (op.len as u64).div_ceil(page).max(1);
                     let contended = arrived > 1;
                     let mut req_end = issue;
+                    // per-request phase split, folded into the tenant's
+                    // and the device's accountants after dispatch
+                    let mut req_phases = PhaseStats::default();
                     // unowned relocation remainder accumulated across
                     // the request's per-page drains (owner mode)
                     let mut unowned_moves = MoveCounters::default();
@@ -330,6 +342,7 @@ impl MultiTenantSimulator {
                                     issue,
                                     grant,
                                 )?;
+                                req_phases.add(&c);
                                 self.part.charge(i, &self.ftl.ledger.diff(&page_before));
                                 if owner_attr {
                                     // drain per page so the next page's
@@ -348,6 +361,7 @@ impl MultiTenantSimulator {
                                 let lpn = Lpn((first_lpn + k) % lpn_limit);
                                 self.ftl.ledger.host_page();
                                 let c = self.policy.host_write_page(&mut self.ftl, lpn, issue)?;
+                                req_phases.add(&c);
                                 req_end = req_end.max(c.end);
                             }
                         }
@@ -355,6 +369,7 @@ impl MultiTenantSimulator {
                             for k in 0..n_pages {
                                 let lpn = Lpn((first_lpn + k) % lpn_limit);
                                 let c = self.ftl.host_read(lpn, issue)?;
+                                req_phases.add(&c);
                                 req_end = req_end.max(c.end);
                             }
                         }
@@ -380,16 +395,20 @@ impl MultiTenantSimulator {
                     match op.kind {
                         OpKind::Write => {
                             st.write_latency.record(lat);
+                            st.write_phases.merge(&req_phases);
                             st.bandwidth.record(req_end, op.len as u64);
                             st.host_bytes_written += op.len as u64;
                             write_latency.record(lat);
+                            write_phases.merge(&req_phases);
                             bandwidth.record(req_end, op.len as u64);
                             host_bytes += op.len as u64;
                             self.qos.record_latency(i, lat, req_end);
                         }
                         OpKind::Read => {
                             st.read_latency.record(lat);
+                            st.read_phases.merge(&req_phases);
                             read_latency.record(lat);
+                            read_phases.merge(&req_phases);
                         }
                     }
                     self.sched.charge(i, op.len as u64);
@@ -511,6 +530,10 @@ impl MultiTenantSimulator {
             tenants: self.stats.clone(),
             write_latency,
             read_latency,
+            write_phases,
+            read_phases,
+            timing_model: (if self.cfg.sim.interconnect { "interconnect" } else { "lump" })
+                .to_string(),
             bandwidth,
             ledger: self.ftl.ledger,
             background,
@@ -630,6 +653,37 @@ mod tests {
         for t in &s.tenants {
             assert!(t.read_latency.count() > 0, "{} read back", t.name);
         }
+    }
+
+    #[test]
+    fn interconnect_run_attributes_phases_per_tenant() {
+        let mut cfg = mt_cfg(Scheme::Ips, SchedKind::RoundRobin);
+        cfg.sim.interconnect = true;
+        cfg.timing.bus_ns_per_page = 10_000;
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert_eq!(s.timing_model, "interconnect");
+        assert!(s.write_phases.ops > 0);
+        assert!(s.write_phases.transfer_ns > 0, "bus transfers show up in the split");
+        assert!(s.write_phases.array_ns > 0);
+        // every tenant that wrote carries its own phase attribution,
+        // and the per-tenant splits sum to the device-wide one
+        let mut sum = crate::metrics::PhaseStats::default();
+        for t in &s.tenants {
+            assert!(t.write_phases.ops > 0, "{} has a phase split", t.name);
+            assert!(t.write_phases.transfer_ns > 0, "{} paid the bus", t.name);
+            sum.merge(&t.write_phases);
+        }
+        assert_eq!(sum, s.write_phases, "tenant splits sum to the device split");
+    }
+
+    #[test]
+    fn lump_run_reports_pure_array_phases() {
+        let cfg = mt_cfg(Scheme::Baseline, SchedKind::Fifo);
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert_eq!(s.timing_model, "lump");
+        assert!(s.write_phases.ops > 0);
+        assert_eq!(s.write_phases.transfer_ns, 0, "no bus exists under the lump");
+        assert!(s.write_phases.array_ns > 0);
     }
 
     #[test]

@@ -74,6 +74,16 @@ fn cli() -> Command {
                     "shared-cost attribution: proportional|owner (fleet: owner adds both)",
                     None,
                 )
+                .flag("interconnect", None, "channel/die/plane timing model (vs plane lump)")
+                .opt(
+                    "bus-ns-per-page",
+                    None,
+                    "NS",
+                    "channel-bus ns per page (implies --interconnect)",
+                    None,
+                )
+                .opt("channels", None, "N", "override geometry channel count", None)
+                .opt("dies-per-chip", None, "N", "override geometry dies per chip", None)
                 .flag("verify", None, "run full consistency audits"),
         )
         .subcommand(
@@ -82,15 +92,24 @@ fn cli() -> Command {
                     "what",
                     None,
                     "W",
-                    "cache-size|idle-threshold|group-layers|device-qd|qd-joint",
+                    "cache-size|idle-threshold|group-layers|device-qd|qd-joint|interconnect",
                     Some("cache-size"),
                 )
                 .opt("scale", None, "N", "geometry divisor", Some("8"))
                 .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt(
+                    "bus-ns-per-page",
+                    None,
+                    "NS",
+                    "channel-bus ns per page (interconnect sweep)",
+                    None,
+                )
+                .opt("channels", None, "N", "channel counts, comma-separated", None)
+                .opt("dies-per-chip", None, "N", "dies/chip counts, comma-separated", None)
                 .opt("workload", Some('w'), "NAME", "workload", Some("HM_0")),
         )
         .subcommand(
-            Command::new("perf", "victim-index perf harness: scan vs index, all schemes")
+            Command::new("perf", "perf harness: scan-vs-index or lump-vs-interconnect")
                 .opt("preset", Some('p'), "P", "small|medium|large|table1", Some("large"))
                 .opt("scenario", None, "X", "bursty|daily|both", Some("both"))
                 .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop|all", Some("all"))
@@ -101,7 +120,20 @@ fn cli() -> Command {
                     "write volume as a multiple of logical capacity",
                     Some("2.0"),
                 )
-                .opt("out", Some('o'), "FILE", "JSON perf-trajectory output", Some("BENCH_PR4.json")),
+                .opt(
+                    "compare",
+                    None,
+                    "C",
+                    "victim-index (BENCH_PR4) | interconnect (BENCH_PR5)",
+                    Some("victim-index"),
+                )
+                .opt(
+                    "out",
+                    Some('o'),
+                    "FILE",
+                    "JSON perf-trajectory output (default by mode)",
+                    Some("auto"),
+                ),
         )
         .subcommand(
             Command::new("audit", "reprogram reliability audit (PJRT artifact)")
@@ -205,6 +237,16 @@ fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     t.row(vec!["p95_write_latency".into(), nanos(s.write_latency.percentile(0.95))]);
     t.row(vec!["write_amplification".into(), format!("{:.4}", s.wa())]);
     t.row(vec!["avg_bandwidth_mb_s".into(), format!("{:.1}", s.avg_write_bandwidth_mbs())]);
+    t.row(vec!["avg_read_bandwidth_mb_s".into(), format!("{:.1}", s.avg_read_bandwidth_mbs())]);
+    t.row(vec![
+        "write_phases_q/xfer/arr_ms".into(),
+        format!(
+            "{:.3}/{:.3}/{:.3}",
+            s.write_phases.mean_queued_ns() / 1e6,
+            s.write_phases.mean_transfer_ns() / 1e6,
+            s.write_phases.mean_array_ns() / 1e6
+        ),
+    ]);
     t.row(vec!["slc_cache_writes".into(), s.ledger.slc_cache_writes.to_string()]);
     t.row(vec!["reprogram_host_writes".into(), s.ledger.reprogram_host_writes.to_string()]);
     t.row(vec!["agc_reprogram_writes".into(), s.ledger.agc_reprogram_writes.to_string()]);
@@ -263,6 +305,24 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     }
     if let Some(a) = p.get("attribution") {
         cfg.host.attribution = AttributionMode::parse(a)?;
+    }
+    // [timing] / geometry knobs: the interconnect model and its grid.
+    // A bus override implies the model (an inert knob would be a silent
+    // misconfiguration); geometry overrides are validated below — bad
+    // channel/die counts or a transfer-bound bus error out loudly.
+    if p.flag("interconnect") {
+        cfg.sim.interconnect = true;
+    }
+    if p.get("bus-ns-per-page").is_some() {
+        cfg.timing.bus_ns_per_page = p.get_u64("bus-ns-per-page").map_err(ips::Error::config)?;
+        cfg.sim.interconnect = true;
+    }
+    if p.get("channels").is_some() {
+        cfg.geometry.channels = p.get_u64("channels").map_err(ips::Error::config)? as u32;
+    }
+    if p.get("dies-per-chip").is_some() {
+        cfg.geometry.dies_per_chip =
+            p.get_u64("dies-per-chip").map_err(ips::Error::config)? as u32;
     }
     cfg.validate()?;
     // exact per-tenant percentiles need raw capture
@@ -383,6 +443,41 @@ fn cmd_sweep(p: &ips::util::cli::Parsed) -> ips::Result<()> {
                 run_point(&mut table, format!("{layers} layers"), cfg)?;
             }
         }
+        "interconnect" => {
+            // channel/die-count scaling under the three-level timing
+            // model: the ablation axis the interconnect refactor opens
+            let parse_list = |key: &str, default: &[u32]| -> ips::Result<Vec<u32>> {
+                match p.get(key) {
+                    None => Ok(default.to_vec()),
+                    Some(s) => s
+                        .split(',')
+                        .map(|x| {
+                            x.trim().parse::<u32>().map_err(|_| {
+                                ips::Error::config(format!("--{key}: bad integer {x:?}"))
+                            })
+                        })
+                        .collect(),
+                }
+            };
+            let channels = parse_list("channels", &[1, 2, 4, 8])?;
+            let dies = parse_list("dies-per-chip", &[1, 2, 4])?;
+            let mut base = experiment::exp_config(&opts, Scheme::Baseline);
+            base.host.tenants = 4;
+            base.sim.latency_samples = 100_000;
+            if p.get("bus-ns-per-page").is_some() {
+                base.timing.bus_ns_per_page =
+                    p.get_u64("bus-ns-per-page").map_err(ips::Error::config)?;
+            }
+            let points =
+                fleet::interconnect_sweep(&base, Scenario::Bursty, &channels, &dies)?;
+            println!(
+                "\n== ablation: interconnect channel/die scaling (aggressor-victims, \
+                 bus {} ns/page) ==",
+                base.timing.bus_ns_per_page
+            );
+            print!("{}", fleet::interconnect_table(&points).render());
+            return Ok(());
+        }
         "qd-joint" => {
             // joint host-SQ × device-window ablation (ROADMAP): the two
             // windows interact — a deep SQ only hurts the victims when
@@ -463,6 +558,17 @@ fn cmd_perf(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         "both" => vec![Scenario::Bursty, Scenario::Daily],
         s => vec![Scenario::parse(s)?],
     };
+    match p.get("compare").unwrap_or("victim-index") {
+        "victim-index" | "index" => {}
+        "interconnect" | "timing" => {
+            return cmd_perf_interconnect(p, &preset, &base, &schemes, &scenarios, volume_mult)
+        }
+        other => {
+            return Err(ips::Error::config(format!(
+                "unknown perf comparison {other:?} (want victim-index|interconnect)"
+            )))
+        }
+    }
     println!(
         "perf: preset={preset} ({} planes x {} blocks/plane), volume x{volume_mult} of \
          logical, {} scheme(s) x {} scenario(s), scan vs index",
@@ -521,7 +627,10 @@ fn cmd_perf(p: &ips::util::cli::Parsed) -> ips::Result<()> {
             best.speedup()
         );
     }
-    let out = p.get("out").unwrap_or("BENCH_PR4.json");
+    let out = match p.get("out") {
+        Some("auto") | None => "BENCH_PR4.json",
+        Some(o) => o,
+    };
     std::fs::write(out, perf::perf_json(&cells))?;
     println!("wrote {out}");
     if cells.iter().any(|c| !c.identical) {
@@ -529,6 +638,70 @@ fn cmd_perf(p: &ips::util::cli::Parsed) -> ips::Result<()> {
             "scan and index runs diverged — the victim index changed simulation results",
         ));
     }
+    Ok(())
+}
+
+/// `ips perf --compare interconnect`: the lump-vs-interconnect
+/// trajectory (BENCH_PR5.json) — wall-clock overhead of the
+/// three-level model plus the simulated-time contention it surfaces.
+fn cmd_perf_interconnect(
+    p: &ips::util::cli::Parsed,
+    preset: &str,
+    base: &Config,
+    schemes: &[Scheme],
+    scenarios: &[Scenario],
+    volume_mult: f64,
+) -> ips::Result<()> {
+    use ips::coordinator::perf;
+    println!(
+        "perf: preset={preset} ({} planes, {} planes/die, bus {} ns/page), volume \
+         x{volume_mult} of logical, {} scheme(s) x {} scenario(s), lump vs interconnect",
+        base.geometry.planes(),
+        base.geometry.planes_per_die,
+        base.timing.bus_ns_per_page,
+        schemes.len(),
+        scenarios.len()
+    );
+    let mut table = TextTable::new(&[
+        "preset",
+        "scheme",
+        "scenario",
+        "host_pages",
+        "lump_kops",
+        "ic_kops",
+        "overhead",
+        "sim_end_ratio",
+    ]);
+    let cells = perf::run_timing_matrix(preset, base, schemes, scenarios, volume_mult)?;
+    for c in &cells {
+        println!(
+            "  {:<9} {:<6}  lump {:>8.1}ms  ic {:>8.1}ms  overhead {:>5.2}x  sim-time {:>6.4}x",
+            c.scheme,
+            c.scenario,
+            c.lump_wall.as_secs_f64() * 1e3,
+            c.ic_wall.as_secs_f64() * 1e3,
+            c.overhead(),
+            c.sim_end_ratio(),
+        );
+        table.row(vec![
+            c.preset.clone(),
+            c.scheme.into(),
+            c.scenario.into(),
+            c.host_pages.to_string(),
+            format!("{:.1}", c.ops_lump() / 1e3),
+            format!("{:.1}", c.ops_ic() / 1e3),
+            format!("{:.2}x", c.overhead()),
+            format!("{:.4}x", c.sim_end_ratio()),
+        ]);
+    }
+    println!("\n== perf: interconnect model vs plane lump ==");
+    print!("{}", table.render());
+    let out = match p.get("out") {
+        Some("auto") | None => "BENCH_PR5.json",
+        Some(o) => o,
+    };
+    std::fs::write(out, perf::timing_json(&cells))?;
+    println!("wrote {out}");
     Ok(())
 }
 

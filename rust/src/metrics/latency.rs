@@ -1,8 +1,80 @@
 //! Streaming latency statistics with a log-scaled histogram for
-//! percentiles and optional raw-sample capture for runtime curves
-//! (paper Fig. 9 plots per-write latency over the first 100 k writes).
+//! percentiles, optional raw-sample capture for runtime curves (paper
+//! Fig. 9 plots per-write latency over the first 100 k writes), and
+//! phase-split accumulators over the interconnect model's
+//! queued/transfer/array completions.
 
 use crate::config::Nanos;
+use crate::flash::array::Completion;
+
+/// Accumulated per-phase flash time across a set of operations: how
+/// much of the service was spent *waiting* for a busy resource
+/// (channel bus, die, or plane), *transferring* over the channel bus,
+/// and *in the array*. Under the lump timing model every operation is
+/// pure array time, so `transfer_ns` stays 0 and `queued_ns` is the
+/// plane wait — which is what makes the split a differential-friendly
+/// superset of the old accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStats {
+    /// Flash operations folded in.
+    pub ops: u64,
+    /// Total time spent queued on busy resources (ns).
+    pub queued_ns: u128,
+    /// Total channel-bus transfer time (ns).
+    pub transfer_ns: u128,
+    /// Total in-array time (ns).
+    pub array_ns: u128,
+}
+
+impl PhaseStats {
+    /// Fold one operation's phase split in. Controller-served no-ops
+    /// (unmapped reads answered by [`Completion::instant`] — zero
+    /// array, zero transfer) are skipped so `ops` counts *flash*
+    /// operations and the per-op means stay honest.
+    #[inline]
+    pub fn add(&mut self, c: &Completion) {
+        if c.array_ns == 0 && c.transfer_ns == 0 {
+            return;
+        }
+        self.ops += 1;
+        self.queued_ns += c.queued_ns as u128;
+        self.transfer_ns += c.transfer_ns as u128;
+        self.array_ns += c.array_ns as u128;
+    }
+
+    /// Merge another accumulator.
+    pub fn merge(&mut self, other: &PhaseStats) {
+        self.ops += other.ops;
+        self.queued_ns += other.queued_ns;
+        self.transfer_ns += other.transfer_ns;
+        self.array_ns += other.array_ns;
+    }
+
+    /// Mean queued time per operation (ns).
+    pub fn mean_queued_ns(&self) -> f64 {
+        self.mean(self.queued_ns)
+    }
+    /// Mean bus-transfer time per operation (ns).
+    pub fn mean_transfer_ns(&self) -> f64 {
+        self.mean(self.transfer_ns)
+    }
+    /// Mean in-array time per operation (ns).
+    pub fn mean_array_ns(&self) -> f64 {
+        self.mean(self.array_ns)
+    }
+    /// Total attributed time across all phases (ns).
+    pub fn total_ns(&self) -> u128 {
+        self.queued_ns + self.transfer_ns + self.array_ns
+    }
+
+    fn mean(&self, sum: u128) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            sum as f64 / self.ops as f64
+        }
+    }
+}
 
 /// Number of log2 buckets (covers 1 ns .. ~584 years).
 const BUCKETS: usize = 64;
@@ -214,6 +286,34 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(0.5), 0);
         assert_eq!(s.min(), 0);
+    }
+
+    #[test]
+    fn phase_stats_accumulate_and_merge() {
+        let mut p = PhaseStats::default();
+        p.add(&Completion {
+            start: 10,
+            end: 110,
+            queued_ns: 10,
+            transfer_ns: 30,
+            array_ns: 70,
+        });
+        p.add(&Completion { start: 0, end: 70, queued_ns: 0, transfer_ns: 0, array_ns: 70 });
+        assert_eq!(p.ops, 2);
+        assert_eq!(p.queued_ns, 10);
+        assert_eq!(p.transfer_ns, 30);
+        assert_eq!(p.array_ns, 140);
+        assert!((p.mean_array_ns() - 70.0).abs() < 1e-9);
+        assert!((p.mean_transfer_ns() - 15.0).abs() < 1e-9);
+        let mut q = PhaseStats::default();
+        q.merge(&p);
+        q.merge(&p);
+        assert_eq!(q.ops, 4);
+        assert_eq!(q.total_ns(), 2 * p.total_ns());
+        assert_eq!(PhaseStats::default().mean_queued_ns(), 0.0);
+        // controller-served no-ops don't dilute the per-op means
+        p.add(&Completion::instant(500));
+        assert_eq!(p.ops, 2, "instant completions are not flash ops");
     }
 
     #[test]

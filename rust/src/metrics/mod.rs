@@ -16,7 +16,7 @@ pub mod tenant;
 pub mod wa;
 
 pub use bandwidth::BandwidthTimeline;
-pub use latency::LatencyStats;
+pub use latency::{LatencyStats, PhaseStats};
 pub use tenant::TenantStats;
 pub use wa::{Attribution, Ledger};
 
@@ -37,14 +37,24 @@ pub struct RunSummary {
     pub write_latency: LatencyStats,
     /// Host read-request latency statistics.
     pub read_latency: LatencyStats,
+    /// Per-phase (queued / bus transfer / array) split of the flash
+    /// operations behind host writes.
+    pub write_phases: PhaseStats,
+    /// Per-phase split of the flash operations behind host reads.
+    pub read_phases: PhaseStats,
     /// Write-amplification ledger.
     pub ledger: Ledger,
     /// Host write bandwidth timeline.
     pub bandwidth: BandwidthTimeline,
+    /// Host read bandwidth timeline (reads previously fed latency
+    /// stats only).
+    pub read_bandwidth: BandwidthTimeline,
     /// Simulated end time.
     pub sim_end: Nanos,
     /// Bytes the host wrote.
     pub host_bytes_written: u64,
+    /// Bytes the host read.
+    pub host_bytes_read: u64,
     /// Wall-clock the simulation itself took (host side, for §Perf).
     pub wall_clock: std::time::Duration,
 }
@@ -64,5 +74,12 @@ impl RunSummary {
             return 0.0;
         }
         self.host_bytes_written as f64 / 1e6 / (self.sim_end as f64 / 1e9)
+    }
+    /// Sustained host read bandwidth over the whole run (MB/s).
+    pub fn avg_read_bandwidth_mbs(&self) -> f64 {
+        if self.sim_end == 0 {
+            return 0.0;
+        }
+        self.host_bytes_read as f64 / 1e6 / (self.sim_end as f64 / 1e9)
     }
 }

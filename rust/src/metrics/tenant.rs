@@ -11,7 +11,7 @@
 //! no tenant and is reported separately as the device's *background*
 //! ledger.
 
-use super::{BandwidthTimeline, LatencyStats, Ledger};
+use super::{BandwidthTimeline, LatencyStats, Ledger, PhaseStats};
 use crate::config::Nanos;
 
 /// Everything one tenant's requests produced during a run.
@@ -27,6 +27,13 @@ pub struct TenantStats {
     pub write_latency: LatencyStats,
     /// Read-request latencies.
     pub read_latency: LatencyStats,
+    /// Per-phase (queued / bus transfer / array) split of the flash
+    /// operations this tenant's write requests issued — the
+    /// interconnect model's latency attribution (all-array under the
+    /// lump model).
+    pub write_phases: PhaseStats,
+    /// Per-phase split of the tenant's read operations.
+    pub read_phases: PhaseStats,
     /// Host write bandwidth timeline for this tenant.
     pub bandwidth: BandwidthTimeline,
     /// Programs attributed to this tenant's requests (ledger diff).
@@ -72,6 +79,8 @@ impl TenantStats {
             weight,
             write_latency: LatencyStats::new(raw_capacity),
             read_latency: LatencyStats::new(raw_capacity),
+            write_phases: PhaseStats::default(),
+            read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(bandwidth_window),
             ledger: Ledger::default(),
             host_bytes_written: 0,

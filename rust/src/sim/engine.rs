@@ -4,11 +4,15 @@
 //!
 //! Timing model: each host request is split into 4 KiB pages; each
 //! page becomes one flash operation routed by the scheme. Queueing is
-//! captured by per-plane `busy_until` timelines — an operation issued
-//! at `now` on a busy plane starts when the plane frees up, so request
-//! latency includes the conflict delays the paper analyses (host
-//! writes arriving during baseline block reclamation wait; IPS/agc's
-//! page-granular steps barely delay them).
+//! captured by the flash array's resource timelines — the historical
+//! per-plane lump, or (under `sim.interconnect`) the channel-bus /
+//! die / plane model of [`crate::flash::Interconnect`] — so an
+//! operation issued at `now` on a busy resource starts when it frees
+//! up, and request latency includes the conflict delays the paper
+//! analyses (host writes arriving during baseline block reclamation
+//! wait; IPS/agc's page-granular steps barely delay them). Each
+//! completion's queued/transfer/array phase split feeds the engine's
+//! [`crate::metrics::PhaseStats`] accountants.
 //!
 //! Idle windows: when the gap between the device quiescing and the
 //! next arrival exceeds `cache.idle_threshold`, the scheme's
@@ -20,7 +24,7 @@ use crate::cache::{self, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::Lpn;
 use crate::ftl::Ftl;
-use crate::metrics::{BandwidthTimeline, LatencyStats, RunSummary};
+use crate::metrics::{BandwidthTimeline, LatencyStats, PhaseStats, RunSummary};
 use crate::trace::scenario::Scenario;
 use crate::trace::{OpKind, Trace};
 use crate::Result;
@@ -34,8 +38,14 @@ pub struct Simulator {
     pub write_latency: LatencyStats,
     /// Host read-request latencies.
     pub read_latency: LatencyStats,
+    /// Phase split of the flash ops behind host writes.
+    pub write_phases: PhaseStats,
+    /// Phase split of the flash ops behind host reads.
+    pub read_phases: PhaseStats,
     /// Host write bandwidth timeline.
     pub bandwidth: BandwidthTimeline,
+    /// Host read bandwidth timeline.
+    pub read_bandwidth: BandwidthTimeline,
     /// Simulated clock (last activity).
     now: Nanos,
 }
@@ -50,7 +60,10 @@ impl Simulator {
         Ok(Simulator {
             write_latency: LatencyStats::new(cfg.sim.latency_samples),
             read_latency: LatencyStats::new(cfg.sim.latency_samples),
+            write_phases: PhaseStats::default(),
+            read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
+            read_bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
             cfg,
             ftl,
             policy,
@@ -82,6 +95,7 @@ impl Simulator {
         let page = self.cfg.geometry.page_bytes as u64;
         let lpn_limit = self.ftl.map.lpn_limit();
         let mut host_bytes = 0u64;
+        let mut host_bytes_read = 0u64;
 
         for op in &trace.ops {
             let arrival = op.at;
@@ -102,6 +116,7 @@ impl Simulator {
                         let lpn = Lpn((first_lpn + i) % lpn_limit);
                         self.ftl.ledger.host_page();
                         let c = self.policy.host_write_page(&mut self.ftl, lpn, arrival)?;
+                        self.write_phases.add(&c);
                         req_end = req_end.max(c.end);
                     }
                     self.write_latency.record(req_end - arrival);
@@ -114,9 +129,12 @@ impl Simulator {
                     for i in 0..n_pages {
                         let lpn = Lpn((first_lpn + i) % lpn_limit);
                         let c = self.ftl.host_read(lpn, arrival)?;
+                        self.read_phases.add(&c);
                         req_end = req_end.max(c.end);
                     }
                     self.read_latency.record(req_end - arrival);
+                    self.read_bandwidth.record(req_end, op.len as u64);
+                    host_bytes_read += op.len as u64;
                     self.now = self.now.max(req_end);
                 }
             }
@@ -140,10 +158,14 @@ impl Simulator {
             seed: self.cfg.sim.seed,
             write_latency: self.write_latency.clone(),
             read_latency: self.read_latency.clone(),
+            write_phases: self.write_phases,
+            read_phases: self.read_phases,
             ledger: self.ftl.ledger,
             bandwidth: self.bandwidth.clone(),
+            read_bandwidth: self.read_bandwidth.clone(),
             sim_end: self.now,
             host_bytes_written: host_bytes,
+            host_bytes_read,
             wall_clock: wall0.elapsed(),
         })
     }
@@ -265,6 +287,14 @@ mod tests {
         assert!(s.read_latency.mean() > 0.0);
         // cfg.sim.latency_samples applies to reads as well as writes
         assert_eq!(s.read_latency.raw_us().len(), 4);
+        // reads feed the bandwidth timeline too, not just latency
+        assert_eq!(s.read_bandwidth.total_bytes(), 8 * 4096);
+        assert_eq!(s.host_bytes_read, 8 * 4096);
+        assert!(s.avg_read_bandwidth_mbs() > 0.0);
+        // and the phase accountants saw every flash op
+        assert_eq!(s.read_phases.ops, 8);
+        assert!(s.write_phases.ops > 0);
+        assert_eq!(s.write_phases.transfer_ns, 0, "lump model moves no bus data");
     }
 
     #[test]
