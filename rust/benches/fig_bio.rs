@@ -1,0 +1,120 @@
+//! Bench: the block front end — page vs bio path on the same trace
+//! (the planner's overhead when it degenerates to the page walk), a
+//! skewed sub-page stream (split/merge/RMW all hot), and an
+//! object-store scatter-gather PUT/GET mix with flush barriers.
+//!
+//! Under `IPS_BENCH_SMOKE=1` the deterministic counters of every run —
+//! ledger pages, RMW pre-reads, merges, flushes, WA — gate against a
+//! golden snapshot, so a planner change that shifts what the FTL sees
+//! fails CI instead of silently bending figures.
+use ips::config::{presets, Scheme, MS};
+use ips::metrics::RunSummary;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::trace::synth;
+use ips::util::bench::{black_box, Harness};
+use ips::util::golden;
+
+fn cfg(scheme: Scheme, blk: bool) -> ips::config::Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.blk.enabled = blk;
+    c.blk.merge_window = if blk { 8 } else { 0 };
+    c
+}
+
+fn main() {
+    let mut h = Harness::new();
+    let mut rows: Vec<(String, RunSummary)> = Vec::new();
+
+    // page vs bio front end on one page-aligned trace: the bio path's
+    // planning overhead, isolated (identical flash work by the
+    // integration_blk differential)
+    for (label, blk) in [("bio/page-fe", false), ("bio/blk-fe", true)] {
+        let mut c = cfg(Scheme::Ips, blk);
+        c.blk.merge_window = 0;
+        let trace = {
+            let sim = Simulator::new(c.clone()).unwrap();
+            scenario::sequential_fill("seq", 4 << 20, sim.logical_bytes())
+        };
+        let mut last = None;
+        h.bench(label, Some(trace.ops.len() as u64), || {
+            let mut sim = Simulator::new(c.clone()).unwrap();
+            let s = sim.run(&trace, Scenario::Bursty).unwrap();
+            black_box(s.sim_end);
+            last = Some(s);
+        });
+        if let Some(s) = last {
+            rows.push((label.to_string(), s));
+        }
+    }
+
+    // skewed sub-page writes: every planner path (split, merge, RMW
+    // pre-read) on a zipfian sector stream
+    {
+        let c = cfg(Scheme::Ips, true);
+        let footprint = Simulator::new(c.clone()).unwrap().logical_bytes();
+        let bios = synth::bio_zipf("bench", 42, footprint, 512, 20_000);
+        let mut last = None;
+        h.bench("bio/zipf-subpage", Some(bios.len() as u64), || {
+            let mut sim = Simulator::new(c.clone()).unwrap();
+            let s = sim
+                .run_bios("zipf", bios.iter().cloned().map(Ok), Scenario::Bursty)
+                .unwrap();
+            black_box(s.blk.rmw_reads);
+            last = Some(s);
+        });
+        if let Some(s) = last {
+            rows.push(("bio/zipf-subpage".to_string(), s));
+        }
+    }
+
+    // scatter-gather PUTs + point GETs + explicit flush barriers
+    {
+        let c = cfg(Scheme::Ips, true);
+        let footprint = Simulator::new(c.clone()).unwrap().logical_bytes();
+        let bios = synth::bio_object_store("bench", 42, footprint, 512, 20_000);
+        let mut last = None;
+        h.bench("bio/object-store", Some(bios.len() as u64), || {
+            let mut sim = Simulator::new(c.clone()).unwrap();
+            let s = sim
+                .run_bios("objstore", bios.iter().cloned().map(Ok), Scenario::Bursty)
+                .unwrap();
+            black_box(s.blk.flushes);
+            last = Some(s);
+        });
+        if let Some(s) = last {
+            rows.push(("bio/object-store".to_string(), s));
+        }
+    }
+
+    // golden regression gate under smoke mode: wall-clock-free counters
+    if std::env::var("IPS_BENCH_SMOKE").as_deref() == Ok("1") && !rows.is_empty() {
+        let mut json = String::from("{\"rows\":[");
+        for (i, (name, s)) in rows.iter().enumerate() {
+            if i > 0 {
+                json.push(',');
+            }
+            json.push_str(&format!(
+                "{{\"name\":\"{name}\",\"host_pages\":{},\"host_reads\":{},\
+                 \"bios\":{},\"splits\":{},\"merges\":{},\"rmw\":{},\"flushes\":{},\
+                 \"sim_end\":{},\"wa\":\"{:.4}\"}}",
+                s.ledger.host_pages,
+                s.ledger.host_reads,
+                s.blk.bios,
+                s.blk.splits,
+                s.blk.merges,
+                s.blk.rmw_reads,
+                s.blk.flushes,
+                s.sim_end,
+                s.wa(),
+            ));
+        }
+        json.push_str("]}\n");
+        golden::check_and_report("fig_bio", &json);
+    }
+
+    h.finish();
+}

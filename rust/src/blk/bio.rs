@@ -1,0 +1,133 @@
+//! Sector-addressed block requests.
+//!
+//! A [`Bio`] is the host-side unit of work: read, write, or flush, with
+//! a scatter-gather list of sector [`Segment`]s and an optional FUA
+//! (force-unit-access) flag on writes. Sectors are `blk.sector_bytes`
+//! each (512 by default) — finer than the flash page, which is what
+//! makes split, merge, and read-modify-write meaningful.
+
+use crate::config::Nanos;
+use crate::trace::{OpKind, TraceOp};
+
+/// What a bio asks the device to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BioKind {
+    /// Read the listed sectors.
+    Read,
+    /// Write the listed sectors.
+    Write,
+    /// Barrier: force the cache write pointer and drain in-flight
+    /// writes before completing. Carries no segments.
+    Flush,
+}
+
+/// One contiguous sector run in a scatter-gather list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// First sector (device-absolute).
+    pub sector: u64,
+    /// Run length in sectors (≥ 1).
+    pub n_sectors: u32,
+}
+
+impl Segment {
+    /// One past the last sector.
+    pub fn end(&self) -> u64 {
+        self.sector + self.n_sectors as u64
+    }
+}
+
+/// A block-layer request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bio {
+    /// Arrival time.
+    pub at: Nanos,
+    pub kind: BioKind,
+    /// Force-unit-access: this write barriers on its own completion.
+    /// Meaningless on reads and flushes.
+    pub fua: bool,
+    /// Scatter-gather list; empty exactly for `Flush`.
+    pub segments: Vec<Segment>,
+}
+
+impl Bio {
+    /// A read covering `segments`.
+    pub fn read(at: Nanos, segments: Vec<Segment>) -> Bio {
+        Bio { at, kind: BioKind::Read, fua: false, segments }
+    }
+
+    /// A write covering `segments`, optionally FUA.
+    pub fn write(at: Nanos, segments: Vec<Segment>, fua: bool) -> Bio {
+        Bio { at, kind: BioKind::Write, fua, segments }
+    }
+
+    /// A flush barrier.
+    pub fn flush(at: Nanos) -> Bio {
+        Bio { at, kind: BioKind::Flush, fua: false, segments: Vec::new() }
+    }
+
+    /// Total sectors across all segments.
+    pub fn total_sectors(&self) -> u64 {
+        self.segments.iter().map(|s| s.n_sectors as u64).sum()
+    }
+
+    /// Total payload bytes.
+    pub fn total_bytes(&self, sector_bytes: u32) -> u64 {
+        self.total_sectors() * sector_bytes as u64
+    }
+
+    /// Convert a byte-granular trace op into a single-segment bio.
+    ///
+    /// The segment covers every sector the byte range touches: offset
+    /// floored, end ceiled. A zero-length op still claims one sector
+    /// (mirroring the page front end's one-page minimum).
+    pub fn from_op(op: &TraceOp, sector_bytes: u32) -> Bio {
+        let sb = sector_bytes as u64;
+        let first = op.offset / sb;
+        let last = (op.offset + op.len as u64).div_ceil(sb).max(first + 1);
+        let segments = vec![Segment { sector: first, n_sectors: (last - first) as u32 }];
+        match op.kind {
+            OpKind::Read => Bio::read(op.at, segments),
+            OpKind::Write => Bio::write(op.at, segments, false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_op_floors_and_ceils_to_sectors() {
+        let op = TraceOp { at: 7, kind: OpKind::Write, offset: 1000, len: 100 };
+        let b = Bio::from_op(&op, 512);
+        // bytes [1000, 1100) touch sectors 1 and 2
+        assert_eq!(b.segments, vec![Segment { sector: 1, n_sectors: 2 }]);
+        assert_eq!(b.kind, BioKind::Write);
+        assert_eq!(b.at, 7);
+        assert!(!b.fua);
+    }
+
+    #[test]
+    fn from_op_aligned_is_exact() {
+        let op = TraceOp { at: 0, kind: OpKind::Read, offset: 4096, len: 8192 };
+        let b = Bio::from_op(&op, 512);
+        assert_eq!(b.segments, vec![Segment { sector: 8, n_sectors: 16 }]);
+        assert_eq!(b.total_bytes(512), 8192);
+    }
+
+    #[test]
+    fn from_op_zero_len_claims_one_sector() {
+        let op = TraceOp { at: 0, kind: OpKind::Write, offset: 512, len: 0 };
+        let b = Bio::from_op(&op, 512);
+        assert_eq!(b.segments, vec![Segment { sector: 1, n_sectors: 1 }]);
+    }
+
+    #[test]
+    fn flush_has_no_segments() {
+        let f = Bio::flush(42);
+        assert_eq!(f.kind, BioKind::Flush);
+        assert!(f.segments.is_empty());
+        assert_eq!(f.total_sectors(), 0);
+    }
+}

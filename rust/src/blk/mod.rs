@@ -1,0 +1,22 @@
+//! Bio-style block front end.
+//!
+//! Sits between the host scheduler and the FTL, replacing the
+//! page-granular trace expansion with a sector-granular request model
+//! (modeled on a kernel block layer's bio type): scatter-gather
+//! [`Bio`]s are split at page boundaries, physically contiguous
+//! neighbors are merged under a configurable window, sub-page writes
+//! pay a read-modify-write pre-read billed to the requesting tenant,
+//! and flush/FUA barriers force the SLC write pointer (see
+//! `CachePolicy::write_barrier`) after draining in-flight writes.
+//!
+//! Enabled by the `[blk]` config section / `--blk` CLI flags. With
+//! page-aligned bios and `merge_window = 0` the planner degenerates to
+//! exactly the page front end's LPN expansion — the differential
+//! oracle `tests/integration_blk.rs` holds every scheme to
+//! byte-identical summaries in that mode.
+
+pub mod bio;
+pub mod submit;
+
+pub use bio::{Bio, BioKind, Segment};
+pub use submit::{full_mask, plan, PageIo, Plan};

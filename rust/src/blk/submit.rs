@@ -1,0 +1,228 @@
+//! The submission path: split at page boundaries, merge physically
+//! contiguous neighbors, and mark read-modify-write pre-reads.
+//!
+//! [`plan`] is a pure function from a [`Bio`] to the page-granular I/O
+//! list the FTL will see, plus the split/merge/RMW counters the
+//! metrics layer records. Keeping it pure makes the property tests
+//! (`prop_blk`) exhaustive: sector-set preservation and RMW
+//! conservation are checked without a simulator in the loop.
+//!
+//! Rules, in order:
+//! 1. **Split.** Each segment is cut at page boundaries; a segment
+//!    spanning k pages becomes k pieces (`splits += k-1`).
+//! 2. **Merge.** A new piece that lands on the same page as one of the
+//!    last `merge_window` planned pieces is coalesced into it
+//!    (coverage OR, `merges += 1`). `merge_window = 0` disables
+//!    merging — the degenerate mode the differential oracle runs in.
+//! 3. **RMW.** A write piece whose coverage is not the full page needs
+//!    the old data: it is flagged `pre_read` (`rmw_reads += 1`), and
+//!    the engine bills that page read to the requesting tenant before
+//!    the program. Disabled via `blk.rmw = false` (blind sub-page
+//!    overwrite, for what-if comparisons).
+
+use super::bio::{Bio, BioKind};
+use crate::config::BlkConfig;
+
+/// One page-granular operation produced by [`plan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageIo {
+    /// Device-absolute page index (`sector * sector_bytes / page_bytes`).
+    pub page: u64,
+    /// Bitmap of covered sectors within the page (bit i = sector i of
+    /// the page). At most 64 sectors per page, enforced by
+    /// `BlkConfig::validate`.
+    pub coverage: u64,
+    /// This write needs an RMW pre-read of the page first.
+    pub pre_read: bool,
+}
+
+/// A planned bio: the page list plus what the planner did to get it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Plan {
+    pub kind: BioKind,
+    pub fua: bool,
+    /// Page operations in submission order (first touch of each page).
+    pub pages: Vec<PageIo>,
+    pub splits: u64,
+    pub merges: u64,
+    pub rmw_reads: u64,
+}
+
+/// Coverage bitmap for sectors `[lo, hi)` of a page.
+fn mask_range(lo: u32, hi: u32) -> u64 {
+    debug_assert!(lo < hi && hi <= 64);
+    let n = hi - lo;
+    if n == 64 {
+        u64::MAX
+    } else {
+        ((1u64 << n) - 1) << lo
+    }
+}
+
+/// Full-page coverage mask for `sectors_per_page` sectors.
+pub fn full_mask(sectors_per_page: u32) -> u64 {
+    debug_assert!((1..=64).contains(&sectors_per_page));
+    if sectors_per_page == 64 {
+        u64::MAX
+    } else {
+        (1u64 << sectors_per_page) - 1
+    }
+}
+
+/// Split, merge, and RMW-mark one bio. Pure; see module docs.
+pub fn plan(bio: &Bio, blk: &BlkConfig, page_bytes: u64) -> Plan {
+    let spp = (page_bytes / blk.sector_bytes as u64) as u32;
+    let full = full_mask(spp);
+    let window = blk.merge_window as usize;
+    let mut pages: Vec<PageIo> = Vec::new();
+    let (mut splits, mut merges, mut rmw_reads) = (0u64, 0u64, 0u64);
+
+    for seg in &bio.segments {
+        let mut sector = seg.sector;
+        let end = seg.end();
+        let mut pieces = 0u64;
+        while sector < end {
+            let page = sector / spp as u64;
+            let page_base = page * spp as u64;
+            let take_end = end.min(page_base + spp as u64);
+            let mask = mask_range((sector - page_base) as u32, (take_end - page_base) as u32);
+            pieces += 1;
+            let merged = window > 0
+                && pages
+                    .iter_mut()
+                    .rev()
+                    .take(window)
+                    .find(|p| p.page == page)
+                    .map(|p| p.coverage |= mask)
+                    .is_some();
+            if merged {
+                merges += 1;
+            } else {
+                pages.push(PageIo { page, coverage: mask, pre_read: false });
+            }
+            sector = take_end;
+        }
+        splits += pieces.saturating_sub(1);
+    }
+
+    if bio.kind == BioKind::Write && blk.rmw {
+        for p in &mut pages {
+            if p.coverage != full {
+                p.pre_read = true;
+                rmw_reads += 1;
+            }
+        }
+    }
+    Plan { kind: bio.kind, fua: bio.fua, pages, splits, merges, rmw_reads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blk::bio::Segment;
+
+    const PAGE: u64 = 4096;
+
+    fn cfg(merge_window: u32, rmw: bool) -> BlkConfig {
+        BlkConfig { sector_bytes: 512, merge_window, rmw, ..Default::default() }
+    }
+
+    #[test]
+    fn aligned_full_page_write_is_one_io_no_rmw() {
+        let b = Bio::write(0, vec![Segment { sector: 8, n_sectors: 8 }], false);
+        let p = plan(&b, &cfg(8, true), PAGE);
+        assert_eq!(p.pages, vec![PageIo { page: 1, coverage: full_mask(8), pre_read: false }]);
+        assert_eq!((p.splits, p.merges, p.rmw_reads), (0, 0, 0));
+    }
+
+    #[test]
+    fn segment_spanning_pages_splits() {
+        // sectors [6, 18) cross pages 0, 1, 2 → 3 pieces, 2 splits
+        let b = Bio::write(0, vec![Segment { sector: 6, n_sectors: 12 }], false);
+        let p = plan(&b, &cfg(0, true), PAGE);
+        assert_eq!(p.splits, 2);
+        assert_eq!(p.pages.len(), 3);
+        assert_eq!(p.pages[0], PageIo { page: 0, coverage: 0b1100_0000, pre_read: true });
+        assert_eq!(p.pages[1], PageIo { page: 1, coverage: full_mask(8), pre_read: false });
+        assert_eq!(p.pages[2], PageIo { page: 2, coverage: 0b0000_0011, pre_read: true });
+        assert_eq!(p.rmw_reads, 2);
+    }
+
+    #[test]
+    fn merge_window_coalesces_same_page_neighbors() {
+        // two sub-page segments on page 0 that together cover it fully
+        let b = Bio::write(
+            0,
+            vec![Segment { sector: 0, n_sectors: 4 }, Segment { sector: 4, n_sectors: 4 }],
+            false,
+        );
+        let merged = plan(&b, &cfg(4, true), PAGE);
+        assert_eq!(merged.pages, vec![PageIo { page: 0, coverage: full_mask(8), pre_read: false }]);
+        assert_eq!(merged.merges, 1);
+        assert_eq!(merged.rmw_reads, 0, "merged coverage completes the page");
+
+        // window 0: same input stays two partial pieces, both RMW
+        let split = plan(&b, &cfg(0, true), PAGE);
+        assert_eq!(split.pages.len(), 2);
+        assert_eq!(split.merges, 0);
+        assert_eq!(split.rmw_reads, 2);
+    }
+
+    #[test]
+    fn merge_window_is_bounded() {
+        // page 0, then `window` distinct pages, then page 0 again: the
+        // revisit is outside a window of 2 and must NOT merge
+        let b = Bio::write(
+            0,
+            vec![
+                Segment { sector: 0, n_sectors: 1 },
+                Segment { sector: 8, n_sectors: 1 },
+                Segment { sector: 16, n_sectors: 1 },
+                Segment { sector: 1, n_sectors: 1 },
+            ],
+            false,
+        );
+        let p = plan(&b, &cfg(2, false), PAGE);
+        assert_eq!(p.pages.len(), 4, "page 0 revisit fell out of the window");
+        assert_eq!(p.merges, 0);
+        let wide = plan(&b, &cfg(8, false), PAGE);
+        assert_eq!(wide.pages.len(), 3);
+        assert_eq!(wide.merges, 1);
+    }
+
+    #[test]
+    fn rmw_flag_gates_pre_reads() {
+        let b = Bio::write(0, vec![Segment { sector: 2, n_sectors: 3 }], false);
+        let with = plan(&b, &cfg(8, true), PAGE);
+        assert!(with.pages[0].pre_read);
+        assert_eq!(with.rmw_reads, 1);
+        let without = plan(&b, &cfg(8, false), PAGE);
+        assert!(!without.pages[0].pre_read);
+        assert_eq!(without.rmw_reads, 0);
+    }
+
+    #[test]
+    fn reads_never_rmw() {
+        let b = Bio::read(0, vec![Segment { sector: 2, n_sectors: 3 }]);
+        let p = plan(&b, &cfg(8, true), PAGE);
+        assert_eq!(p.pages.len(), 1);
+        assert!(!p.pages[0].pre_read);
+        assert_eq!(p.rmw_reads, 0);
+    }
+
+    #[test]
+    fn sixty_four_sectors_per_page_masks() {
+        // 32 KiB page / 512 B sectors = 64 sectors: full mask is all ones
+        let b = Bio::write(0, vec![Segment { sector: 0, n_sectors: 64 }], false);
+        let p = plan(&b, &cfg(0, true), 32 * 1024);
+        assert_eq!(p.pages, vec![PageIo { page: 0, coverage: u64::MAX, pre_read: false }]);
+        assert_eq!(p.rmw_reads, 0);
+    }
+
+    #[test]
+    fn flush_plans_to_nothing() {
+        let p = plan(&Bio::flush(0), &cfg(8, true), PAGE);
+        assert!(p.pages.is_empty());
+        assert_eq!(p.kind, BioKind::Flush);
+    }
+}

@@ -510,6 +510,17 @@ impl CachePolicy for Baseline {
         Ok(t)
     }
 
+    fn write_barrier(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        // A flush/FUA barrier forces the write pointer: partially
+        // written active blocks retire to the used queues (their
+        // unwritten word lines are stranded until reclamation — the
+        // capacity cost of the barrier). No migration, no erase, no
+        // flash time: the barrier orders state, reclamation stays with
+        // idle work / `flush`.
+        self.retire_active(ftl);
+        Ok(now)
+    }
+
     fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
         // Reclaim everything: used blocks AND the partially-written
         // active blocks (paper §III: at the end of each workload all
@@ -660,6 +671,26 @@ mod tests {
         assert_eq!(ftl.ledger.slc2tlc_migrations, 3);
         let cap = b.slc_free_pages(&ftl);
         assert!(cap > 0);
+        ftl.audit().unwrap();
+    }
+
+    #[test]
+    fn write_barrier_strands_active_capacity_without_migrating() {
+        let (mut ftl, mut b, _cfg) = setup();
+        // 3 pages into a fresh active block, then barrier
+        for i in 0..3u64 {
+            b.host_write_page(&mut ftl, Lpn(i), 0).unwrap();
+        }
+        let ledger_before = ftl.ledger;
+        let free_before = b.slc_free_pages(&ftl);
+        let t = b.write_barrier(&mut ftl, 123).unwrap();
+        assert_eq!(t, 123, "barrier costs no flash time");
+        assert_eq!(ftl.ledger, ledger_before, "barrier migrates and erases nothing");
+        assert!(b.has_used(), "partially written active block retired to used");
+        assert!(
+            b.slc_free_pages(&ftl) < free_before,
+            "stranded word lines stop counting as free"
+        );
         ftl.audit().unwrap();
     }
 

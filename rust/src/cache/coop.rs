@@ -198,6 +198,13 @@ impl CachePolicy for Coop {
         Ok(t)
     }
 
+    fn write_barrier(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        // Only the traditional half has an append pointer to force;
+        // the IPS window's data is already in its final location.
+        self.trad.retire_active(ftl);
+        Ok(now)
+    }
+
     fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
         // Reclaim the traditional cache completely; the IPS part stays
         // in place (that is the point of in-place switch).

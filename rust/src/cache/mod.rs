@@ -87,6 +87,21 @@ pub trait CachePolicy: Send {
     /// paper analyses). Returns the time the last issued step completes.
     fn idle_work(&mut self, ftl: &mut Ftl, now: Nanos, deadline: Nanos) -> Result<Nanos>;
 
+    /// Flush/FUA barrier from the block front end: force the SLC write
+    /// pointer so everything accepted so far is durable in its current
+    /// location. For append-ordered caches (baseline, coop's
+    /// traditional half) that means retiring partially-written active
+    /// blocks — the stranded word lines are the cost of the barrier.
+    /// Schemes whose data is already in its final place (TLC-only, the
+    /// IPS variants) keep the free no-op default. Unlike
+    /// [`CachePolicy::flush`] this must NOT migrate or erase anything:
+    /// a barrier orders writes, it does not reclaim. Returns the
+    /// completion time (barriers are pointer moves — zero flash time;
+    /// the caller accounts the in-flight drain).
+    fn write_barrier(&mut self, _ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
+        Ok(now)
+    }
+
     /// End-of-workload reclamation (daily scenario; paper §III: "at the
     /// end of each workload, all data in the SLC cache is migrated to
     /// the TLC space, and the used blocks are erased" — scheme-specific

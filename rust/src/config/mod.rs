@@ -622,6 +622,69 @@ impl Default for SimConfig {
     }
 }
 
+/// Block front end ([`crate::blk`]): sector-granular bios with
+/// split/merge/RMW and flush/FUA barriers between the host and the FTL.
+#[derive(Clone, Copy, Debug)]
+pub struct BlkConfig {
+    /// Route host requests through the bio layer instead of the
+    /// page-granular trace expansion (false = historical front end).
+    pub enabled: bool,
+    /// Sector size in bytes (the bio addressing granularity).
+    pub sector_bytes: u32,
+    /// Merge window: a planned piece landing on the same page as one
+    /// of the last `merge_window` pieces is coalesced into it. 0
+    /// disables merging (the differential-oracle mode).
+    pub merge_window: u32,
+    /// Read-modify-write sub-page writes: pre-read the page (billed to
+    /// the requesting tenant) before programming. false = blind
+    /// overwrite.
+    pub rmw: bool,
+    /// Inject a flush barrier after every N write bios per stream
+    /// (0 = never). Models flush-heavy applications (databases, fsync
+    /// loops) without trace support for flush records.
+    pub flush_every: u32,
+    /// Mark every write bio force-unit-access: each write barriers on
+    /// its own completion.
+    pub fua: bool,
+}
+
+impl Default for BlkConfig {
+    fn default() -> Self {
+        BlkConfig {
+            enabled: false,
+            sector_bytes: 512,
+            merge_window: 8,
+            rmw: true,
+            flush_every: 0,
+            fua: false,
+        }
+    }
+}
+
+impl BlkConfig {
+    /// Validate against the device geometry (checked only when the blk
+    /// front end is enabled, so exotic page sizes keep working under
+    /// the page front end).
+    pub fn validate(&self, page_bytes: u32) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.sector_bytes == 0 || !self.sector_bytes.is_power_of_two() {
+            return Err(Error::config("blk.sector_bytes must be a power of two"));
+        }
+        if self.sector_bytes > page_bytes || page_bytes % self.sector_bytes != 0 {
+            return Err(Error::config("blk.sector_bytes must divide the page size"));
+        }
+        if page_bytes / self.sector_bytes > 64 {
+            // per-page coverage is a u64 bitmap
+            return Err(Error::config(
+                "blk needs at most 64 sectors per page (raise blk.sector_bytes)",
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -633,6 +696,8 @@ pub struct Config {
     pub cache: CacheConfig,
     /// Multi-tenant host front-end settings.
     pub host: HostConfig,
+    /// Block front-end settings.
+    pub blk: BlkConfig,
     /// Engine settings.
     pub sim: SimConfig,
 }
@@ -644,6 +709,7 @@ impl Config {
         self.timing.validate()?;
         self.cache.validate()?;
         self.host.validate()?;
+        self.blk.validate(self.geometry.page_bytes)?;
         // cache must fit: traditional SLC capacity consumes blocks in
         // SLC mode (1 page per word line).
         let slc_pages_needed =
@@ -756,6 +822,15 @@ impl Config {
                 slo_p99: v.u64_or("host.qos.slo_p99_ns", h.qos.slo_p99),
             },
         };
+        let b = &base.blk;
+        let blk = BlkConfig {
+            enabled: v.bool_or("blk.enabled", b.enabled),
+            sector_bytes: v.u64_or("blk.sector_bytes", b.sector_bytes as u64) as u32,
+            merge_window: v.u64_or("blk.merge_window", b.merge_window as u64) as u32,
+            rmw: v.bool_or("blk.rmw", b.rmw),
+            flush_every: v.u64_or("blk.flush_every", b.flush_every as u64) as u32,
+            fua: v.bool_or("blk.fua", b.fua),
+        };
         let s = &base.sim;
         let sim = SimConfig {
             seed: v.u64_or("sim.seed", s.seed),
@@ -766,7 +841,7 @@ impl Config {
             victim_index: v.bool_or("sim.victim_index", s.victim_index),
             interconnect: v.bool_or("sim.interconnect", s.interconnect),
         };
-        let cfg = Config { geometry, timing, cache, host, sim };
+        let cfg = Config { geometry, timing, cache, host, blk, sim };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -991,6 +1066,53 @@ mod tests {
         c.host.qos.rate_mbps = 0.0;
         c.validate().unwrap();
         assert!(Config::from_toml_str("[host.qos]\nmode = \"wat\"", presets::small()).is_err());
+    }
+
+    #[test]
+    fn blk_defaults_off_and_toml_overrides() {
+        let c = presets::small();
+        assert!(!c.blk.enabled, "page front end is the default");
+        assert_eq!(c.blk.sector_bytes, 512);
+        assert_eq!(c.blk.merge_window, 8);
+        assert!(c.blk.rmw);
+        assert_eq!(c.blk.flush_every, 0);
+        assert!(!c.blk.fua);
+        let cfg = Config::from_toml_str(
+            "[blk]\nenabled = true\nsector_bytes = 1024\nmerge_window = 0\nrmw = false\n\
+             flush_every = 16\nfua = true",
+            presets::small(),
+        )
+        .unwrap();
+        assert!(cfg.blk.enabled);
+        assert_eq!(cfg.blk.sector_bytes, 1024);
+        assert_eq!(cfg.blk.merge_window, 0);
+        assert!(!cfg.blk.rmw);
+        assert_eq!(cfg.blk.flush_every, 16);
+        assert!(cfg.blk.fua);
+    }
+
+    #[test]
+    fn invalid_blk_config_rejected() {
+        let mut c = presets::small();
+        c.blk.enabled = true;
+        c.blk.sector_bytes = 768; // not a power of two
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.blk.enabled = true;
+        c.blk.sector_bytes = c.geometry.page_bytes * 2; // bigger than a page
+        assert!(c.validate().is_err());
+        let mut c = presets::small();
+        c.blk.enabled = true;
+        c.blk.sector_bytes = 16; // > 64 sectors per 4 KiB page
+        assert!(c.validate().is_err());
+        // the same settings are fine while blk is disabled
+        let mut c = presets::small();
+        c.blk.sector_bytes = 16;
+        c.validate().unwrap();
+        assert!(
+            Config::from_toml_str("[blk]\nenabled = true\nsector_bytes = 48", presets::small())
+                .is_err()
+        );
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub fn table1() -> Config {
         },
         cache: CacheConfig { slc_cache_bytes: 4 << 30, ..CacheConfig::default() },
         host: HostConfig::default(),
+        blk: BlkConfig::default(),
         sim: SimConfig::default(),
     }
 }
@@ -91,6 +92,7 @@ pub fn small() -> Config {
             ..CacheConfig::default()
         },
         host: HostConfig::default(),
+        blk: BlkConfig::default(),
         sim: SimConfig { verify: true, ..SimConfig::default() },
     }
 }
@@ -117,6 +119,7 @@ pub fn bench_medium() -> Config {
             ..CacheConfig::default()
         },
         host: HostConfig::default(),
+        blk: BlkConfig::default(),
         sim: SimConfig::default(),
     }
 }
@@ -146,6 +149,7 @@ pub fn large() -> Config {
             ..CacheConfig::default()
         },
         host: HostConfig::default(),
+        blk: BlkConfig::default(),
         sim: SimConfig::default(),
     }
 }

@@ -312,6 +312,7 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
         "mix",
         "variant",
         "attr",
+        "front",
         "seed",
         "mean_ms",
         "p99_ms",
@@ -330,6 +331,7 @@ pub fn summary_table(results: &[MultiTenantSummary]) -> TextTable {
             s.mix.clone(),
             s.variant_name(),
             s.attribution.clone(),
+            s.front_end.clone(),
             format!("{:#018x}", s.seed),
             format!("{:.3}", s.write_latency.mean() / 1e6),
             format!("{:.3}", s.write_latency.percentile_best(0.99) as f64 / 1e6),
@@ -359,16 +361,19 @@ pub fn summary_json(results: &[MultiTenantSummary]) -> String {
         }
         out.push_str(&format!(
             "{{\"scheme\":\"{}\",\"scheduler\":\"{}\",\"mix\":\"{}\",\"variant\":\"{}\",\
-             \"attr\":\"{}\",\"timing\":\"{}\",\"seed\":\"{:#018x}\",\"mean_ms\":\"{:.3}\",\
+             \"attr\":\"{}\",\"timing\":\"{}\",\"front\":\"{}\",\"seed\":\"{:#018x}\",\
+             \"mean_ms\":\"{:.3}\",\
              \"p99_ms\":\"{:.3}\",\"wa\":\"{:.3}\",\"victim_p99_ms\":\"{:.3}\",\
              \"q_ms\":\"{:.3}\",\"xfer_ms\":\"{:.3}\",\"arr_ms\":\"{:.3}\",\"stalls\":{},\
-             \"bg_pages\":{},\"host_bytes\":{},\"sim_end\":{}}}",
+             \"bg_pages\":{},\"blk_rmw\":{},\"blk_flushes\":{},\"host_bytes\":{},\
+             \"sim_end\":{}}}",
             s.scheme,
             s.scheduler,
             s.mix,
             s.variant_name(),
             s.attribution,
             s.timing_model,
+            s.front_end,
             s.seed,
             s.write_latency.mean() / 1e6,
             s.write_latency.percentile_best(0.99) as f64 / 1e6,
@@ -379,6 +384,8 @@ pub fn summary_json(results: &[MultiTenantSummary]) -> String {
             s.write_phases.mean_array_ns() / 1e6,
             s.total_throttle_stalls(),
             s.background.total_programs(),
+            s.blk.rmw_reads,
+            s.blk.flushes,
             s.host_bytes_written,
             s.sim_end,
         ));
@@ -410,6 +417,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "denied",
         "stalls",
         "mig_pg",
+        "rmw",
     ]);
     let span_s = (s.sim_end as f64 / 1e9).max(1e-9);
     for t in &s.tenants {
@@ -431,6 +439,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
             t.slc_denied_pages.to_string(),
             t.throttle_stalls.to_string(),
             t.migrated_pages_owned.to_string(),
+            t.blk.rmw_reads.to_string(),
         ]);
     }
     table.row(vec![
@@ -451,6 +460,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "-".into(),
         s.total_throttle_stalls().to_string(),
         s.tenants.iter().map(|t| t.migrated_pages_owned).sum::<u64>().to_string(),
+        s.blk.rmw_reads.to_string(),
     ]);
     table.row(vec![
         "(background)".into(),
@@ -465,6 +475,7 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
         "-".into(),
         "-".into(),
         format!("+{} pages", s.background.total_programs()),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),

@@ -20,11 +20,12 @@ use super::qos::{Admission, QosGate};
 use super::queue::SubmissionQueue;
 use super::sched::{self, HeadInfo, Scheduler};
 use super::tenant::{self, TenantSpec};
+use crate::blk::{self, Bio, BioKind};
 use crate::cache::{self, CachePartitioner, CachePolicy};
 use crate::config::{AttributionMode, Config, Nanos};
 use crate::flash::Lpn;
 use crate::ftl::{Ftl, MoveCounters, VictimPolicy};
-use crate::metrics::{BandwidthTimeline, LatencyStats, Ledger, PhaseStats, TenantStats};
+use crate::metrics::{BandwidthTimeline, BlkStats, LatencyStats, Ledger, PhaseStats, TenantStats};
 use crate::trace::scenario::Scenario;
 use crate::trace::OpKind;
 use crate::Result;
@@ -73,6 +74,10 @@ pub struct MultiTenantSummary {
     pub read_phases: PhaseStats,
     /// Timing backend the run used ("lump" | "interconnect").
     pub timing_model: String,
+    /// Front end the run used ("page" | "blk").
+    pub front_end: String,
+    /// Device-wide block-front-end counters (all zero under "page").
+    pub blk: BlkStats,
     /// Device-wide host write bandwidth.
     pub bandwidth: BandwidthTimeline,
     /// Device-wide ledger (everything the flash programmed).
@@ -259,6 +264,11 @@ impl MultiTenantSimulator {
         let mut inflight: BinaryHeap<Reverse<(Nanos, usize)>> = BinaryHeap::new();
         // per-tenant outstanding commands (bounded by the SQ depth)
         let mut outstanding = vec![0usize; self.queues.len()];
+        // block front end: config snapshot, device-wide counters, and
+        // per-tenant write counts toward the periodic flush barrier
+        let blk_cfg = self.cfg.blk;
+        let mut blk_total = BlkStats::default();
+        let mut writes_since_flush = vec![0u32; self.queues.len()];
 
         loop {
             // retire completions up to the front-end clock
@@ -327,8 +337,104 @@ impl MultiTenantSimulator {
                     // unowned relocation remainder accumulated across
                     // the request's per-page drains (owner mode)
                     let mut unowned_moves = MoveCounters::default();
-                    match op.kind {
-                        OpKind::Write if self.part.enabled() => {
+                    // block-front-end counters for this one request
+                    let mut bstats = BlkStats::default();
+                    if blk_cfg.enabled {
+                        let mut bio = Bio::from_op(&op, blk_cfg.sector_bytes);
+                        if blk_cfg.fua && bio.kind == BioKind::Write {
+                            bio.fua = true;
+                        }
+                        let plan = blk::plan(&bio, &blk_cfg, page);
+                        bstats.bios = 1;
+                        bstats.splits = plan.splits;
+                        bstats.merges = plan.merges;
+                        match plan.kind {
+                            BioKind::Write => {
+                                bstats.rmw_reads = plan.rmw_reads;
+                                bstats.write_pages = plan.pages.len() as u64;
+                                for io in &plan.pages {
+                                    let lpn = Lpn(io.page % lpn_limit);
+                                    // sub-page write: pre-read the page
+                                    // first, billed to this tenant; the
+                                    // program waits for the read
+                                    let mut issue_t = issue;
+                                    if io.pre_read {
+                                        let pre = self.ftl.host_read(lpn, issue)?;
+                                        req_phases.add(&pre);
+                                        issue_t = pre.end;
+                                        req_end = req_end.max(pre.end);
+                                    }
+                                    self.ftl.ledger.host_page();
+                                    let c = if self.part.enabled() {
+                                        let grant = self.part.grant(i, contended);
+                                        let page_before = self.ftl.ledger;
+                                        let c = self.policy.host_write_page_gated(
+                                            &mut self.ftl,
+                                            lpn,
+                                            issue_t,
+                                            grant,
+                                        )?;
+                                        self.part
+                                            .charge(i, &self.ftl.ledger.diff(&page_before));
+                                        if owner_attr {
+                                            let u = self.absorb_owner_events(migr_ns, true);
+                                            unowned_moves.add(&u);
+                                        }
+                                        c
+                                    } else {
+                                        self.policy.host_write_page(
+                                            &mut self.ftl,
+                                            lpn,
+                                            issue_t,
+                                        )?
+                                    };
+                                    req_phases.add(&c);
+                                    req_end = req_end.max(c.end);
+                                }
+                                writes_since_flush[i] += 1;
+                                let barrier = bio.fua
+                                    || (blk_cfg.flush_every > 0
+                                        && writes_since_flush[i] >= blk_cfg.flush_every);
+                                if barrier {
+                                    if bio.fua {
+                                        bstats.fua_writes = 1;
+                                    }
+                                    writes_since_flush[i] = 0;
+                                    // the barrier orders against every
+                                    // dispatched write: drain the device
+                                    // window first
+                                    let drain = inflight
+                                        .iter()
+                                        .map(|&Reverse((t, _))| t)
+                                        .fold(req_end, |a, b| a.max(b));
+                                    let t_end =
+                                        self.policy.write_barrier(&mut self.ftl, drain)?;
+                                    req_end = req_end.max(t_end);
+                                    bstats.flushes = 1;
+                                }
+                            }
+                            BioKind::Read => {
+                                bstats.read_pages = plan.pages.len() as u64;
+                                for io in &plan.pages {
+                                    let lpn = Lpn(io.page % lpn_limit);
+                                    let c = self.ftl.host_read(lpn, issue)?;
+                                    req_phases.add(&c);
+                                    req_end = req_end.max(c.end);
+                                }
+                            }
+                            BioKind::Flush => {
+                                let drain = inflight
+                                    .iter()
+                                    .map(|&Reverse((t, _))| t)
+                                    .fold(issue, |a, b| a.max(b));
+                                let t_end = self.policy.write_barrier(&mut self.ftl, drain)?;
+                                req_end = req_end.max(t_end);
+                                bstats.flushes = 1;
+                            }
+                        }
+                    } else {
+                        match op.kind {
+                            OpKind::Write if self.part.enabled() => {
                             for k in 0..n_pages {
                                 let lpn = Lpn((first_lpn + k) % lpn_limit);
                                 self.ftl.ledger.host_page();
@@ -373,6 +479,7 @@ impl MultiTenantSimulator {
                                 req_end = req_end.max(c.end);
                             }
                         }
+                        }
                     }
                     self.ftl.set_tenant(None);
                     let lat = req_end - op.at; // includes queueing in the SQ
@@ -392,6 +499,8 @@ impl MultiTenantSimulator {
                     st.ledger.merge(&diff);
                     st.cache_occupancy_peak =
                         st.cache_occupancy_peak.max(self.part.occupancy(i));
+                    st.blk.merge(&bstats);
+                    blk_total.merge(&bstats);
                     match op.kind {
                         OpKind::Write => {
                             st.write_latency.record(lat);
@@ -534,6 +643,8 @@ impl MultiTenantSimulator {
             read_phases,
             timing_model: (if self.cfg.sim.interconnect { "interconnect" } else { "lump" })
                 .to_string(),
+            front_end: (if self.cfg.blk.enabled { "blk" } else { "page" }).to_string(),
+            blk: blk_total,
             bandwidth,
             ledger: self.ftl.ledger,
             background,
@@ -684,6 +795,54 @@ mod tests {
         assert!(s.write_phases.ops > 0);
         assert_eq!(s.write_phases.transfer_ns, 0, "no bus exists under the lump");
         assert!(s.write_phases.array_ns > 0);
+    }
+
+    #[test]
+    fn blk_rmw_billed_to_requesting_tenant() {
+        let mut cfg = mt_cfg(Scheme::Ips, SchedKind::RoundRobin);
+        cfg.blk.enabled = true;
+        cfg.blk.merge_window = 0;
+        // sub-page victim requests: every victim write must pre-read
+        cfg.host.victim_req_bytes = 1536;
+        let s = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert_eq!(s.front_end, "blk");
+        assert!(s.blk.bios > 0);
+        for t in s.tenants.iter().filter(|t| t.name.starts_with("victim")) {
+            assert!(t.blk.rmw_reads > 0, "{} paid RMW pre-reads", t.name);
+            assert!(
+                t.ledger.host_reads >= t.blk.rmw_reads,
+                "{} pre-reads land in its own ledger",
+                t.name
+            );
+        }
+        // attribution still closes with pre-reads in the mix
+        let mut sum = Ledger::default();
+        for t in &s.tenants {
+            sum.merge(&t.ledger);
+        }
+        sum.merge(&s.background);
+        assert_eq!(sum, s.ledger, "attribution is exhaustive under blk");
+    }
+
+    #[test]
+    fn blk_page_aligned_front_end_matches_page_path() {
+        // page-aligned requests, merging off: the blk front end resolves
+        // to the same per-page op sequence as the page path
+        let run = |blk: bool| {
+            let mut cfg = mt_cfg(Scheme::Baseline, SchedKind::RoundRobin);
+            cfg.blk.enabled = blk;
+            cfg.blk.merge_window = 0;
+            MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+        };
+        let pg = run(false);
+        let bk = run(true);
+        assert_eq!(pg.ledger, bk.ledger);
+        assert_eq!(pg.sim_end, bk.sim_end);
+        assert_eq!(pg.host_bytes_written, bk.host_bytes_written);
+        for (x, y) in pg.tenants.iter().zip(&bk.tenants) {
+            assert_eq!(x.ledger, y.ledger, "{} ledger matches", x.name);
+            assert_eq!(x.p99_write_latency(), y.p99_write_latency());
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! [`config::presets`], [`sim::Simulator`], and
 //! [`coordinator::experiment`].
 
+pub mod blk;
 pub mod cache;
 pub mod config;
 pub mod coordinator;

@@ -6,9 +6,17 @@
 //! * `multi-tenant` — tenants → submission queues → scheduler → scheme,
 //!   with per-tenant latency/WA attribution; `--fleet` sweeps the
 //!   (scheme × scheduler) cross-product on worker threads;
+//! * `replay`       — stream an MSR CSV through the block front end in
+//!   constant memory (bounded reorder window, sector-granular bios);
 //! * `sweep`        — ablations (cache size, idle threshold, group width);
 //! * `audit`        — reprogram reliability audit via the PJRT artifact;
 //! * `list`         — workloads, schemes, presets.
+//!
+//! `run`, `multi-tenant` and `replay` accept the `--blk` family: route
+//! host requests through the bio-style block front end (sector-granular
+//! scatter-gather, page split + contiguous merge, read-modify-write for
+//! sub-page writes, flush/FUA barriers). Any `--blk-*` option implies
+//! `--blk` itself.
 
 use ips::cache;
 use ips::config::{presets, AttributionMode, Config, MixKind, QosMode, SchedKind, Scheme, MS};
@@ -19,6 +27,28 @@ use ips::trace::scenario::{self, Scenario};
 use ips::trace::profiles;
 use ips::util::cli::Command;
 use ips::util::fmt::{bytes, nanos, TextTable};
+
+/// The `--blk` option family, shared by `run`, `multi-tenant` and
+/// `replay`.
+fn blk_opts(c: Command) -> Command {
+    c.flag("blk", None, "sector-granular block front end (split/merge/RMW/flush)")
+        .opt("blk-sector-bytes", None, "B", "logical sector size (implies --blk)", None)
+        .opt(
+            "blk-merge-window",
+            None,
+            "N",
+            "merge lookback in planned pages, 0 = off (implies --blk)",
+            None,
+        )
+        .opt(
+            "blk-flush-every",
+            None,
+            "N",
+            "flush barrier every N writes per stream, 0 = off (implies --blk)",
+            None,
+        )
+        .flag("blk-fua", None, "mark every write FUA: barrier per write (implies --blk)")
+}
 
 fn cli() -> Command {
     Command::new("ips", "In-place Switch: reprogramming-based SLC cache for hybrid 3D SSDs")
@@ -32,7 +62,7 @@ fn cli() -> Command {
                 .opt("threads", Some('j'), "N", "worker threads", None)
                 .opt("workload", Some('w'), "NAME", "restrict to workload (repeatable)", None),
         )
-        .subcommand(
+        .subcommand(blk_opts(
             Command::new("run", "run one simulation")
                 .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop", Some("ips"))
                 .opt("workload", Some('w'), "NAME", "workload profile (or 'seq')", Some("HM_0"))
@@ -42,8 +72,8 @@ fn cli() -> Command {
                 .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
                 .opt("config", Some('c'), "FILE", "TOML config overriding the preset", None)
                 .flag("verify", None, "run full consistency audits"),
-        )
-        .subcommand(
+        ))
+        .subcommand(blk_opts(
             Command::new("multi-tenant", "multi-tenant host front end (queues + scheduler)")
                 .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop", Some("ips"))
                 .opt("scheduler", None, "P", "fifo|round-robin|weighted-fair", Some("fifo"))
@@ -85,7 +115,18 @@ fn cli() -> Command {
                 .opt("channels", None, "N", "override geometry channel count", None)
                 .opt("dies-per-chip", None, "N", "override geometry dies per chip", None)
                 .flag("verify", None, "run full consistency audits"),
-        )
+        ))
+        .subcommand(blk_opts(
+            Command::new("replay", "stream an MSR CSV through the block front end")
+                .opt("csv", None, "FILE", "MSR-format CSV file to stream", None)
+                .opt("trace", Some('t'), "NAME", "<name>.csv under $MSR_TRACE_DIR", None)
+                .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop", Some("ips"))
+                .opt("scenario", None, "X", "bursty|daily", Some("daily"))
+                .opt("scale", None, "N", "geometry divisor vs Table I", Some("4"))
+                .opt("seed", Some('s'), "SEED", "rng seed", Some("42"))
+                .opt("window", None, "N", "reorder window (max buffered requests)", Some("1024"))
+                .flag("verify", None, "run full consistency audits"),
+        ))
         .subcommand(
             Command::new("sweep", "ablation sweeps")
                 .opt(
@@ -151,6 +192,7 @@ fn main() {
         Some("reproduce") => cmd_reproduce(parsed.sub().unwrap()),
         Some("run") => cmd_run(parsed.sub().unwrap()),
         Some("multi-tenant") => cmd_multitenant(parsed.sub().unwrap()),
+        Some("replay") => cmd_replay(parsed.sub().unwrap()),
         Some("sweep") => cmd_sweep(parsed.sub().unwrap()),
         Some("perf") => cmd_perf(parsed.sub().unwrap()),
         Some("audit") => cmd_audit(parsed.sub().unwrap()),
@@ -199,6 +241,43 @@ fn cmd_reproduce(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     experiment::run_figure(&fig, &opts)
 }
 
+/// Fold the `--blk` option family into `cfg.blk`; any `--blk-*`
+/// option implies `--blk` itself (an inert knob would be a silent
+/// misconfiguration, like `--bus-ns-per-page` and `--interconnect`).
+fn apply_blk_flags(p: &ips::util::cli::Parsed, cfg: &mut Config) -> ips::Result<()> {
+    if p.flag("blk") {
+        cfg.blk.enabled = true;
+    }
+    if p.get("blk-sector-bytes").is_some() {
+        cfg.blk.sector_bytes = p.get_u64("blk-sector-bytes").map_err(ips::Error::config)? as u32;
+        cfg.blk.enabled = true;
+    }
+    if p.get("blk-merge-window").is_some() {
+        cfg.blk.merge_window = p.get_u64("blk-merge-window").map_err(ips::Error::config)? as u32;
+        cfg.blk.enabled = true;
+    }
+    if p.get("blk-flush-every").is_some() {
+        cfg.blk.flush_every = p.get_u64("blk-flush-every").map_err(ips::Error::config)? as u32;
+        cfg.blk.enabled = true;
+    }
+    if p.flag("blk-fua") {
+        cfg.blk.fua = true;
+        cfg.blk.enabled = true;
+    }
+    Ok(())
+}
+
+/// Rows describing what the block front end did, appended to the
+/// single-run metric table when `--blk` ran.
+fn blk_rows(t: &mut TextTable, blk: &ips::metrics::BlkStats) {
+    t.row(vec!["blk_bios".into(), blk.bios.to_string()]);
+    t.row(vec!["blk_splits".into(), blk.splits.to_string()]);
+    t.row(vec!["blk_merges".into(), blk.merges.to_string()]);
+    t.row(vec!["blk_rmw_pre_reads".into(), blk.rmw_reads.to_string()]);
+    t.row(vec!["blk_flushes".into(), blk.flushes.to_string()]);
+    t.row(vec!["blk_fua_writes".into(), blk.fua_writes.to_string()]);
+}
+
 fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     let opts = opts_from(p)?;
     let scheme = Scheme::parse(p.get("scheme").unwrap_or("ips"))?;
@@ -209,6 +288,7 @@ fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     if p.flag("verify") {
         cfg.sim.verify = true;
     }
+    apply_blk_flags(p, &mut cfg)?;
     let scen = Scenario::parse(p.get("scenario").unwrap_or("daily"))?;
     let workload = p.get("workload").unwrap_or("HM_0").to_string();
     let mut sim = Simulator::new(cfg.clone())?;
@@ -222,12 +302,20 @@ fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         }
     };
     println!(
-        "run: scheme={} workload={} scenario={} writes={} ({})",
+        "run: scheme={} workload={} scenario={} writes={} ({}){}",
         scheme.name(),
         workload,
         scen.name(),
         trace.write_ops(),
         bytes(trace.total_write_bytes()),
+        if cfg.blk.enabled {
+            format!(
+                " [blk: sector {} B, merge window {}, flush every {}, fua {}]",
+                cfg.blk.sector_bytes, cfg.blk.merge_window, cfg.blk.flush_every, cfg.blk.fua
+            )
+        } else {
+            String::new()
+        },
     );
     let s = sim.run(&trace, scen)?;
     let mut t = TextTable::new(&["metric", "value"]);
@@ -253,6 +341,82 @@ fn cmd_run(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     t.row(vec!["coop_reprogram_writes".into(), s.ledger.coop_reprogram_writes.to_string()]);
     t.row(vec!["slc2tlc_migrations".into(), s.ledger.slc2tlc_migrations.to_string()]);
     t.row(vec!["gc_migrations".into(), s.ledger.gc_migrations.to_string()]);
+    if cfg.blk.enabled {
+        blk_rows(&mut t, &s.blk);
+    }
+    t.row(vec!["sim_end".into(), nanos(s.sim_end)]);
+    t.row(vec!["wall_clock".into(), format!("{:.2?}", s.wall_clock)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_replay(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    use ips::blk::{Bio, BioKind};
+    use ips::trace::msr;
+    let opts = opts_from(p)?;
+    let scheme = Scheme::parse(p.get("scheme").unwrap_or("ips"))?;
+    let mut cfg = experiment::exp_config(&opts, scheme);
+    cfg.blk.enabled = true;
+    apply_blk_flags(p, &mut cfg)?;
+    if p.flag("verify") {
+        cfg.sim.verify = true;
+    }
+    let scen = Scenario::parse(p.get("scenario").unwrap_or("daily"))?;
+    let window = p.get_u64("window").map_err(ips::Error::config)? as usize;
+    let (name, mut stream) = match (p.get("csv"), p.get("trace")) {
+        (Some(path), _) => {
+            let path = std::path::Path::new(path);
+            let name =
+                path.file_stem().and_then(|s| s.to_str()).unwrap_or("replay").to_string();
+            (name, msr::stream_path(path, window)?)
+        }
+        (None, Some(t)) => {
+            let dir = msr::trace_dir()
+                .ok_or_else(|| ips::Error::config("--trace needs $MSR_TRACE_DIR set"))?;
+            (t.to_string(), msr::stream_dir(&dir, t, window)?)
+        }
+        (None, None) => {
+            return Err(ips::Error::config("replay needs --csv FILE or --trace NAME"))
+        }
+    };
+    println!(
+        "replay: {name} scheme={} scenario={} [blk: sector {} B, merge window {}, \
+         flush every {}, fua {}] reorder window {window}",
+        scheme.name(),
+        scen.name(),
+        cfg.blk.sector_bytes,
+        cfg.blk.merge_window,
+        cfg.blk.flush_every,
+        cfg.blk.fua,
+    );
+    let mut sim = Simulator::new(cfg.clone())?;
+    let sector = cfg.blk.sector_bytes;
+    let fua = cfg.blk.fua;
+    let bios = (&mut stream).map(|r| {
+        r.map(|op| {
+            let mut b = Bio::from_op(&op, sector);
+            if fua && b.kind == BioKind::Write {
+                b.fua = true;
+            }
+            b
+        })
+    });
+    let s = sim.run_bios(&name, bios, scen)?;
+    println!(
+        "streamed {} requests; peak buffered {} (bound: the {window}-request window, \
+         not the trace)",
+        stream.emitted(),
+        stream.peak_buffered(),
+    );
+    let mut t = TextTable::new(&["metric", "value"]);
+    t.row(vec!["scheme".into(), s.scheme.clone()]);
+    t.row(vec!["host_pages".into(), s.ledger.host_pages.to_string()]);
+    t.row(vec!["host_reads".into(), s.ledger.host_reads.to_string()]);
+    t.row(vec!["mean_write_latency".into(), nanos(s.mean_write_latency() as u64)]);
+    t.row(vec!["p95_write_latency".into(), nanos(s.write_latency.percentile(0.95))]);
+    t.row(vec!["write_amplification".into(), format!("{:.4}", s.wa())]);
+    t.row(vec!["host_bytes_written".into(), bytes(s.host_bytes_written)]);
+    blk_rows(&mut t, &s.blk);
     t.row(vec!["sim_end".into(), nanos(s.sim_end)]);
     t.row(vec!["wall_clock".into(), format!("{:.2?}", s.wall_clock)]);
     print!("{}", t.render());
@@ -324,6 +488,7 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         cfg.geometry.dies_per_chip =
             p.get_u64("dies-per-chip").map_err(ips::Error::config)? as u32;
     }
+    apply_blk_flags(p, &mut cfg)?;
     cfg.validate()?;
     // exact per-tenant percentiles need raw capture
     cfg.sim.latency_samples = cfg.sim.latency_samples.max(100_000);
@@ -390,6 +555,12 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     );
     let s = sim.run(scen)?;
     print!("{}", fleet::tenant_table(&s).render());
+    if s.front_end == "blk" {
+        println!(
+            "blk: {} bios  splits {}  merges {}  rmw pre-reads {}  flushes {} (fua {})",
+            s.blk.bios, s.blk.splits, s.blk.merges, s.blk.rmw_reads, s.blk.flushes, s.blk.fua_writes
+        );
+    }
     println!(
         "device: wa {:.3}  background pages {}  throttle stalls {}  sim end {}  wall {:.2?}",
         s.wa(),

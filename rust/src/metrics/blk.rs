@@ -1,0 +1,80 @@
+//! Block-front-end counters: what the bio layer did to each request
+//! stream before it reached the FTL.
+//!
+//! Split/merge/RMW activity is invisible in the page-granular ledger —
+//! a merged pair of sub-page writes and one aligned page write land as
+//! the same `host_pages` increment — so the submission path keeps its
+//! own counters, device-wide in [`super::RunSummary`] /
+//! `MultiTenantSummary` and per tenant in [`super::TenantStats`].
+
+/// Counters accumulated by the bio submission path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlkStats {
+    /// Bios dispatched (reads + writes; flush barriers counted in
+    /// `flushes`, not here).
+    pub bios: u64,
+    /// Flush barriers executed (explicit flush bios plus the periodic
+    /// `blk.flush_every` injection).
+    pub flushes: u64,
+    /// Writes carrying the FUA flag (each forces a barrier on its own
+    /// completion).
+    pub fua_writes: u64,
+    /// Extra pieces created by splitting segments at page boundaries
+    /// (a segment spanning k pages contributes k-1).
+    pub splits: u64,
+    /// Pieces coalesced into a same-page neighbor inside the merge
+    /// window.
+    pub merges: u64,
+    /// Read-modify-write pre-reads issued for partially covered write
+    /// pages.
+    pub rmw_reads: u64,
+    /// Page programs issued on behalf of write bios (post split/merge).
+    pub write_pages: u64,
+    /// Page reads issued on behalf of read bios (post split/merge;
+    /// excludes RMW pre-reads).
+    pub read_pages: u64,
+}
+
+impl BlkStats {
+    /// Fold another counter set into this one (fleet / tenant roll-ups).
+    pub fn merge(&mut self, other: &BlkStats) {
+        self.bios += other.bios;
+        self.flushes += other.flushes;
+        self.fua_writes += other.fua_writes;
+        self.splits += other.splits;
+        self.merges += other.merges;
+        self.rmw_reads += other.rmw_reads;
+        self.write_pages += other.write_pages;
+        self.read_pages += other.read_pages;
+    }
+
+    /// True when the blk front end never ran (page front end, or an
+    /// empty trace).
+    pub fn is_empty(&self) -> bool {
+        *self == BlkStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_fieldwise() {
+        let mut a = BlkStats { bios: 1, splits: 2, rmw_reads: 3, ..Default::default() };
+        let b = BlkStats { bios: 10, merges: 4, write_pages: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.bios, 11);
+        assert_eq!(a.splits, 2);
+        assert_eq!(a.merges, 4);
+        assert_eq!(a.rmw_reads, 3);
+        assert_eq!(a.write_pages, 5);
+    }
+
+    #[test]
+    fn default_is_empty() {
+        assert!(BlkStats::default().is_empty());
+        let used = BlkStats { bios: 1, ..Default::default() };
+        assert!(!used.is_empty());
+    }
+}

@@ -11,11 +11,13 @@
 //! copies, counted into IPS/agc per §V-B2).
 
 pub mod bandwidth;
+pub mod blk;
 pub mod latency;
 pub mod tenant;
 pub mod wa;
 
 pub use bandwidth::BandwidthTimeline;
+pub use blk::BlkStats;
 pub use latency::{LatencyStats, PhaseStats};
 pub use tenant::TenantStats;
 pub use wa::{Attribution, Ledger};
@@ -49,6 +51,8 @@ pub struct RunSummary {
     /// Host read bandwidth timeline (reads previously fed latency
     /// stats only).
     pub read_bandwidth: BandwidthTimeline,
+    /// Block-front-end counters (all zero under the page front end).
+    pub blk: BlkStats,
     /// Simulated end time.
     pub sim_end: Nanos,
     /// Bytes the host wrote.

@@ -11,7 +11,7 @@
 //! no tenant and is reported separately as the device's *background*
 //! ledger.
 
-use super::{BandwidthTimeline, LatencyStats, Ledger, PhaseStats};
+use super::{BandwidthTimeline, BlkStats, LatencyStats, Ledger, PhaseStats};
 use crate::config::Nanos;
 
 /// Everything one tenant's requests produced during a run.
@@ -38,6 +38,10 @@ pub struct TenantStats {
     pub bandwidth: BandwidthTimeline,
     /// Programs attributed to this tenant's requests (ledger diff).
     pub ledger: Ledger,
+    /// Block-front-end activity of this tenant's bios (splits, merges,
+    /// RMW pre-reads, flush barriers; all zero under the page front
+    /// end).
+    pub blk: BlkStats,
     /// Bytes this tenant wrote.
     pub host_bytes_written: u64,
     /// Reserved SLC-cache slice in pages (0 when partitioning is off).
@@ -83,6 +87,7 @@ impl TenantStats {
             read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(bandwidth_window),
             ledger: Ledger::default(),
+            blk: BlkStats::default(),
             host_bytes_written: 0,
             cache_reserved_pages: 0,
             cache_occupancy_peak: 0,

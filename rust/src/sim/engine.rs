@@ -20,11 +20,12 @@
 //! steps issued before the deadline may overrun it — exactly the
 //! paper's Fig. 7 conflict).
 
+use crate::blk::{self, Bio, BioKind};
 use crate::cache::{self, CachePolicy};
 use crate::config::{Config, Nanos};
 use crate::flash::Lpn;
 use crate::ftl::Ftl;
-use crate::metrics::{BandwidthTimeline, LatencyStats, PhaseStats, RunSummary};
+use crate::metrics::{BandwidthTimeline, BlkStats, LatencyStats, PhaseStats, RunSummary};
 use crate::trace::scenario::Scenario;
 use crate::trace::{OpKind, Trace};
 use crate::Result;
@@ -46,6 +47,8 @@ pub struct Simulator {
     pub bandwidth: BandwidthTimeline,
     /// Host read bandwidth timeline.
     pub read_bandwidth: BandwidthTimeline,
+    /// Block-front-end counters (zero under the page front end).
+    pub blk: BlkStats,
     /// Simulated clock (last activity).
     now: Nanos,
 }
@@ -64,6 +67,7 @@ impl Simulator {
             read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
             read_bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),
+            blk: BlkStats::default(),
             cfg,
             ftl,
             policy,
@@ -90,6 +94,21 @@ impl Simulator {
 
     /// Replay a whole trace under `scenario`; returns the run summary.
     pub fn run(&mut self, trace: &Trace, scenario: Scenario) -> Result<RunSummary> {
+        if self.cfg.blk.enabled {
+            // route through the bio front end: one single-segment bio
+            // per trace op, sector-granular
+            let sector = self.cfg.blk.sector_bytes;
+            let fua = self.cfg.blk.fua;
+            let name = trace.name.clone();
+            let bios = trace.ops.iter().map(|op| {
+                let mut b = Bio::from_op(op, sector);
+                if fua && b.kind == BioKind::Write {
+                    b.fua = true;
+                }
+                Ok(b)
+            });
+            return self.run_bios(&name, bios, scenario);
+        }
         let wall0 = std::time::Instant::now();
         let idle_threshold = self.cfg.cache.idle_threshold;
         let page = self.cfg.geometry.page_bytes as u64;
@@ -163,6 +182,149 @@ impl Simulator {
             ledger: self.ftl.ledger,
             bandwidth: self.bandwidth.clone(),
             read_bandwidth: self.read_bandwidth.clone(),
+            blk: self.blk,
+            sim_end: self.now,
+            host_bytes_written: host_bytes,
+            host_bytes_read,
+            wall_clock: wall0.elapsed(),
+        })
+    }
+
+    /// Replay a bio stream (block front end). The streaming twin of
+    /// [`Simulator::run`]: bios are consumed one at a time, so a
+    /// million-request MSR replay ([`crate::trace::msr::MsrStream`])
+    /// holds only its reorder window in memory, never the whole trace.
+    ///
+    /// Dispatch per bio: split/merge via [`blk::plan`], RMW pre-reads
+    /// before partially covered write pages (billed to this request's
+    /// latency and the ledger's host reads), flush/FUA barriers through
+    /// the scheme's `write_barrier`. With page-aligned bios and
+    /// `merge_window = 0` this is byte-identical to the page front end
+    /// (enforced by `tests/integration_blk.rs`).
+    pub fn run_bios<I>(&mut self, name: &str, bios: I, scenario: Scenario) -> Result<RunSummary>
+    where
+        I: IntoIterator<Item = Result<Bio>>,
+    {
+        let wall0 = std::time::Instant::now();
+        let idle_threshold = self.cfg.cache.idle_threshold;
+        let page = self.cfg.geometry.page_bytes as u64;
+        let lpn_limit = self.ftl.map.lpn_limit();
+        let blk_cfg = self.cfg.blk;
+        let mut host_bytes = 0u64;
+        let mut host_bytes_read = 0u64;
+        let mut writes_since_flush = 0u32;
+
+        for bio in bios {
+            let bio = bio?;
+            let arrival = bio.at;
+            if scenario == Scenario::Daily {
+                let quiesce = self.now;
+                if arrival > quiesce.saturating_add(idle_threshold) {
+                    let start = quiesce + idle_threshold;
+                    self.policy.idle_work(&mut self.ftl, start, arrival)?;
+                }
+            }
+            let plan = blk::plan(&bio, &blk_cfg, page);
+            match plan.kind {
+                BioKind::Write => {
+                    self.blk.bios += 1;
+                    self.blk.splits += plan.splits;
+                    self.blk.merges += plan.merges;
+                    self.blk.rmw_reads += plan.rmw_reads;
+                    self.blk.write_pages += plan.pages.len() as u64;
+                    let mut req_end = arrival;
+                    for io in &plan.pages {
+                        let lpn = Lpn(io.page % lpn_limit);
+                        let mut issue = arrival;
+                        if io.pre_read {
+                            // RMW: fetch the page's old sectors before
+                            // overwriting part of it; the program waits
+                            // for the read
+                            let pre = self.ftl.host_read(lpn, arrival)?;
+                            self.write_phases.add(&pre);
+                            issue = pre.end;
+                            req_end = req_end.max(pre.end);
+                        }
+                        self.ftl.ledger.host_page();
+                        let c = self.policy.host_write_page(&mut self.ftl, lpn, issue)?;
+                        self.write_phases.add(&c);
+                        req_end = req_end.max(c.end);
+                    }
+                    let mut barrier = bio.fua;
+                    if bio.fua {
+                        self.blk.fua_writes += 1;
+                    }
+                    if blk_cfg.flush_every > 0 {
+                        writes_since_flush += 1;
+                        if writes_since_flush >= blk_cfg.flush_every {
+                            writes_since_flush = 0;
+                            barrier = true;
+                        }
+                    }
+                    if barrier {
+                        // serial engine: everything in flight is what
+                        // `self.now` already tracks — drain to it
+                        let drain = self.now.max(req_end);
+                        let t = self.policy.write_barrier(&mut self.ftl, drain)?;
+                        self.now = self.now.max(t);
+                        self.blk.flushes += 1;
+                    }
+                    let bytes = bio.total_bytes(blk_cfg.sector_bytes);
+                    self.write_latency.record(req_end - arrival);
+                    self.bandwidth.record(req_end, bytes);
+                    host_bytes += bytes;
+                    self.now = self.now.max(req_end);
+                }
+                BioKind::Read => {
+                    self.blk.bios += 1;
+                    self.blk.splits += plan.splits;
+                    self.blk.merges += plan.merges;
+                    self.blk.read_pages += plan.pages.len() as u64;
+                    let mut req_end = arrival;
+                    for io in &plan.pages {
+                        let lpn = Lpn(io.page % lpn_limit);
+                        let c = self.ftl.host_read(lpn, arrival)?;
+                        self.read_phases.add(&c);
+                        req_end = req_end.max(c.end);
+                    }
+                    let bytes = bio.total_bytes(blk_cfg.sector_bytes);
+                    self.read_latency.record(req_end - arrival);
+                    self.read_bandwidth.record(req_end, bytes);
+                    host_bytes_read += bytes;
+                    self.now = self.now.max(req_end);
+                }
+                BioKind::Flush => {
+                    let drain = self.now.max(arrival);
+                    let t = self.policy.write_barrier(&mut self.ftl, drain)?;
+                    self.now = self.now.max(t);
+                    self.blk.flushes += 1;
+                }
+            }
+            self.now = self.now.max(arrival);
+        }
+
+        if scenario.flush_at_end() {
+            let end = self.policy.flush(&mut self.ftl, self.now)?;
+            self.now = self.now.max(end);
+        }
+
+        if self.cfg.sim.verify {
+            self.ftl.audit()?;
+        }
+
+        Ok(RunSummary {
+            scheme: self.policy.name().to_string(),
+            workload: name.to_string(),
+            scenario: scenario.name().to_string(),
+            seed: self.cfg.sim.seed,
+            write_latency: self.write_latency.clone(),
+            read_latency: self.read_latency.clone(),
+            write_phases: self.write_phases,
+            read_phases: self.read_phases,
+            ledger: self.ftl.ledger,
+            bandwidth: self.bandwidth.clone(),
+            read_bandwidth: self.read_bandwidth.clone(),
+            blk: self.blk,
             sim_end: self.now,
             host_bytes_written: host_bytes,
             host_bytes_read,
@@ -179,7 +341,7 @@ impl Simulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{presets, Scheme, MS, SEC};
+    use crate::config::{presets, Scheme, MS, SEC, US};
     use crate::trace::{scenario, synth, profiles};
 
     fn small_cfg(scheme: Scheme) -> Config {
@@ -295,6 +457,84 @@ mod tests {
         assert_eq!(s.read_phases.ops, 8);
         assert!(s.write_phases.ops > 0);
         assert_eq!(s.write_phases.transfer_ns, 0, "lump model moves no bus data");
+    }
+
+    #[test]
+    fn blk_subpage_write_pays_rmw_pre_read() {
+        // full-page write maps the LPN, then a quarter-page overwrite
+        // must pre-read the mapped page before programming
+        let trace = crate::trace::Trace {
+            name: "subpage".into(),
+            ops: vec![
+                crate::trace::TraceOp { at: 0, kind: OpKind::Write, offset: 0, len: 4096 },
+                crate::trace::TraceOp { at: 2 * MS, kind: OpKind::Write, offset: 0, len: 1024 },
+            ],
+        };
+        let run = |rmw: bool| {
+            let mut cfg = small_cfg(Scheme::Ips);
+            cfg.blk.enabled = true;
+            cfg.blk.merge_window = 0;
+            cfg.blk.rmw = rmw;
+            Simulator::new(cfg).unwrap().run(&trace, scenario::Scenario::Bursty).unwrap()
+        };
+        let s = run(true);
+        assert_eq!(s.blk.bios, 2);
+        assert_eq!(s.blk.write_pages, 2);
+        assert_eq!(s.blk.rmw_reads, 1, "only the partial page needs the old data");
+        assert_eq!(s.ledger.host_reads, 1, "pre-read hits the ledger");
+        assert_eq!(s.ledger.host_pages, 2);
+        assert_eq!(s.host_bytes_written, 4096 + 1024, "host volume is sector-accurate");
+        // the program waited for the mapped pre-read: the run ends at
+        // least one SLC read later than the blind-overwrite run
+        let blind = run(false);
+        assert_eq!(blind.ledger.host_reads, 0);
+        assert!(
+            s.sim_end >= blind.sim_end + 20 * US,
+            "RMW serializes read before program: {} vs {}",
+            s.sim_end,
+            blind.sim_end
+        );
+    }
+
+    #[test]
+    fn blk_rmw_off_blind_overwrites() {
+        let mut cfg = small_cfg(Scheme::Ips);
+        cfg.blk.enabled = true;
+        cfg.blk.rmw = false;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = crate::trace::Trace {
+            name: "subpage".into(),
+            ops: vec![crate::trace::TraceOp { at: 0, kind: OpKind::Write, offset: 0, len: 1024 }],
+        };
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.rmw_reads, 0);
+        assert_eq!(s.ledger.host_reads, 0);
+    }
+
+    #[test]
+    fn blk_flush_every_counts_barriers() {
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.blk.enabled = true;
+        cfg.blk.flush_every = 2;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = scenario::sequential_fill("seq", 256 << 10, sim.logical_bytes());
+        let writes = trace.write_ops() as u64;
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.flushes, writes / 2, "a barrier every second write bio");
+        assert_eq!(s.blk.bios, writes);
+    }
+
+    #[test]
+    fn blk_fua_barriers_every_write() {
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.blk.enabled = true;
+        cfg.blk.fua = true;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = scenario::sequential_fill("seq", 128 << 10, sim.logical_bytes());
+        let writes = trace.write_ops() as u64;
+        let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.fua_writes, writes);
+        assert_eq!(s.blk.flushes, writes);
     }
 
     #[test]

@@ -8,9 +8,22 @@
 //!
 //! [`load_dir`] looks for `<name>.csv` (case-insensitive) under
 //! `$MSR_TRACE_DIR`; callers fall back to [`super::synth`] when absent.
+//!
+//! Two readers share [`parse_line`]:
+//! - [`parse`] collects the whole file, stable-sorts by timestamp, and
+//!   normalizes — O(trace) memory, exact.
+//! - [`MsrStream`] is a constant-memory iterator: a reusable line
+//!   buffer plus a bounded reorder window (a min-heap keyed by
+//!   `(timestamp, input order)`). Any request displaced fewer than
+//!   `window` lines from its sorted position comes out exactly where
+//!   [`parse`] would have put it; larger disorder is reported as an
+//!   error instead of silently emitting a time-travelling request.
 
 use super::{OpKind, Trace, TraceOp};
+use crate::blk::Bio;
 use crate::{Error, Result};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
 use std::io::BufRead;
 use std::path::Path;
 
@@ -75,6 +88,185 @@ pub fn parse<R: BufRead>(name: &str, reader: R) -> Result<Trace> {
     Ok(Trace { name: name.to_string(), ops })
 }
 
+/// Default [`MsrStream`] reorder-window size (requests buffered).
+pub const DEFAULT_REORDER_WINDOW: usize = 1024;
+
+/// A buffered request waiting in the reorder window, ordered by
+/// `(timestamp, input order)` — the same key `parse`'s stable sort uses.
+struct Pending {
+    at: u64,
+    seq: u64,
+    op: TraceOp,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Constant-memory MSR reader: yields [`TraceOp`]s in timestamp order
+/// (normalized so the first emitted request is at t=0) without ever
+/// holding more than `window` parsed requests plus one line of text.
+///
+/// Peak memory is `window × sizeof(TraceOp)` + the longest line —
+/// independent of trace length. [`MsrStream::peak_buffered`] reports
+/// the high-water mark so tests can prove the bound held.
+pub struct MsrStream<R: BufRead> {
+    reader: R,
+    line: String,
+    lineno: usize,
+    window: BinaryHeap<Reverse<Pending>>,
+    cap: usize,
+    seq: u64,
+    t0: Option<u64>,
+    last_at: Option<u64>,
+    peak_buffered: usize,
+    eof: bool,
+    done: bool,
+}
+
+impl<R: BufRead> MsrStream<R> {
+    /// Stream with the default reorder window.
+    pub fn new(reader: R) -> MsrStream<R> {
+        MsrStream::with_window(reader, DEFAULT_REORDER_WINDOW)
+    }
+
+    /// Stream with an explicit reorder window (clamped to ≥ 1).
+    pub fn with_window(reader: R, window: usize) -> MsrStream<R> {
+        let cap = window.max(1);
+        MsrStream {
+            reader,
+            line: String::new(),
+            lineno: 0,
+            window: BinaryHeap::with_capacity(cap + 1),
+            cap,
+            seq: 0,
+            t0: None,
+            last_at: None,
+            peak_buffered: 0,
+            eof: false,
+            done: false,
+        }
+    }
+
+    /// High-water mark of buffered requests (≤ the window size).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// Requests emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.seq - self.window.len() as u64
+    }
+
+    /// Adapt the stream into sector-granular [`Bio`]s for
+    /// [`crate::sim::Simulator::run_bios`].
+    pub fn bios(self, sector_bytes: u32) -> impl Iterator<Item = Result<Bio>> {
+        self.map(move |r| r.map(|op| Bio::from_op(&op, sector_bytes)))
+    }
+}
+
+impl<R: BufRead> Iterator for MsrStream<R> {
+    type Item = Result<TraceOp>;
+
+    fn next(&mut self) -> Option<Result<TraceOp>> {
+        if self.done {
+            return None;
+        }
+        // keep the window full: any request displaced fewer than `cap`
+        // lines from its sorted position gets ordered correctly
+        while !self.eof && self.window.len() < self.cap {
+            self.line.clear();
+            match self.reader.read_line(&mut self.line) {
+                Ok(0) => self.eof = true,
+                Ok(_) => {
+                    self.lineno += 1;
+                    match parse_line(&self.line, self.lineno) {
+                        Ok(Some(op)) => {
+                            let p = Pending { at: op.at, seq: self.seq, op };
+                            self.seq += 1;
+                            self.window.push(Reverse(p));
+                            self.peak_buffered = self.peak_buffered.max(self.window.len());
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            self.done = true;
+                            return Some(Err(e));
+                        }
+                    }
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e.into()));
+                }
+            }
+        }
+        match self.window.pop() {
+            Some(Reverse(p)) => {
+                if let Some(last) = self.last_at {
+                    if p.at < last {
+                        self.done = true;
+                        return Some(Err(Error::Trace(format!(
+                            "trace disorder exceeds the {}-request reorder window \
+                             (t={} after t={}); raise the window",
+                            self.cap, p.at, last
+                        ))));
+                    }
+                }
+                self.last_at = Some(p.at);
+                let t0 = *self.t0.get_or_insert(p.at);
+                let mut op = p.op;
+                op.at = p.at - t0;
+                Some(Ok(op))
+            }
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+/// Open `path` as a constant-memory stream.
+pub fn stream_path(
+    path: &Path,
+    window: usize,
+) -> Result<MsrStream<std::io::BufReader<std::fs::File>>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::Trace(format!("open {}: {e}", path.display())))?;
+    Ok(MsrStream::with_window(std::io::BufReader::new(f), window))
+}
+
+/// Stream `<dir>/<name>.csv` (tries lower/upper case).
+pub fn stream_dir(
+    dir: &Path,
+    name: &str,
+    window: usize,
+) -> Result<MsrStream<std::io::BufReader<std::fs::File>>> {
+    for candidate in [
+        dir.join(format!("{}.csv", name.to_ascii_lowercase())),
+        dir.join(format!("{name}.csv")),
+        dir.join(format!("{}.csv", name.to_ascii_uppercase())),
+    ] {
+        if candidate.exists() {
+            return stream_path(&candidate, window);
+        }
+    }
+    Err(Error::Trace(format!("no CSV for {name} under {}", dir.display())))
+}
+
 /// Load `<dir>/<name>.csv` (tries lower/upper case).
 pub fn load_dir(dir: &Path, name: &str) -> Result<Trace> {
     for candidate in [
@@ -135,5 +327,143 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(load_dir(Path::new("/nonexistent-xyz"), "hm_0").is_err());
+        assert!(stream_dir(Path::new("/nonexistent-xyz"), "hm_0", 8).is_err());
+    }
+
+    #[test]
+    fn stream_matches_parse_on_sample() {
+        let oracle = parse("hm_0", SAMPLE.as_bytes()).unwrap();
+        let streamed: Vec<TraceOp> = MsrStream::new(SAMPLE.as_bytes())
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(streamed, oracle.ops, "order and every field agree");
+    }
+
+    #[test]
+    fn stream_reorders_within_window_like_parse() {
+        // lines deliberately out of timestamp order (displacement 2)
+        let src = "\
+300,hm,0,Write,8192,4096,1
+100,hm,0,Read,0,4096,1
+200,hm,0,Write,4096,4096,1
+250,hm,0,Write,4096,4096,1
+400,hm,0,Read,8192,4096,1
+";
+        let oracle = parse("x", src.as_bytes()).unwrap();
+        let streamed: Vec<TraceOp> = MsrStream::with_window(src.as_bytes(), 4)
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(streamed, oracle.ops);
+        assert_eq!(streamed[0].at, 0, "t0 from the earliest request, not the first line");
+    }
+
+    #[test]
+    fn stream_ties_keep_input_order_like_stable_sort() {
+        let src = "\
+100,hm,0,Write,0,4096,1
+100,hm,0,Read,4096,4096,1
+100,hm,0,Write,8192,4096,1
+";
+        let oracle = parse("x", src.as_bytes()).unwrap();
+        let streamed: Vec<TraceOp> = MsrStream::with_window(src.as_bytes(), 2)
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(streamed, oracle.ops, "equal timestamps stay in input order");
+    }
+
+    #[test]
+    fn stream_overflowing_disorder_errors_instead_of_time_travel() {
+        // ts=50 is 4 lines late; a 2-wide window has already emitted 100
+        let src = "\
+100,hm,0,Write,0,4096,1
+200,hm,0,Write,4096,4096,1
+300,hm,0,Write,8192,4096,1
+400,hm,0,Write,12288,4096,1
+50,hm,0,Write,16384,4096,1
+";
+        let r: Result<Vec<TraceOp>> = MsrStream::with_window(src.as_bytes(), 2).collect();
+        assert!(r.is_err(), "regression past the window is an error");
+    }
+
+    #[test]
+    fn stream_surfaces_parse_errors() {
+        let src = "1,h,0,Frobnicate,0,4096,1";
+        let r: Result<Vec<TraceOp>> = MsrStream::new(src.as_bytes()).collect();
+        assert!(r.is_err());
+    }
+
+    /// Generates MSR CSV lines on the fly — no backing buffer, so the
+    /// stream's memory bound is provably independent of trace length.
+    struct SynthCsv {
+        remaining: u64,
+        ts: u64,
+        buf: Vec<u8>,
+        pos: usize,
+    }
+
+    impl SynthCsv {
+        fn new(lines: u64) -> SynthCsv {
+            SynthCsv { remaining: lines, ts: 128166372003061629, buf: Vec::new(), pos: 0 }
+        }
+    }
+
+    impl std::io::Read for SynthCsv {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos == self.buf.len() {
+                if self.remaining == 0 {
+                    return Ok(0);
+                }
+                self.remaining -= 1;
+                // mild disorder: every other line jumps the queue by
+                // more than the inter-arrival step
+                let jitter = if self.remaining % 2 == 0 { 0 } else { 15 };
+                let off = (self.remaining % 997) * 4096;
+                self.buf.clear();
+                self.buf.extend_from_slice(
+                    format!("{},hm,0,Write,{off},4096,1\n", self.ts - jitter).as_bytes(),
+                );
+                self.pos = 0;
+                self.ts += 10;
+            }
+            let n = (self.buf.len() - self.pos).min(out.len());
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn stream_memory_is_independent_of_trace_length() {
+        let count = |lines: u64, window: usize| {
+            let mut s =
+                MsrStream::with_window(std::io::BufReader::new(SynthCsv::new(lines)), window);
+            let mut n = 0u64;
+            let mut last = 0;
+            for op in &mut s {
+                let op = op.unwrap();
+                assert!(op.at >= last, "monotone emission");
+                last = op.at;
+                n += 1;
+            }
+            (n, s.peak_buffered())
+        };
+        let (n_small, peak_small) = count(1_000, 64);
+        let (n_big, peak_big) = count(200_000, 64);
+        assert_eq!(n_small, 1_000);
+        assert_eq!(n_big, 200_000);
+        assert!(peak_small <= 64 && peak_big <= 64);
+        assert_eq!(peak_small, peak_big, "buffer high-water mark does not grow with length");
+    }
+
+    #[test]
+    fn stream_bios_adapter_yields_sector_spans() {
+        let bios: Vec<_> = MsrStream::new(SAMPLE.as_bytes())
+            .bios(512)
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(bios.len(), 3);
+        assert_eq!(bios[0].total_bytes(512), 32768);
+        assert_eq!(bios[1].segments[0].sector, 2822144 / 512);
+        assert_eq!(bios[1].total_sectors(), 8);
     }
 }

@@ -10,6 +10,7 @@
 
 use super::profiles::Profile;
 use super::{OpKind, Trace, TraceOp};
+use crate::blk::{Bio, Segment};
 use crate::config::{Nanos, MS, US};
 use crate::util::rng::{Rng, Zipf};
 
@@ -95,6 +96,124 @@ pub fn generate_scaled(
     trace
 }
 
+/// Zipf-skewed sector-granular bios for the block front end: hot
+/// sectors are rewritten at sub-page sizes (512 B – 64 KiB), so the
+/// stream exercises the read-modify-write path. ~70% writes, a few
+/// FUA. Deterministic in `(name, seed)` via the same per-name hashing
+/// as [`generate`].
+pub fn bio_zipf(name: &str, seed: u64, footprint: u64, sector_bytes: u32, count: usize) -> Vec<Bio> {
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    let sectors = (footprint / sector_bytes as u64).max(16);
+    let zipf = Zipf::new(sectors, 0.99);
+    // scatter ranks so the hot set isn't one contiguous run
+    let scatter = |rank: u64| rank.wrapping_mul(0x9E3779B97F4A7C15) % sectors;
+    let sizes: [u32; 6] = [1, 2, 8, 16, 64, 128]; // sectors
+    let weights = [0.25, 0.20, 0.30, 0.10, 0.10, 0.05];
+    let mut at: Nanos = 0;
+    (0..count)
+        .map(|_| {
+            let sector = scatter(zipf.sample(&mut rng));
+            let n = sizes[rng.weighted(&weights)]
+                .min((sectors - sector).min(u32::MAX as u64) as u32)
+                .max(1);
+            let seg = Segment { sector, n_sectors: n };
+            let bio = if rng.chance(0.7) {
+                Bio::write(at, vec![seg], rng.chance(0.05))
+            } else {
+                Bio::read(at, vec![seg])
+            };
+            at += (rng.exp(50.0) * US as f64) as Nanos;
+            bio
+        })
+        .collect()
+}
+
+/// Object-store bios: large PUTs as one scatter-gather write over
+/// several 64 KiB extents allocated from a log head (occasionally
+/// recycling an old extent), small 4 KiB GETs at object boundaries,
+/// and explicit flush bios at commit points.
+pub fn bio_object_store(
+    name: &str,
+    seed: u64,
+    footprint: u64,
+    sector_bytes: u32,
+    count: usize,
+) -> Vec<Bio> {
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    let sb = sector_bytes as u64;
+    let sectors = (footprint / sb).max((2 << 20) / sb);
+    let extent = ((64 << 10) / sb).max(1) as u32; // 64 KiB in sectors
+    let extents = (sectors / extent as u64).max(1);
+    let mut at: Nanos = 0;
+    let mut head: u64 = 0;
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        if rng.chance(0.3) {
+            // PUT: 2–8 extents in one scatter-gather write
+            let n_seg = 2 + rng.below(7) as usize;
+            let mut segs = Vec::with_capacity(n_seg);
+            for _ in 0..n_seg {
+                let sector = if rng.chance(0.8) {
+                    let s = head * extent as u64;
+                    head = (head + 1) % extents;
+                    s
+                } else {
+                    rng.below(extents) * extent as u64
+                };
+                segs.push(Segment { sector, n_sectors: extent });
+            }
+            out.push(Bio::write(at, segs, false));
+            // commit point: metadata must be durable before the ack
+            if rng.chance(0.25) && out.len() < count {
+                out.push(Bio::flush(at + 1));
+            }
+        } else {
+            // GET: a small read at an extent boundary
+            let sector = rng.below(extents) * extent as u64;
+            let n = ((4 << 10) / sb).max(1) as u32;
+            out.push(Bio::read(at, vec![Segment { sector, n_sectors: n }]));
+        }
+        at += (rng.exp(200.0) * US as f64) as Nanos;
+    }
+    out
+}
+
+/// Burst-storm bios: tight volleys of page-multiple writes (a tenth of
+/// them FUA) separated by long idle lulls — the §III burst arrival
+/// pattern expressed at bio granularity.
+pub fn bio_burst_storm(
+    name: &str,
+    seed: u64,
+    footprint: u64,
+    sector_bytes: u32,
+    count: usize,
+) -> Vec<Bio> {
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    let sb = sector_bytes as u64;
+    let sectors = (footprint / sb).max((1 << 20) / sb);
+    let page = ((4 << 10) / sb).max(1) as u32; // 4 KiB in sectors
+    let pages = (sectors / page as u64).max(1);
+    let mut at: Nanos = 0;
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let volley = (rng.exp(32.0).ceil() as u64).max(1);
+        for _ in 0..volley {
+            if out.len() >= count {
+                break;
+            }
+            let sector = rng.below(pages) * page as u64;
+            let n = (page * (1 + rng.below(16) as u32))
+                .min((sectors - sector).min(u32::MAX as u64) as u32)
+                .max(1);
+            out.push(Bio::write(at, vec![Segment { sector, n_sectors: n }], rng.chance(0.1)));
+            at += (rng.exp(5.0) * US as f64) as Nanos;
+        }
+        // the lull before the next storm
+        at += (rng.exp(50.0) * MS as f64) as Nanos;
+    }
+    out
+}
+
 fn fxhash(s: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in s.bytes() {
@@ -171,6 +290,77 @@ mod tests {
             "hot set causes repeats: {} distinct of {total}",
             pages.len()
         );
+    }
+
+    #[test]
+    fn bio_generators_are_deterministic_per_seed() {
+        let fp = 256 << 20;
+        for gen in [bio_zipf, bio_object_store, bio_burst_storm] {
+            let a = gen("t", 7, fp, 512, 500);
+            let b = gen("t", 7, fp, 512, 500);
+            assert_eq!(a, b);
+            let c = gen("t", 8, fp, 512, 500);
+            assert_ne!(a, c, "seed matters");
+            let d = gen("u", 7, fp, 512, 500);
+            assert_ne!(a, d, "name matters");
+            assert_eq!(a.len(), 500);
+            // arrivals are non-decreasing (the engines assume it)
+            for w in a.windows(2) {
+                assert!(w[1].at >= w[0].at);
+            }
+        }
+    }
+
+    #[test]
+    fn bio_zipf_produces_subpage_writes_and_skew() {
+        use crate::blk::BioKind;
+        let bios = bio_zipf("z", 3, 256 << 20, 512, 2000);
+        let subpage = bios
+            .iter()
+            .filter(|b| b.kind == BioKind::Write && b.total_bytes(512) % 4096 != 0)
+            .count();
+        assert!(subpage > 100, "sub-page writes drive RMW: {subpage}");
+        // skew: the most popular sector recurs
+        use std::collections::HashMap;
+        let mut hist: HashMap<u64, u32> = HashMap::new();
+        for b in &bios {
+            *hist.entry(b.segments[0].sector).or_default() += 1;
+        }
+        assert!(hist.values().copied().max().unwrap() > 20, "hot sector exists");
+    }
+
+    #[test]
+    fn bio_object_store_mixes_sg_puts_gets_and_flushes() {
+        use crate::blk::BioKind;
+        let bios = bio_object_store("os", 5, 1 << 30, 512, 1000);
+        let sg_puts =
+            bios.iter().filter(|b| b.kind == BioKind::Write && b.segments.len() > 1).count();
+        let gets = bios.iter().filter(|b| b.kind == BioKind::Read).count();
+        let flushes = bios.iter().filter(|b| b.kind == BioKind::Flush).count();
+        assert!(sg_puts > 50, "scatter-gather PUTs: {sg_puts}");
+        assert!(gets > 200, "GETs: {gets}");
+        assert!(flushes > 10, "commit flushes: {flushes}");
+        // PUT extents are 64 KiB each
+        let put = bios.iter().find(|b| b.segments.len() > 1).unwrap();
+        assert!(put.segments.iter().all(|s| s.n_sectors as u64 * 512 == 64 << 10));
+    }
+
+    #[test]
+    fn bio_burst_storm_has_volleys_fua_and_lulls() {
+        use crate::blk::BioKind;
+        let bios = bio_burst_storm("bs", 9, 256 << 20, 512, 2000);
+        assert!(bios.iter().all(|b| b.kind == BioKind::Write));
+        let fua = bios.iter().filter(|b| b.fua).count();
+        assert!(fua > 50, "FUA fraction present: {fua}");
+        let mut lulls = 0;
+        for w in bios.windows(2) {
+            if w[1].at - w[0].at > 10 * MS {
+                lulls += 1;
+            }
+        }
+        assert!(lulls > 5, "idle lulls between storms: {lulls}");
+        // writes are page-multiple: no RMW in this stream
+        assert!(bios.iter().all(|b| b.total_bytes(512) % 4096 == 0));
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! End-to-end guarantees for the block front end.
+//!
+//! 1. **Differential oracle**: with page-aligned requests and merging
+//!    disabled, routing a trace through the bio layer must produce
+//!    **byte identical** run summaries to the page front end — every
+//!    scheme, bursty and daily. The blk path is a refinement, not a
+//!    semantic change, in that mode.
+//! 2. **Barrier cost model**: schemes whose write pointer needs no
+//!    forcing (`write_barrier` is a no-op: tlc-only, ips, ips/agc) run
+//!    flush-heavy workloads byte-identically to flush-free ones on the
+//!    serial engine; the baseline pays the barrier in stranded SLC
+//!    word lines and an earlier cache cliff.
+//! 3. **Multi-tenant**: a flush-heavy workload widens the
+//!    baseline-vs-IPS victim p99 gap — barriers drain the device
+//!    window, and the baseline's window is full of stranded-cache TLC
+//!    programs while IPS keeps absorbing at cache speed.
+//! 4. **RMW closure**: a sub-page zipfian bio stream keeps the FTL
+//!    read ledger exactly equal to planned read pages + RMW pre-reads.
+
+use ips::config::{presets, Config, MixKind, SchedKind, Scheme, MS, SEC};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::metrics::RunSummary;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::trace::synth;
+
+fn single_cfg(scheme: Scheme, blk: bool, flush_every: u32) -> Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.sim.verify = true;
+    c.sim.latency_samples = 4096;
+    c.blk.enabled = blk;
+    c.blk.merge_window = 0;
+    c.blk.flush_every = flush_every;
+    c
+}
+
+fn run_single(scheme: Scheme, scen: Scenario, blk: bool, flush_every: u32) -> RunSummary {
+    let mut sim = Simulator::new(single_cfg(scheme, blk, flush_every)).unwrap();
+    let trace = match scen {
+        // 4x the cache: over the cliff, GC-heavy
+        Scenario::Bursty => scenario::sequential_fill("seq", 4 << 20, sim.logical_bytes()),
+        // idle gaps drive reclamation / AGC / coop background pipelines
+        Scenario::Daily => scenario::daily_streams(3, 1 << 20, 60 * SEC, sim.logical_bytes()),
+    };
+    sim.run(&trace, scen).unwrap()
+}
+
+fn assert_summaries_match(a: &RunSummary, b: &RunSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.write_latency.count(), b.write_latency.count(), "{label}: write count");
+    assert_eq!(
+        a.write_latency.mean().to_bits(),
+        b.write_latency.mean().to_bits(),
+        "{label}: mean write latency"
+    );
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            a.write_latency.percentile(q),
+            b.write_latency.percentile(q),
+            "{label}: p{q} write latency"
+        );
+    }
+    assert_eq!(a.write_latency.raw_us(), b.write_latency.raw_us(), "{label}: raw samples");
+    assert_eq!(a.read_latency.count(), b.read_latency.count(), "{label}: read count");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA");
+}
+
+#[test]
+fn five_schemes_bursty_identical_blk_vs_page() {
+    for scheme in Scheme::all() {
+        let blk = run_single(scheme, Scenario::Bursty, true, 0);
+        let page = run_single(scheme, Scenario::Bursty, false, 0);
+        assert!(blk.blk.bios > 0, "{scheme:?}: bio path actually ran");
+        assert!(page.blk.is_empty(), "{scheme:?}: page path stays off the bio counters");
+        assert_summaries_match(&blk, &page, &format!("{scheme:?}/bursty"));
+    }
+}
+
+#[test]
+fn five_schemes_daily_identical_blk_vs_page() {
+    for scheme in Scheme::all() {
+        let blk = run_single(scheme, Scenario::Daily, true, 0);
+        let page = run_single(scheme, Scenario::Daily, false, 0);
+        assert!(blk.blk.bios > 0, "{scheme:?}: bio path actually ran");
+        assert_summaries_match(&blk, &page, &format!("{scheme:?}/daily"));
+    }
+}
+
+#[test]
+fn periodic_flush_is_free_where_the_write_pointer_needs_no_forcing() {
+    // tlc-only, ips, and ips/agc inherit the no-op write_barrier: their
+    // write pointer survives a power-fail boundary as-is (reprogram
+    // completes word lines in place), so on the serial engine a barrier
+    // after every 4th write must change nothing but the flush counter
+    for scheme in [Scheme::TlcOnly, Scheme::Ips, Scheme::IpsAgc] {
+        let flushed = run_single(scheme, Scenario::Bursty, true, 4);
+        let plain = run_single(scheme, Scenario::Bursty, true, 0);
+        assert!(flushed.blk.flushes > 0, "{scheme:?}: barriers actually fired");
+        assert_eq!(plain.blk.flushes, 0, "{scheme:?}: control run is barrier-free");
+        assert_summaries_match(&flushed, &plain, &format!("{scheme:?}/flush-every-4"));
+    }
+}
+
+#[test]
+fn baseline_flush_heavy_strands_slc_and_hits_the_cliff_early() {
+    // the baseline's write_barrier retires partially written active
+    // blocks: their unwritten word lines are stranded, so a barrier
+    // every 2 bios burns cache capacity the plain run still has —
+    // fewer host pages absorbed at SLC speed, more on the TLC cliff
+    let flushed = run_single(Scheme::Baseline, Scenario::Bursty, true, 2);
+    let plain = run_single(Scheme::Baseline, Scenario::Bursty, true, 0);
+    assert!(flushed.blk.flushes > 0);
+    assert!(
+        flushed.ledger.slc_cache_writes < plain.ledger.slc_cache_writes,
+        "stranding must waste SLC capacity: {} absorbed with barriers vs {} without",
+        flushed.ledger.slc_cache_writes,
+        plain.ledger.slc_cache_writes
+    );
+    assert!(
+        flushed.ledger.tlc_direct_writes > plain.ledger.tlc_direct_writes,
+        "the pages SLC lost land on the TLC cliff: {} vs {}",
+        flushed.ledger.tlc_direct_writes,
+        plain.ledger.tlc_direct_writes
+    );
+    // same host pages either way; the flush-heavy run just pays more
+    // for them where the host can see it (the end-of-run flush is NOT
+    // in write_latency, and the plain run's extra migrations happen
+    // there — so only host-visible latency is a sound comparison)
+    assert_eq!(flushed.ledger.host_pages, plain.ledger.host_pages);
+    assert!(
+        flushed.write_latency.mean() > plain.write_latency.mean(),
+        "TLC-speed programs must show up in mean write latency: {} vs {}",
+        flushed.write_latency.mean(),
+        plain.write_latency.mean()
+    );
+}
+
+// --- multi-tenant ----------------------------------------------------
+
+fn mt_run(scheme: Scheme, flush_every: u32) -> MultiTenantSummary {
+    let mut cfg = presets::small();
+    cfg.cache.scheme = scheme;
+    // sized so the whole mix fits in cache WITHOUT barriers: the plain
+    // runs stay at SLC speed under both schemes, and only the
+    // baseline's stranding barrier can push anyone over the cliff
+    cfg.cache.slc_cache_bytes = 2 << 20;
+    cfg.host.aggressor_cache_mult = 0.25;
+    cfg.host.victim_req_bytes = 4096;
+    // no idle-time reclamation: its erases would dominate victim tails
+    // in all four runs and drown the effect under test
+    cfg.cache.idle_threshold = 10 * SEC;
+    cfg.host.tenants = 4;
+    cfg.host.scheduler = SchedKind::RoundRobin;
+    cfg.host.mix = MixKind::AggressorVictims;
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000;
+    cfg.blk.enabled = true;
+    cfg.blk.merge_window = 0;
+    cfg.blk.flush_every = flush_every;
+    MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+}
+
+#[test]
+fn flush_heavy_widens_the_baseline_vs_ips_victim_p99_gap() {
+    // The workload fits in cache, so without barriers both schemes
+    // serve victims at SLC speed and the p99 gap is noise. With a
+    // barrier every 2nd write, the baseline's write_barrier strands
+    // its active blocks — the small pool is gone within a few bios and
+    // every later victim write pays the 3 ms TLC cliff — while the
+    // IPS barrier is a no-op and the drain only waits on SLC-speed
+    // in-flight writes. The victim-p99 gap must widen.
+    let base_flush = mt_run(Scheme::Baseline, 2);
+    let ips_flush = mt_run(Scheme::Ips, 2);
+    let base_plain = mt_run(Scheme::Baseline, 0);
+    let ips_plain = mt_run(Scheme::Ips, 0);
+    for s in [&base_flush, &ips_flush] {
+        assert_eq!(s.front_end, "blk");
+        assert!(s.blk.flushes > 0, "{}: barriers actually fired", s.scheme);
+    }
+    let gap_flush = base_flush.max_victim_p99() as i128 - ips_flush.max_victim_p99() as i128;
+    let gap_plain = base_plain.max_victim_p99() as i128 - ips_plain.max_victim_p99() as i128;
+    assert!(
+        gap_flush > gap_plain,
+        "victim p99 gap must widen under flush pressure: {gap_flush} ns with barriers \
+         vs {gap_plain} ns without"
+    );
+}
+
+// --- sub-page streams -------------------------------------------------
+
+#[test]
+fn zipfian_subpage_stream_closes_the_rmw_read_ledger() {
+    // every FTL read in a bio run is either a planned read page or an
+    // RMW pre-read — the ledger must close exactly, and a skewed
+    // sub-page stream must actually exercise the RMW path
+    let mut cfg = single_cfg(Scheme::Ips, true, 0);
+    cfg.blk.merge_window = 8;
+    let mut sim = Simulator::new(cfg).unwrap();
+    let bios = synth::bio_zipf("zipf", 7, sim.logical_bytes(), 512, 4000);
+    let s = sim.run_bios("zipf", bios.into_iter().map(Ok), Scenario::Bursty).unwrap();
+    assert!(s.blk.rmw_reads > 0, "zipfian sizes include sub-page writes");
+    assert!(s.blk.read_pages > 0, "stream mixes reads in");
+    assert_eq!(
+        s.ledger.host_reads,
+        s.blk.read_pages + s.blk.rmw_reads,
+        "every FTL read is a planned read page or an RMW pre-read"
+    );
+    assert_eq!(s.ledger.host_pages, s.blk.write_pages, "every host page came off a plan");
+}

@@ -1,0 +1,207 @@
+//! Property suite for the block front end (`ips::blk`).
+//!
+//! Two invariants, each checked against a first-principles oracle that
+//! never calls into the planner's own bookkeeping:
+//!
+//! 1. **Sector conservation**: for any scatter-gather payload and any
+//!    merge window, the union of the plan's per-page coverage bitmaps
+//!    is exactly the input sector set — no sector lost, none claimed
+//!    twice, no coverage bit outside the page.
+//! 2. **RMW conservation through the FTL**: driving the planned bios
+//!    through a real [`ips::sim::Simulator`], the FTL observes exactly
+//!    one host page per planned piece and exactly one pre-read per
+//!    partially-covered page (counted straight off the raw sector set).
+//!
+//! Failures shrink to a minimal segment list via the hand-rolled
+//! `ips::util::prop` runner (seed from `IPS_PROP_SEED`).
+
+use ips::blk::{self, Bio, Segment};
+use ips::config::{presets, BlkConfig, Scheme};
+use ips::sim::Simulator;
+use ips::trace::scenario::Scenario;
+use ips::util::prop::{self, tuple2, u64_up_to, vec_of, Gen};
+use ips::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+const SECTOR: u32 = 512;
+const PAGE: u64 = 4096;
+const SPP: u64 = PAGE / SECTOR as u64; // sectors per page
+
+/// Disjoint, ascending `(sector, n_sectors)` runs — one scatter-gather
+/// payload. Lengths up to 96 sectors so single segments span many
+/// pages; gaps up to 48 so pieces sometimes revisit a page boundary.
+struct SegListGen;
+
+impl Gen for SegListGen {
+    type Value = Vec<(u64, u32)>;
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        let n = 1 + rng.below(6) as usize;
+        let mut segs = Vec::with_capacity(n);
+        let mut cursor = rng.below(64);
+        for _ in 0..n {
+            let start = cursor + rng.below(48);
+            let len = 1 + rng.below(96) as u32;
+            segs.push((start, len));
+            cursor = start + len as u64;
+        }
+        segs
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            for i in 0..v.len() {
+                let mut c = v.clone();
+                c.remove(i);
+                out.push(c);
+            }
+        }
+        for i in 0..v.len() {
+            if v[i].1 > 1 {
+                let mut c = v.clone();
+                c[i].1 /= 2;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+fn segments(segs: &[(u64, u32)]) -> Vec<Segment> {
+    segs.iter().map(|&(sector, n_sectors)| Segment { sector, n_sectors }).collect()
+}
+
+fn sector_set(segs: &[(u64, u32)]) -> BTreeSet<u64> {
+    let mut set = BTreeSet::new();
+    for &(start, n) in segs {
+        for s in start..start + n as u64 {
+            set.insert(s);
+        }
+    }
+    set
+}
+
+fn blk_cfg(merge_window: u32) -> BlkConfig {
+    BlkConfig {
+        enabled: true,
+        sector_bytes: SECTOR,
+        merge_window,
+        rmw: true,
+        flush_every: 0,
+        fua: false,
+    }
+}
+
+#[test]
+fn split_merge_preserves_the_exact_sector_set() {
+    prop::check(
+        "split/merge sector conservation",
+        400,
+        tuple2(SegListGen, u64_up_to(16)),
+        |(segs, window)| {
+            let cfg = blk_cfg(*window as u32);
+            let bio = Bio::write(0, segments(segs), false);
+            let plan = blk::plan(&bio, &cfg, PAGE);
+            let want = sector_set(segs);
+            let full = blk::full_mask(SPP as u32);
+            let mut got = BTreeSet::new();
+            let mut claimed = 0u64;
+            for io in &plan.pages {
+                if io.coverage == 0 {
+                    return Err(format!("page {} planned with empty coverage", io.page));
+                }
+                if io.coverage & !full != 0 {
+                    return Err(format!(
+                        "page {} coverage {:#x} spills past the page",
+                        io.page, io.coverage
+                    ));
+                }
+                claimed += io.coverage.count_ones() as u64;
+                for bit in 0..SPP {
+                    if io.coverage & (1 << bit) != 0 {
+                        got.insert(io.page * SPP + bit);
+                    }
+                }
+            }
+            if got != want {
+                return Err(format!(
+                    "sector set changed: planned {} sectors, input had {}",
+                    got.len(),
+                    want.len()
+                ));
+            }
+            if claimed != want.len() as u64 {
+                return Err(format!(
+                    "sectors claimed twice: {claimed} coverage bits for {} sectors",
+                    want.len()
+                ));
+            }
+            // a read of the same payload plans the same pages but must
+            // never schedule an RMW pre-read
+            let rplan = blk::plan(&Bio::read(0, segments(segs)), &cfg, PAGE);
+            if rplan.pages.iter().any(|p| p.pre_read) {
+                return Err("read planned a pre-read".into());
+            }
+            if rplan.rmw_reads != 0 {
+                return Err("read counted RMW".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rmw_conservation_holds_through_the_ftl() {
+    prop::check(
+        "host pages + RMW pre-reads match the raw sector sets",
+        60,
+        vec_of(SegListGen, 1, 5),
+        |payloads: &Vec<Vec<(u64, u32)>>| {
+            // oracle, straight off the raw sectors: one host page per
+            // distinct page per bio, one pre-read per partial page
+            let mut want_pages = 0u64;
+            let mut want_rmw = 0u64;
+            for segs in payloads {
+                let mut per_page: BTreeMap<u64, u64> = BTreeMap::new();
+                for s in sector_set(segs) {
+                    *per_page.entry(s / SPP).or_default() += 1;
+                }
+                want_pages += per_page.len() as u64;
+                want_rmw += per_page.values().filter(|&&n| n < SPP).count() as u64;
+            }
+            let mut cfg = presets::small();
+            cfg.cache.scheme = Scheme::Ips;
+            cfg.blk = blk_cfg(64); // window wide enough to coalesce every revisit
+            let mut sim = Simulator::new(cfg).map_err(|e| e.to_string())?;
+            let bios = payloads
+                .iter()
+                .enumerate()
+                .map(|(i, segs)| Ok(Bio::write(i as u64 * 1_000_000, segments(segs), false)));
+            let s = sim.run_bios("prop", bios, Scenario::Bursty).map_err(|e| e.to_string())?;
+            if s.ledger.host_pages != want_pages {
+                return Err(format!(
+                    "FTL saw {} host pages, sectors say {want_pages}",
+                    s.ledger.host_pages
+                ));
+            }
+            if s.blk.write_pages != want_pages {
+                return Err(format!(
+                    "front end counted {} write pages, sectors say {want_pages}",
+                    s.blk.write_pages
+                ));
+            }
+            if s.ledger.host_reads != want_rmw {
+                return Err(format!(
+                    "FTL saw {} pre-reads, partial pages say {want_rmw}",
+                    s.ledger.host_reads
+                ));
+            }
+            if s.blk.rmw_reads != want_rmw {
+                return Err(format!(
+                    "front end counted {} RMW reads, partial pages say {want_rmw}",
+                    s.blk.rmw_reads
+                ));
+            }
+            Ok(())
+        },
+    );
+}
