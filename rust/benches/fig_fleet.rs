@@ -1,0 +1,69 @@
+//! Bench: the device-population fleet axis — N heterogeneous SSDs
+//! (capacity / OP / pre-aged wear) per scheme, folded into fleet-wide
+//! percentiles by pure histogram merges. Times the sharded sweep and
+//! the serial fold separately, so a regression in either the per-device
+//! runs or the merge path shows up on its own line.
+//!
+//! Under `IPS_BENCH_SMOKE=1` the deterministic fleet rollup
+//! (`population_json`: counts, quantiles, WA — no wall clock) gates
+//! against a golden snapshot: a change to histogram binning, merge
+//! semantics, profile derivation, or seeding fails CI instead of
+//! silently bending the fleet figures.
+use ips::config::{presets, MixKind, Scheme};
+use ips::coordinator::fleet::{
+    fold_population, population_json, run_population, PopulationSpec,
+};
+use ips::trace::scenario::Scenario;
+use ips::util::bench::{black_box, Harness};
+use ips::util::golden;
+
+fn spec(devices: u32, threads: usize) -> PopulationSpec {
+    let mut base = presets::small();
+    base.cache.slc_cache_bytes = 1 << 20;
+    base.host.tenants = 3;
+    base.host.aggressor_cache_mult = 1.5;
+    PopulationSpec {
+        base,
+        devices,
+        schemes: vec![Scheme::Baseline, Scheme::Ips],
+        mixes: vec![MixKind::AggressorVictims],
+        scenario: Scenario::Bursty,
+        seed: 42,
+        threads,
+    }
+}
+
+fn main() {
+    let mut h = Harness::new();
+
+    // the full sweep: profile derivation + per-device runs + fold
+    let mut json = None;
+    {
+        let s = spec(4, 2);
+        let jobs = s.devices as u64 * s.schemes.len() as u64;
+        h.bench("fleet/population-4dev", Some(jobs), || {
+            let runs = run_population(&s).unwrap();
+            let cells = fold_population(&runs);
+            black_box(cells.len());
+            json = Some(population_json(&cells));
+        });
+    }
+
+    // the fold alone: pure histogram / ledger / phase merges over a
+    // fixed set of device runs (the mergeability story, isolated)
+    {
+        let runs = run_population(&spec(4, 2)).unwrap();
+        h.bench("fleet/fold-only", Some(runs.len() as u64), || {
+            let cells = fold_population(&runs);
+            black_box(cells[0].write_latency.count());
+        });
+    }
+
+    if std::env::var("IPS_BENCH_SMOKE").as_deref() == Ok("1") {
+        if let Some(json) = json {
+            golden::check_and_report("fig_fleet", &json);
+        }
+    }
+
+    h.finish();
+}

@@ -606,6 +606,21 @@ pub struct SimConfig {
     /// `bus_ns_per_page = 0` and one plane per die per channel (the
     /// differential oracle).
     pub interconnect: bool,
+    /// Latency-histogram resolution: sub-buckets per power-of-two band
+    /// in the log-linear collectors (power of two in 2..=256; worst-case
+    /// relative quantile error is `1 / hist_sub_buckets`).
+    pub hist_sub_buckets: u32,
+    /// Fraction of post-reservation physical pages exported as logical
+    /// capacity; `1 - logical_frac` is the over-provisioning held back
+    /// for GC headroom. The fleet's per-device OP axis.
+    pub logical_frac: f64,
+    /// Pre-aged wear: every block starts with a deterministic initial
+    /// erase count in `[0, pre_age_erases]` derived from
+    /// `(sim.seed, flat block index)`. 0 = pristine device. Perturbs
+    /// the min-erase wear-leveling allocator, so a worn device takes a
+    /// different allocation path than a fresh one — the fleet's wear
+    /// heterogeneity axis.
+    pub pre_age_erases: u32,
 }
 
 impl Default for SimConfig {
@@ -618,6 +633,9 @@ impl Default for SimConfig {
             max_idle_steps: 0,
             victim_index: true,
             interconnect: false,
+            hist_sub_buckets: 64,
+            logical_frac: 0.80,
+            pre_age_erases: 0,
         }
     }
 }
@@ -727,6 +745,18 @@ impl Config {
         }
         if self.geometry.layers_per_block() < 2 * self.cache.group_layers {
             return Err(Error::config("need at least two layer groups per block"));
+        }
+        if !self.sim.hist_sub_buckets.is_power_of_two()
+            || !(2..=256).contains(&self.sim.hist_sub_buckets)
+        {
+            return Err(Error::config(
+                "sim.hist_sub_buckets must be a power of two in 2..=256",
+            ));
+        }
+        if !(self.sim.logical_frac > 0.0 && self.sim.logical_frac <= 0.95) {
+            return Err(Error::config(
+                "sim.logical_frac must be in (0, 0.95] (SSDs need over-provisioning)",
+            ));
         }
         Ok(())
     }
@@ -840,6 +870,9 @@ impl Config {
             max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
             victim_index: v.bool_or("sim.victim_index", s.victim_index),
             interconnect: v.bool_or("sim.interconnect", s.interconnect),
+            hist_sub_buckets: v.u64_or("sim.hist_sub_buckets", s.hist_sub_buckets as u64) as u32,
+            logical_frac: v.f64_or("sim.logical_frac", s.logical_frac),
+            pre_age_erases: v.u64_or("sim.pre_age_erases", s.pre_age_erases as u64) as u32,
         };
         let cfg = Config { geometry, timing, cache, host, blk, sim };
         cfg.validate()?;
@@ -925,6 +958,31 @@ mod tests {
         .unwrap();
         assert!(cfg.sim.interconnect);
         assert_eq!(cfg.timing.bus_ns_per_page, 12_000);
+    }
+
+    #[test]
+    fn fleet_knobs_default_and_validate() {
+        let c = presets::small();
+        assert_eq!(c.sim.hist_sub_buckets, 64);
+        assert!((c.sim.logical_frac - 0.80).abs() < 1e-12, "existing OP unchanged");
+        assert_eq!(c.sim.pre_age_erases, 0, "pristine by default");
+        let cfg = Config::from_toml_str(
+            "[sim]\nhist_sub_buckets = 128\nlogical_frac = 0.7\npre_age_erases = 500",
+            presets::small(),
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.hist_sub_buckets, 128);
+        assert!((cfg.sim.logical_frac - 0.7).abs() < 1e-12);
+        assert_eq!(cfg.sim.pre_age_erases, 500);
+        let mut bad = presets::small();
+        bad.sim.hist_sub_buckets = 48;
+        assert!(bad.validate().is_err(), "sub-buckets must be a power of two");
+        let mut bad = presets::small();
+        bad.sim.logical_frac = 0.99;
+        assert!(bad.validate().is_err(), "an SSD needs over-provisioning");
+        let mut bad = presets::small();
+        bad.sim.logical_frac = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

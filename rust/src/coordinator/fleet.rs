@@ -9,8 +9,9 @@
 //! asserted by `tests/integration_multitenant.rs`.
 
 use super::runner::parallel_map;
-use crate::config::{AttributionMode, Config, MixKind, QosMode, SchedKind, Scheme};
+use crate::config::{AttributionMode, Config, MixKind, Nanos, QosMode, SchedKind, Scheme};
 use crate::host::{MultiTenantSimulator, MultiTenantSummary};
+use crate::metrics::{LatencyStats, Ledger, PhaseStats};
 use crate::trace::scenario::Scenario;
 use crate::util::fmt::TextTable;
 use crate::util::rng::mix64;
@@ -485,6 +486,391 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
     table
 }
 
+// ---------------------------------------------------------------------
+// Device-population fleet axis
+// ---------------------------------------------------------------------
+
+/// One simulated SSD's heterogeneity profile within a device
+/// population: capacity (blocks per plane), over-provisioning
+/// (`sim.logical_frac`), and pre-aged wear (`sim.pre_age_erases`).
+/// Profiles are a pure function of `(population seed, device index)` —
+/// never of the scheme/mix axes — so every scheme is measured over the
+/// *same* population and cross-scheme comparisons stay paired.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Device index within the population.
+    pub device: u32,
+    /// Per-device `geometry.blocks_per_plane` (capacity axis).
+    pub blocks_per_plane: u32,
+    /// Per-device exported logical fraction (1 − OP; the OP axis).
+    pub logical_frac: f64,
+    /// Per-device max initial erase count (0 = pristine; the wear axis).
+    pub pre_age_erases: u32,
+    /// Per-device seed component mixed into each run's trace seed.
+    pub seed: u64,
+}
+
+/// A device-population sweep: `devices` heterogeneous SSDs × schemes ×
+/// mixes, sharded across threads, folded into fleet-wide percentiles.
+#[derive(Clone, Debug)]
+pub struct PopulationSpec {
+    /// Base configuration each device profile perturbs.
+    pub base: Config,
+    /// Population size.
+    pub devices: u32,
+    /// Schemes axis.
+    pub schemes: Vec<Scheme>,
+    /// Tenant-mix axis.
+    pub mixes: Vec<MixKind>,
+    /// Scenario each device runs under.
+    pub scenario: Scenario,
+    /// Base seed: profiles and per-run seeds derive from it.
+    pub seed: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+/// Capacity steps in quarters of the base `blocks_per_plane`
+/// (0.75×, 1×, 1.5×).
+const BPP_QUARTER_STEPS: [u32; 3] = [3, 4, 6];
+/// Over-provisioning steps (exported logical fraction).
+const OP_STEPS: [f64; 4] = [0.70, 0.75, 0.80, 0.85];
+/// Pre-age steps (max initial erases: pristine → heavily worn).
+const AGE_STEPS: [u32; 4] = [0, 50, 200, 1000];
+
+impl PopulationSpec {
+    /// A heterogeneous population over all schemes on the
+    /// aggressor/victims mix (the headline fleet experiment: does the
+    /// victim-p99 ranking survive wear/OP heterogeneity?).
+    pub fn heterogeneous(base: Config, devices: u32, seed: u64, threads: usize) -> PopulationSpec {
+        PopulationSpec {
+            base,
+            devices,
+            schemes: Scheme::all().to_vec(),
+            mixes: vec![MixKind::AggressorVictims],
+            scenario: Scenario::Bursty,
+            seed,
+            threads,
+        }
+    }
+
+    /// The device profiles, in device order. Each axis cycles through
+    /// its steps with a seed-derived phase (and a stride coprime to the
+    /// step count), so any population of ≥ 4 devices is guaranteed to
+    /// mix capacities, OP levels, and wear ages rather than gambling on
+    /// hash collisions.
+    pub fn profiles(&self) -> Vec<DeviceProfile> {
+        let quarter = (self.base.geometry.blocks_per_plane / 4).max(1);
+        (0..self.devices)
+            .map(|d| {
+                let bpp_i = ((d as u64 + mix64(self.seed, 1)) % 3) as usize;
+                let op_i = ((d as u64 + mix64(self.seed, 2)) % 4) as usize;
+                let age_i = ((3 * d as u64 + mix64(self.seed, 3)) % 4) as usize;
+                DeviceProfile {
+                    device: d,
+                    blocks_per_plane: (quarter * BPP_QUARTER_STEPS[bpp_i]).max(4),
+                    logical_frac: OP_STEPS[op_i],
+                    pre_age_erases: AGE_STEPS[age_i],
+                    seed: mix64(self.seed, mix64(hash_str("device"), d as u64)),
+                }
+            })
+            .collect()
+    }
+
+    /// The per-device run config for one (scheme, mix) cell. The fleet
+    /// path carries **no raw per-request vectors**: `latency_samples`
+    /// is forced to 0, so percentiles come from the mergeable
+    /// log-linear histograms alone and a 10^8-request device costs the
+    /// same fixed ~30 KB per collector.
+    fn device_config(&self, scheme: Scheme, mix: MixKind, p: &DeviceProfile) -> Result<Config> {
+        let mut cfg = self.base.clone();
+        cfg.cache.scheme = scheme;
+        cfg.host.mix = mix;
+        cfg.geometry.blocks_per_plane = p.blocks_per_plane;
+        cfg.sim.logical_frac = p.logical_frac;
+        cfg.sim.pre_age_erases = p.pre_age_erases;
+        cfg.sim.latency_samples = 0;
+        let cell = mix64(hash_str(scheme.name()), hash_str(mix.name()));
+        cfg.sim.seed = mix64(p.seed, cell);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// One device's completed run within a population sweep.
+#[derive(Clone, Debug)]
+pub struct DeviceRun {
+    /// Scheme this device ran.
+    pub scheme: Scheme,
+    /// Tenant mix this device ran.
+    pub mix: MixKind,
+    /// The device's heterogeneity profile.
+    pub profile: DeviceProfile,
+    /// The device-level summary (histograms, ledgers, phases).
+    pub summary: MultiTenantSummary,
+}
+
+/// Execute a population sweep: scheme-major, then mix, then device,
+/// fanned out over `spec.threads` workers with results in spec order
+/// (the property the byte-identical serial-vs-parallel fold rests on).
+pub fn run_population(spec: &PopulationSpec) -> Result<Vec<DeviceRun>> {
+    let profiles = spec.profiles();
+    let mut jobs = Vec::with_capacity(spec.schemes.len() * spec.mixes.len() * profiles.len());
+    for &scheme in &spec.schemes {
+        for &mix in &spec.mixes {
+            for &profile in &profiles {
+                jobs.push((scheme, mix, profile));
+            }
+        }
+    }
+    let results = parallel_map(jobs, spec.threads, |(scheme, mix, profile)| -> Result<DeviceRun> {
+        let cfg = spec.device_config(scheme, mix, &profile)?;
+        let summary = MultiTenantSimulator::run_once(cfg, spec.scenario)?;
+        Ok(DeviceRun { scheme, mix, profile, summary })
+    });
+    results.into_iter().collect()
+}
+
+/// Fleet-wide rollup of one (scheme, mix) cell across the population:
+/// pure histogram / [`PhaseStats`] / [`Ledger`] merges — per-device
+/// summaries fold without ever touching raw per-request samples, and
+/// because same-resolution histogram merges are exact counter
+/// additions, serial and sharded folds agree byte for byte.
+#[derive(Clone, Debug)]
+pub struct PopulationSummary {
+    /// Scheme name.
+    pub scheme: String,
+    /// Tenant-mix name.
+    pub mix: String,
+    /// Scenario name.
+    pub scenario: String,
+    /// Devices folded in.
+    pub devices: u32,
+    /// Fleet-wide host write latency (merged histograms).
+    pub write_latency: LatencyStats,
+    /// Fleet-wide host read latency.
+    pub read_latency: LatencyStats,
+    /// Fleet-wide victim-tenant write latency (merged across every
+    /// victim tenant of every device — the headline tail).
+    pub victim_latency: LatencyStats,
+    /// Fleet-wide write phase split.
+    pub write_phases: PhaseStats,
+    /// Fleet-wide WA ledger.
+    pub ledger: Ledger,
+    /// Fleet-wide background (GC/migration) ledger.
+    pub background: Ledger,
+    /// Total host bytes written across the population.
+    pub host_bytes_written: u64,
+    /// Total QoS throttle stalls across the population.
+    pub throttle_stalls: u64,
+    /// Latest simulated end time across the population.
+    pub sim_end_max: Nanos,
+}
+
+impl PopulationSummary {
+    fn empty(scheme: &str, mix: &str, scenario: &str, sub_buckets: u32) -> PopulationSummary {
+        PopulationSummary {
+            scheme: scheme.to_string(),
+            mix: mix.to_string(),
+            scenario: scenario.to_string(),
+            devices: 0,
+            write_latency: LatencyStats::with_resolution(sub_buckets, 0),
+            read_latency: LatencyStats::with_resolution(sub_buckets, 0),
+            victim_latency: LatencyStats::with_resolution(sub_buckets, 0),
+            write_phases: PhaseStats::default(),
+            ledger: Ledger::default(),
+            background: Ledger::default(),
+            host_bytes_written: 0,
+            throttle_stalls: 0,
+            sim_end_max: 0,
+        }
+    }
+
+    /// Fleet write amplification.
+    pub fn wa(&self) -> f64 {
+        self.ledger.write_amplification()
+    }
+}
+
+/// Fold per-device runs into per-(scheme, mix) fleet summaries, in
+/// first-seen (spec) order. Works on any `DeviceRun` slice in a
+/// deterministic order; [`run_population`] output qualifies whatever
+/// the thread count was.
+pub fn fold_population(runs: &[DeviceRun]) -> Vec<PopulationSummary> {
+    let mut out: Vec<PopulationSummary> = Vec::new();
+    for r in runs {
+        let s = &r.summary;
+        let pos = out.iter().position(|c| c.scheme == s.scheme && c.mix == s.mix);
+        let cell = match pos {
+            Some(i) => &mut out[i],
+            None => {
+                out.push(PopulationSummary::empty(
+                    &s.scheme,
+                    &s.mix,
+                    &s.scenario,
+                    s.write_latency.sub_buckets(),
+                ));
+                out.last_mut().expect("just pushed")
+            }
+        };
+        cell.devices += 1;
+        cell.write_latency.merge(&s.write_latency);
+        cell.read_latency.merge(&s.read_latency);
+        for t in s.tenants.iter().filter(|t| t.name.starts_with("victim")) {
+            cell.victim_latency.merge(&t.write_latency);
+        }
+        cell.write_phases.merge(&s.write_phases);
+        cell.ledger.merge(&s.ledger);
+        cell.background.merge(&s.background);
+        cell.host_bytes_written += s.host_bytes_written;
+        cell.throttle_stalls += s.total_throttle_stalls();
+        cell.sim_end_max = cell.sim_end_max.max(s.sim_end);
+    }
+    out
+}
+
+/// Render the fleet rollup (one row per scheme × mix cell) with the
+/// p50/p99/p99.9 headlines. Deterministic — no wall-clock columns.
+pub fn population_table(cells: &[PopulationSummary]) -> TextTable {
+    let mut table = TextTable::new(&[
+        "scheme",
+        "mix",
+        "devices",
+        "writes",
+        "p50_ms",
+        "p99_ms",
+        "p999_ms",
+        "victim_p99_ms",
+        "victim_p999_ms",
+        "wa",
+        "stalls",
+    ]);
+    for c in cells {
+        table.row(vec![
+            c.scheme.clone(),
+            c.mix.clone(),
+            c.devices.to_string(),
+            c.write_latency.count().to_string(),
+            format!("{:.3}", c.write_latency.percentile(0.50) as f64 / 1e6),
+            format!("{:.3}", c.write_latency.percentile(0.99) as f64 / 1e6),
+            format!("{:.3}", c.write_latency.percentile(0.999) as f64 / 1e6),
+            format!("{:.3}", c.victim_latency.percentile(0.99) as f64 / 1e6),
+            format!("{:.3}", c.victim_latency.percentile(0.999) as f64 / 1e6),
+            format!("{:.3}", c.wa()),
+            c.throttle_stalls.to_string(),
+        ]);
+    }
+    table
+}
+
+/// Render the per-device breakdown of a population run (which device
+/// profile produced which tail — the heterogeneity detail view).
+pub fn device_table(runs: &[DeviceRun]) -> TextTable {
+    let mut table = TextTable::new(&[
+        "device",
+        "scheme",
+        "mix",
+        "bpp",
+        "logical_frac",
+        "pre_age",
+        "writes",
+        "p99_ms",
+        "victim_p99_ms",
+        "wa",
+    ]);
+    for r in runs {
+        let s = &r.summary;
+        table.row(vec![
+            r.profile.device.to_string(),
+            s.scheme.clone(),
+            s.mix.clone(),
+            r.profile.blocks_per_plane.to_string(),
+            format!("{:.2}", r.profile.logical_frac),
+            r.profile.pre_age_erases.to_string(),
+            s.write_latency.count().to_string(),
+            format!("{:.3}", s.write_latency.percentile(0.99) as f64 / 1e6),
+            format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
+            format!("{:.3}", s.wa()),
+        ]);
+    }
+    table
+}
+
+/// Serialize a fleet rollup as deterministic, machine-readable JSON
+/// (hand-rolled — dependency-free crate). Field order and float
+/// formatting are fixed and wall-clock is excluded: the same
+/// population folded serially or sharded yields byte-identical output,
+/// which is both the acceptance invariant's test surface and what the
+/// `fig_fleet` golden snapshot gates on.
+pub fn population_json(cells: &[PopulationSummary]) -> String {
+    let mut out = String::from("{\"rows\":[\n");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"scheme\":\"{}\",\"mix\":\"{}\",\"scenario\":\"{}\",\"devices\":{},\
+             \"writes\":{},\"reads\":{},\
+             \"mean_ms\":\"{:.3}\",\"p50_ms\":\"{:.3}\",\"p99_ms\":\"{:.3}\",\
+             \"p999_ms\":\"{:.3}\",\"max_ms\":\"{:.3}\",\
+             \"victim_p99_ms\":\"{:.3}\",\"victim_p999_ms\":\"{:.3}\",\
+             \"wa\":\"{:.3}\",\"q_ms\":\"{:.3}\",\"xfer_ms\":\"{:.3}\",\"arr_ms\":\"{:.3}\",\
+             \"stalls\":{},\"bg_pages\":{},\"host_bytes\":{},\"sim_end_max\":{}}}",
+            c.scheme,
+            c.mix,
+            c.scenario,
+            c.devices,
+            c.write_latency.count(),
+            c.read_latency.count(),
+            c.write_latency.mean() / 1e6,
+            c.write_latency.percentile(0.50) as f64 / 1e6,
+            c.write_latency.percentile(0.99) as f64 / 1e6,
+            c.write_latency.percentile(0.999) as f64 / 1e6,
+            c.write_latency.max() as f64 / 1e6,
+            c.victim_latency.percentile(0.99) as f64 / 1e6,
+            c.victim_latency.percentile(0.999) as f64 / 1e6,
+            c.wa(),
+            c.write_phases.mean_queued_ns() / 1e6,
+            c.write_phases.mean_transfer_ns() / 1e6,
+            c.write_phases.mean_array_ns() / 1e6,
+            c.throttle_stalls,
+            c.background.total_programs(),
+            c.host_bytes_written,
+            c.sim_end_max,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// The same rollup as CSV rows (trex-summarize shape: one machine
+/// format feeds both the figure pipeline and spreadsheet triage).
+pub fn population_csv(cells: &[PopulationSummary]) -> String {
+    let mut out = String::from(
+        "scheme,mix,scenario,devices,writes,p50_ms,p99_ms,p999_ms,\
+         victim_p99_ms,victim_p999_ms,wa,stalls,host_bytes\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{}\n",
+            c.scheme,
+            c.mix,
+            c.scenario,
+            c.devices,
+            c.write_latency.count(),
+            c.write_latency.percentile(0.50) as f64 / 1e6,
+            c.write_latency.percentile(0.99) as f64 / 1e6,
+            c.write_latency.percentile(0.999) as f64 / 1e6,
+            c.victim_latency.percentile(0.99) as f64 / 1e6,
+            c.victim_latency.percentile(0.999) as f64 / 1e6,
+            c.wa(),
+            c.throttle_stalls,
+            c.host_bytes_written,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -669,5 +1055,95 @@ mod tests {
         // a deeper device window can only help or keep device p99 — but
         // it must not change WHO was served
         assert_eq!(points[0].1.write_latency.count(), points[2].1.write_latency.count());
+    }
+
+    fn tiny_population(devices: u32, threads: usize) -> PopulationSpec {
+        let mut base = presets::small();
+        base.cache.slc_cache_bytes = 1 << 20;
+        base.host.tenants = 3;
+        base.host.aggressor_cache_mult = 1.5;
+        PopulationSpec {
+            base,
+            devices,
+            schemes: vec![Scheme::Baseline, Scheme::Ips],
+            mixes: vec![MixKind::AggressorVictims],
+            scenario: Scenario::Bursty,
+            seed: 42,
+            threads,
+        }
+    }
+
+    #[test]
+    fn profiles_are_heterogeneous_and_scheme_independent() {
+        let spec = tiny_population(4, 1);
+        let profiles = spec.profiles();
+        assert_eq!(profiles.len(), 4);
+        // each axis cycles by construction: ≥ 4 devices guarantees mixed
+        // capacities, OP levels, and wear ages
+        let distinct = |f: &dyn Fn(&DeviceProfile) -> u64| {
+            let mut v: Vec<u64> = profiles.iter().map(f).collect();
+            v.sort_unstable();
+            v.dedup();
+            v.len()
+        };
+        assert!(distinct(&|p| p.blocks_per_plane as u64) >= 2, "capacity axis varies");
+        assert!(distinct(&|p| (p.logical_frac * 100.0) as u64) >= 2, "OP axis varies");
+        assert!(distinct(&|p| p.pre_age_erases as u64) >= 2, "wear axis varies");
+        // the population is a function of (seed, device) only: changing
+        // the scheme axis must not change who the devices are
+        let mut one_scheme = spec.clone();
+        one_scheme.schemes = vec![Scheme::TlcOnly];
+        assert_eq!(profiles, one_scheme.profiles(), "paired across schemes");
+        assert_eq!(profiles, spec.profiles(), "stable across calls");
+    }
+
+    #[test]
+    fn population_fold_is_byte_identical_serial_vs_sharded() {
+        let serial = run_population(&tiny_population(4, 1)).unwrap();
+        let sharded = run_population(&tiny_population(4, 4)).unwrap();
+        let a = population_json(&fold_population(&serial));
+        let b = population_json(&fold_population(&sharded));
+        assert_eq!(a, b, "thread count must not leak into the fleet fold");
+        assert!(a.starts_with("{\"rows\":["));
+        assert!(a.contains("\"scheme\":\"baseline\""));
+        assert!(a.contains("\"p999_ms\""));
+        let csv = population_csv(&fold_population(&serial));
+        assert!(csv.starts_with("scheme,mix,"));
+        assert_eq!(csv.lines().count(), 3, "header + one row per cell");
+    }
+
+    #[test]
+    fn fleet_path_has_no_raw_vectors_and_bounded_percentiles() {
+        let runs = run_population(&tiny_population(2, 2)).unwrap();
+        assert_eq!(runs.len(), 4, "2 schemes × 2 devices");
+        for r in &runs {
+            assert!(r.summary.write_latency.raw_us().is_empty(), "no raw on the fleet path");
+            for t in &r.summary.tenants {
+                assert!(t.write_latency.raw_us().is_empty());
+                assert!(t.read_latency.raw_us().is_empty());
+            }
+        }
+        let cells = fold_population(&runs);
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.devices, 2);
+            assert!(c.write_latency.count() > 0, "{} folded traffic", c.scheme);
+            assert!(c.victim_latency.count() > 0, "victim tenants folded");
+            for q in [0.5, 0.99, 0.999, 1.0] {
+                assert!(
+                    c.write_latency.percentile(q) <= c.write_latency.max(),
+                    "{} q={q}: percentile bounded by observed max",
+                    c.scheme
+                );
+            }
+            assert!(
+                c.victim_latency.percentile(0.999) >= c.victim_latency.percentile(0.99),
+                "tail quantiles are monotone"
+            );
+        }
+        let rendered = population_table(&cells).render();
+        assert!(rendered.contains("victim_p999_ms"));
+        let detail = device_table(&runs).render();
+        assert!(detail.contains("pre_age"));
     }
 }

@@ -15,6 +15,7 @@ use super::block::BlockMode;
 use super::geometry::{BlockAddr, Lpn, PlaneId, Ppa};
 use super::interconnect::{Interconnect, OpClass};
 use crate::config::{Config, Geometry, Nanos, Timing};
+use crate::util::rng::mix64;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 
@@ -80,10 +81,16 @@ pub struct FlashArray {
 }
 
 impl FlashArray {
-    /// Build a fully erased array from a config.
+    /// Build a fully erased array from a config. With
+    /// `sim.pre_age_erases > 0` every block starts with a deterministic
+    /// initial erase count in `[0, pre_age_erases]` — a pure function
+    /// of `(sim.seed, flat block index)`, never of execution order, so
+    /// sharded fleet devices reproduce byte-identically. Initial wear
+    /// perturbs the min-erase allocator (`pop_free_min_erase`), which
+    /// is what makes a worn device behave differently from a fresh one.
     pub fn new(cfg: &Config) -> FlashArray {
         let g = cfg.geometry;
-        let planes = (0..g.planes())
+        let mut planes: Vec<PlaneState> = (0..g.planes())
             .map(|_| PlaneState {
                 blocks: (0..g.blocks_per_plane)
                     .map(|_| Block::new(&g, cfg.cache.group_layers))
@@ -91,6 +98,16 @@ impl FlashArray {
                 free_blocks: (0..g.blocks_per_plane).collect(),
             })
             .collect();
+        if cfg.sim.pre_age_erases > 0 {
+            let span = cfg.sim.pre_age_erases as u64 + 1;
+            for (p, plane) in planes.iter_mut().enumerate() {
+                for (b, blk) in plane.blocks.iter_mut().enumerate() {
+                    let flat = p as u64 * g.blocks_per_plane as u64 + b as u64;
+                    let wear = (mix64(cfg.sim.seed, flat) % span) as u32;
+                    blk.pre_age(wear).expect("fresh blocks are pristine");
+                }
+            }
+        }
         FlashArray {
             geometry: g,
             timing: cfg.timing,
@@ -385,6 +402,26 @@ mod tests {
 
     fn array() -> FlashArray {
         FlashArray::new(&presets::small())
+    }
+
+    #[test]
+    fn pre_age_seeds_deterministic_wear() {
+        let mut cfg = presets::small();
+        assert_eq!(array().erase_count_spread(), (0, 0), "pristine by default");
+        cfg.sim.pre_age_erases = 100;
+        let a = FlashArray::new(&cfg);
+        let b = FlashArray::new(&cfg);
+        let (min, max) = a.erase_count_spread();
+        assert!(max > min, "wear is heterogeneous across blocks");
+        assert!(max <= 100, "bounded by the knob");
+        assert_eq!((min, max), b.erase_count_spread(), "pure function of (seed, block)");
+        cfg.sim.seed = 43;
+        let c = FlashArray::new(&cfg);
+        let same = (0..cfg.geometry.blocks_per_plane).all(|i| {
+            let addr = BlockAddr { plane: PlaneId(0), block: i };
+            a.block(addr).erase_count() == c.block(addr).erase_count()
+        });
+        assert!(!same, "a different seed ages a different pattern");
     }
 
     #[test]

@@ -109,6 +109,17 @@ impl Block {
     pub fn erase_count(&self) -> u32 {
         self.erase_count
     }
+    /// Seed the lifetime erase count before any traffic (fleet wear
+    /// heterogeneity: a pre-aged device starts with uneven wear, which
+    /// perturbs the min-erase allocator). Only legal on a pristine,
+    /// fully erased block.
+    pub fn pre_age(&mut self, erases: u32) -> Result<()> {
+        if !self.is_erased() || self.erase_count != 0 {
+            return Err(Error::invariant("pre_age of a used block"));
+        }
+        self.erase_count = erases;
+        Ok(())
+    }
     /// Is the block completely erased?
     pub fn is_erased(&self) -> bool {
         self.written_count == 0

@@ -138,9 +138,10 @@ impl Ftl {
             _ => 0,
         };
         let reserved = cache_blocks * g.pages_per_block as u64;
-        let logical_fraction = 0.80;
-        let lpn_limit =
-            ((total_pages.saturating_sub(reserved)) as f64 * logical_fraction) as u64;
+        // exported logical capacity; 1 - logical_frac stays back as
+        // over-provisioning (per-device knob on the fleet's OP axis)
+        let lpn_limit = ((total_pages.saturating_sub(reserved)) as f64
+            * cfg.sim.logical_frac) as u64;
         if lpn_limit == 0 {
             return Err(Error::config("no logical capacity left after cache reservation"));
         }

@@ -178,6 +178,7 @@ impl MultiTenantSimulator {
                     s.id.0,
                     s.name.clone(),
                     s.weight,
+                    cfg.sim.hist_sub_buckets,
                     cfg.sim.latency_samples,
                     cfg.sim.bandwidth_window,
                 )
@@ -253,8 +254,14 @@ impl MultiTenantSimulator {
         let page = self.cfg.geometry.page_bytes as u64;
         let lpn_limit = self.ftl.map.lpn_limit();
         let qd = self.cfg.host.device_qd.max(1);
-        let mut write_latency = LatencyStats::new(self.cfg.sim.latency_samples);
-        let mut read_latency = LatencyStats::new(self.cfg.sim.latency_samples);
+        let mut write_latency = LatencyStats::with_resolution(
+            self.cfg.sim.hist_sub_buckets,
+            self.cfg.sim.latency_samples,
+        );
+        let mut read_latency = LatencyStats::with_resolution(
+            self.cfg.sim.hist_sub_buckets,
+            self.cfg.sim.latency_samples,
+        );
         let mut write_phases = PhaseStats::default();
         let mut read_phases = PhaseStats::default();
         let mut bandwidth = BandwidthTimeline::new(self.cfg.sim.bandwidth_window);

@@ -6,6 +6,9 @@
 //! * `multi-tenant` — tenants → submission queues → scheduler → scheme,
 //!   with per-tenant latency/WA attribution; `--fleet` sweeps the
 //!   (scheme × scheduler) cross-product on worker threads;
+//! * `fleet`        — device-population sweep: N heterogeneous SSDs
+//!   (capacity / OP / pre-aged wear) per scheme × mix, folded into
+//!   fleet-wide percentiles by mergeable histograms (JSON/CSV export);
 //! * `replay`       — stream an MSR CSV through the block front end in
 //!   constant memory (bounded reorder window, sector-granular bios);
 //! * `sweep`        — ablations (cache size, idle threshold, group width);
@@ -116,6 +119,26 @@ fn cli() -> Command {
                 .opt("dies-per-chip", None, "N", "override geometry dies per chip", None)
                 .flag("verify", None, "run full consistency audits"),
         ))
+        .subcommand(
+            Command::new("fleet", "device-population sweep folded into fleet-wide percentiles")
+                .opt("devices", Some('d'), "N", "population size", Some("8"))
+                .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop|all", Some("all"))
+                .opt(
+                    "mix",
+                    Some('m'),
+                    "M",
+                    "aggressor-victims|uniform|read-heavy|write-heavy",
+                    Some("aggressor-victims"),
+                )
+                .opt("tenants", Some('n'), "N", "tenant count per device", Some("4"))
+                .opt("scenario", None, "X", "bursty|daily", Some("bursty"))
+                .opt("scale", None, "N", "geometry divisor vs Table I", Some("8"))
+                .opt("seed", Some('s'), "SEED", "population seed", Some("42"))
+                .opt("threads", Some('j'), "N", "worker threads", None)
+                .opt("json", None, "FILE", "write the fleet rollup as JSON", None)
+                .opt("csv", None, "FILE", "write the fleet rollup as CSV", None)
+                .flag("per-device", None, "also print the per-device breakdown"),
+        )
         .subcommand(blk_opts(
             Command::new("replay", "stream an MSR CSV through the block front end")
                 .opt("csv", None, "FILE", "MSR-format CSV file to stream", None)
@@ -192,6 +215,7 @@ fn main() {
         Some("reproduce") => cmd_reproduce(parsed.sub().unwrap()),
         Some("run") => cmd_run(parsed.sub().unwrap()),
         Some("multi-tenant") => cmd_multitenant(parsed.sub().unwrap()),
+        Some("fleet") => cmd_fleet(parsed.sub().unwrap()),
         Some("replay") => cmd_replay(parsed.sub().unwrap()),
         Some("sweep") => cmd_sweep(parsed.sub().unwrap()),
         Some("perf") => cmd_perf(parsed.sub().unwrap()),
@@ -569,6 +593,67 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         nanos(s.sim_end),
         s.wall_clock
     );
+    Ok(())
+}
+
+fn cmd_fleet(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    let mut opts = ExpOptions::default();
+    opts.scale = p.get_u64("scale").map_err(ips::Error::config)? as u32;
+    opts.seed = p.get_u64("seed").map_err(ips::Error::config)?;
+    if let Some(t) = p.get("threads") {
+        opts.threads = t.parse().map_err(|_| ips::Error::config("--threads: bad integer"))?;
+    }
+    let devices = p.get_u64("devices").map_err(ips::Error::config)? as u32;
+    if devices == 0 {
+        return Err(ips::Error::config("--devices: population must be non-empty"));
+    }
+    let mix = MixKind::parse(p.get("mix").unwrap_or("aggressor-victims"))?;
+    let scen = Scenario::parse(p.get("scenario").unwrap_or("bursty"))?;
+    let schemes = match p.get("scheme").unwrap_or("all") {
+        "all" => Scheme::all().to_vec(),
+        s => vec![Scheme::parse(s)?],
+    };
+    // The scheme slot of the base config is irrelevant — every device
+    // run overrides it from the scheme axis.
+    let mut base = experiment::exp_config(&opts, Scheme::Ips);
+    base.host.tenants = p.get_u64("tenants").map_err(ips::Error::config)? as u32;
+    base.host.mix = mix;
+    let spec = fleet::PopulationSpec {
+        base,
+        devices,
+        schemes,
+        mixes: vec![mix],
+        scenario: scen,
+        seed: opts.seed,
+        threads: opts.threads,
+    };
+    println!(
+        "fleet: {} devices x {} schemes x {} mixes = {} runs ({} tenants, {} scenario, \
+         {} threads)",
+        spec.devices,
+        spec.schemes.len(),
+        spec.mixes.len(),
+        spec.devices as usize * spec.schemes.len() * spec.mixes.len(),
+        spec.base.host.tenants,
+        scen.name(),
+        spec.threads
+    );
+    let runs = fleet::run_population(&spec)?;
+    let cells = fleet::fold_population(&runs);
+    if p.flag("per-device") {
+        println!("\n== per-device breakdown ==");
+        print!("{}", fleet::device_table(&runs).render());
+    }
+    println!("\n== fleet rollup ({} devices) ==", spec.devices);
+    print!("{}", fleet::population_table(&cells).render());
+    if let Some(path) = p.get("json") {
+        std::fs::write(path, fleet::population_json(&cells))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = p.get("csv") {
+        std::fs::write(path, fleet::population_csv(&cells))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -1,29 +1,35 @@
 //! Windowed bandwidth timelines (paper Figs. 3–4: bandwidth vs total
 //! data written / vs time).
+//!
+//! Windows are stored *sparsely* (window index → bytes): a long idle
+//! tail or a mis-scaled timestamp costs one map entry, not a dense
+//! `Vec` resized out to `at / window` (which could allocate gigabytes
+//! for a single late sample). Series exports emit only non-empty
+//! windows; consumers that plot rate-vs-time already filter idle
+//! windows, and the cumulative axis is unaffected by skipping them.
 
 use crate::config::Nanos;
+use std::collections::BTreeMap;
 
 /// Accumulates bytes into fixed time windows.
 #[derive(Clone, Debug)]
 pub struct BandwidthTimeline {
     window: Nanos,
-    /// bytes per window index.
-    bytes: Vec<u64>,
+    /// bytes per non-empty window index, sparse and ordered.
+    bytes: BTreeMap<u64, u64>,
 }
 
 impl BandwidthTimeline {
     /// New timeline with the given window size.
     pub fn new(window: Nanos) -> Self {
-        BandwidthTimeline { window: window.max(1), bytes: Vec::new() }
+        BandwidthTimeline { window: window.max(1), bytes: BTreeMap::new() }
     }
 
-    /// Record `n` bytes completed at simulated time `at`.
+    /// Record `n` bytes completed at simulated time `at`. O(log w) in
+    /// the number of non-empty windows, bounded memory regardless of
+    /// how far out `at` lands.
     pub fn record(&mut self, at: Nanos, n: u64) {
-        let idx = (at / self.window) as usize;
-        if idx >= self.bytes.len() {
-            self.bytes.resize(idx + 1, 0);
-        }
-        self.bytes[idx] += n;
+        *self.bytes.entry(at / self.window).or_insert(0) += n;
     }
 
     /// Window size in ns.
@@ -31,13 +37,27 @@ impl BandwidthTimeline {
         self.window
     }
 
-    /// Series of (window start time ns, MB/s) points.
+    /// Number of non-empty windows (the memory footprint).
+    pub fn windows(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Merge another timeline, re-binning by window start time when
+    /// the window sizes differ.
+    pub fn merge(&mut self, other: &BandwidthTimeline) {
+        for (&idx, &b) in &other.bytes {
+            let at = idx.saturating_mul(other.window);
+            *self.bytes.entry(at / self.window).or_insert(0) += b;
+        }
+    }
+
+    /// Series of (window start time ns, MB/s) points over non-empty
+    /// windows, in time order.
     pub fn series_mbs(&self) -> Vec<(Nanos, f64)> {
         let secs = self.window as f64 / 1e9;
         self.bytes
             .iter()
-            .enumerate()
-            .map(|(i, &b)| (i as Nanos * self.window, b as f64 / 1e6 / secs))
+            .map(|(&i, &b)| (i.saturating_mul(self.window), b as f64 / 1e6 / secs))
             .collect()
     }
 
@@ -47,7 +67,7 @@ impl BandwidthTimeline {
         let secs = self.window as f64 / 1e9;
         let mut cum = 0u64;
         self.bytes
-            .iter()
+            .values()
             .map(|&b| {
                 cum += b;
                 (cum as f64 / 1e9, b as f64 / 1e6 / secs)
@@ -57,7 +77,7 @@ impl BandwidthTimeline {
 
     /// Total bytes recorded.
     pub fn total_bytes(&self) -> u64 {
-        self.bytes.iter().sum()
+        self.bytes.values().sum()
     }
 }
 
@@ -90,6 +110,33 @@ mod tests {
             assert!(w[1].0 >= w[0].0);
         }
         assert!((s.last().unwrap().0 - 5.0).abs() < 1e-9, "5 GB total");
+    }
+
+    #[test]
+    fn sparse_timeline_stays_bounded() {
+        // the old dense Vec resized to `at / window` entries — one
+        // sample at the end of simulated time cost ~18 EB of index
+        // space worth of zeroed u64s; sparse storage costs 1 entry
+        let mut t = BandwidthTimeline::new(SEC);
+        t.record(0, 1);
+        t.record(Nanos::MAX - 5, 1);
+        assert_eq!(t.windows(), 2);
+        assert_eq!(t.series_mbs().len(), 2);
+        assert_eq!(t.total_bytes(), 2);
+        let s = t.series_mbs();
+        assert!(s[1].0 > s[0].0, "time order preserved");
+    }
+
+    #[test]
+    fn merge_rebins_across_window_sizes() {
+        let mut a = BandwidthTimeline::new(SEC);
+        a.record(0, 1_000_000);
+        let mut b = BandwidthTimeline::new(SEC / 2);
+        b.record(SEC / 2, 1_000_000); // half-window index 1
+        b.record(SEC, 1_000_000); // half-window index 2
+        a.merge(&b);
+        assert_eq!(a.total_bytes(), 3_000_000);
+        assert_eq!(a.windows(), 2, "0..SEC and SEC..2*SEC");
     }
 
     #[test]

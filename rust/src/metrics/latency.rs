@@ -1,8 +1,32 @@
-//! Streaming latency statistics with a log-scaled histogram for
-//! percentiles, optional raw-sample capture for runtime curves (paper
+//! Streaming latency statistics on mergeable log-linear (HDR-style)
+//! histograms, optional raw-sample capture for runtime curves (paper
 //! Fig. 9 plots per-write latency over the first 100 k writes), and
 //! phase-split accumulators over the interconnect model's
 //! queued/transfer/array completions.
+//!
+//! # Bin layout
+//!
+//! The histogram is *log-linear*: values below `sub_buckets` get exact
+//! width-1 bins; every power-of-two band `[2^e, 2^(e+1))` above that is
+//! split into `sub_buckets` equal-width bins. Percentiles report the
+//! *upper inclusive edge* of the selected bin, clamped to the observed
+//! `[min, max]`, so the relative quantile error is bounded by
+//! `1 / sub_buckets` (1.56 % at the default 64) and `percentile(q) <=
+//! max()` always holds. Recording is O(1); the bucket vector is ~30 KB
+//! at the default resolution and folds across shards/devices by plain
+//! counter addition, which is what makes fleet-wide p99/p99.9 exact
+//! with respect to the per-device histograms (merge is associative and
+//! commutative — serial and sharded folds are byte-identical).
+//!
+//! # Raw-sample oracle
+//!
+//! `sim.latency_samples` still buys a capped raw capture: `raw_us()`
+//! feeds the Fig. 9 runtime curves (explicitly a *prefix* of the run),
+//! and `raw_percentile` serves exact nearest-rank percentiles — but
+//! only while the capture covers every recorded sample. Once samples
+//! are dropped (capacity hit, or a merge that couldn't keep every
+//! shard's samples) the prefix is order-biased and `raw_percentile`
+//! refuses to answer; `percentile_best` falls back to the histogram.
 
 use crate::config::Nanos;
 use crate::flash::array::Completion;
@@ -76,8 +100,9 @@ impl PhaseStats {
     }
 }
 
-/// Number of log2 buckets (covers 1 ns .. ~584 years).
-const BUCKETS: usize = 64;
+/// Default sub-buckets per power-of-two band: 1/64 ≈ 1.56 % worst-case
+/// relative quantile error at ~30 KB per collector.
+pub const DEFAULT_SUB_BUCKETS: u32 = 64;
 
 /// Streaming latency collector.
 #[derive(Clone, Debug)]
@@ -86,11 +111,17 @@ pub struct LatencyStats {
     sum: u128,
     max: Nanos,
     min: Nanos,
-    /// log2 histogram: bucket i counts samples in [2^i, 2^(i+1)).
+    /// log2(sub-buckets per power-of-two band).
+    sub_bits: u32,
+    /// Log-linear histogram (see module docs for the bin layout).
     hist: Vec<u64>,
-    /// Raw samples (first `capacity` only).
+    /// Raw samples (first `raw_capacity` only), rounded to µs.
     raw: Vec<u32>,
     raw_capacity: usize,
+    /// Set once any sample was recorded/merged without being captured
+    /// in `raw` — from then on the prefix is order-biased and must not
+    /// be served as an exact percentile source.
+    raw_truncated: bool,
 }
 
 impl Default for LatencyStats {
@@ -100,32 +131,89 @@ impl Default for LatencyStats {
 }
 
 impl LatencyStats {
-    /// Collector keeping up to `raw_capacity` raw samples (µs-resolution
-    /// `u32`s to stay compact at 100 k+ samples).
+    /// Collector at the default resolution keeping up to
+    /// `raw_capacity` raw samples (µs-resolution `u32`s to stay
+    /// compact at 100 k+ samples).
     pub fn new(raw_capacity: usize) -> Self {
+        Self::with_resolution(DEFAULT_SUB_BUCKETS, raw_capacity)
+    }
+
+    /// Collector with `sub_buckets` bins per power-of-two band
+    /// (normalized to a power of two in `2..=256`). Worst-case
+    /// relative quantile error is `1 / sub_buckets`.
+    pub fn with_resolution(sub_buckets: u32, raw_capacity: usize) -> Self {
+        let sub = sub_buckets.next_power_of_two().clamp(2, 256);
+        let sub_bits = sub.trailing_zeros();
+        let bands = 64 - sub_bits as usize;
         LatencyStats {
             count: 0,
             sum: 0,
             max: 0,
             min: Nanos::MAX,
-            hist: vec![0; BUCKETS],
+            sub_bits,
+            hist: vec![0; sub as usize * (bands + 1)],
             raw: Vec::new(),
             raw_capacity,
+            raw_truncated: false,
         }
     }
 
-    /// Record one latency sample.
+    /// Sub-buckets per power-of-two band.
+    pub fn sub_buckets(&self) -> u32 {
+        1 << self.sub_bits
+    }
+
+    /// Worst-case relative error of histogram percentiles.
+    pub fn relative_error_bound(&self) -> f64 {
+        1.0 / (1u64 << self.sub_bits) as f64
+    }
+
+    /// Bucket index of a value: exact bins below `sub_buckets`, then
+    /// `sub_buckets` equal-width bins per power-of-two band.
+    #[inline]
+    fn bucket_index(&self, v: u64) -> usize {
+        let sub = 1u64 << self.sub_bits;
+        if v < sub {
+            v as usize
+        } else {
+            let e = 63 - v.leading_zeros();
+            let band = (e - self.sub_bits) as u64;
+            let off = (v >> band) - sub;
+            (sub + band * sub + off) as usize
+        }
+    }
+
+    /// Upper inclusive edge of a bucket — the histogram's
+    /// representative value (an upper bound on every sample the bucket
+    /// holds). The add-form `lower + (width - 1)` avoids u64 overflow
+    /// in the top band, where `(lower + width)` wraps.
+    #[inline]
+    fn bucket_upper(&self, idx: usize) -> u64 {
+        let sub = 1usize << self.sub_bits;
+        if idx < sub {
+            idx as u64
+        } else {
+            let band = ((idx - sub) / sub) as u32;
+            let off = ((idx - sub) % sub) as u64;
+            let lower = ((sub as u64) + off) << band;
+            lower + ((1u64 << band) - 1)
+        }
+    }
+
+    /// Record one latency sample. O(1).
     #[inline]
     pub fn record(&mut self, ns: Nanos) {
         self.count += 1;
         self.sum += ns as u128;
         self.max = self.max.max(ns);
         self.min = self.min.min(ns);
-        let bucket = (64 - ns.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.hist[bucket] += 1;
+        let idx = self.bucket_index(ns);
+        self.hist[idx] += 1;
         if self.raw.len() < self.raw_capacity {
             // round-to-nearest µs (truncation would floor sub-µs tails to 0)
             self.raw.push(((ns + 500) / 1_000).min(u32::MAX as u64) as u32);
+        } else if self.raw_capacity > 0 {
+            self.raw_truncated = true;
         }
     }
 
@@ -154,36 +242,57 @@ impl LatencyStats {
         }
     }
 
-    /// Approximate percentile (0.0..=1.0) from the log2 histogram:
-    /// returns the upper edge of the bucket containing the quantile
-    /// (within 2× of the true value, enough for report tables).
+    /// Histogram bucket counts (log-linear layout), for export and
+    /// differential tests.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.hist
+    }
+
+    /// Percentile (0.0..=1.0) from the log-linear histogram: the upper
+    /// inclusive edge of the bucket containing the nearest-rank
+    /// quantile, clamped to the observed `[min, max]`. Overestimates
+    /// the true quantile by at most `relative_error_bound()`, and never
+    /// exceeds `max()`.
     pub fn percentile(&self, q: f64) -> Nanos {
         if self.count == 0 {
             return 0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &c) in self.hist.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
             seen += c;
-            if seen >= target.max(1) {
-                return 1u64 << (i + 1).min(63);
+            if seen >= target {
+                return self.bucket_upper(i).clamp(self.min, self.max);
             }
         }
         self.max
     }
 
-    /// Raw samples captured (µs units), for runtime curves.
+    /// Raw samples captured (µs units), for runtime curves. Always the
+    /// *first* samples of the run (or of the first shards, after a
+    /// merge) — a prefix by design, suitable for Fig. 9-style "latency
+    /// over the first N writes" plots but not for percentiles unless
+    /// [`Self::raw_exhaustive`] holds.
     pub fn raw_us(&self) -> &[u32] {
         &self.raw
     }
 
-    /// Percentile (ns) from the captured raw samples, if any — exact
-    /// sample selection at the capture's µs resolution (samples are
-    /// stored as rounded µs). Only the first `raw_capacity` samples
-    /// are kept, so this reflects the *captured prefix* — see
-    /// [`Self::percentile_best`] for a guard against a biased prefix.
+    /// True when the raw capture covers *every* recorded sample, i.e.
+    /// the capture is a census, not an order-biased prefix.
+    pub fn raw_exhaustive(&self) -> bool {
+        self.count == self.raw.len() as u64 && !self.raw_truncated
+    }
+
+    /// Exact nearest-rank percentile (ns) from the raw capture, at the
+    /// capture's µs resolution. Returns `None` unless the capture is
+    /// exhaustive — a truncated capture is an order-biased prefix
+    /// (e.g. the first shard's early requests after a merge) and would
+    /// silently misreport tails if served as exact.
     pub fn raw_percentile(&self, q: f64) -> Option<Nanos> {
-        if self.raw.is_empty() {
+        if self.raw.is_empty() || !self.raw_exhaustive() {
             return None;
         }
         let mut v = self.raw.clone();
@@ -194,28 +303,40 @@ impl LatencyStats {
     }
 
     /// Best-available percentile (ns): µs-resolution raw samples when
-    /// the capture covers *every* recorded sample, the 2×-quantized
-    /// log2 histogram otherwise.
+    /// the capture is exhaustive, the bounded-error log-linear
+    /// histogram otherwise.
     pub fn percentile_best(&self, q: f64) -> Nanos {
-        if self.count == self.raw.len() as u64 {
-            if let Some(p) = self.raw_percentile(q) {
-                return p;
-            }
-        }
-        self.percentile(q)
+        self.raw_percentile(q).unwrap_or_else(|| self.percentile(q))
     }
 
-    /// Merge another collector (raw samples appended up to capacity).
+    /// Merge another collector. Same-resolution histograms fold by
+    /// plain counter addition (exact, associative, commutative — the
+    /// fleet-fold invariant); a mismatched resolution re-bins each
+    /// source bucket at its upper edge, which keeps counts exact and
+    /// quantile error bounded by the coarser of the two layouts. Raw
+    /// samples append while capacity allows; any drop marks the capture
+    /// truncated so it is never served as exact.
     pub fn merge(&mut self, other: &LatencyStats) {
         self.count += other.count;
         self.sum += other.sum;
         self.max = self.max.max(other.max);
         self.min = self.min.min(other.min);
-        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
-            *a += b;
+        if self.sub_bits == other.sub_bits {
+            for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+                *a += b;
+            }
+        } else {
+            for (i, &c) in other.hist.iter().enumerate() {
+                if c > 0 {
+                    let idx = self.bucket_index(other.bucket_upper(i));
+                    self.hist[idx] += c;
+                }
+            }
         }
+        self.raw_truncated |= other.raw_truncated;
         for &s in &other.raw {
             if self.raw.len() >= self.raw_capacity {
+                self.raw_truncated = true;
                 break;
             }
             self.raw.push(s);
@@ -248,8 +369,48 @@ mod tests {
         let p50 = s.percentile(0.5);
         let p99 = s.percentile(0.99);
         assert!(p50 <= p99);
-        // log2 buckets: within 2x of truth
-        assert!(p50 >= 2_500_000 && p50 <= 20_000_000, "p50={p50}");
+        // log-linear bins: within 1/64 of truth (vs 2x for plain log2)
+        assert!(p50 >= 5_000_000, "upper edge covers the true p50: {p50}");
+        assert!(p50 as f64 <= 5_000_000.0 * (1.0 + s.relative_error_bound()) + 1.0, "p50={p50}");
+        assert!(p99 as f64 <= 9_900_000.0 * (1.0 + s.relative_error_bound()) + 1.0, "p99={p99}");
+    }
+
+    #[test]
+    fn percentile_clamped_to_observed_range() {
+        // the old log2 histogram reported p99 = 2^22 ≈ 4.19 ms for a
+        // single 3 ms sample; the clamp pins it to the observed max
+        let mut s = LatencyStats::new(0);
+        s.record(3_000_000);
+        assert_eq!(s.percentile(0.99), 3_000_000);
+        assert_eq!(s.percentile(0.0), 3_000_000);
+        let mut t = LatencyStats::new(0);
+        t.record(1_000_000);
+        t.record(3_000_000);
+        assert_eq!(t.percentile(1.0), 3_000_000);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert!(t.percentile(q) <= t.max(), "q={q}");
+            assert!(t.percentile(q) >= t.min(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        // width-1 bins below sub_buckets and through the first band
+        let mut s = LatencyStats::new(0);
+        for v in [3u64, 7, 40, 90, 127] {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(0.0), 3);
+        assert_eq!(s.percentile(1.0), 127);
+    }
+
+    #[test]
+    fn resolution_is_normalized() {
+        assert_eq!(LatencyStats::with_resolution(48, 0).sub_buckets(), 64);
+        assert_eq!(LatencyStats::with_resolution(0, 0).sub_buckets(), 2);
+        assert_eq!(LatencyStats::with_resolution(1 << 20, 0).sub_buckets(), 256);
+        let s = LatencyStats::with_resolution(8, 0);
+        assert!((s.relative_error_bound() - 0.125).abs() < 1e-12);
     }
 
     #[test]
@@ -260,6 +421,7 @@ mod tests {
         }
         assert_eq!(s.raw_us().len(), 5);
         assert_eq!(s.raw_us()[1], 1000); // 1 ms = 1000 µs
+        assert!(!s.raw_exhaustive(), "dropped samples poison exactness");
     }
 
     #[test]
@@ -268,16 +430,77 @@ mod tests {
         for i in 1..=100u64 {
             s.record(i * 1_000_000); // 1..100 ms
         }
+        assert!(s.raw_exhaustive());
         assert_eq!(s.raw_percentile(0.0).unwrap(), 1_000_000);
         assert_eq!(s.percentile_best(0.99), 99_000_000);
-        // capacity exceeded -> prefix is biased -> fall back to histogram
+        // capacity exceeded -> prefix is biased -> raw refuses, best
+        // falls back to the (bounded-error, max-clamped) histogram
         let mut t = LatencyStats::new(5);
         for i in 1..=100u64 {
             t.record(i * 1_000_000);
         }
+        assert!(t.raw_percentile(0.99).is_none(), "biased prefix must not serve percentiles");
         let p = t.percentile_best(0.99);
         assert!(p >= 99_000_000, "hist upper edge covers the tail: {p}");
+        assert!(p <= 100_000_000, "clamped to observed max: {p}");
         assert!(LatencyStats::new(0).raw_percentile(0.5).is_none());
+    }
+
+    #[test]
+    fn merge_marks_raw_as_biased() {
+        let mut a = LatencyStats::new(2);
+        let mut b = LatencyStats::new(2);
+        for v in [1_000_000u64, 2_000_000] {
+            a.record(v);
+        }
+        for v in [90_000_000u64, 95_000_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.raw_us().len(), 2, "curve prefix is still exported");
+        assert!(!a.raw_exhaustive());
+        assert!(a.raw_percentile(0.99).is_none());
+        // percentile_best must NOT report 2 ms (the biased prefix p99)
+        let p = a.percentile_best(0.99);
+        assert!(p >= 90_000_000 && p <= 95_000_000, "p99={p}");
+    }
+
+    #[test]
+    fn merge_equals_concatenated_stream() {
+        let xs = [100u64, 999, 1_000_000, 3_000_000, 250];
+        let ys = [7u64, 90_000_000, 1_000_000_000];
+        let mut a = LatencyStats::new(0);
+        let mut b = LatencyStats::new(0);
+        let mut c = LatencyStats::new(0);
+        for &v in &xs {
+            a.record(v);
+            c.record(v);
+        }
+        for &v in &ys {
+            b.record(v);
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), c.bucket_counts());
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.min(), c.min());
+        assert_eq!(a.max(), c.max());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), c.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn mixed_resolution_merge_rebins() {
+        let mut coarse = LatencyStats::with_resolution(8, 0);
+        coarse.record(3_000_000);
+        let mut fine = LatencyStats::with_resolution(64, 0);
+        fine.record(1_000_000);
+        fine.merge(&coarse);
+        assert_eq!(fine.count(), 2);
+        // re-binned at the coarse bucket's upper edge, then clamped
+        assert_eq!(fine.percentile(1.0), 3_000_000);
     }
 
     #[test]
@@ -286,6 +509,7 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(0.5), 0);
         assert_eq!(s.min(), 0);
+        assert!(s.raw_exhaustive(), "empty capture is trivially complete");
     }
 
     #[test]
@@ -326,5 +550,7 @@ mod tests {
         assert_eq!(a.count(), 2);
         assert!((a.mean() - 2000.0).abs() < 1e-9);
         assert_eq!(a.max(), 3000);
+        assert!(a.raw_exhaustive(), "both captures fit: still exact");
+        assert_eq!(a.raw_percentile(1.0).unwrap(), 3000);
     }
 }

@@ -69,11 +69,13 @@ pub struct TenantStats {
 }
 
 impl TenantStats {
-    /// Fresh collector for one tenant.
+    /// Fresh collector for one tenant. `sub_buckets` sets the
+    /// log-linear histogram resolution (`sim.hist_sub_buckets`).
     pub fn new(
         tenant: u16,
         name: String,
         weight: f64,
+        sub_buckets: u32,
         raw_capacity: usize,
         bandwidth_window: Nanos,
     ) -> TenantStats {
@@ -81,8 +83,8 @@ impl TenantStats {
             tenant,
             name,
             weight,
-            write_latency: LatencyStats::new(raw_capacity),
-            read_latency: LatencyStats::new(raw_capacity),
+            write_latency: LatencyStats::with_resolution(sub_buckets, raw_capacity),
+            read_latency: LatencyStats::with_resolution(sub_buckets, raw_capacity),
             write_phases: PhaseStats::default(),
             read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(bandwidth_window),
@@ -123,7 +125,7 @@ mod tests {
 
     #[test]
     fn percentiles_track_recorded_samples() {
-        let mut t = TenantStats::new(0, "victim-0".into(), 1.0, 1000, 1_000_000);
+        let mut t = TenantStats::new(0, "victim-0".into(), 1.0, 64, 1000, 1_000_000);
         for i in 1..=100u64 {
             t.write_latency.record(i * 1_000_000);
         }

@@ -61,8 +61,14 @@ impl Simulator {
         let mut policy = cache::build(&cfg);
         policy.init(&mut ftl)?;
         Ok(Simulator {
-            write_latency: LatencyStats::new(cfg.sim.latency_samples),
-            read_latency: LatencyStats::new(cfg.sim.latency_samples),
+            write_latency: LatencyStats::with_resolution(
+                cfg.sim.hist_sub_buckets,
+                cfg.sim.latency_samples,
+            ),
+            read_latency: LatencyStats::with_resolution(
+                cfg.sim.hist_sub_buckets,
+                cfg.sim.latency_samples,
+            ),
             write_phases: PhaseStats::default(),
             read_phases: PhaseStats::default(),
             bandwidth: BandwidthTimeline::new(cfg.sim.bandwidth_window),

@@ -1,0 +1,109 @@
+//! Acceptance test for the device-population fleet axis (PR 7): eight
+//! heterogeneous devices (capacity / OP / pre-aged wear) run every
+//! scheme on the aggressor+victims mix, per-device histograms fold into
+//! fleet-wide percentiles by pure merges, and the rollup is
+//! byte-identical whether the population ran on one thread or eight.
+
+use ips::config::presets;
+use ips::coordinator::fleet::{
+    device_table, fold_population, population_csv, population_json, population_table,
+    run_population, PopulationSpec,
+};
+
+fn population(devices: u32, threads: usize) -> PopulationSpec {
+    let mut base = presets::small();
+    base.cache.slc_cache_bytes = 1 << 20;
+    base.host.tenants = 3; // 1 aggressor + 2 victims
+    base.host.aggressor_cache_mult = 1.5;
+    PopulationSpec::heterogeneous(base, devices, 42, threads)
+}
+
+#[test]
+fn fleet_rollup_is_byte_identical_serial_vs_parallel() {
+    let spec = population(8, 1);
+    assert_eq!(spec.schemes.len(), 5, "all schemes ride the population");
+    let serial = run_population(&spec).unwrap();
+    let parallel = run_population(&population(8, 8)).unwrap();
+    assert_eq!(serial.len(), 5 * 8, "5 schemes x 8 devices");
+
+    let a = fold_population(&serial);
+    let b = fold_population(&parallel);
+    let ja = population_json(&a);
+    let jb = population_json(&b);
+    assert_eq!(ja, jb, "fleet JSON is thread-count-invariant, byte for byte");
+    assert_eq!(
+        population_csv(&a),
+        population_csv(&b),
+        "and so is the CSV export"
+    );
+    assert_eq!(
+        population_table(&a).render(),
+        population_table(&b).render(),
+        "and the rendered table"
+    );
+    assert!(ja.starts_with("{\"rows\":["));
+    for scheme in ["tlc-only", "baseline", "ips", "ips-agc", "coop"] {
+        assert!(ja.contains(&format!("\"scheme\":\"{scheme}\"")), "{scheme} row present");
+    }
+
+    // every cell folded the whole population and its quantiles are
+    // bounded by what was actually observed (the PR-7 clamp fix)
+    assert_eq!(a.len(), 5);
+    for c in &a {
+        assert_eq!(c.devices, 8);
+        assert!(c.write_latency.count() > 0);
+        assert!(c.victim_latency.count() > 0, "{}: victim tenants folded", c.scheme);
+        for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+            let p = c.write_latency.percentile(q);
+            assert!(p >= c.write_latency.min() && p <= c.write_latency.max());
+        }
+        assert!(c.victim_latency.percentile(0.999) >= c.victim_latency.percentile(0.99));
+    }
+}
+
+#[test]
+fn fleet_path_never_carries_raw_sample_vectors() {
+    let runs = run_population(&population(8, 4)).unwrap();
+    for r in &runs {
+        assert!(
+            r.summary.write_latency.raw_us().is_empty(),
+            "{} device {}: fleet devices must not retain raw vectors",
+            r.scheme.name(),
+            r.profile.device
+        );
+        assert!(r.summary.read_latency.raw_us().is_empty());
+        for t in &r.summary.tenants {
+            assert!(t.write_latency.raw_us().is_empty());
+            assert!(t.read_latency.raw_us().is_empty());
+        }
+    }
+    // the per-device detail view renders the heterogeneity axes
+    let detail = device_table(&runs).render();
+    for col in ["bpp", "logical_frac", "pre_age", "victim_p99_ms"] {
+        assert!(detail.contains(col), "device table lists {col}");
+    }
+}
+
+#[test]
+fn population_is_heterogeneous_and_paired_across_schemes() {
+    let spec = population(8, 1);
+    let profiles = spec.profiles();
+    assert_eq!(profiles.len(), 8);
+    let distinct = |f: &dyn Fn(&ips::coordinator::fleet::DeviceProfile) -> u64| {
+        let mut v: Vec<u64> = profiles.iter().map(f).collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    };
+    assert!(distinct(&|p| p.blocks_per_plane as u64) >= 2, "capacity varies");
+    assert!(distinct(&|p| (p.logical_frac * 100.0) as u64) >= 3, "OP varies");
+    assert!(distinct(&|p| p.pre_age_erases as u64) >= 3, "wear varies");
+
+    // pairing: each scheme's 8 devices are the same 8 devices, so the
+    // cross-scheme comparison isolates the scheme from the hardware
+    let runs = run_population(&spec).unwrap();
+    for scheme_runs in runs.chunks(8) {
+        let devs: Vec<_> = scheme_runs.iter().map(|r| r.profile).collect();
+        assert_eq!(devs, profiles, "{}: same population", scheme_runs[0].scheme.name());
+    }
+}

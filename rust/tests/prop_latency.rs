@@ -1,0 +1,138 @@
+//! Property suite for the mergeable log-linear latency histograms
+//! behind the fleet fold ([`ips::metrics::LatencyStats`]):
+//!
+//! 1. **merge ≡ concatenation** — merging two histograms is
+//!    indistinguishable from recording both streams into one collector
+//!    (bucket-exact, so the fleet fold is associative and
+//!    order-independent);
+//! 2. **bounded quantile error** — every histogram percentile brackets
+//!    the exact rank statistic from below within the configured
+//!    relative-error bound, and never escapes the observed `[min, max]`
+//!    range (the PR-7 clamp bugfix, generalized);
+//! 3. **sharded fold ≡ serial record** — round-robin sharding a stream
+//!    over k collectors and merging them back reproduces the serial
+//!    collector byte for byte (the serial-vs-parallel fleet invariant
+//!    at the data-structure level).
+//!
+//! Failures shrink to a minimal sample vector.
+
+use ips::metrics::LatencyStats;
+use ips::util::prop::{self, one_of, tuple2, u64_up_to, vec_of};
+
+/// Quantile grid the properties sweep (endpoints included).
+const Q_GRID: [f64; 6] = [0.0, 0.25, 0.5, 0.9, 0.99, 1.0];
+
+/// Sample span: ns values from the sub-microsecond linear region up to
+/// tens of seconds, so draws cross many power-of-two bands.
+const MAX_NS: u64 = 50_000_000_000;
+
+fn record_all(sub: u32, samples: &[u64]) -> LatencyStats {
+    let mut s = LatencyStats::with_resolution(sub, 0);
+    for &v in samples {
+        s.record(v);
+    }
+    s
+}
+
+/// Exact rank-`q` statistic (the oracle the histogram approximates).
+fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+    let target = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[target.min(sorted.len()) - 1]
+}
+
+fn same_moments(a: &LatencyStats, b: &LatencyStats) -> Result<(), String> {
+    if a.count() != b.count() {
+        return Err(format!("count {} != {}", a.count(), b.count()));
+    }
+    if a.min() != b.min() || a.max() != b.max() {
+        return Err(format!(
+            "range [{}, {}] != [{}, {}]",
+            a.min(),
+            a.max(),
+            b.min(),
+            b.max()
+        ));
+    }
+    // equal sums and counts -> bit-identical means
+    if a.mean().to_bits() != b.mean().to_bits() {
+        return Err(format!("mean {} != {}", a.mean(), b.mean()));
+    }
+    if a.bucket_counts() != b.bucket_counts() {
+        return Err("bucket counts diverge".into());
+    }
+    for q in Q_GRID {
+        if a.percentile(q) != b.percentile(q) {
+            return Err(format!("p{q}: {} != {}", a.percentile(q), b.percentile(q)));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn merge_is_concatenation() {
+    let gen = tuple2(
+        one_of(vec![2u32, 8, 64, 256]),
+        tuple2(vec_of(u64_up_to(MAX_NS), 0, 64), vec_of(u64_up_to(MAX_NS), 0, 64)),
+    );
+    prop::check("merge == concatenated stream", 256, gen, |&(sub, (ref xs, ref ys))| {
+        let mut merged = record_all(sub, xs);
+        merged.merge(&record_all(sub, ys));
+        let mut both = xs.clone();
+        both.extend_from_slice(ys);
+        same_moments(&merged, &record_all(sub, &both))
+    });
+}
+
+#[test]
+fn percentiles_bracket_the_exact_rank_within_bound() {
+    let gen = tuple2(one_of(vec![2u32, 8, 64, 256]), vec_of(u64_up_to(MAX_NS), 1, 96));
+    prop::check("quantile error is bounded", 256, gen, |&(sub, ref xs)| {
+        let s = record_all(sub, xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let eps = s.relative_error_bound();
+        for q in Q_GRID {
+            let exact = exact_percentile(&sorted, q);
+            let approx = s.percentile(q);
+            if approx < exact {
+                return Err(format!("p{q}: approx {approx} below exact {exact}"));
+            }
+            let bound = exact + (exact as f64 * eps) as u64 + 1;
+            if approx > bound {
+                return Err(format!(
+                    "p{q}: approx {approx} exceeds exact {exact} + {:.1}% bound {bound}",
+                    eps * 100.0
+                ));
+            }
+            if approx > s.max() || approx < s.min() {
+                return Err(format!(
+                    "p{q}: {approx} escapes observed [{}, {}]",
+                    s.min(),
+                    s.max()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_fold_matches_serial_record() {
+    let gen = tuple2(
+        tuple2(one_of(vec![2u32, 64]), u64_up_to(7)),
+        vec_of(u64_up_to(MAX_NS), 0, 128),
+    );
+    prop::check("k-way shard + merge == serial", 256, gen, |&((sub, k), ref xs)| {
+        let shards = k as usize + 1;
+        let mut parts: Vec<LatencyStats> =
+            (0..shards).map(|_| LatencyStats::with_resolution(sub, 0)).collect();
+        for (i, &v) in xs.iter().enumerate() {
+            parts[i % shards].record(v);
+        }
+        let mut folded = LatencyStats::with_resolution(sub, 0);
+        for p in &parts {
+            folded.merge(p);
+        }
+        same_moments(&folded, &record_all(sub, xs))
+    });
+}
