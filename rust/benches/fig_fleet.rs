@@ -11,7 +11,7 @@
 //! silently bending the fleet figures.
 use ips::config::{presets, MixKind, Scheme};
 use ips::coordinator::fleet::{
-    fold_population, population_json, run_population, PopulationSpec,
+    fold_population, population_json, run_population, run_population_streaming, PopulationSpec,
 };
 use ips::trace::scenario::Scenario;
 use ips::util::bench::{black_box, Harness};
@@ -28,6 +28,7 @@ fn spec(devices: u32, threads: usize) -> PopulationSpec {
         schemes: vec![Scheme::Baseline, Scheme::Ips],
         mixes: vec![MixKind::AggressorVictims],
         scenario: Scenario::Bursty,
+        fault_rate: 0.0,
         seed: 42,
         threads,
     }
@@ -56,6 +57,18 @@ fn main() {
         h.bench("fleet/fold-only", Some(runs.len() as u64), || {
             let cells = fold_population(&runs);
             black_box(cells[0].write_latency.count());
+        });
+    }
+
+    // the streaming sharded fold with fault injection on: the
+    // rack-scale path (bounded resident runs, healthy/faulted split)
+    {
+        let mut s = spec(4, 2);
+        s.fault_rate = 0.5;
+        let jobs = s.devices as u64 * s.schemes.len() as u64;
+        h.bench("fleet/streaming-faulted-4dev", Some(jobs), || {
+            let (cells, csv, stats) = run_population_streaming(&s).unwrap();
+            black_box((cells.len(), csv.len(), stats.peak_resident_runs));
         });
     }
 

@@ -521,6 +521,34 @@ impl CachePolicy for Baseline {
         Ok(now)
     }
 
+    fn retire_plane(&mut self, ftl: &mut Ftl, plane: crate::flash::PlaneId) -> Result<()> {
+        // The FTL already salvaged every valid page off the plane and
+        // blocked it from allocation; our job is dropping the pool and
+        // shrinking capacity so the partitioner re-carves slices over
+        // the survivors. Erasing or migrating anything here would touch
+        // hardware that no longer exists.
+        let g = ftl.array.geometry();
+        let per_block = g.wordlines_per_block() as u64;
+        let pi = plane.0 as usize;
+        let pool = &mut self.pools[pi];
+        let mut dropped = pool.free.len() as u64;
+        pool.free.clear();
+        if pool.active.take().is_some() {
+            dropped += 1;
+        }
+        while pool.used.pop_front().is_some() {
+            dropped += 1;
+        }
+        if self.dynamic {
+            // dynamic pools size by the per-plane claim cap, not by
+            // currently-held blocks: the plane's whole share is gone
+            dropped = dropped.max(self.max_blocks_per_plane as u64);
+            self.claimed[pi] = 0;
+        }
+        self.total_slc_pages = self.total_slc_pages.saturating_sub(dropped * per_block);
+        Ok(())
+    }
+
     fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
         // Reclaim everything: used blocks AND the partially-written
         // active blocks (paper §III: at the end of each workload all

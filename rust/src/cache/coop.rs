@@ -142,7 +142,15 @@ impl CachePolicy for Coop {
         grant: CacheGrant,
     ) -> Result<Completion> {
         let n = ftl.planes();
-        let start_plane = fastrand(ftl, lpn) % n;
+        let mut start_plane = fastrand(ftl, lpn) % n;
+        // skip retired planes (fault injection): their IPS windows and
+        // pools are gone, a live sibling takes the slot
+        for _ in 0..n {
+            if !ftl.array.plane_lost(PlaneId(start_plane)) {
+                break;
+            }
+            start_plane = (start_plane + 1) % n;
+        }
         if grant.allows_slc() {
             // Step 1: IPS window (deterministic plane spread)
             if let Some(c) = self.ips.try_slc_write(ftl, start_plane, lpn, now)? {
@@ -203,6 +211,14 @@ impl CachePolicy for Coop {
         // the IPS window's data is already in its final location.
         self.trad.retire_active(ftl);
         Ok(now)
+    }
+
+    fn retire_plane(&mut self, ftl: &mut Ftl, plane: PlaneId) -> Result<()> {
+        // all three halves hold per-plane state: AGC victims, IPS
+        // windows, and the traditional pool
+        self.agc.forget_plane(plane);
+        self.ips.retire_plane(ftl, plane)?;
+        self.trad.retire_plane(ftl, plane)
     }
 
     fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {

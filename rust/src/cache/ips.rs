@@ -283,8 +283,17 @@ impl CachePolicy for Ips {
         grant: CacheGrant,
     ) -> Result<Completion> {
         let n = self.planes.len() as u32;
-        let plane = self.rr % n;
+        let mut plane = self.rr % n;
         self.rr = self.rr.wrapping_add(1);
+        // rotate past retired planes (fault injection): their windows
+        // are gone, a live sibling takes the stripe slot
+        for _ in 0..n {
+            if !ftl.array.plane_lost(PlaneId(plane)) {
+                break;
+            }
+            plane = self.rr % n;
+            self.rr = self.rr.wrapping_add(1);
+        }
         // Step 1: SLC window (skipped when the partitioner denied a
         // new cache allocation)
         if grant.allows_slc() {
@@ -313,7 +322,24 @@ impl CachePolicy for Ips {
         let bpp = ftl.array.geometry().blocks_per_plane as u64;
         let designatable =
             (self.max_designated as u64).min(bpp.saturating_sub(self.reserve_blocks as u64));
-        designatable * self.group_pages * ftl.planes() as u64
+        // live planes, not configured planes: a retired plane's windows
+        // are gone and the partitioner must not carve slices from them
+        designatable * self.group_pages * ftl.array.live_planes() as u64
+    }
+
+    fn retire_plane(&mut self, ftl: &mut Ftl, plane: PlaneId) -> Result<()> {
+        // The FTL salvaged the plane's valid pages already; drop its
+        // window bookkeeping so the write path and the capacity
+        // accounting stop seeing it. Blocks in `fillable`/`convertible`
+        // were never registered closed, so no victim-index cleanup is
+        // needed here.
+        let _ = ftl;
+        let st = &mut self.planes[plane.0 as usize];
+        st.fillable.clear();
+        st.convertible.clear();
+        st.designated = 0;
+        st.gc_backoff = 0;
+        Ok(())
     }
 
     fn idle_work(&mut self, _ftl: &mut Ftl, now: Nanos, _deadline: Nanos) -> Result<Nanos> {

@@ -115,6 +115,14 @@ impl CachePolicy for IpsAgc {
         Ok(t)
     }
 
+    fn retire_plane(&mut self, ftl: &mut Ftl, plane: crate::flash::PlaneId) -> Result<()> {
+        // drop AGC victims on the lost plane before the IPS half drops
+        // its windows — migrating from or erasing on dead hardware is
+        // wasted (and misleading) work
+        self.agc.forget_plane(plane);
+        self.ips.retire_plane(ftl, plane)
+    }
+
     fn flush(&mut self, ftl: &mut Ftl, now: Nanos) -> Result<Nanos> {
         // Drain all available AGC work (bounded by pending reprogram
         // capacity); used SLC pages that cannot be fed (no invalid data

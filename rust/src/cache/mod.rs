@@ -102,6 +102,17 @@ pub trait CachePolicy: Send {
         Ok(now)
     }
 
+    /// A plane was retired mid-run (fault injection). Invoked *after*
+    /// [`Ftl::retire_plane`] has salvaged the plane's valid pages and
+    /// blocked it from allocation: the scheme must drop every pool
+    /// entry, active block, or victim it holds on the lost plane and
+    /// shrink its capacity accounting so the partitioner re-carves
+    /// slices over the surviving planes. Schemes with no per-plane
+    /// state (TLC-only) keep the no-op default.
+    fn retire_plane(&mut self, _ftl: &mut Ftl, _plane: crate::flash::PlaneId) -> Result<()> {
+        Ok(())
+    }
+
     /// End-of-workload reclamation (daily scenario; paper §III: "at the
     /// end of each workload, all data in the SLC cache is migrated to
     /// the TLC space, and the used blocks are erased" — scheme-specific

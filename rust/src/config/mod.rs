@@ -640,6 +640,94 @@ impl Default for SimConfig {
     }
 }
 
+/// What kind of mid-run fault the device suffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Healthy device — no fault is injected (default).
+    None,
+    /// A plane dies at the trigger time: it is retired from allocation,
+    /// its resident valid pages are salvage-migrated to live planes,
+    /// and the cache scheme's capacity accounting shrinks.
+    PlaneLoss,
+    /// Wear degradation: program and erase latencies are multiplied
+    /// from the trigger time on. Reads are unaffected.
+    Slowdown,
+}
+
+impl FaultKind {
+    /// Parse a scheme name as used on the CLI / in TOML.
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "none" => Ok(FaultKind::None),
+            "plane-loss" | "plane_loss" => Ok(FaultKind::PlaneLoss),
+            "slowdown" => Ok(FaultKind::Slowdown),
+            _ => Err(Error::config(format!(
+                "unknown fault kind {s:?} (none|plane-loss|slowdown)"
+            ))),
+        }
+    }
+
+    /// Canonical CLI/TOML name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::None => "none",
+            FaultKind::PlaneLoss => "plane-loss",
+            FaultKind::Slowdown => "slowdown",
+        }
+    }
+}
+
+/// Deterministic mid-run fault injection (the fleet's failure axis).
+///
+/// The trigger is a *fraction of the workload's arrival horizon* rather
+/// than an absolute time, so the same schedule is meaningful across
+/// scenarios and device scales; the engine computes the absolute
+/// trigger from its materialized traces before replay starts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// What breaks.
+    pub kind: FaultKind,
+    /// When it breaks, as a fraction of the max trace arrival time.
+    pub at_frac: f64,
+    /// [`FaultKind::PlaneLoss`]: flat index of the plane that dies.
+    pub plane: u32,
+    /// [`FaultKind::Slowdown`]: program/erase latency multiplier ×100
+    /// (150 = 1.5× slower).
+    pub slow_x100: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { kind: FaultKind::None, at_frac: 0.5, plane: 0, slow_x100: 150 }
+    }
+}
+
+impl FaultConfig {
+    /// Validate against the device geometry.
+    pub fn validate(&self, planes: u32) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.at_frac) {
+            return Err(Error::config("fault.at_frac must be in [0, 1]"));
+        }
+        if self.kind == FaultKind::PlaneLoss {
+            if self.plane >= planes {
+                return Err(Error::config(format!(
+                    "fault.plane {} out of range (device has {planes} planes)",
+                    self.plane
+                )));
+            }
+            if planes < 2 {
+                return Err(Error::config(
+                    "fault: plane-loss needs at least two planes",
+                ));
+            }
+        }
+        if self.kind == FaultKind::Slowdown && self.slow_x100 < 100 {
+            return Err(Error::config("fault.slow_x100 must be >= 100"));
+        }
+        Ok(())
+    }
+}
+
 /// Block front end ([`crate::blk`]): sector-granular bios with
 /// split/merge/RMW and flush/FUA barriers between the host and the FTL.
 #[derive(Clone, Copy, Debug)]
@@ -718,6 +806,8 @@ pub struct Config {
     pub blk: BlkConfig,
     /// Engine settings.
     pub sim: SimConfig,
+    /// Mid-run fault injection (fleet degradation axis).
+    pub fault: FaultConfig,
 }
 
 impl Config {
@@ -728,6 +818,7 @@ impl Config {
         self.cache.validate()?;
         self.host.validate()?;
         self.blk.validate(self.geometry.page_bytes)?;
+        self.fault.validate(self.geometry.planes())?;
         // cache must fit: traditional SLC capacity consumes blocks in
         // SLC mode (1 page per word line).
         let slc_pages_needed =
@@ -874,7 +965,18 @@ impl Config {
             logical_frac: v.f64_or("sim.logical_frac", s.logical_frac),
             pre_age_erases: v.u64_or("sim.pre_age_erases", s.pre_age_erases as u64) as u32,
         };
-        let cfg = Config { geometry, timing, cache, host, blk, sim };
+        let f = &base.fault;
+        let fault_kind = match v.lookup("fault.kind") {
+            Some(crate::util::toml::Value::Str(s)) => FaultKind::parse(s)?,
+            _ => f.kind,
+        };
+        let fault = FaultConfig {
+            kind: fault_kind,
+            at_frac: v.f64_or("fault.at_frac", f.at_frac),
+            plane: v.u64_or("fault.plane", f.plane as u64) as u32,
+            slow_x100: v.u64_or("fault.slow_x100", f.slow_x100 as u64) as u32,
+        };
+        let cfg = Config { geometry, timing, cache, host, blk, sim, fault };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -936,6 +1038,31 @@ mod tests {
         assert_eq!(cfg.cache.scheme, Scheme::Ips);
         assert_eq!(cfg.cache.idle_threshold, 5);
         assert_eq!(cfg.sim.seed, 9);
+    }
+
+    #[test]
+    fn fault_toml_overrides_and_bounds() {
+        let base = presets::small();
+        let cfg = Config::from_toml_str(
+            "[fault]\nkind = \"plane-loss\"\nat_frac = 0.25\nplane = 2",
+            base.clone(),
+        )
+        .unwrap();
+        assert_eq!(cfg.fault.kind, FaultKind::PlaneLoss);
+        assert_eq!(cfg.fault.at_frac, 0.25);
+        assert_eq!(cfg.fault.plane, 2);
+        // out-of-range plane refused against the geometry
+        assert!(Config::from_toml_str(
+            "[fault]\nkind = \"plane-loss\"\nplane = 99",
+            base.clone(),
+        )
+        .is_err());
+        // slowdown below nominal refused
+        assert!(Config::from_toml_str(
+            "[fault]\nkind = \"slowdown\"\nslow_x100 = 50",
+            base,
+        )
+        .is_err());
     }
 
     #[test]

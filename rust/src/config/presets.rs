@@ -38,6 +38,7 @@ pub fn table1() -> Config {
         host: HostConfig::default(),
         blk: BlkConfig::default(),
         sim: SimConfig::default(),
+        fault: FaultConfig::default(),
     }
 }
 
@@ -94,6 +95,7 @@ pub fn small() -> Config {
         host: HostConfig::default(),
         blk: BlkConfig::default(),
         sim: SimConfig { verify: true, ..SimConfig::default() },
+        fault: FaultConfig::default(),
     }
 }
 
@@ -121,6 +123,7 @@ pub fn bench_medium() -> Config {
         host: HostConfig::default(),
         blk: BlkConfig::default(),
         sim: SimConfig::default(),
+        fault: FaultConfig::default(),
     }
 }
 
@@ -151,6 +154,7 @@ pub fn large() -> Config {
         host: HostConfig::default(),
         blk: BlkConfig::default(),
         sim: SimConfig::default(),
+        fault: FaultConfig::default(),
     }
 }
 

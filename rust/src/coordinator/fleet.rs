@@ -8,8 +8,13 @@
 //! parallel sweep produces byte-identical summaries to a serial one —
 //! asserted by `tests/integration_multitenant.rs`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
 use super::runner::parallel_map;
-use crate::config::{AttributionMode, Config, MixKind, Nanos, QosMode, SchedKind, Scheme};
+use crate::config::{
+    AttributionMode, Config, FaultConfig, FaultKind, MixKind, Nanos, QosMode, SchedKind, Scheme,
+};
 use crate::host::{MultiTenantSimulator, MultiTenantSummary};
 use crate::metrics::{LatencyStats, Ledger, PhaseStats};
 use crate::trace::scenario::Scenario;
@@ -492,10 +497,14 @@ pub fn tenant_table(s: &MultiTenantSummary) -> TextTable {
 
 /// One simulated SSD's heterogeneity profile within a device
 /// population: capacity (blocks per plane), over-provisioning
-/// (`sim.logical_frac`), and pre-aged wear (`sim.pre_age_erases`).
+/// (`sim.logical_frac`), pre-aged wear (`sim.pre_age_erases`), the
+/// workload-skew class (hot/neutral/cold devices scale the aggressor's
+/// cache-footprint multiplier), and the fault schedule (what breaks on
+/// this device mid-run, if anything).
 /// Profiles are a pure function of `(population seed, device index)` —
 /// never of the scheme/mix axes — so every scheme is measured over the
-/// *same* population and cross-scheme comparisons stay paired.
+/// *same* population (same capacities, same skew, *same faults*) and
+/// cross-scheme comparisons stay paired.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceProfile {
     /// Device index within the population.
@@ -506,6 +515,11 @@ pub struct DeviceProfile {
     pub logical_frac: f64,
     /// Per-device max initial erase count (0 = pristine; the wear axis).
     pub pre_age_erases: u32,
+    /// Workload-skew multiplier applied to
+    /// `host.aggressor_cache_mult` (the hot/cold device-class axis).
+    pub skew: f64,
+    /// Mid-run fault schedule (`kind == None` for healthy devices).
+    pub fault: FaultConfig,
     /// Per-device seed component mixed into each run's trace seed.
     pub seed: u64,
 }
@@ -524,6 +538,9 @@ pub struct PopulationSpec {
     pub mixes: Vec<MixKind>,
     /// Scenario each device runs under.
     pub scenario: Scenario,
+    /// Fraction of the population assigned a fault schedule
+    /// (clamped to `[0, 1]`; 0 = every device healthy).
+    pub fault_rate: f64,
     /// Base seed: profiles and per-run seeds derive from it.
     pub seed: u64,
     /// Worker threads.
@@ -537,6 +554,13 @@ const BPP_QUARTER_STEPS: [u32; 3] = [3, 4, 6];
 const OP_STEPS: [f64; 4] = [0.70, 0.75, 0.80, 0.85];
 /// Pre-age steps (max initial erases: pristine → heavily worn).
 const AGE_STEPS: [u32; 4] = [0, 50, 200, 1000];
+/// Workload-skew steps (cold / neutral / hot device classes, as a
+/// multiplier on the aggressor's cache-footprint knob).
+const SKEW_STEPS: [f64; 3] = [0.5, 1.0, 1.5];
+/// Fault-onset steps, as a fraction of the trace arrival horizon.
+const FAULT_AT_STEPS: [f64; 3] = [0.25, 0.50, 0.75];
+/// Wear-slowdown steps (program/erase latency multiplier ×100).
+const SLOW_STEPS: [u32; 3] = [150, 200, 400];
 
 impl PopulationSpec {
     /// A heterogeneous population over all schemes on the
@@ -549,6 +573,7 @@ impl PopulationSpec {
             schemes: Scheme::all().to_vec(),
             mixes: vec![MixKind::AggressorVictims],
             scenario: Scenario::Bursty,
+            fault_rate: 0.0,
             seed,
             threads,
         }
@@ -561,20 +586,51 @@ impl PopulationSpec {
     /// hash collisions.
     pub fn profiles(&self) -> Vec<DeviceProfile> {
         let quarter = (self.base.geometry.blocks_per_plane / 4).max(1);
+        let planes = self.base.geometry.planes();
         (0..self.devices)
             .map(|d| {
                 let bpp_i = ((d as u64 + mix64(self.seed, 1)) % 3) as usize;
                 let op_i = ((d as u64 + mix64(self.seed, 2)) % 4) as usize;
                 let age_i = ((3 * d as u64 + mix64(self.seed, 3)) % 4) as usize;
+                let skew_i = ((5 * d as u64 + mix64(self.seed, 4)) % 3) as usize;
                 DeviceProfile {
                     device: d,
                     blocks_per_plane: (quarter * BPP_QUARTER_STEPS[bpp_i]).max(4),
                     logical_frac: OP_STEPS[op_i],
                     pre_age_erases: AGE_STEPS[age_i],
+                    skew: SKEW_STEPS[skew_i],
+                    fault: self.fault_for(d, planes),
                     seed: mix64(self.seed, mix64(hash_str("device"), d as u64)),
                 }
             })
             .collect()
+    }
+
+    /// The fault schedule for one device: a pure function of
+    /// `(population seed, device index)` — never of the scheme/mix axes
+    /// — so every scheme sees the *identical* degradation pattern and
+    /// healthy-vs-faulted deltas are paired comparisons. Roughly
+    /// `fault_rate` of the population is faulted; faulted devices
+    /// alternate plane loss and wear slowdown with cycled onset times.
+    fn fault_for(&self, d: u32, planes: u32) -> FaultConfig {
+        let rate_mills = (self.fault_rate.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        let h = mix64(self.seed, mix64(hash_str("fault"), d as u64));
+        if h % 1000 >= rate_mills {
+            return FaultConfig::default(); // kind: None — healthy
+        }
+        // single-plane geometries cannot lose a plane; fall back to
+        // slowdown-only schedules rather than failing validation
+        let kind = if planes >= 2 && (h >> 10) % 2 == 0 {
+            FaultKind::PlaneLoss
+        } else {
+            FaultKind::Slowdown
+        };
+        FaultConfig {
+            kind,
+            at_frac: FAULT_AT_STEPS[((h >> 12) % 3) as usize],
+            plane: ((h >> 16) % planes.max(1) as u64) as u32,
+            slow_x100: SLOW_STEPS[((h >> 24) % 3) as usize],
+        }
     }
 
     /// The per-device run config for one (scheme, mix) cell. The fleet
@@ -589,6 +645,8 @@ impl PopulationSpec {
         cfg.geometry.blocks_per_plane = p.blocks_per_plane;
         cfg.sim.logical_frac = p.logical_frac;
         cfg.sim.pre_age_erases = p.pre_age_erases;
+        cfg.host.aggressor_cache_mult = (self.base.host.aggressor_cache_mult * p.skew).max(0.1);
+        cfg.fault = p.fault;
         cfg.sim.latency_samples = 0;
         let cell = mix64(hash_str(scheme.name()), hash_str(mix.name()));
         cfg.sim.seed = mix64(p.seed, cell);
@@ -646,6 +704,10 @@ pub struct PopulationSummary {
     pub scenario: String,
     /// Devices folded in.
     pub devices: u32,
+    /// Devices with no fault scheduled.
+    pub devices_healthy: u32,
+    /// Devices with a fault schedule (plane loss or wear slowdown).
+    pub devices_faulted: u32,
     /// Fleet-wide host write latency (merged histograms).
     pub write_latency: LatencyStats,
     /// Fleet-wide host read latency.
@@ -653,6 +715,11 @@ pub struct PopulationSummary {
     /// Fleet-wide victim-tenant write latency (merged across every
     /// victim tenant of every device — the headline tail).
     pub victim_latency: LatencyStats,
+    /// Victim-tenant write latency over healthy devices only.
+    pub victim_latency_healthy: LatencyStats,
+    /// Victim-tenant write latency over faulted devices only — read
+    /// against the healthy column, this is the degradation headline.
+    pub victim_latency_faulted: LatencyStats,
     /// Fleet-wide write phase split.
     pub write_phases: PhaseStats,
     /// Fleet-wide WA ledger.
@@ -674,9 +741,13 @@ impl PopulationSummary {
             mix: mix.to_string(),
             scenario: scenario.to_string(),
             devices: 0,
+            devices_healthy: 0,
+            devices_faulted: 0,
             write_latency: LatencyStats::with_resolution(sub_buckets, 0),
             read_latency: LatencyStats::with_resolution(sub_buckets, 0),
             victim_latency: LatencyStats::with_resolution(sub_buckets, 0),
+            victim_latency_healthy: LatencyStats::with_resolution(sub_buckets, 0),
+            victim_latency_faulted: LatencyStats::with_resolution(sub_buckets, 0),
             write_phases: PhaseStats::default(),
             ledger: Ledger::default(),
             background: Ledger::default(),
@@ -690,6 +761,29 @@ impl PopulationSummary {
     pub fn wa(&self) -> f64 {
         self.ledger.write_amplification()
     }
+
+    /// Merge another rollup of the same `(scheme, mix)` cell into this
+    /// one. Every constituent is an exact counter addition (histograms,
+    /// phases, ledgers) or a sum/max, so merging shard partials in
+    /// shard order is byte-identical to folding the devices serially —
+    /// the invariant the streaming sweep rests on.
+    pub fn merge(&mut self, other: &PopulationSummary) {
+        debug_assert!(self.scheme == other.scheme && self.mix == other.mix);
+        self.devices += other.devices;
+        self.devices_healthy += other.devices_healthy;
+        self.devices_faulted += other.devices_faulted;
+        self.write_latency.merge(&other.write_latency);
+        self.read_latency.merge(&other.read_latency);
+        self.victim_latency.merge(&other.victim_latency);
+        self.victim_latency_healthy.merge(&other.victim_latency_healthy);
+        self.victim_latency_faulted.merge(&other.victim_latency_faulted);
+        self.write_phases.merge(&other.write_phases);
+        self.ledger.merge(&other.ledger);
+        self.background.merge(&other.background);
+        self.host_bytes_written += other.host_bytes_written;
+        self.throttle_stalls += other.throttle_stalls;
+        self.sim_end_max = self.sim_end_max.max(other.sim_end_max);
+    }
 }
 
 /// Fold per-device runs into per-(scheme, mix) fleet summaries, in
@@ -699,34 +793,193 @@ impl PopulationSummary {
 pub fn fold_population(runs: &[DeviceRun]) -> Vec<PopulationSummary> {
     let mut out: Vec<PopulationSummary> = Vec::new();
     for r in runs {
-        let s = &r.summary;
-        let pos = out.iter().position(|c| c.scheme == s.scheme && c.mix == s.mix);
-        let cell = match pos {
-            Some(i) => &mut out[i],
-            None => {
-                out.push(PopulationSummary::empty(
-                    &s.scheme,
-                    &s.mix,
-                    &s.scenario,
-                    s.write_latency.sub_buckets(),
-                ));
-                out.last_mut().expect("just pushed")
-            }
-        };
-        cell.devices += 1;
-        cell.write_latency.merge(&s.write_latency);
-        cell.read_latency.merge(&s.read_latency);
-        for t in s.tenants.iter().filter(|t| t.name.starts_with("victim")) {
-            cell.victim_latency.merge(&t.write_latency);
-        }
-        cell.write_phases.merge(&s.write_phases);
-        cell.ledger.merge(&s.ledger);
-        cell.background.merge(&s.background);
-        cell.host_bytes_written += s.host_bytes_written;
-        cell.throttle_stalls += s.total_throttle_stalls();
-        cell.sim_end_max = cell.sim_end_max.max(s.sim_end);
+        fold_run_into(&mut out, r);
     }
     out
+}
+
+/// Fold one device run into its `(scheme, mix)` cell, appending the
+/// cell in first-seen order. This is the single fold step both the
+/// collect-then-fold path ([`fold_population`]) and the streaming
+/// sharded path ([`run_population_streaming`]) share, so the two can
+/// never drift apart.
+fn fold_run_into(out: &mut Vec<PopulationSummary>, r: &DeviceRun) {
+    let s = &r.summary;
+    let pos = out.iter().position(|c| c.scheme == s.scheme && c.mix == s.mix);
+    let cell = match pos {
+        Some(i) => &mut out[i],
+        None => {
+            out.push(PopulationSummary::empty(
+                &s.scheme,
+                &s.mix,
+                &s.scenario,
+                s.write_latency.sub_buckets(),
+            ));
+            out.last_mut().expect("just pushed")
+        }
+    };
+    let faulted = r.profile.fault.kind != FaultKind::None;
+    cell.devices += 1;
+    if faulted {
+        cell.devices_faulted += 1;
+    } else {
+        cell.devices_healthy += 1;
+    }
+    cell.write_latency.merge(&s.write_latency);
+    cell.read_latency.merge(&s.read_latency);
+    for t in s.tenants.iter().filter(|t| t.name.starts_with("victim")) {
+        cell.victim_latency.merge(&t.write_latency);
+        if faulted {
+            cell.victim_latency_faulted.merge(&t.write_latency);
+        } else {
+            cell.victim_latency_healthy.merge(&t.write_latency);
+        }
+    }
+    cell.write_phases.merge(&s.write_phases);
+    cell.ledger.merge(&s.ledger);
+    cell.background.merge(&s.background);
+    cell.host_bytes_written += s.host_bytes_written;
+    cell.throttle_stalls += s.total_throttle_stalls();
+    cell.sim_end_max = cell.sim_end_max.max(s.sim_end);
+}
+
+/// Merge a shard-partial cell into the global cell list (find-or-append
+/// by `(scheme, mix)`, preserving first-seen order). Because shards are
+/// *contiguous* slices of the scheme-major job list, concatenating
+/// partials in shard order reproduces the serial first-seen order.
+fn merge_cell_into(out: &mut Vec<PopulationSummary>, c: PopulationSummary) {
+    match out.iter_mut().find(|x| x.scheme == c.scheme && x.mix == c.mix) {
+        Some(x) => x.merge(&c),
+        None => out.push(c),
+    }
+}
+
+/// Memory accounting from a streaming population sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Peak number of `DeviceRun`s resident at once across all workers
+    /// — the bounded-memory invariant (≤ one per worker thread, never
+    /// the whole population).
+    pub peak_resident_runs: usize,
+    /// Total device runs executed.
+    pub runs: usize,
+}
+
+/// Per-device CSV header for the streaming sweep's row stream.
+pub const DEVICE_CSV_HEADER: &str =
+    "device,scheme,mix,bpp,logical_frac,pre_age,skew,fault,writes,p99_ms,victim_p99_ms,wa\n";
+
+/// One streamed per-device CSV row (matches [`DEVICE_CSV_HEADER`]).
+/// The `fault` column reports what actually *fired* during the run
+/// (from the summary), not merely what was scheduled.
+fn device_csv_row(r: &DeviceRun) -> String {
+    let s = &r.summary;
+    format!(
+        "{},{},{},{},{:.2},{},{:.2},{},{},{:.3},{:.3},{:.3}\n",
+        r.profile.device,
+        s.scheme,
+        s.mix,
+        r.profile.blocks_per_plane,
+        r.profile.logical_frac,
+        r.profile.pre_age_erases,
+        r.profile.skew,
+        s.fault,
+        s.write_latency.count(),
+        s.write_latency.percentile(0.99) as f64 / 1e6,
+        s.max_victim_p99() as f64 / 1e6,
+        s.wa(),
+    )
+}
+
+/// Execute a population sweep as a **streaming fold**: the job list is
+/// split into contiguous shards (one per worker), each worker folds its
+/// devices into a shard-partial [`PopulationSummary`] list and streams
+/// the per-device CSV row through a bounded channel, dropping the
+/// `DeviceRun` immediately. A 1000-device sweep therefore never holds
+/// more than one `DeviceRun` per worker in memory (asserted via the
+/// returned [`StreamStats`] high-water mark), while producing
+/// byte-identical rollups to [`run_population`] + [`fold_population`]
+/// at any thread count — shards are contiguous and every constituent
+/// merge is an exact counter addition.
+///
+/// Returns `(cells, per_device_csv, stats)`; the CSV rows are in
+/// deterministic job order regardless of worker interleaving.
+pub fn run_population_streaming(
+    spec: &PopulationSpec,
+) -> Result<(Vec<PopulationSummary>, String, StreamStats)> {
+    let profiles = spec.profiles();
+    let mut jobs = Vec::with_capacity(spec.schemes.len() * spec.mixes.len() * profiles.len());
+    for &scheme in &spec.schemes {
+        for &mix in &spec.mixes {
+            for &profile in &profiles {
+                jobs.push((scheme, mix, profile));
+            }
+        }
+    }
+    let n = jobs.len();
+    if n == 0 {
+        return Ok((Vec::new(), DEVICE_CSV_HEADER.to_string(), StreamStats::default()));
+    }
+    let threads = spec.threads.clamp(1, n);
+    let shard_len = n.div_ceil(threads);
+    let mut shards: Vec<Vec<(usize, (Scheme, MixKind, DeviceProfile))>> = Vec::new();
+    for (i, job) in jobs.into_iter().enumerate() {
+        if i % shard_len == 0 {
+            shards.push(Vec::with_capacity(shard_len));
+        }
+        shards.last_mut().expect("shard pushed").push((i, job));
+    }
+    let resident = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    // bounded row channel: workers block when the drain falls behind,
+    // so the row backlog is as bounded as the runs themselves
+    let (tx, rx) = mpsc::sync_channel::<(usize, String)>(2 * threads);
+    let (mut rows, partials) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards.len());
+        for shard in shards {
+            let tx = tx.clone();
+            let (resident, peak) = (&resident, &peak);
+            handles.push(scope.spawn(move || -> Result<Vec<PopulationSummary>> {
+                let mut partial: Vec<PopulationSummary> = Vec::new();
+                for (idx, (scheme, mix, profile)) in shard {
+                    let cfg = spec.device_config(scheme, mix, &profile)?;
+                    let cur = resident.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(cur, Ordering::SeqCst);
+                    let summary = MultiTenantSimulator::run_once(cfg, spec.scenario)?;
+                    let run = DeviceRun { scheme, mix, profile, summary };
+                    fold_run_into(&mut partial, &run);
+                    let row = device_csv_row(&run);
+                    drop(run); // the whole point: nothing accumulates
+                    resident.fetch_sub(1, Ordering::SeqCst);
+                    if tx.send((idx, row)).is_err() {
+                        break; // drain side gone — a sibling errored
+                    }
+                }
+                Ok(partial)
+            }));
+        }
+        drop(tx);
+        let mut rows: Vec<(usize, String)> = Vec::with_capacity(n);
+        for item in rx.iter() {
+            rows.push(item);
+        }
+        let partials: Vec<Result<Vec<PopulationSummary>>> =
+            handles.into_iter().map(|h| h.join().expect("population worker panicked")).collect();
+        (rows, partials)
+    });
+    let mut cells: Vec<PopulationSummary> = Vec::new();
+    for partial in partials {
+        for c in partial? {
+            merge_cell_into(&mut cells, c);
+        }
+    }
+    rows.sort_unstable_by_key(|&(i, _)| i);
+    let mut csv = String::from(DEVICE_CSV_HEADER);
+    for (_, row) in rows {
+        csv.push_str(&row);
+    }
+    let stats = StreamStats { peak_resident_runs: peak.load(Ordering::SeqCst), runs: n };
+    Ok((cells, csv, stats))
 }
 
 /// Render the fleet rollup (one row per scheme × mix cell) with the
@@ -736,12 +989,15 @@ pub fn population_table(cells: &[PopulationSummary]) -> TextTable {
         "scheme",
         "mix",
         "devices",
+        "faulted",
         "writes",
         "p50_ms",
         "p99_ms",
         "p999_ms",
         "victim_p99_ms",
         "victim_p999_ms",
+        "healthy_vp99_ms",
+        "faulted_vp99_ms",
         "wa",
         "stalls",
     ]);
@@ -750,12 +1006,15 @@ pub fn population_table(cells: &[PopulationSummary]) -> TextTable {
             c.scheme.clone(),
             c.mix.clone(),
             c.devices.to_string(),
+            c.devices_faulted.to_string(),
             c.write_latency.count().to_string(),
             format!("{:.3}", c.write_latency.percentile(0.50) as f64 / 1e6),
             format!("{:.3}", c.write_latency.percentile(0.99) as f64 / 1e6),
             format!("{:.3}", c.write_latency.percentile(0.999) as f64 / 1e6),
             format!("{:.3}", c.victim_latency.percentile(0.99) as f64 / 1e6),
             format!("{:.3}", c.victim_latency.percentile(0.999) as f64 / 1e6),
+            format!("{:.3}", c.victim_latency_healthy.percentile(0.99) as f64 / 1e6),
+            format!("{:.3}", c.victim_latency_faulted.percentile(0.99) as f64 / 1e6),
             format!("{:.3}", c.wa()),
             c.throttle_stalls.to_string(),
         ]);
@@ -773,6 +1032,8 @@ pub fn device_table(runs: &[DeviceRun]) -> TextTable {
         "bpp",
         "logical_frac",
         "pre_age",
+        "skew",
+        "fault",
         "writes",
         "p99_ms",
         "victim_p99_ms",
@@ -787,6 +1048,8 @@ pub fn device_table(runs: &[DeviceRun]) -> TextTable {
             r.profile.blocks_per_plane.to_string(),
             format!("{:.2}", r.profile.logical_frac),
             r.profile.pre_age_erases.to_string(),
+            format!("{:.2}", r.profile.skew),
+            s.fault.clone(),
             s.write_latency.count().to_string(),
             format!("{:.3}", s.write_latency.percentile(0.99) as f64 / 1e6),
             format!("{:.3}", s.max_victim_p99() as f64 / 1e6),
@@ -810,16 +1073,20 @@ pub fn population_json(cells: &[PopulationSummary]) -> String {
         }
         out.push_str(&format!(
             "{{\"scheme\":\"{}\",\"mix\":\"{}\",\"scenario\":\"{}\",\"devices\":{},\
+             \"devices_healthy\":{},\"devices_faulted\":{},\
              \"writes\":{},\"reads\":{},\
              \"mean_ms\":\"{:.3}\",\"p50_ms\":\"{:.3}\",\"p99_ms\":\"{:.3}\",\
              \"p999_ms\":\"{:.3}\",\"max_ms\":\"{:.3}\",\
              \"victim_p99_ms\":\"{:.3}\",\"victim_p999_ms\":\"{:.3}\",\
+             \"healthy_victim_p99_ms\":\"{:.3}\",\"faulted_victim_p99_ms\":\"{:.3}\",\
              \"wa\":\"{:.3}\",\"q_ms\":\"{:.3}\",\"xfer_ms\":\"{:.3}\",\"arr_ms\":\"{:.3}\",\
              \"stalls\":{},\"bg_pages\":{},\"host_bytes\":{},\"sim_end_max\":{}}}",
             c.scheme,
             c.mix,
             c.scenario,
             c.devices,
+            c.devices_healthy,
+            c.devices_faulted,
             c.write_latency.count(),
             c.read_latency.count(),
             c.write_latency.mean() / 1e6,
@@ -829,6 +1096,8 @@ pub fn population_json(cells: &[PopulationSummary]) -> String {
             c.write_latency.max() as f64 / 1e6,
             c.victim_latency.percentile(0.99) as f64 / 1e6,
             c.victim_latency.percentile(0.999) as f64 / 1e6,
+            c.victim_latency_healthy.percentile(0.99) as f64 / 1e6,
+            c.victim_latency_faulted.percentile(0.99) as f64 / 1e6,
             c.wa(),
             c.write_phases.mean_queued_ns() / 1e6,
             c.write_phases.mean_transfer_ns() / 1e6,
@@ -847,22 +1116,27 @@ pub fn population_json(cells: &[PopulationSummary]) -> String {
 /// format feeds both the figure pipeline and spreadsheet triage).
 pub fn population_csv(cells: &[PopulationSummary]) -> String {
     let mut out = String::from(
-        "scheme,mix,scenario,devices,writes,p50_ms,p99_ms,p999_ms,\
-         victim_p99_ms,victim_p999_ms,wa,stalls,host_bytes\n",
+        "scheme,mix,scenario,devices,devices_healthy,devices_faulted,writes,\
+         p50_ms,p99_ms,p999_ms,victim_p99_ms,victim_p999_ms,\
+         healthy_victim_p99_ms,faulted_victim_p99_ms,wa,stalls,host_bytes\n",
     );
     for c in cells {
         out.push_str(&format!(
-            "{},{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{}\n",
+            "{},{},{},{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{}\n",
             c.scheme,
             c.mix,
             c.scenario,
             c.devices,
+            c.devices_healthy,
+            c.devices_faulted,
             c.write_latency.count(),
             c.write_latency.percentile(0.50) as f64 / 1e6,
             c.write_latency.percentile(0.99) as f64 / 1e6,
             c.write_latency.percentile(0.999) as f64 / 1e6,
             c.victim_latency.percentile(0.99) as f64 / 1e6,
             c.victim_latency.percentile(0.999) as f64 / 1e6,
+            c.victim_latency_healthy.percentile(0.99) as f64 / 1e6,
+            c.victim_latency_faulted.percentile(0.99) as f64 / 1e6,
             c.wa(),
             c.throttle_stalls,
             c.host_bytes_written,
@@ -1068,6 +1342,7 @@ mod tests {
             schemes: vec![Scheme::Baseline, Scheme::Ips],
             mixes: vec![MixKind::AggressorVictims],
             scenario: Scenario::Bursty,
+            fault_rate: 0.0,
             seed: 42,
             threads,
         }
@@ -1110,6 +1385,100 @@ mod tests {
         let csv = population_csv(&fold_population(&serial));
         assert!(csv.starts_with("scheme,mix,"));
         assert_eq!(csv.lines().count(), 3, "header + one row per cell");
+    }
+
+    #[test]
+    fn fault_schedules_are_paired_deterministic_and_rate_scaled() {
+        let mut spec = tiny_population(8, 1);
+        spec.fault_rate = 1.0;
+        let profiles = spec.profiles();
+        assert!(
+            profiles.iter().all(|p| p.fault.kind != FaultKind::None),
+            "rate 1.0 faults every device"
+        );
+        // both failure modes appear over 8 devices on a multi-plane base
+        let kinds: Vec<FaultKind> = profiles.iter().map(|p| p.fault.kind).collect();
+        assert!(kinds.contains(&FaultKind::PlaneLoss), "plane-loss scheduled");
+        assert!(kinds.contains(&FaultKind::Slowdown), "slowdown scheduled");
+        // the skew axis cycles like the capacity/OP/wear axes
+        let mut skews: Vec<u64> = profiles.iter().map(|p| (p.skew * 100.0) as u64).collect();
+        skews.sort_unstable();
+        skews.dedup();
+        assert!(skews.len() >= 2, "workload-skew classes vary");
+        // paired comparisons: the schedule is a pure function of
+        // (population seed, device) — the scheme axis must not move it
+        let mut one = spec.clone();
+        one.schemes = vec![Scheme::TlcOnly];
+        assert_eq!(profiles, one.profiles(), "faults identical across schemes");
+        assert_eq!(profiles, spec.profiles(), "stable across calls");
+        // rate 0 leaves the whole population healthy
+        spec.fault_rate = 0.0;
+        assert!(spec.profiles().iter().all(|p| p.fault.kind == FaultKind::None));
+        // every scheduled fault yields a valid device config (plane
+        // index in range, onset in [0,1], multiplier sane)
+        spec.fault_rate = 0.5;
+        for p in spec.profiles() {
+            spec.device_config(Scheme::Ips, MixKind::AggressorVictims, &p).unwrap();
+        }
+    }
+
+    #[test]
+    fn faulted_streaming_fold_matches_collected_fold_byte_for_byte() {
+        let mut serial = tiny_population(4, 1);
+        serial.fault_rate = 1.0;
+        let mut sharded = serial.clone();
+        sharded.threads = 4;
+        // reference: the collect-then-fold path on one thread
+        let runs = run_population(&serial).unwrap();
+        let reference = population_json(&fold_population(&runs));
+        let (c1, csv1, st1) = run_population_streaming(&serial).unwrap();
+        let (c4, csv4, st4) = run_population_streaming(&sharded).unwrap();
+        assert_eq!(population_json(&c1), reference, "streaming fold == collected fold");
+        assert_eq!(population_json(&c4), reference, "thread count must not leak");
+        assert_eq!(csv1, csv4, "per-device row stream is order-deterministic");
+        assert_eq!(st1.runs, 8, "2 schemes × 4 devices");
+        // bounded memory: the high-water is per-worker, never the population
+        assert_eq!(st1.peak_resident_runs, 1, "serial streams one run at a time");
+        assert!(st4.peak_resident_runs <= 4, "≤ one resident run per worker");
+        // the healthy/faulted split is folded and exported
+        assert!(reference.contains("\"devices_healthy\":0"));
+        assert!(reference.contains("\"faulted_victim_p99_ms\""));
+        for c in &c1 {
+            assert_eq!(c.devices_healthy + c.devices_faulted, c.devices);
+            assert_eq!(c.devices_faulted, 4, "rate 1.0 faults all of {}", c.scheme);
+            assert!(c.victim_latency_faulted.count() > 0, "faulted victims folded");
+            assert_eq!(c.victim_latency_healthy.count(), 0, "no healthy devices to fold");
+        }
+        let csv = population_csv(&c1);
+        assert!(csv.lines().next().unwrap().contains("faulted_victim_p99_ms"));
+        assert!(csv1.starts_with(DEVICE_CSV_HEADER));
+        assert_eq!(csv1.lines().count(), 9, "header + one row per device run");
+        // every streamed row reports a fired fault
+        for row in csv1.lines().skip(1) {
+            assert!(row.contains("plane-loss") || row.contains("slowdown"), "{row}");
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_folds_healthy_and_faulted_separately() {
+        // hand-build a mixed population from two paired specs so the
+        // healthy/faulted split itself (not the rate hash) is under test
+        let mut healthy = tiny_population(2, 1);
+        healthy.schemes = vec![Scheme::Ips];
+        let mut faulted = healthy.clone();
+        faulted.fault_rate = 1.0;
+        let mut runs = run_population(&healthy).unwrap();
+        runs.extend(run_population(&faulted).unwrap());
+        let cells = fold_population(&runs);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.devices_healthy, 2);
+        assert_eq!(c.devices_faulted, 2);
+        assert!(c.victim_latency_healthy.count() > 0);
+        assert!(c.victim_latency_faulted.count() > 0);
+        let both = c.victim_latency_healthy.count() + c.victim_latency_faulted.count();
+        assert_eq!(both, c.victim_latency.count(), "split partitions the victim fold");
     }
 
     #[test]

@@ -67,6 +67,10 @@ impl FlashCounters {
 struct PlaneState {
     blocks: Vec<Block>,
     free_blocks: VecDeque<u32>,
+    /// Fault injection: a lost plane never hands out free blocks again
+    /// and silently swallows returns; resident data stays readable so
+    /// the FTL can salvage it.
+    lost: bool,
 }
 
 /// The whole back end.
@@ -78,6 +82,10 @@ pub struct FlashArray {
     /// The timing model: channel/die/plane occupancy (or the lump).
     ic: Interconnect,
     counters: FlashCounters,
+    /// Fault injection: program/erase latency multiplier in percent
+    /// (100 = nominal). Models wear-induced slowdown; reads keep Table-I
+    /// speed.
+    slow_x100: u32,
 }
 
 impl FlashArray {
@@ -96,6 +104,7 @@ impl FlashArray {
                     .map(|_| Block::new(&g, cfg.cache.group_layers))
                     .collect(),
                 free_blocks: (0..g.blocks_per_plane).collect(),
+                lost: false,
             })
             .collect();
         if cfg.sim.pre_age_erases > 0 {
@@ -115,6 +124,7 @@ impl FlashArray {
             planes,
             ic: Interconnect::new(cfg),
             counters: FlashCounters::default(),
+            slow_x100: 100,
         }
     }
 
@@ -166,9 +176,57 @@ impl FlashArray {
         self.planes[plane.0 as usize].free_blocks.len()
     }
 
+    // --- fault injection ---------------------------------------------
+
+    /// Retire a plane: it stops serving free blocks (pop returns
+    /// `None`, returns are swallowed) while resident pages stay
+    /// readable for salvage. Returns the count of free blocks dropped
+    /// from allocation.
+    pub fn mark_plane_lost(&mut self, plane: PlaneId) -> usize {
+        let p = &mut self.planes[plane.0 as usize];
+        p.lost = true;
+        let dropped = p.free_blocks.len();
+        p.free_blocks.clear();
+        dropped
+    }
+
+    /// Has this plane been retired by fault injection?
+    pub fn plane_lost(&self, plane: PlaneId) -> bool {
+        self.planes[plane.0 as usize].lost
+    }
+
+    /// Planes still serving allocations.
+    pub fn live_planes(&self) -> u32 {
+        self.planes.iter().filter(|p| !p.lost).count() as u32
+    }
+
+    /// Set the wear-slowdown multiplier for programs and erases, in
+    /// percent of nominal (100 = off, 200 = 2× slower). Clamped to ≥ 1.
+    pub fn set_program_slowdown(&mut self, x100: u32) {
+        self.slow_x100 = x100.max(1);
+    }
+
+    /// Current program/erase slowdown (percent of nominal).
+    pub fn program_slowdown(&self) -> u32 {
+        self.slow_x100
+    }
+
+    /// Apply the wear-slowdown multiplier to a program/erase latency.
+    fn slowed(&self, ns: Nanos) -> Nanos {
+        if self.slow_x100 == 100 {
+            ns
+        } else {
+            ns.saturating_mul(self.slow_x100 as u64) / 100
+        }
+    }
+
     /// Take a free block from a plane (caller assigns its mode).
     pub fn pop_free(&mut self, plane: PlaneId) -> Option<BlockAddr> {
-        let b = self.planes[plane.0 as usize].free_blocks.pop_front()?;
+        let p = &mut self.planes[plane.0 as usize];
+        if p.lost {
+            return None;
+        }
+        let b = p.free_blocks.pop_front()?;
         Some(BlockAddr { plane, block: b })
     }
 
@@ -177,7 +235,7 @@ impl FlashArray {
     /// bounded window keeps allocation O(1)).
     pub fn pop_free_min_erase(&mut self, plane: PlaneId, window: usize) -> Option<BlockAddr> {
         let p = &mut self.planes[plane.0 as usize];
-        if p.free_blocks.is_empty() {
+        if p.lost || p.free_blocks.is_empty() {
             return None;
         }
         let lim = p.free_blocks.len().min(window.max(1));
@@ -195,8 +253,12 @@ impl FlashArray {
         Some(BlockAddr { plane, block: b })
     }
 
-    /// Return an erased block to the plane's free list.
+    /// Return an erased block to the plane's free list. Returns to a
+    /// lost plane are swallowed: the block never rejoins allocation.
     pub fn push_free(&mut self, addr: BlockAddr) -> Result<()> {
+        if self.planes[addr.plane.0 as usize].lost {
+            return Ok(());
+        }
         if !self.block(addr).is_erased() {
             return Err(Error::invariant("push_free of non-erased block"));
         }
@@ -233,7 +295,8 @@ impl FlashArray {
         let g = self.geometry;
         let pib = self.block_mut(addr).program_slc(lpn)?;
         self.count(FlashOp::ProgSlc, 1);
-        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.slc_prog, 1, now);
+        let lat = self.slowed(self.timing.slc_prog);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, lat, 1, now);
         Ok((addr.page(&g, pib / 3, 0), done))
     }
 
@@ -251,7 +314,7 @@ impl FlashArray {
         let done = self.ic.occupy(
             addr.plane.0,
             OpClass::Program,
-            self.timing.tlc_prog,
+            self.slowed(self.timing.tlc_prog),
             slots.len() as u32,
             now,
         );
@@ -281,7 +344,9 @@ impl FlashArray {
         }
         let sched: Vec<(u32, Nanos, u32)> = metas
             .iter()
-            .map(|(addr, slots)| (addr.plane.0, self.timing.tlc_prog, slots.len() as u32))
+            .map(|(addr, slots)| {
+                (addr.plane.0, self.slowed(self.timing.tlc_prog), slots.len() as u32)
+            })
             .collect();
         let comps = self.ic.occupy_program_group(&sched, now);
         Ok(metas
@@ -306,7 +371,8 @@ impl FlashArray {
         let g = self.geometry;
         let pib = self.block_mut(addr).program_tlc_page(lpn)?;
         self.counters.progs_tlc_pages += 1;
-        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.tlc_prog, 1, now);
+        let lat = self.slowed(self.timing.tlc_prog);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, lat, 1, now);
         Ok((addr.page(&g, pib / 3, (pib % 3) as u8), done))
     }
 
@@ -323,7 +389,8 @@ impl FlashArray {
         let max = self.max_reprograms;
         let (pib, full) = self.block_mut(addr).reprogram_next(lpn, max)?;
         self.count(FlashOp::Reprogram, 1);
-        let done = self.ic.occupy(addr.plane.0, OpClass::Program, self.timing.reprogram, 1, now);
+        let lat = self.slowed(self.timing.reprogram);
+        let done = self.ic.occupy(addr.plane.0, OpClass::Program, lat, 1, now);
         Ok((addr.page(&g, pib / 3, (pib % 3) as u8), full, done))
     }
 
@@ -335,7 +402,8 @@ impl FlashArray {
     pub fn erase(&mut self, addr: BlockAddr, now: Nanos) -> Result<Completion> {
         self.block_mut(addr).erase()?;
         self.count(FlashOp::Erase, 1);
-        Ok(self.ic.occupy(addr.plane.0, OpClass::ArrayOnly, self.timing.erase, 0, now))
+        let lat = self.slowed(self.timing.erase);
+        Ok(self.ic.occupy(addr.plane.0, OpClass::ArrayOnly, lat, 0, now))
     }
 
     /// Invalidate a page (timing-neutral metadata update).
@@ -551,6 +619,47 @@ mod tests {
         assert_eq!(group[0], one);
         assert_eq!(group[1], two);
         assert_eq!(ga.counters(), ia.counters());
+    }
+
+    #[test]
+    fn lost_plane_stops_allocating_but_stays_readable() {
+        let mut a = array();
+        let b = a.pop_free(PlaneId(0)).unwrap();
+        a.block_mut(b).set_mode(BlockMode::Slc).unwrap();
+        let (ppa, done) = a.program_slc(b, Lpn(1), 0).unwrap();
+        let dropped = a.mark_plane_lost(PlaneId(0));
+        assert!(dropped > 0, "free blocks retired from allocation");
+        assert!(a.plane_lost(PlaneId(0)));
+        assert_eq!(a.live_planes(), a.geometry().planes() - 1);
+        assert!(a.pop_free(PlaneId(0)).is_none());
+        assert!(a.pop_free_min_erase(PlaneId(0), 8).is_none());
+        assert_eq!(a.free_block_count(PlaneId(0)), 0);
+        // resident data survives for salvage reads
+        a.read(ppa, done.end).unwrap();
+        // returns to the lost plane are swallowed, not errors
+        a.invalidate(ppa).unwrap();
+        a.erase(b, done.end).unwrap();
+        a.push_free(b).unwrap();
+        assert_eq!(a.free_block_count(PlaneId(0)), 0);
+        // other planes keep allocating
+        assert!(a.pop_free(PlaneId(1)).is_some());
+    }
+
+    #[test]
+    fn program_slowdown_scales_programs_and_erases_not_reads() {
+        let mut a = array();
+        let t = *a.timing();
+        a.set_program_slowdown(200);
+        assert_eq!(a.program_slowdown(), 200);
+        let b = a.pop_free(PlaneId(0)).unwrap();
+        a.block_mut(b).set_mode(BlockMode::Slc).unwrap();
+        let (ppa, c) = a.program_slc(b, Lpn(1), 0).unwrap();
+        assert_eq!(c.end - c.start, 2 * t.slc_prog, "2x slower program");
+        let r = a.read(ppa, c.end).unwrap();
+        assert_eq!(r.end - r.start, t.slc_read, "reads keep nominal speed");
+        a.invalidate(ppa).unwrap();
+        let e = a.erase(b, r.end).unwrap();
+        assert_eq!(e.end - e.start, 2 * t.erase, "2x slower erase");
     }
 
     #[test]

@@ -122,6 +122,17 @@ impl AgcEngine {
         }
     }
 
+    /// Drop any selected victim or pending erase on `plane` (plane
+    /// retirement): the FTL has already salvaged its valid pages and
+    /// marked the plane lost, so migrating or erasing there is wasted
+    /// work.
+    pub fn forget_plane(&mut self, plane: PlaneId) {
+        if self.victim.map(|v| v.plane == plane).unwrap_or(false) {
+            self.victim = None;
+        }
+        self.pending_erase.retain(|a| a.plane != plane);
+    }
+
     /// Any work available (victim with valid pages, or pending erase)?
     pub fn has_work(&self, ftl: &Ftl) -> bool {
         !self.pending_erase.is_empty()

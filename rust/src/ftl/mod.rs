@@ -327,10 +327,17 @@ impl Ftl {
     }
 
     /// Next plane in the host round-robin order (advances the pointer).
+    /// Planes retired by fault injection are skipped; at least one live
+    /// plane always exists ([`Ftl::retire_plane`] refuses the last one).
     pub fn next_plane(&mut self) -> PlaneId {
-        let p = PlaneId(self.rr % self.n_planes);
-        self.rr = self.rr.wrapping_add(1);
-        p
+        for _ in 0..self.n_planes {
+            let p = PlaneId(self.rr % self.n_planes);
+            self.rr = self.rr.wrapping_add(1);
+            if !self.array.plane_lost(p) {
+                return p;
+            }
+        }
+        PlaneId(self.rr % self.n_planes)
     }
 
     /// Allocate an erased block in `plane` and set its mode.
@@ -491,13 +498,16 @@ impl Ftl {
         self.host_write_tlc_on(plane, lpn, now)
     }
 
-    /// Write one host page to TLC space on a specific plane.
+    /// Write one host page to TLC space on a specific plane. A plane
+    /// retired by fault injection redirects to the next live plane, so
+    /// scheme fallback paths never have to know about faults.
     pub fn host_write_tlc_on(
         &mut self,
         plane: PlaneId,
         lpn: Lpn,
         now: Nanos,
     ) -> Result<Completion> {
+        let plane = if self.array.plane_lost(plane) { self.next_plane() } else { plane };
         self.maybe_gc(plane, now)?;
         let addr = self.ensure_host_block(plane)?;
         let (ppa, done) = self.array.program_tlc_page(addr, lpn, now)?;
@@ -928,6 +938,85 @@ impl Ftl {
             end = end.max(self.array.erase(addr, t)?.end);
         }
         Ok(end)
+    }
+
+    // --- fault injection --------------------------------------------------
+
+    /// Retire `plane` mid-run (fault injection): stop allocating from
+    /// it, salvage every resident valid page to a live plane, and purge
+    /// its closed blocks from victim selection. Salvaged programs are
+    /// page-granular TLC writes billed as [`Attribution::GcMigration`]
+    /// — the device is relocating data it already owns. Returns the end
+    /// time of the salvage, or an error when `plane` is the last live
+    /// one (a device cannot lose its only plane and keep serving).
+    ///
+    /// The plane's pending migration batch is dropped, not flushed: its
+    /// entries are still valid mapped pages, so the salvage sweep below
+    /// relocates them anyway — flushing would need a destination block
+    /// in the dying plane.
+    pub fn retire_plane(&mut self, plane: PlaneId, now: Nanos) -> Result<Nanos> {
+        if self.array.plane_lost(plane) {
+            return Ok(now); // idempotent: already retired
+        }
+        if self.array.live_planes() <= 1 {
+            return Err(Error::Flash(format!(
+                "plane {}: cannot retire the last live plane",
+                plane.0
+            )));
+        }
+        let slot = plane.0 as usize;
+        self.migr[slot].pending.clear();
+        self.migr[slot].active = None;
+        self.host_tlc[slot] = None;
+        self.array.mark_plane_lost(plane);
+
+        // Salvage sweep: walk every block of the plane and relocate its
+        // valid pages to live planes via the round-robin pointer (which
+        // now skips lost planes). Reads on the lost plane still work —
+        // only allocation died.
+        let g = *self.array.geometry();
+        let mut t = now;
+        for b in 0..g.blocks_per_plane {
+            let addr = BlockAddr { plane, block: b };
+            let pibs: Vec<u32> = self.array.block(addr).valid_pages().collect();
+            for pib in pibs {
+                let src = addr.page(&g, pib / 3, (pib % 3) as u8);
+                let Some(lpn) = self.array.block(addr).lpn_at(pib) else {
+                    return Err(Error::invariant("valid page with no LPN during salvage"));
+                };
+                if self.map.get(lpn) != Some(src) {
+                    continue; // stale since the sweep snapshot
+                }
+                let read = self.array.read(src, t)?;
+                t = read.end;
+                let dest = self.next_plane();
+                self.maybe_gc(dest, t)?;
+                let dst_block = self.ensure_host_block(dest)?;
+                let (ppa, done) = self.array.program_tlc_page(dst_block, lpn, t)?;
+                t = done.end;
+                self.note_block_write(dst_block, done.end);
+                if self.track_owners {
+                    let owner = self.note_page_exit(src);
+                    if let Some(o) = owner {
+                        self.owners.set(ppa, o);
+                    }
+                    self.note_move(owner, Attribution::GcMigration);
+                }
+                self.invalidate_page(src)?;
+                self.map.set(lpn, ppa)?;
+                self.ledger.program(Attribution::GcMigration);
+            }
+        }
+
+        // Nothing valid remains: drop the plane's closed blocks from
+        // victim selection so GC never picks an unreclaimable victim.
+        if let Some(ix) = &mut self.vindex {
+            for &b in &self.closed[slot] {
+                ix.remove(BlockAddr { plane, block: b });
+            }
+        }
+        self.closed[slot].clear();
+        Ok(t)
     }
 
     // --- garbage collection ---------------------------------------------
@@ -1370,5 +1459,47 @@ mod tests {
             assert!(f.map.get(Lpn(1000 + i)).is_some());
         }
         f.audit().unwrap();
+    }
+
+    #[test]
+    fn retire_plane_salvages_valid_pages_and_redirects_writes() {
+        let mut f = ftl();
+        let n = f.planes() as u64;
+        // stripe writes so plane 0 holds some valid pages, then
+        // overwrite one so salvage has a stale entry to skip
+        for i in 0..4 * n {
+            f.host_write_tlc(Lpn(i), 0).unwrap();
+        }
+        f.host_write_tlc(Lpn(0), 0).unwrap(); // Lpn(0) leaves plane 0
+        let before_migr = f.ledger.gc_migrations;
+        let end = f.retire_plane(PlaneId(0), 1_000).unwrap();
+        assert!(end >= 1_000);
+        assert!(f.array.plane_lost(PlaneId(0)));
+        assert!(f.ledger.gc_migrations > before_migr, "salvage relocated pages");
+        // every LPN still maps, and none maps into the lost plane
+        let g = *f.array.geometry();
+        for i in 0..4 * n {
+            let ppa = f.map.get(Lpn(i)).expect("mapping survived retirement");
+            assert_ne!(ppa.expand(&g).plane, PlaneId(0), "Lpn({i}) salvaged off plane 0");
+        }
+        // retirement is idempotent and new writes avoid the lost plane
+        assert_eq!(f.retire_plane(PlaneId(0), 2_000).unwrap(), 2_000);
+        for i in 0..2 * n {
+            f.host_write_tlc(Lpn(500 + i), 2_000).unwrap();
+            let ppa = f.map.get(Lpn(500 + i)).unwrap();
+            assert_ne!(ppa.expand(&g).plane, PlaneId(0));
+        }
+        f.audit().unwrap();
+    }
+
+    #[test]
+    fn retire_last_live_plane_is_refused() {
+        let mut f = ftl();
+        let n = f.planes();
+        for p in 0..n - 1 {
+            f.retire_plane(PlaneId(p), 0).unwrap();
+        }
+        assert!(f.retire_plane(PlaneId(n - 1), 0).is_err());
+        assert_eq!(f.array.live_planes(), 1);
     }
 }

@@ -22,8 +22,8 @@ use super::sched::{self, HeadInfo, Scheduler};
 use super::tenant::{self, TenantSpec};
 use crate::blk::{self, Bio, BioKind};
 use crate::cache::{self, CachePartitioner, CachePolicy};
-use crate::config::{AttributionMode, Config, Nanos};
-use crate::flash::Lpn;
+use crate::config::{AttributionMode, Config, FaultKind, Nanos};
+use crate::flash::{Lpn, PlaneId};
 use crate::ftl::{Ftl, MoveCounters, VictimPolicy};
 use crate::metrics::{BandwidthTimeline, BlkStats, LatencyStats, Ledger, PhaseStats, TenantStats};
 use crate::trace::scenario::Scenario;
@@ -46,6 +46,12 @@ pub struct MultiTenantSimulator {
     /// Token-bucket admission control ahead of the scheduler.
     qos: QosGate,
     now: Nanos,
+    /// Absolute trigger time of the configured fault (None = healthy
+    /// device or already fired). Computed in `new()` as
+    /// `fault.at_frac × max trace arrival`.
+    fault_at: Option<Nanos>,
+    /// Did the fault actually fire during `run`?
+    fault_fired: bool,
 }
 
 /// Everything a multi-tenant run produced.
@@ -94,6 +100,9 @@ pub struct MultiTenantSummary {
     pub cache_capacity_pages: u64,
     /// Simulated end time.
     pub sim_end: Nanos,
+    /// Fault that fired during the run ("none" for a healthy device,
+    /// else the [`crate::config::FaultKind`] name).
+    pub fault: String,
     /// Bytes the host wrote (all tenants).
     pub host_bytes_written: u64,
     /// Host-side wall clock of the simulation.
@@ -186,7 +195,32 @@ impl MultiTenantSimulator {
             .collect();
         let part = CachePartitioner::new(&cfg, &weights, policy.slc_capacity_pages(&ftl));
         let qos = QosGate::new(&cfg.host.qos, &weights);
-        Ok(MultiTenantSimulator { cfg, ftl, policy, sched, queues, stats, part, qos, now: 0 })
+        // Fault trigger: a fraction of the arrival horizon, resolved
+        // here while the traces are fully materialized — so the same
+        // `at_frac` schedules proportionally across scenarios/scales.
+        let fault_at = if cfg.fault.kind != FaultKind::None {
+            let horizon = traces
+                .iter()
+                .flat_map(|t| t.ops.iter().map(|o| o.at))
+                .max()
+                .unwrap_or(0);
+            Some((horizon as f64 * cfg.fault.at_frac) as Nanos)
+        } else {
+            None
+        };
+        Ok(MultiTenantSimulator {
+            cfg,
+            ftl,
+            policy,
+            sched,
+            queues,
+            stats,
+            part,
+            qos,
+            now: 0,
+            fault_at,
+            fault_fired: false,
+        })
     }
 
     /// Access the FTL (diagnostics, audits).
@@ -278,6 +312,33 @@ impl MultiTenantSimulator {
         let mut writes_since_flush = vec![0u32; self.queues.len()];
 
         loop {
+            // fire the scheduled fault once the clock crosses its
+            // trigger (checked before dispatch so the very next request
+            // sees the degraded device)
+            if self.fault_at.map(|fa| self.now >= fa).unwrap_or(false) {
+                self.fault_at = None;
+                self.fault_fired = true;
+                match self.cfg.fault.kind {
+                    FaultKind::PlaneLoss => {
+                        let plane = PlaneId(self.cfg.fault.plane);
+                        let bg_before = self.ftl.ledger;
+                        let end = self.ftl.retire_plane(plane, self.now)?;
+                        self.policy.retire_plane(&mut self.ftl, plane)?;
+                        last_end = last_end.max(end);
+                        // salvage migrations are device-initiated
+                        // background work, like idle reclamation
+                        self.part.charge_background(&self.ftl.ledger.diff(&bg_before));
+                        if owner_attr {
+                            let _ = self.absorb_owner_events(migr_ns, false);
+                        }
+                    }
+                    FaultKind::Slowdown => {
+                        self.ftl.array.set_program_slowdown(self.cfg.fault.slow_x100);
+                    }
+                    FaultKind::None => {}
+                }
+            }
+
             // retire completions up to the front-end clock
             while inflight.peek().map(|&Reverse((t, _))| t <= self.now).unwrap_or(false) {
                 let Reverse((_, ti)) = inflight.pop().expect("peeked");
@@ -346,6 +407,9 @@ impl MultiTenantSimulator {
                     let mut unowned_moves = MoveCounters::default();
                     // block-front-end counters for this one request
                     let mut bstats = BlkStats::default();
+                    // zero-length write plan: dropped before latency /
+                    // bandwidth accounting (see `BlkStats::empty_bios`)
+                    let mut skip_sample = false;
                     if blk_cfg.enabled {
                         let mut bio = Bio::from_op(&op, blk_cfg.sector_bytes);
                         if blk_cfg.fua && bio.kind == BioKind::Write {
@@ -356,6 +420,14 @@ impl MultiTenantSimulator {
                         bstats.splits = plan.splits;
                         bstats.merges = plan.merges;
                         match plan.kind {
+                            BioKind::Write if plan.pages.is_empty() => {
+                                // zero-length payload: no pages, no
+                                // sample — a 0 ns latency entry would
+                                // skew this tenant's p50
+                                bstats.bios = 0;
+                                bstats.empty_bios = 1;
+                                skip_sample = true;
+                            }
                             BioKind::Write => {
                                 bstats.rmw_reads = plan.rmw_reads;
                                 bstats.write_pages = plan.pages.len() as u64;
@@ -430,6 +502,11 @@ impl MultiTenantSimulator {
                                 }
                             }
                             BioKind::Flush => {
+                                // a host flush persists everything this
+                                // tenant wrote: restart its periodic
+                                // `flush_every` countdown too, or the
+                                // next write could double-barrier
+                                writes_since_flush[i] = 0;
                                 let drain = inflight
                                     .iter()
                                     .map(|&Reverse((t, _))| t)
@@ -509,6 +586,7 @@ impl MultiTenantSimulator {
                     st.blk.merge(&bstats);
                     blk_total.merge(&bstats);
                     match op.kind {
+                        OpKind::Write if skip_sample => {}
                         OpKind::Write => {
                             st.write_latency.record(lat);
                             st.write_phases.merge(&req_phases);
@@ -567,7 +645,7 @@ impl MultiTenantSimulator {
                         if scenario == Scenario::Daily {
                             let quiesce = self.now.max(last_end);
                             if next > quiesce.saturating_add(idle_threshold) {
-                                let start = quiesce + idle_threshold;
+                                let start = quiesce.saturating_add(idle_threshold);
                                 let bg_before = self.ftl.ledger;
                                 // per-tenant eviction first: a tenant over
                                 // its reserved slice reclaims its own
@@ -660,6 +738,8 @@ impl MultiTenantSimulator {
             attribution: self.cfg.host.attribution.name().to_string(),
             cache_capacity_pages: self.part.capacity(),
             sim_end: self.now,
+            fault: (if self.fault_fired { self.cfg.fault.kind.name() } else { "none" })
+                .to_string(),
             host_bytes_written: host_bytes,
             wall_clock: wall0.elapsed(),
         })
@@ -867,5 +947,53 @@ mod tests {
             assert_eq!(x.p99_write_latency(), y.p99_write_latency());
             assert_eq!(x.ledger, y.ledger);
         }
+    }
+
+    #[test]
+    fn mid_run_plane_loss_degrades_but_completes() {
+        use crate::config::FaultKind;
+        for scheme in [Scheme::Baseline, Scheme::Ips, Scheme::IpsAgc, Scheme::Coop] {
+            let mut cfg = mt_cfg(scheme, SchedKind::RoundRobin);
+            cfg.fault.kind = FaultKind::PlaneLoss;
+            cfg.fault.at_frac = 0.5;
+            cfg.fault.plane = 1;
+            let s = MultiTenantSimulator::run_once(cfg.clone(), Scenario::Bursty).unwrap();
+            assert_eq!(s.fault, "plane-loss", "{scheme:?} fault fired");
+            // every tenant still completes its whole trace
+            let healthy = {
+                cfg.fault.kind = FaultKind::None;
+                MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap()
+            };
+            assert_eq!(healthy.fault, "none");
+            assert_eq!(
+                s.host_bytes_written, healthy.host_bytes_written,
+                "{scheme:?}: identical offered load on the degraded device"
+            );
+            // the salvage migrations show up as background work
+            assert!(
+                s.ledger.gc_migrations >= healthy.ledger.gc_migrations,
+                "{scheme:?}: salvage adds migrations"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_run_slowdown_stretches_write_tail() {
+        use crate::config::FaultKind;
+        let mut cfg = mt_cfg(Scheme::Baseline, SchedKind::RoundRobin);
+        cfg.fault.kind = FaultKind::Slowdown;
+        cfg.fault.at_frac = 0.0; // slow from the first request
+        cfg.fault.slow_x100 = 400;
+        let slow = MultiTenantSimulator::run_once(cfg.clone(), Scenario::Bursty).unwrap();
+        assert_eq!(slow.fault, "slowdown");
+        cfg.fault.kind = FaultKind::None;
+        let healthy = MultiTenantSimulator::run_once(cfg, Scenario::Bursty).unwrap();
+        assert_eq!(slow.host_bytes_written, healthy.host_bytes_written);
+        assert!(
+            slow.sim_end > healthy.sim_end,
+            "4x program/erase time must stretch the run: {} vs {}",
+            slow.sim_end,
+            healthy.sim_end
+        );
     }
 }

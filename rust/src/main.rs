@@ -135,9 +135,16 @@ fn cli() -> Command {
                 .opt("scale", None, "N", "geometry divisor vs Table I", Some("8"))
                 .opt("seed", Some('s'), "SEED", "population seed", Some("42"))
                 .opt("threads", Some('j'), "N", "worker threads", None)
+                .opt(
+                    "faults",
+                    None,
+                    "FRAC",
+                    "fraction of devices given a mid-run fault schedule",
+                    Some("0"),
+                )
                 .opt("json", None, "FILE", "write the fleet rollup as JSON", None)
                 .opt("csv", None, "FILE", "write the fleet rollup as CSV", None)
-                .flag("per-device", None, "also print the per-device breakdown"),
+                .flag("per-device", None, "also print the per-device breakdown (CSV rows)"),
         )
         .subcommand(blk_opts(
             Command::new("replay", "stream an MSR CSV through the block front end")
@@ -615,6 +622,14 @@ fn cmd_fleet(p: &ips::util::cli::Parsed) -> ips::Result<()> {
     };
     // The scheme slot of the base config is irrelevant — every device
     // run overrides it from the scheme axis.
+    let fault_rate: f64 = p
+        .get("faults")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| ips::Error::config("--faults: bad fraction"))?;
+    if !(0.0..=1.0).contains(&fault_rate) {
+        return Err(ips::Error::config("--faults: fraction must be in [0, 1]"));
+    }
     let mut base = experiment::exp_config(&opts, Scheme::Ips);
     base.host.tenants = p.get_u64("tenants").map_err(ips::Error::config)? as u32;
     base.host.mix = mix;
@@ -624,25 +639,33 @@ fn cmd_fleet(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         schemes,
         mixes: vec![mix],
         scenario: scen,
+        fault_rate,
         seed: opts.seed,
         threads: opts.threads,
     };
     println!(
         "fleet: {} devices x {} schemes x {} mixes = {} runs ({} tenants, {} scenario, \
-         {} threads)",
+         {} threads, fault rate {:.2})",
         spec.devices,
         spec.schemes.len(),
         spec.mixes.len(),
         spec.devices as usize * spec.schemes.len() * spec.mixes.len(),
         spec.base.host.tenants,
         scen.name(),
-        spec.threads
+        spec.threads,
+        spec.fault_rate
     );
-    let runs = fleet::run_population(&spec)?;
-    let cells = fleet::fold_population(&runs);
+    // the streaming sharded fold: per-device runs are folded and
+    // dropped as they finish, so memory stays at one run per worker
+    // regardless of the population size
+    let (cells, device_csv, stats) = fleet::run_population_streaming(&spec)?;
+    println!(
+        "streamed {} device runs (peak resident: {})",
+        stats.runs, stats.peak_resident_runs
+    );
     if p.flag("per-device") {
         println!("\n== per-device breakdown ==");
-        print!("{}", fleet::device_table(&runs).render());
+        print!("{device_csv}");
     }
     println!("\n== fleet rollup ({} devices) ==", spec.devices);
     print!("{}", fleet::population_table(&cells).render());

@@ -33,6 +33,10 @@ pub struct BlkStats {
     /// Page reads issued on behalf of read bios (post split/merge;
     /// excludes RMW pre-reads).
     pub read_pages: u64,
+    /// Write bios whose plan covered zero pages (zero-length payloads);
+    /// skipped before latency/bandwidth accounting so they cannot skew
+    /// p50 with 0 ns samples.
+    pub empty_bios: u64,
 }
 
 impl BlkStats {
@@ -46,6 +50,7 @@ impl BlkStats {
         self.rmw_reads += other.rmw_reads;
         self.write_pages += other.write_pages;
         self.read_pages += other.read_pages;
+        self.empty_bios += other.empty_bios;
     }
 
     /// True when the blk front end never ran (page front end, or an

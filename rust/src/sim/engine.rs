@@ -128,7 +128,7 @@ impl Simulator {
             if scenario == Scenario::Daily {
                 let quiesce = self.now;
                 if arrival > quiesce.saturating_add(idle_threshold) {
-                    let start = quiesce + idle_threshold;
+                    let start = quiesce.saturating_add(idle_threshold);
                     self.policy.idle_work(&mut self.ftl, start, arrival)?;
                 }
             }
@@ -226,12 +226,18 @@ impl Simulator {
             if scenario == Scenario::Daily {
                 let quiesce = self.now;
                 if arrival > quiesce.saturating_add(idle_threshold) {
-                    let start = quiesce + idle_threshold;
+                    let start = quiesce.saturating_add(idle_threshold);
                     self.policy.idle_work(&mut self.ftl, start, arrival)?;
                 }
             }
             let plan = blk::plan(&bio, &blk_cfg, page);
             match plan.kind {
+                BioKind::Write if plan.pages.is_empty() => {
+                    // zero-length payload: no pages to program, no
+                    // latency sample, no bandwidth contribution — a 0 ns
+                    // sample here would skew p50 under sparse replays
+                    self.blk.empty_bios += 1;
+                }
                 BioKind::Write => {
                     self.blk.bios += 1;
                     self.blk.splits += plan.splits;
@@ -263,11 +269,16 @@ impl Simulator {
                     if blk_cfg.flush_every > 0 {
                         writes_since_flush += 1;
                         if writes_since_flush >= blk_cfg.flush_every {
-                            writes_since_flush = 0;
                             barrier = true;
                         }
                     }
                     if barrier {
+                        // every barrier resets the periodic-flush
+                        // counter — FUA and explicit flush bios already
+                        // persisted everything a `flush_every` barrier
+                        // would, so counting writes across them would
+                        // schedule a spurious second barrier
+                        writes_since_flush = 0;
                         // serial engine: everything in flight is what
                         // `self.now` already tracks — drain to it
                         let drain = self.now.max(req_end);
@@ -300,6 +311,7 @@ impl Simulator {
                     self.now = self.now.max(req_end);
                 }
                 BioKind::Flush => {
+                    writes_since_flush = 0;
                     let drain = self.now.max(arrival);
                     let t = self.policy.write_barrier(&mut self.ftl, drain)?;
                     self.now = self.now.max(t);
@@ -541,6 +553,82 @@ mod tests {
         let s = sim.run(&trace, scenario::Scenario::Bursty).unwrap();
         assert_eq!(s.blk.fua_writes, writes);
         assert_eq!(s.blk.flushes, writes);
+    }
+
+    #[test]
+    fn flush_bio_resets_periodic_barrier_counter() {
+        // regression: an explicit flush bio used to leave
+        // `writes_since_flush` untouched, so the next write after a
+        // host flush could fire a spurious second barrier
+        use crate::blk::Segment;
+        let page_w = |at, page: u64| {
+            Ok(Bio::write(at, vec![Segment { sector: page * 8, n_sectors: 8 }], false))
+        };
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.blk.enabled = true;
+        cfg.blk.flush_every = 2;
+        let mut sim = Simulator::new(cfg.clone()).unwrap();
+        let bios = vec![page_w(0, 0), Ok(Bio::flush(MS)), page_w(2 * MS, 1)];
+        let s = sim.run_bios("flush-then-write", bios, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.bios, 2);
+        assert_eq!(s.blk.flushes, 1, "only the explicit flush barriers; no spurious second");
+
+        // FUA barriers restart the countdown too
+        let mut sim = Simulator::new(cfg).unwrap();
+        let bios = vec![
+            Ok(Bio::write(0, vec![Segment { sector: 0, n_sectors: 8 }], true)),
+            page_w(MS, 1),
+        ];
+        let s = sim.run_bios("fua-then-write", bios, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.fua_writes, 1);
+        assert_eq!(s.blk.flushes, 1, "the FUA barrier counts; the follow-up write does not");
+    }
+
+    #[test]
+    fn zero_length_write_bio_is_skipped_not_sampled() {
+        // regression: an empty write plan used to record a 0 ns latency
+        // sample and a 0-byte bandwidth point, dragging p50 down
+        use crate::blk::Segment;
+        let mut cfg = small_cfg(Scheme::Ips);
+        cfg.blk.enabled = true;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let bios = vec![
+            Ok(Bio::write(0, Vec::new(), false)),
+            Ok(Bio::write(MS, vec![Segment { sector: 0, n_sectors: 8 }], false)),
+        ];
+        let s = sim.run_bios("sparse", bios, scenario::Scenario::Bursty).unwrap();
+        assert_eq!(s.blk.empty_bios, 1);
+        assert_eq!(s.blk.bios, 1, "the empty bio is not counted as dispatched");
+        assert_eq!(s.blk.write_pages, 1);
+        assert_eq!(s.write_latency.count(), 1, "no 0 ns sample from the empty bio");
+        assert!(s.write_latency.mean() > 0.0);
+        assert_eq!(s.host_bytes_written, 4096);
+    }
+
+    #[test]
+    fn huge_timestamp_daily_replay_errors_or_saturates() {
+        // regression: a corrupt near-u64::MAX MSR row must surface as a
+        // parse error through the streaming daily replay, never a panic
+        let csv = format!(
+            "128166372003061629,hm,0,Write,0,4096,1\n{},hm,0,Write,4096,4096,1\n",
+            u64::MAX
+        );
+        let mut cfg = small_cfg(Scheme::Ips);
+        cfg.blk.enabled = true;
+        cfg.sim.verify = false;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let stream = crate::trace::msr::MsrStream::new(csv.as_bytes()).bios(512);
+        let r = sim.run_bios("corrupt", stream, scenario::Scenario::Daily);
+        assert!(r.is_err(), "absurd timestamp is a parse error, not a clock");
+
+        // and the idle-window arithmetic itself saturates: a maximal
+        // threshold simply means "never idle", not an overflowing add
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.cache.idle_threshold = u64::MAX;
+        let mut sim = Simulator::new(cfg).unwrap();
+        let trace = scenario::daily_streams(2, 256 << 10, 60 * SEC, sim.logical_bytes());
+        let s = sim.run(&trace, scenario::Scenario::Daily).unwrap();
+        assert_eq!(s.ledger.slc2tlc_migrations, 0, "no idle window ever opens");
     }
 
     #[test]

@@ -27,6 +27,13 @@ use std::collections::BinaryHeap;
 use std::io::BufRead;
 use std::path::Path;
 
+/// Largest accepted timestamp, in 100 ns ticks: anything whose
+/// nanosecond value would not fit a `u64` is a corrupt row, not a
+/// plausible filetime (real MSR traces sit near 1.28e17 ticks, ~70× below
+/// this). Rejecting here keeps the engines' simulated clocks far from
+/// `u64::MAX`, where timestamp arithmetic would saturate or overflow.
+const MAX_TIMESTAMP_TICKS: u64 = u64::MAX / 100;
+
 /// Parse one MSR CSV line.
 fn parse_line(line: &str, lineno: usize) -> Result<Option<TraceOp>> {
     let line = line.trim();
@@ -41,6 +48,9 @@ fn parse_line(line: &str, lineno: usize) -> Result<Option<TraceOp>> {
         .trim()
         .parse()
         .map_err(|_| err("bad timestamp"))?;
+    if ts > MAX_TIMESTAMP_TICKS {
+        return Err(err("absurd timestamp (exceeds u64 nanoseconds)"));
+    }
     let _host = fields.next().ok_or_else(|| err("missing hostname"))?;
     let _disk = fields.next().ok_or_else(|| err("missing disk"))?;
     let kind = match fields.next().ok_or_else(|| err("missing type"))?.trim() {
@@ -61,7 +71,7 @@ fn parse_line(line: &str, lineno: usize) -> Result<Option<TraceOp>> {
         .parse()
         .map_err(|_| err("bad size"))?;
     Ok(Some(TraceOp {
-        at: ts.saturating_mul(100), // 100 ns ticks → ns
+        at: ts * 100, // 100 ns ticks → ns; cannot overflow (ts capped above)
         kind,
         offset,
         len: len.min(u32::MAX as u64) as u32,
@@ -315,6 +325,25 @@ mod tests {
         assert!(parse("x", "not,a,trace".as_bytes()).is_err());
         assert!(parse("x", "".as_bytes()).is_err());
         assert!(parse("x", "1,h,0,Frobnicate,0,4096,1".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_timestamps() {
+        // a corrupt row near u64::MAX must be a parse error, not a
+        // near-u64::MAX simulated clock that panics timestamp math
+        let src = format!("{},h,0,Write,0,4096,1", u64::MAX);
+        let e = parse("x", src.as_bytes());
+        assert!(e.is_err());
+        assert!(format!("{:?}", e.unwrap_err()).contains("absurd timestamp"));
+        // one tick past the cap errors; the cap itself parses
+        let over = format!("{},h,0,Write,0,4096,1", MAX_TIMESTAMP_TICKS + 1);
+        assert!(parse("x", over.as_bytes()).is_err());
+        let at_cap = format!("{},h,0,Write,0,4096,1", MAX_TIMESTAMP_TICKS);
+        let t = parse("x", at_cap.as_bytes()).unwrap();
+        assert_eq!(t.ops.len(), 1);
+        // streaming reader shares parse_line, so it rejects too
+        let r: Result<Vec<TraceOp>> = MsrStream::new(src.as_bytes()).collect();
+        assert!(r.is_err());
     }
 
     #[test]

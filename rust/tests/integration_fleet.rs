@@ -7,7 +7,7 @@
 use ips::config::presets;
 use ips::coordinator::fleet::{
     device_table, fold_population, population_csv, population_json, population_table,
-    run_population, PopulationSpec,
+    run_population, run_population_streaming, PopulationSpec,
 };
 
 fn population(devices: u32, threads: usize) -> PopulationSpec {
@@ -82,6 +82,39 @@ fn fleet_path_never_carries_raw_sample_vectors() {
     for col in ["bpp", "logical_frac", "pre_age", "victim_p99_ms"] {
         assert!(detail.contains(col), "device table lists {col}");
     }
+}
+
+#[test]
+fn faulted_streaming_rollup_is_byte_identical_and_memory_bounded() {
+    // PR 8 acceptance: a faulted population streams its fold — devices
+    // are folded and dropped as they finish — and the rollup is
+    // byte-identical to the collect-then-fold path at any thread count.
+    let mut spec = population(8, 1);
+    spec.fault_rate = 0.5;
+    let mut par = population(8, 8);
+    par.fault_rate = 0.5;
+    let runs = run_population(&spec).unwrap();
+    let reference = population_json(&fold_population(&runs));
+    let (c1, csv1, st1) = run_population_streaming(&spec).unwrap();
+    let (c8, csv8, st8) = run_population_streaming(&par).unwrap();
+    assert_eq!(population_json(&c1), reference, "streaming == collected, serially");
+    assert_eq!(population_json(&c8), reference, "and on 8 threads, byte for byte");
+    assert_eq!(csv1, csv8, "per-device row stream is order-deterministic");
+    assert_eq!(st1.runs, 5 * 8, "5 schemes x 8 devices");
+    // bounded memory: the resident-run high-water never exceeds one
+    // run per worker — far below the 40-run population
+    assert_eq!(st1.peak_resident_runs, 1, "serial streams one run at a time");
+    assert!(st8.peak_resident_runs <= 8, "<= one resident run per worker");
+    for c in &c1 {
+        assert_eq!(
+            c.devices_healthy + c.devices_faulted,
+            c.devices,
+            "{}: the healthy/faulted split partitions the population",
+            c.scheme
+        );
+    }
+    assert!(reference.contains("\"healthy_victim_p99_ms\""));
+    assert!(reference.contains("\"faulted_victim_p99_ms\""));
 }
 
 #[test]
