@@ -19,4 +19,4 @@ pub mod bio;
 pub mod submit;
 
 pub use bio::{Bio, BioKind, Segment};
-pub use submit::{full_mask, plan, PageIo, Plan};
+pub use submit::{full_mask, plan, plan_into, PageIo, Plan};

@@ -48,6 +48,15 @@ pub struct Plan {
     pub rmw_reads: u64,
 }
 
+impl Default for Plan {
+    /// An empty plan (a zero-page flush): the engines' reusable
+    /// scratch buffer starts here and [`plan_into`] overwrites every
+    /// field on each call.
+    fn default() -> Plan {
+        Plan { kind: BioKind::Flush, fua: false, pages: Vec::new(), splits: 0, merges: 0, rmw_reads: 0 }
+    }
+}
+
 /// Coverage bitmap for sectors `[lo, hi)` of a page.
 fn mask_range(lo: u32, hi: u32) -> u64 {
     debug_assert!(lo < hi && hi <= 64);
@@ -71,10 +80,24 @@ pub fn full_mask(sectors_per_page: u32) -> u64 {
 
 /// Split, merge, and RMW-mark one bio. Pure; see module docs.
 pub fn plan(bio: &Bio, blk: &BlkConfig, page_bytes: u64) -> Plan {
+    let mut out = Plan::default();
+    plan_into(bio, blk, page_bytes, &mut out);
+    out
+}
+
+/// [`plan`] into a caller-owned buffer: every field is overwritten and
+/// the page vector is reused (cleared, capacity kept), so a planner
+/// scratch held across bios performs zero steady-state allocations
+/// once it has grown to the largest bio seen. Same results as [`plan`]
+/// by construction — `plan` is now a thin allocate-and-call wrapper.
+pub fn plan_into(bio: &Bio, blk: &BlkConfig, page_bytes: u64, out: &mut Plan) {
     let spp = (page_bytes / blk.sector_bytes as u64) as u32;
     let full = full_mask(spp);
     let window = blk.merge_window as usize;
-    let mut pages: Vec<PageIo> = Vec::new();
+    out.kind = bio.kind;
+    out.fua = bio.fua;
+    out.pages.clear();
+    let pages = &mut out.pages;
     let (mut splits, mut merges, mut rmw_reads) = (0u64, 0u64, 0u64);
 
     for seg in &bio.segments {
@@ -106,14 +129,16 @@ pub fn plan(bio: &Bio, blk: &BlkConfig, page_bytes: u64) -> Plan {
     }
 
     if bio.kind == BioKind::Write && blk.rmw {
-        for p in &mut pages {
+        for p in pages.iter_mut() {
             if p.coverage != full {
                 p.pre_read = true;
                 rmw_reads += 1;
             }
         }
     }
-    Plan { kind: bio.kind, fua: bio.fua, pages, splits, merges, rmw_reads }
+    out.splits = splits;
+    out.merges = merges;
+    out.rmw_reads = rmw_reads;
 }
 
 #[cfg(test)]
@@ -217,6 +242,23 @@ mod tests {
         let p = plan(&b, &cfg(0, true), 32 * 1024);
         assert_eq!(p.pages, vec![PageIo { page: 0, coverage: u64::MAX, pre_read: false }]);
         assert_eq!(p.rmw_reads, 0);
+    }
+
+    #[test]
+    fn plan_into_reuse_matches_fresh_plan() {
+        // a dirty, over-capacity buffer must be fully overwritten
+        let mut buf = Plan::default();
+        let big = Bio::write(0, vec![Segment { sector: 0, n_sectors: 40 }], true);
+        plan_into(&big, &cfg(4, true), PAGE, &mut buf);
+        assert_eq!(buf, plan(&big, &cfg(4, true), PAGE));
+        let cap = buf.pages.capacity();
+        let small = Bio::write(0, vec![Segment { sector: 2, n_sectors: 3 }], false);
+        plan_into(&small, &cfg(4, true), PAGE, &mut buf);
+        assert_eq!(buf, plan(&small, &cfg(4, true), PAGE), "stale pages/counters cleared");
+        assert_eq!(buf.pages.capacity(), cap, "capacity is kept across reuse");
+        let f = Bio::flush(0);
+        plan_into(&f, &cfg(4, true), PAGE, &mut buf);
+        assert_eq!(buf, plan(&f, &cfg(4, true), PAGE));
     }
 
     #[test]

@@ -95,17 +95,23 @@ pub struct CachePartitioner {
     ops_per_conversion: u64,
     /// Per-tenant pages denied an SLC grant (diagnostics).
     denied: Vec<u64>,
-    /// Incremental occupancy index (§Perf): every tenant with
-    /// `occ > 0`, keyed `(occ, Reverse(tenant))` so the last element is
-    /// the release target — highest occupancy, ties to the lowest
-    /// index. Maintained by [`CachePartitioner::set_occ`]; replaces the
-    /// per-page linear scan in [`CachePartitioner::release`].
+    /// Index layout (§Perf, `sim.flat_index`): `true` (default) skips
+    /// the tree indices entirely and answers the release target /
+    /// eviction candidate with a linear argmax over the flat `occ` and
+    /// `reserved` vectors — tenant counts are small, so one contiguous
+    /// scan beats tree maintenance on every occupancy change; `false`
+    /// maintains the `BTreeSet` indices below (the PR 4 structures,
+    /// retained as the byte-identical differential oracle).
+    flat: bool,
+    /// Tree-oracle occupancy index: every tenant with `occ > 0`, keyed
+    /// `(occ, Reverse(tenant))` so the last element is the release
+    /// target — highest occupancy, ties to the lowest index. Maintained
+    /// by [`CachePartitioner::set_occ`]; empty when `flat`.
     occ_index: BTreeSet<(u64, Reverse<usize>)>,
-    /// Incremental over-budget index: every tenant with
+    /// Tree-oracle over-budget index: every tenant with
     /// `occ > reserved` and `reserved < capacity`, keyed
     /// `(occ - reserved, Reverse(tenant))` — the last element is the
-    /// eviction candidate. Replaces the per-idle-step scan in
-    /// [`CachePartitioner::eviction_candidate`].
+    /// eviction candidate. Empty when `flat`.
     over_index: BTreeSet<(u64, Reverse<usize>)>,
     /// Σ per-tenant `occ.saturating_sub(reserved)` (shared-pool use),
     /// maintained incrementally for the O(1) grant path.
@@ -154,6 +160,7 @@ impl CachePartitioner {
             release_carry: 0,
             ops_per_conversion: cfg.cache.max_reprograms.max(1) as u64,
             denied: vec![0; n],
+            flat: cfg.sim.flat_index,
             occ_index: BTreeSet::new(),
             over_index: BTreeSet::new(),
             shared_used: 0,
@@ -162,27 +169,30 @@ impl CachePartitioner {
         }
     }
 
-    /// The single occupancy mutation point: keeps the occupancy and
-    /// over-budget indices, the shared-pool counter, and the total in
-    /// lockstep with `occ[t]`. O(log tenants).
+    /// The single occupancy mutation point: keeps the shared-pool
+    /// counter and the total in lockstep with `occ[t]` — and, in
+    /// tree-oracle mode, the occupancy and over-budget indices too.
+    /// O(1) flat, O(log tenants) with the oracle trees.
     fn set_occ(&mut self, t: usize, new: u64) {
         let old = self.occ[t];
         if old == new {
             return;
         }
         let r = self.reserved[t];
-        if old > 0 {
-            self.occ_index.remove(&(old, Reverse(t)));
-        }
-        if new > 0 {
-            self.occ_index.insert((new, Reverse(t)));
-        }
-        if r < self.capacity {
-            if old > r {
-                self.over_index.remove(&(old - r, Reverse(t)));
+        if !self.flat {
+            if old > 0 {
+                self.occ_index.remove(&(old, Reverse(t)));
             }
-            if new > r {
-                self.over_index.insert((new - r, Reverse(t)));
+            if new > 0 {
+                self.occ_index.insert((new, Reverse(t)));
+            }
+            if r < self.capacity {
+                if old > r {
+                    self.over_index.remove(&(old - r, Reverse(t)));
+                }
+                if new > r {
+                    self.over_index.insert((new - r, Reverse(t)));
+                }
             }
         }
         self.shared_used = self.shared_used - old.saturating_sub(r) + new.saturating_sub(r);
@@ -352,13 +362,23 @@ impl CachePartitioner {
         if !self.enabled {
             return None;
         }
-        // The over-budget index holds exactly the tenants with
-        // `occ > reserved` and `reserved < capacity` (a tenant owning
-        // the entire cache has nobody to evict for — the differential
-        // guarantee — and never enters it; see `set_occ`). Its last
-        // element is the tenant furthest over, ties to the lowest
-        // index: the engine reads this every idle window, so it is
-        // O(1) instead of a per-window tenant scan.
+        // Eligible tenants have `occ > reserved` and
+        // `reserved < capacity` (a tenant owning the entire cache has
+        // nobody to evict for — the differential guarantee). The pick
+        // is the tenant furthest over, ties to the lowest index. Flat
+        // mode answers with one contiguous argmax scan (strictly
+        // greater keeps the lowest index on ties); the tree oracle
+        // reads its over-budget index's last element — same pick,
+        // differential-tested.
+        if self.flat {
+            let mut best: Option<(u64, usize)> = None;
+            for (i, (&o, &r)) in self.occ.iter().zip(&self.reserved).enumerate() {
+                if r < self.capacity && o > r && best.map(|(v, _)| o - r > v).unwrap_or(true) {
+                    best = Some((o - r, i));
+                }
+            }
+            return best.map(|(_, i)| i);
+        }
         self.over_index.iter().next_back().map(|&(_, Reverse(i))| i)
     }
 
@@ -383,11 +403,23 @@ impl CachePartitioner {
     /// this accounting, is what protects reserved slices.
     pub fn release(&mut self, pages: u64) {
         for _ in 0..pages {
-            // highest occupancy, ties to the lowest index: the
-            // occupancy index's last element, O(log tenants) per page
-            // instead of a tenant scan
-            match self.occ_index.iter().next_back().copied() {
-                Some((o, Reverse(i))) => self.set_occ(i, o - 1),
+            // highest occupancy, ties to the lowest index
+            let target = if self.flat {
+                // contiguous argmax over the flat occupancy vector
+                // (strictly greater keeps the lowest index on ties)
+                let mut best: Option<(u64, usize)> = None;
+                for (i, &o) in self.occ.iter().enumerate() {
+                    if o > 0 && best.map(|(v, _)| o > v).unwrap_or(true) {
+                        best = Some((o, i));
+                    }
+                }
+                best
+            } else {
+                // the tree oracle's last element, O(log tenants)
+                self.occ_index.iter().next_back().map(|&(o, Reverse(i))| (o, i))
+            };
+            match target {
+                Some((o, i)) => self.set_occ(i, o - 1),
                 None => break,
             }
         }
@@ -401,9 +433,14 @@ mod tests {
     use crate::metrics::Attribution;
 
     fn partitioner(tenants: usize, capacity: u64, frac: f64) -> CachePartitioner {
+        partitioner_with(tenants, capacity, frac, true)
+    }
+
+    fn partitioner_with(tenants: usize, capacity: u64, frac: f64, flat: bool) -> CachePartitioner {
         let mut cfg = presets::small();
         cfg.cache.partition.enabled = true;
         cfg.cache.partition.reserved_frac = frac;
+        cfg.sim.flat_index = flat;
         CachePartitioner::new(&cfg, &vec![1.0; tenants], capacity)
     }
 
@@ -576,28 +613,31 @@ mod tests {
         // 3 tenants, 30 pages, 9 reserved → 3 each; equal occupancies
         // make both the release target and the eviction candidate a
         // pure tie, which must go to tenant 0 (the scan rule the
-        // indices replace).
-        let mut p = partitioner(3, 30, 0.3);
-        for t in 0..3 {
-            for _ in 0..5 {
-                p.charge(t, &slc_diff());
+        // indices replace). Both backends — the flat argmax and the
+        // tree oracle — must agree on every pick.
+        for flat in [false, true] {
+            let mut p = partitioner_with(3, 30, 0.3, flat);
+            for t in 0..3 {
+                for _ in 0..5 {
+                    p.charge(t, &slc_diff());
+                }
             }
+            assert_eq!(p.total_occupancy(), 15);
+            assert_eq!(p.eviction_candidate(), Some(0), "equal over-budget ties to tenant 0");
+            p.release(1);
+            assert_eq!(p.occupancy(0), 4, "equal occupancy releases tenant 0 first");
+            assert_eq!(p.occupancy(1), 5);
+            assert_eq!(p.eviction_candidate(), Some(1), "tenant 1 now leads the tie");
+            assert_eq!(p.total_occupancy(), 14);
+            // draining a tenant empties both backends' books
+            p.release_for(1, 5);
+            p.release_for(2, 5);
+            p.release_for(0, 4);
+            assert_eq!(p.total_occupancy(), 0);
+            assert_eq!(p.eviction_candidate(), None);
+            p.release(3); // nothing left to release: must not underflow
+            assert_eq!(p.total_occupancy(), 0);
         }
-        assert_eq!(p.total_occupancy(), 15);
-        assert_eq!(p.eviction_candidate(), Some(0), "equal over-budget ties to tenant 0");
-        p.release(1);
-        assert_eq!(p.occupancy(0), 4, "equal occupancy releases tenant 0 first");
-        assert_eq!(p.occupancy(1), 5);
-        assert_eq!(p.eviction_candidate(), Some(1), "tenant 1 now leads the tie");
-        assert_eq!(p.total_occupancy(), 14);
-        // draining a tenant removes it from both indices
-        p.release_for(1, 5);
-        p.release_for(2, 5);
-        p.release_for(0, 4);
-        assert_eq!(p.total_occupancy(), 0);
-        assert_eq!(p.eviction_candidate(), None);
-        p.release(3); // nothing left to release: must not underflow
-        assert_eq!(p.total_occupancy(), 0);
     }
 
     #[test]

@@ -606,6 +606,31 @@ pub struct SimConfig {
     /// `bus_ns_per_page = 0` and one plane per die per channel (the
     /// differential oracle).
     pub interconnect: bool,
+    /// Hot-index layout: `true` (default) backs the victim index and
+    /// the partitioner's occupancy indices with flat per-bucket `Vec`s
+    /// plus intrusive `(bucket, slot)` back-pointers — O(1)
+    /// insert/remove/reposition with contiguous scans; `false` keeps
+    /// the historical `BTreeSet` structures, retained as the
+    /// byte-identical differential oracle.
+    pub flat_index: bool,
+    /// Block page-metadata layout: `true` (default) stores wordline
+    /// states, valid bitmaps, and P2L back-pointers in plane-level SoA
+    /// arenas indexed by `(block, page)` so GC/reprogram sweeps walk
+    /// contiguous memory; `false` keeps per-`Block` inline vectors
+    /// (heap islands), retained as the byte-identical oracle.
+    pub soa_blocks: bool,
+    /// WA attribution: `true` (default) accumulates per-request and
+    /// per-page deltas incrementally inside [`crate::metrics::Ledger`]
+    /// scopes pushed by `Ledger::program` — O(events); `false` keeps
+    /// the historical full-struct snapshot/diff per request, retained
+    /// as the byte-identical oracle.
+    pub incremental_attribution: bool,
+    /// Host-engine dispatch: `true` (default) drains all completions
+    /// at a timestamp in one pass and reuses per-iteration scratch
+    /// buffers (zero steady-state allocations); `false` keeps the
+    /// historical per-iteration allocation path, retained as the
+    /// byte-identical oracle.
+    pub batched_dispatch: bool,
     /// Latency-histogram resolution: sub-buckets per power-of-two band
     /// in the log-linear collectors (power of two in 2..=256; worst-case
     /// relative quantile error is `1 / hist_sub_buckets`).
@@ -633,6 +658,10 @@ impl Default for SimConfig {
             max_idle_steps: 0,
             victim_index: true,
             interconnect: false,
+            flat_index: true,
+            soa_blocks: true,
+            incremental_attribution: true,
+            batched_dispatch: true,
             hist_sub_buckets: 64,
             logical_frac: 0.80,
             pre_age_erases: 0,
@@ -961,6 +990,11 @@ impl Config {
             max_idle_steps: v.u64_or("sim.max_idle_steps", s.max_idle_steps),
             victim_index: v.bool_or("sim.victim_index", s.victim_index),
             interconnect: v.bool_or("sim.interconnect", s.interconnect),
+            flat_index: v.bool_or("sim.flat_index", s.flat_index),
+            soa_blocks: v.bool_or("sim.soa_blocks", s.soa_blocks),
+            incremental_attribution: v
+                .bool_or("sim.incremental_attribution", s.incremental_attribution),
+            batched_dispatch: v.bool_or("sim.batched_dispatch", s.batched_dispatch),
             hist_sub_buckets: v.u64_or("sim.hist_sub_buckets", s.hist_sub_buckets as u64) as u32,
             logical_frac: v.f64_or("sim.logical_frac", s.logical_frac),
             pre_age_erases: v.u64_or("sim.pre_age_erases", s.pre_age_erases as u64) as u32,
@@ -1085,6 +1119,25 @@ mod tests {
         .unwrap();
         assert!(cfg.sim.interconnect);
         assert_eq!(cfg.timing.bus_ns_per_page, 12_000);
+    }
+
+    #[test]
+    fn hot_path_knobs_default_on_and_toml_overrides() {
+        let c = presets::small();
+        assert!(c.sim.flat_index, "flat index layout is the default");
+        assert!(c.sim.soa_blocks, "SoA block arenas are the default");
+        assert!(c.sim.incremental_attribution, "scoped attribution is the default");
+        assert!(c.sim.batched_dispatch, "batched dispatch is the default");
+        let cfg = Config::from_toml_str(
+            "[sim]\nflat_index = false\nsoa_blocks = false\n\
+             incremental_attribution = false\nbatched_dispatch = false",
+            presets::small(),
+        )
+        .unwrap();
+        assert!(!cfg.sim.flat_index, "BTreeSet oracle selectable");
+        assert!(!cfg.sim.soa_blocks, "inline-vector oracle selectable");
+        assert!(!cfg.sim.incremental_attribution, "snapshot/diff oracle selectable");
+        assert!(!cfg.sim.batched_dispatch, "allocating dispatch oracle selectable");
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Wall-clock perf harness: the victim index vs the linear-scan oracle
-//! (`ips perf`, `benches/fig_perf.rs` → `BENCH_PR4.json`).
+//! (`ips perf --compare victim-index`, `benches/fig_perf.rs` →
+//! `BENCH_PR4.json`), the interconnect timing model vs the plane lump
+//! (`--compare interconnect` → `BENCH_PR5.json`), and the hot-path
+//! data-structure pass — flat bucket indices, SoA plane arenas,
+//! incremental attribution, batched dispatch — vs its four oracles
+//! (`--compare structures`, the default → `BENCH_PR9.json`, including
+//! a blocks-per-plane × channel-count scaling sweep).
 //!
 //! Each cell runs the *same* (preset, scheme, scenario, trace) twice —
 //! once with `sim.victim_index = false` (the historical scan backend)
@@ -285,6 +291,236 @@ pub fn timing_json(cells: &[TimingCell]) -> String {
     out
 }
 
+// --- hot-path structures comparison (BENCH_PR9) --------------------
+
+/// Set the four hot-path data-structure knobs together (§Perf pass #2):
+/// flat bucket indices, SoA plane arenas, incremental attribution and
+/// batched dispatch. `false` selects every historical oracle structure
+/// (BTreeSet buckets, inline per-block vectors, snapshot-diff
+/// attribution, per-iteration dispatch allocation).
+fn set_struct_knobs(cfg: &mut Config, on: bool) {
+    cfg.sim.flat_index = on;
+    cfg.sim.soa_blocks = on;
+    cfg.sim.incremental_attribution = on;
+    cfg.sim.batched_dispatch = on;
+}
+
+/// One (preset, scheme, scenario) measurement: oracle structures vs
+/// the flat/SoA/incremental/batched hot-path structures. Like the
+/// victim-index cells this IS a differential — both runs must produce
+/// byte-identical simulation results; the four knobs only change data
+/// layout and bookkeeping strategy, never behaviour.
+#[derive(Clone, Debug)]
+pub struct StructCell {
+    /// Preset name.
+    pub preset: String,
+    /// Scheme name.
+    pub scheme: &'static str,
+    /// Scenario name.
+    pub scenario: &'static str,
+    /// Simulated host pages each run served (identical in both).
+    pub host_pages: u64,
+    /// Wall clock of the oracle-structures run.
+    pub oracle_wall: Duration,
+    /// Wall clock of the flat/SoA/incremental/batched run.
+    pub new_wall: Duration,
+    /// Did both runs produce identical simulation results?
+    pub identical: bool,
+}
+
+impl StructCell {
+    /// Simulated host pages per wall-clock second, oracle structures.
+    pub fn ops_oracle(&self) -> f64 {
+        self.host_pages as f64 / self.oracle_wall.as_secs_f64().max(1e-9)
+    }
+    /// Simulated host pages per wall-clock second, new structures.
+    pub fn ops_new(&self) -> f64 {
+        self.host_pages as f64 / self.new_wall.as_secs_f64().max(1e-9)
+    }
+    /// New-structures speedup over the oracles (ops/sec ratio).
+    pub fn speedup(&self) -> f64 {
+        self.oracle_wall.as_secs_f64() / self.new_wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run one (scheme, scenario) cell on `base`: oracle structures first,
+/// then the new hot-path structures, identical traces and seeds. `Err`
+/// only on simulation failure — a *result divergence* is reported via
+/// [`StructCell::identical`] so the caller decides how loudly to fail.
+pub fn run_struct_cell(
+    preset: &str,
+    base: &Config,
+    scheme: Scheme,
+    scen: Scenario,
+    volume_mult: f64,
+) -> Result<StructCell> {
+    let mut runs: Vec<RunSummary> = Vec::with_capacity(2);
+    for use_new in [false, true] {
+        let mut cfg = base.clone();
+        cfg.cache.scheme = scheme;
+        set_struct_knobs(&mut cfg, use_new);
+        cfg.sim.verify = false;
+        let mut sim = Simulator::new(cfg)?;
+        let trace = cell_trace(scen, sim.logical_bytes(), volume_mult);
+        runs.push(sim.run(&trace, scen)?);
+    }
+    let (oracle, new) = (&runs[0], &runs[1]);
+    Ok(StructCell {
+        preset: preset.to_string(),
+        scheme: scheme.name(),
+        scenario: scen.name(),
+        host_pages: new.ledger.host_pages,
+        oracle_wall: oracle.wall_clock,
+        new_wall: new.wall_clock,
+        identical: summaries_identical(oracle, new),
+    })
+}
+
+/// Run the structures matrix: `schemes × scenarios` on one preset.
+pub fn run_struct_matrix(
+    preset: &str,
+    base: &Config,
+    schemes: &[Scheme],
+    scenarios: &[Scenario],
+    volume_mult: f64,
+) -> Result<Vec<StructCell>> {
+    let mut cells = Vec::with_capacity(schemes.len() * scenarios.len());
+    for &scheme in schemes {
+        for &scen in scenarios {
+            cells.push(run_struct_cell(preset, base, scheme, scen, volume_mult)?);
+        }
+    }
+    Ok(cells)
+}
+
+/// One point of the blocks-per-plane × channel-count scaling sweep:
+/// the same oracle-vs-new differential on a resized geometry. The
+/// offered volume tracks logical capacity (via `cell_trace`), so
+/// host-pages/sec is comparable across points and the per-axis trend
+/// shows where each oracle structure's O(blocks)/O(planes) cost bites.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    /// Blocks per plane at this point.
+    pub blocks_per_plane: u32,
+    /// Channel count at this point.
+    pub channels: u32,
+    /// Simulated host pages each run served (identical in both).
+    pub host_pages: u64,
+    /// Wall clock of the oracle-structures run.
+    pub oracle_wall: Duration,
+    /// Wall clock of the flat/SoA/incremental/batched run.
+    pub new_wall: Duration,
+    /// Did both runs produce identical simulation results?
+    pub identical: bool,
+}
+
+impl ScalePoint {
+    /// Simulated host pages per wall-clock second, oracle structures.
+    pub fn ops_oracle(&self) -> f64 {
+        self.host_pages as f64 / self.oracle_wall.as_secs_f64().max(1e-9)
+    }
+    /// Simulated host pages per wall-clock second, new structures.
+    pub fn ops_new(&self) -> f64 {
+        self.host_pages as f64 / self.new_wall.as_secs_f64().max(1e-9)
+    }
+    /// New-structures speedup over the oracles (ops/sec ratio).
+    pub fn speedup(&self) -> f64 {
+        self.oracle_wall.as_secs_f64() / self.new_wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run the scaling sweep: every `blocks_per_plane × channels` grid
+/// point gets one oracle-vs-new cell on `base` with the geometry
+/// resized (cache bytes and everything else held fixed — growing the
+/// array only loosens the cache-fraction validation).
+pub fn run_scaling_sweep(
+    base: &Config,
+    scheme: Scheme,
+    scen: Scenario,
+    volume_mult: f64,
+    blocks_per_plane: &[u32],
+    channels: &[u32],
+) -> Result<Vec<ScalePoint>> {
+    let mut pts = Vec::with_capacity(blocks_per_plane.len() * channels.len());
+    for &bpp in blocks_per_plane {
+        for &ch in channels {
+            let mut runs: Vec<RunSummary> = Vec::with_capacity(2);
+            for use_new in [false, true] {
+                let mut cfg = base.clone();
+                cfg.cache.scheme = scheme;
+                cfg.geometry.blocks_per_plane = bpp;
+                cfg.geometry.channels = ch;
+                set_struct_knobs(&mut cfg, use_new);
+                cfg.sim.verify = false;
+                let mut sim = Simulator::new(cfg)?;
+                let trace = cell_trace(scen, sim.logical_bytes(), volume_mult);
+                runs.push(sim.run(&trace, scen)?);
+            }
+            let (oracle, new) = (&runs[0], &runs[1]);
+            pts.push(ScalePoint {
+                blocks_per_plane: bpp,
+                channels: ch,
+                host_pages: new.ledger.host_pages,
+                oracle_wall: oracle.wall_clock,
+                new_wall: new.wall_clock,
+                identical: summaries_identical(oracle, new),
+            });
+        }
+    }
+    Ok(pts)
+}
+
+/// Serialize structure cells plus the scaling sweep as the
+/// `BENCH_PR9.json` trajectory record. Deterministic field order;
+/// wall-clock values are measurements, not goldens.
+pub fn structures_json(cells: &[StructCell], sweep: &[ScalePoint]) -> String {
+    let mut out = String::from(
+        "{\"bench\":\"BENCH_PR9\",\"unit\":\"host pages per wall-clock second\",\"rows\":[\n",
+    );
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"preset\":\"{}\",\"scheme\":\"{}\",\"scenario\":\"{}\",\"host_pages\":{},\
+             \"oracle_ms\":{:.3},\"new_ms\":{:.3},\"ops_oracle\":{:.0},\"ops_new\":{:.0},\
+             \"speedup\":{:.3},\"identical\":{}}}",
+            c.preset,
+            c.scheme,
+            c.scenario,
+            c.host_pages,
+            c.oracle_wall.as_secs_f64() * 1e3,
+            c.new_wall.as_secs_f64() * 1e3,
+            c.ops_oracle(),
+            c.ops_new(),
+            c.speedup(),
+            c.identical,
+        ));
+    }
+    out.push_str("\n],\"scaling\":[\n");
+    for (i, p) in sweep.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"blocks_per_plane\":{},\"channels\":{},\"host_pages\":{},\
+             \"oracle_ms\":{:.3},\"new_ms\":{:.3},\"ops_oracle\":{:.0},\"ops_new\":{:.0},\
+             \"speedup\":{:.3},\"identical\":{}}}",
+            p.blocks_per_plane,
+            p.channels,
+            p.host_pages,
+            p.oracle_wall.as_secs_f64() * 1e3,
+            p.new_wall.as_secs_f64() * 1e3,
+            p.ops_oracle(),
+            p.ops_new(),
+            p.speedup(),
+            p.identical,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
 /// Serialize cells as the `BENCH_PR4.json` perf-trajectory record.
 /// Deterministic field order; wall-clock values are measurements.
 pub fn perf_json(cells: &[PerfCell]) -> String {
@@ -347,6 +583,46 @@ mod tests {
         let base = presets::small();
         let cell = run_cell("small", &base, Scheme::IpsAgc, Scenario::Daily, 0.5).unwrap();
         assert!(cell.identical, "AGC idle loop must make the same picks on both backends");
+    }
+
+    #[test]
+    fn struct_cell_runs_and_is_identical() {
+        // full IPS scheme: exercises flat index, SoA arenas (cache
+        // blocks reprogram in place), incremental attribution and
+        // batched dispatch against all four oracles at once
+        let base = presets::small();
+        let cell = run_struct_cell("small", &base, Scheme::Ips, Scenario::Bursty, 1.2).unwrap();
+        assert!(cell.host_pages > 0);
+        assert!(cell.identical, "oracle and new structures must agree on every metric");
+        assert!(cell.speedup() > 0.0);
+    }
+
+    #[test]
+    fn scaling_sweep_covers_the_grid_identically() {
+        let base = presets::small();
+        let g = &base.geometry;
+        let pts = run_scaling_sweep(
+            &base,
+            Scheme::TlcOnly,
+            Scenario::Bursty,
+            1.0,
+            &[g.blocks_per_plane, g.blocks_per_plane * 2],
+            &[g.channels],
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.host_pages > 0);
+            assert!(p.identical, "{}x{} diverged", p.blocks_per_plane, p.channels);
+        }
+        // doubling blocks doubles capacity, so the offered volume (and
+        // served pages) must grow with the geometry
+        assert!(pts[1].host_pages > pts[0].host_pages);
+        let json = structures_json(&[], &pts);
+        assert!(json.contains("\"bench\":\"BENCH_PR9\""));
+        assert!(json.contains("\"scaling\":["));
+        assert!(json.contains("\"blocks_per_plane\""));
+        assert!(json.trim_end().ends_with("]}"));
     }
 
     #[test]

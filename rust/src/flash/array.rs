@@ -9,7 +9,7 @@
 //! per-plane lump otherwise), and returns the phase-split
 //! [`Completion`] (paper §II-A: channel → chip → die → plane).
 
-use super::block::Block;
+use super::block::{Block, BlockMut, BlockRef, PlaneArena};
 #[cfg(test)]
 use super::block::BlockMode;
 use super::geometry::{BlockAddr, Lpn, PlaneId, Ppa};
@@ -65,7 +65,13 @@ impl FlashCounters {
 }
 
 struct PlaneState {
+    /// Per-block state. Under `sim.soa_blocks` each block holds only
+    /// its scalar metadata and the page arrays live in `arena`; in the
+    /// inline oracle layout each block owns its own vectors.
     blocks: Vec<Block>,
+    /// SoA page-metadata arenas (`Some` iff `sim.soa_blocks`); see
+    /// [`PlaneArena`].
+    arena: Option<PlaneArena>,
     free_blocks: VecDeque<u32>,
     /// Fault injection: a lost plane never hands out free blocks again
     /// and silently swallows returns; resident data stays readable so
@@ -98,11 +104,19 @@ impl FlashArray {
     /// is what makes a worn device behave differently from a fresh one.
     pub fn new(cfg: &Config) -> FlashArray {
         let g = cfg.geometry;
+        let soa = cfg.sim.soa_blocks;
         let mut planes: Vec<PlaneState> = (0..g.planes())
             .map(|_| PlaneState {
                 blocks: (0..g.blocks_per_plane)
-                    .map(|_| Block::new(&g, cfg.cache.group_layers))
+                    .map(|_| {
+                        if soa {
+                            Block::meta_only(&g, cfg.cache.group_layers)
+                        } else {
+                            Block::new(&g, cfg.cache.group_layers)
+                        }
+                    })
                     .collect(),
+                arena: soa.then(|| PlaneArena::new(&g, g.blocks_per_plane)),
                 free_blocks: (0..g.blocks_per_plane).collect(),
                 lost: false,
             })
@@ -141,13 +155,24 @@ impl FlashArray {
         &self.counters
     }
 
-    /// Immutable block access.
-    pub fn block(&self, addr: BlockAddr) -> &Block {
-        &self.planes[addr.plane.0 as usize].blocks[addr.block as usize]
+    /// Immutable block access: a layout-agnostic view over either the
+    /// block's inline arrays or the plane arena (`sim.soa_blocks`).
+    pub fn block(&self, addr: BlockAddr) -> BlockRef<'_> {
+        let p = &self.planes[addr.plane.0 as usize];
+        let b = &p.blocks[addr.block as usize];
+        match &p.arena {
+            Some(a) => a.block_ref(&b.meta, addr.block),
+            None => b.as_view(),
+        }
     }
     /// Mutable block access (state-only mutations; timing-neutral).
-    pub fn block_mut(&mut self, addr: BlockAddr) -> &mut Block {
-        &mut self.planes[addr.plane.0 as usize].blocks[addr.block as usize]
+    pub fn block_mut(&mut self, addr: BlockAddr) -> BlockMut<'_> {
+        let p = &mut self.planes[addr.plane.0 as usize];
+        let b = &mut p.blocks[addr.block as usize];
+        match &mut p.arena {
+            Some(a) => a.block_mut(&mut b.meta, addr.block),
+            None => b.as_view_mut(),
+        }
     }
 
     /// When the plane becomes free.
@@ -273,7 +298,7 @@ impl FlashArray {
     /// phase (interconnect model; the lump charges the array only).
     pub fn read(&mut self, ppa: Ppa, now: Nanos) -> Result<Completion> {
         let pa = ppa.expand(&self.geometry);
-        let block = &self.planes[pa.plane.0 as usize].blocks[pa.block as usize];
+        let block = self.block(BlockAddr { plane: pa.plane, block: pa.block });
         if !block.is_written(pa.page_in_block()) {
             return Err(Error::Flash(format!("read of unwritten page {ppa:?}")));
         }
@@ -409,7 +434,7 @@ impl FlashArray {
     /// Invalidate a page (timing-neutral metadata update).
     pub fn invalidate(&mut self, ppa: Ppa) -> Result<()> {
         let pa = ppa.expand(&self.geometry);
-        self.planes[pa.plane.0 as usize].blocks[pa.block as usize]
+        self.block_mut(BlockAddr { plane: pa.plane, block: pa.block })
             .invalidate(pa.page_in_block())
     }
 
@@ -428,7 +453,8 @@ impl FlashArray {
 
     /// Recount valid pages across a plane (slow; tests/audits only).
     pub fn audit_plane(&self, plane: PlaneId) -> Result<()> {
-        for (bi, b) in self.planes[plane.0 as usize].blocks.iter().enumerate() {
+        for bi in 0..self.planes[plane.0 as usize].blocks.len() {
+            let b = self.block(BlockAddr { plane, block: bi as u32 });
             let recount = b.valid_pages().count() as u32;
             if recount != b.valid_count() {
                 return Err(Error::invariant(format!(
@@ -668,5 +694,53 @@ mod tests {
         for p in 0..a.geometry().planes() {
             a.audit_plane(PlaneId(p)).unwrap();
         }
+    }
+
+    /// The SoA arenas and the inline per-block vectors are the same
+    /// device: identical op sequence → identical completions, counters,
+    /// and page state (the `sim.soa_blocks` differential at array level).
+    #[test]
+    fn soa_array_matches_inline_array() {
+        let mk = |soa: bool| {
+            let mut cfg = presets::small();
+            cfg.sim.soa_blocks = soa;
+            FlashArray::new(&cfg)
+        };
+        let mut s = mk(true);
+        let mut i = mk(false);
+        let drive = |a: &mut FlashArray| -> Vec<String> {
+            let mut log = Vec::new();
+            let b0 = a.pop_free(PlaneId(0)).unwrap();
+            let b1 = a.pop_free(PlaneId(1)).unwrap();
+            a.block_mut(b0).set_mode(BlockMode::Ips).unwrap();
+            a.block_mut(b1).set_mode(BlockMode::Tlc).unwrap();
+            let (ppa, c) = a.program_slc(b0, Lpn(1), 0).unwrap();
+            log.push(format!("{ppa:?} {c:?}"));
+            let (p, f, c) = a.reprogram(b0, Lpn(2), c.end).unwrap();
+            log.push(format!("{p:?} {f} {c:?}"));
+            let (ps, c) = a.program_tlc(b1, &[Lpn(3), Lpn(4)], 0).unwrap();
+            log.push(format!("{ps:?} {c:?}"));
+            let r = a.read(ppa, c.end).unwrap();
+            log.push(format!("{r:?}"));
+            a.invalidate(ppa).unwrap();
+            for pib in 0..a.geometry().pages_per_block {
+                let b = a.block(b0);
+                log.push(format!(
+                    "{} {} {:?} {:?}",
+                    b.is_valid(pib),
+                    b.is_written(pib),
+                    b.lpn_at(pib),
+                    b.page_kind(pib)
+                ));
+            }
+            let b = a.block(b0);
+            log.push(format!("{} {} {}", b.valid_count(), b.written_count(), b.erase_count()));
+            log.push(format!("{:?}", a.counters()));
+            for p in 0..a.geometry().planes() {
+                a.audit_plane(PlaneId(p)).unwrap();
+            }
+            log
+        };
+        assert_eq!(drive(&mut s), drive(&mut i));
     }
 }

@@ -13,6 +13,29 @@
 //!   layers, the reprogram reliability window of [7]), later
 //!   reprogrammed in place to full TLC, after which the next layer
 //!   group becomes the new SLC window (paper Fig. 6a, Steps 1–3).
+//!
+//! # Data layout (§Perf, hot-path pass #2)
+//!
+//! Block state is split into scalar metadata ([`BlockMeta`]: mode,
+//! counters, write pointers) and the three page-granular arrays
+//! (word-line states, validity bitmap, LPN back-pointers). The arrays
+//! live in one of two layouts selected by `sim.soa_blocks`:
+//!
+//! * **SoA arenas** (default): one [`PlaneArena`] per plane holds the
+//!   arrays of *all* its blocks contiguously, indexed by
+//!   `(block, page)` — GC valid-page scans and victim debt walks
+//!   stream through contiguous memory instead of chasing a heap
+//!   allocation per block.
+//! * **Inline vectors** (oracle): each [`Block`] owns its own `Vec`s —
+//!   the historical layout, retained as the byte-identical
+//!   differential oracle.
+//!
+//! Both layouts are driven by the *same* logic: every operation is
+//! implemented exactly once on the borrowed views [`BlockRef`] /
+//! [`BlockMut`], and [`Block`] (the inline form, still used standalone
+//! in unit tests) delegates by viewing its own vectors. Equivalence is
+//! therefore by construction; `soa_matches_inline_under_random_ops`
+//! pins it anyway.
 
 use super::cell::{PageKind, WlState};
 use super::geometry::Lpn;
@@ -34,17 +57,14 @@ pub enum BlockMode {
 /// Sentinel for "no LPN" in per-page back-pointers.
 pub const NO_LPN: u32 = u32::MAX;
 
-/// One flash block.
+/// Scalar per-block metadata: mode, counters, and write pointers.
+///
+/// Always stored inline in [`Block`] (it is small and hot); only the
+/// page-granular arrays move into the [`PlaneArena`] under
+/// `sim.soa_blocks`.
 #[derive(Clone, Debug)]
-pub struct Block {
+pub struct BlockMeta {
     mode: BlockMode,
-    /// Per-word-line state.
-    wls: Vec<WlState>,
-    /// Validity bitmap over TLC page slots (`pages_per_block` bits).
-    valid: Vec<u64>,
-    /// Back-pointers: LPN stored in each page slot (for GC); lazily
-    /// allocated on first program to keep untouched blocks cheap.
-    p2l: Vec<u32>,
     /// Number of currently valid pages.
     valid_count: u32,
     /// Number of written (programmed) pages, valid or not.
@@ -66,15 +86,11 @@ pub struct Block {
     group_wls: u32,
 }
 
-impl Block {
-    /// Create an erased block.
-    pub fn new(g: &Geometry, group_layers: u32) -> Block {
+impl BlockMeta {
+    fn new(g: &Geometry, group_layers: u32) -> BlockMeta {
         let n_wls = g.wordlines_per_block();
-        Block {
+        BlockMeta {
             mode: BlockMode::Tlc,
-            wls: vec![WlState::ERASED; n_wls as usize],
-            valid: vec![0u64; (g.pages_per_block as usize + 63) / 64],
-            p2l: Vec::new(),
             valid_count: 0,
             written_count: 0,
             write_wl: 0,
@@ -86,45 +102,314 @@ impl Block {
             group_wls: group_layers * g.wordlines_per_layer,
         }
     }
+}
 
+/// `u64` words in a block's validity bitmap.
+fn valid_words(g: &Geometry) -> usize {
+    (g.pages_per_block as usize + 63) / 64
+}
+
+/// One flash block in the inline (AoS) layout: scalar metadata plus
+/// its own page arrays. Standalone `Block`s drive the unit tests and
+/// serve as the `sim.soa_blocks = false` oracle; all operations
+/// delegate to the shared view logic ([`BlockRef`]/[`BlockMut`]).
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub(crate) meta: BlockMeta,
+    /// Per-word-line state.
+    wls: Vec<WlState>,
+    /// Validity bitmap over TLC page slots (`pages_per_block` bits).
+    valid: Vec<u64>,
+    /// Back-pointers: LPN stored in each page slot (for GC); lazily
+    /// allocated on first program to keep untouched blocks cheap.
+    p2l: Vec<u32>,
+}
+
+/// SoA page-metadata arenas for every block of one plane: word-line
+/// states, validity bitmaps, and LPN back-pointers stored contiguously
+/// and indexed by `(block, page)`. The arena owns the arrays; scalar
+/// state stays in each block's [`BlockMeta`].
+///
+/// Unlike the inline layout's lazy `p2l`, the arena back-pointers are
+/// preallocated and `NO_LPN`-filled — `lpn_at` of a never-programmed
+/// slot reads the sentinel instead of an absent vector, which is the
+/// same observable `None`.
+pub struct PlaneArena {
+    /// Word lines per block (slice stride into `wls`).
+    n_wls: usize,
+    /// Bitmap words per block (slice stride into `valid`).
+    words: usize,
+    /// Page slots per block (slice stride into `p2l`).
+    pages: usize,
+    wls: Vec<WlState>,
+    valid: Vec<u64>,
+    p2l: Vec<u32>,
+}
+
+impl PlaneArena {
+    /// Erased arenas for `n_blocks` blocks.
+    pub fn new(g: &Geometry, n_blocks: u32) -> PlaneArena {
+        let n_wls = g.wordlines_per_block() as usize;
+        let words = valid_words(g);
+        let pages = n_wls * 3;
+        let n = n_blocks as usize;
+        PlaneArena {
+            n_wls,
+            words,
+            pages,
+            wls: vec![WlState::ERASED; n_wls * n],
+            valid: vec![0u64; words * n],
+            p2l: vec![NO_LPN; pages * n],
+        }
+    }
+
+    /// Immutable view of block `b` over this arena's slices.
+    pub fn block_ref<'a>(&'a self, meta: &'a BlockMeta, b: u32) -> BlockRef<'a> {
+        let b = b as usize;
+        BlockRef {
+            meta,
+            wls: &self.wls[b * self.n_wls..(b + 1) * self.n_wls],
+            valid: &self.valid[b * self.words..(b + 1) * self.words],
+            p2l: &self.p2l[b * self.pages..(b + 1) * self.pages],
+        }
+    }
+
+    /// Mutable view of block `b` over this arena's slices.
+    pub fn block_mut<'a>(&'a mut self, meta: &'a mut BlockMeta, b: u32) -> BlockMut<'a> {
+        let b = b as usize;
+        BlockMut {
+            meta,
+            wls: &mut self.wls[b * self.n_wls..(b + 1) * self.n_wls],
+            valid: &mut self.valid[b * self.words..(b + 1) * self.words],
+            p2l: P2lMut::Fixed(&mut self.p2l[b * self.pages..(b + 1) * self.pages]),
+        }
+    }
+}
+
+/// Immutable block view: metadata plus borrowed page arrays, layout
+/// agnostic (inline vectors or arena slices). All read-side block
+/// logic lives here.
+#[derive(Clone, Copy)]
+pub struct BlockRef<'a> {
+    meta: &'a BlockMeta,
+    wls: &'a [WlState],
+    valid: &'a [u64],
+    /// Empty while the inline layout's lazy `p2l` is unallocated.
+    p2l: &'a [u32],
+}
+
+/// The two mutable back-pointer layouts behind [`BlockMut`]: the
+/// inline lazy vector (allocated on first program, freed on erase) and
+/// the arena's preallocated `NO_LPN`-filled slice.
+pub enum P2lMut<'a> {
+    /// Inline layout: lazily allocated vector.
+    Lazy(&'a mut Vec<u32>),
+    /// Arena layout: preallocated slice, `NO_LPN` = absent.
+    Fixed(&'a mut [u32]),
+}
+
+/// Mutable block view; all state-changing block logic lives here.
+pub struct BlockMut<'a> {
+    meta: &'a mut BlockMeta,
+    wls: &'a mut [WlState],
+    valid: &'a mut [u64],
+    p2l: P2lMut<'a>,
+}
+
+impl Block {
+    /// Create an erased block with inline page arrays.
+    pub fn new(g: &Geometry, group_layers: u32) -> Block {
+        let n_wls = g.wordlines_per_block();
+        Block {
+            meta: BlockMeta::new(g, group_layers),
+            wls: vec![WlState::ERASED; n_wls as usize],
+            valid: vec![0u64; valid_words(g)],
+            p2l: Vec::new(),
+        }
+    }
+
+    /// Create a block whose page arrays live in a [`PlaneArena`]: only
+    /// the scalar metadata is stored here; the vectors stay empty and
+    /// untouched (the owning array always routes through arena views).
+    pub(crate) fn meta_only(g: &Geometry, group_layers: u32) -> Block {
+        Block {
+            meta: BlockMeta::new(g, group_layers),
+            wls: Vec::new(),
+            valid: Vec::new(),
+            p2l: Vec::new(),
+        }
+    }
+
+    /// View this inline block's own arrays.
+    pub fn as_view(&self) -> BlockRef<'_> {
+        BlockRef { meta: &self.meta, wls: &self.wls, valid: &self.valid, p2l: &self.p2l }
+    }
+
+    /// Mutable view over this inline block's own arrays.
+    pub fn as_view_mut(&mut self) -> BlockMut<'_> {
+        BlockMut {
+            meta: &mut self.meta,
+            wls: &mut self.wls,
+            valid: &mut self.valid,
+            p2l: P2lMut::Lazy(&mut self.p2l),
+        }
+    }
+
+    // --- delegated API (kept so standalone blocks and the oracle
+    // --- exercise the exact same view logic) -----------------------
+
+    /// Current mode.
+    pub fn mode(&self) -> BlockMode {
+        self.as_view().mode()
+    }
+    /// Valid page count.
+    pub fn valid_count(&self) -> u32 {
+        self.as_view().valid_count()
+    }
+    /// Written (programmed) page count, valid or not.
+    pub fn written_count(&self) -> u32 {
+        self.as_view().written_count()
+    }
+    /// Invalid (written but superseded) page count.
+    pub fn invalid_count(&self) -> u32 {
+        self.as_view().invalid_count()
+    }
+    /// Lifetime erases.
+    pub fn erase_count(&self) -> u32 {
+        self.as_view().erase_count()
+    }
+    /// Seed the lifetime erase count before any traffic; see
+    /// [`BlockMut::pre_age`].
+    pub fn pre_age(&mut self, erases: u32) -> Result<()> {
+        self.as_view_mut().pre_age(erases)
+    }
+    /// Is the block completely erased?
+    pub fn is_erased(&self) -> bool {
+        self.as_view().is_erased()
+    }
+    /// Word-line state (for audits).
+    pub fn wl(&self, wl: u32) -> WlState {
+        self.as_view().wl(wl)
+    }
+    /// IPS active layer group index.
+    pub fn active_group(&self) -> u32 {
+        self.as_view().active_group()
+    }
+    /// Number of layer groups in this block.
+    pub fn group_count(&self) -> u32 {
+        self.as_view().group_count()
+    }
+    /// Page validity.
+    pub fn is_valid(&self, pib: u32) -> bool {
+        self.as_view().is_valid(pib)
+    }
+    /// Has the page slot been programmed?
+    pub fn is_written(&self, pib: u32) -> bool {
+        self.as_view().is_written(pib)
+    }
+    /// LPN stored at a page slot.
+    pub fn lpn_at(&self, pib: u32) -> Option<Lpn> {
+        self.as_view().lpn_at(pib)
+    }
+    /// Storage kind of a page (drives read latency).
+    pub fn page_kind(&self, pib: u32) -> PageKind {
+        self.as_view().page_kind(pib)
+    }
+    /// Iterate valid page slots (ascending).
+    pub fn valid_pages(&self) -> impl Iterator<Item = u32> + '_ {
+        self.as_view().valid_pages()
+    }
+    /// Assign a mode; only legal while erased.
+    pub fn set_mode(&mut self, mode: BlockMode) -> Result<()> {
+        self.as_view_mut().set_mode(mode)
+    }
+    /// Word lines still available for an initial SLC program.
+    pub fn slc_free_wls(&self) -> u32 {
+        self.as_view().slc_free_wls()
+    }
+    /// IPS: word lines with reprogram work remaining; see
+    /// [`BlockRef::reprogrammable_wls`].
+    pub fn reprogrammable_wls(&self) -> u32 {
+        self.as_view().reprogrammable_wls()
+    }
+    /// IPS: individual reprogram operations remaining in the active group.
+    pub fn reprogram_ops_remaining(&self) -> u32 {
+        self.as_view().reprogram_ops_remaining()
+    }
+    /// Free one-shot TLC word lines.
+    pub fn tlc_free_wls(&self) -> u32 {
+        self.as_view().tlc_free_wls()
+    }
+    /// Free page slots for page-granular TLC programming.
+    pub fn tlc_free_pages(&self) -> u32 {
+        self.as_view().tlc_free_pages()
+    }
+    /// IPS: the word line the next reprogram operation will target.
+    pub fn next_reprogram_wl(&self) -> Option<u32> {
+        self.as_view().next_reprogram_wl()
+    }
+    /// Does the block have another layer group after the active one?
+    pub fn has_next_group(&self) -> bool {
+        self.as_view().has_next_group()
+    }
+    /// Program one SLC page; see [`BlockMut::program_slc`].
+    pub fn program_slc(&mut self, lpn: Lpn) -> Result<u32> {
+        self.as_view_mut().program_slc(lpn)
+    }
+    /// One-shot TLC program; see [`BlockMut::program_tlc_oneshot`].
+    pub fn program_tlc_oneshot(&mut self, lpns: &[Lpn]) -> Result<Vec<u32>> {
+        self.as_view_mut().program_tlc_oneshot(lpns)
+    }
+    /// Page-granular TLC program; see [`BlockMut::program_tlc_page`].
+    pub fn program_tlc_page(&mut self, lpn: Lpn) -> Result<u32> {
+        self.as_view_mut().program_tlc_page(lpn)
+    }
+    /// One reprogram operation; see [`BlockMut::reprogram_next`].
+    pub fn reprogram_next(&mut self, lpn: Lpn, max_reprograms: u32) -> Result<(u32, bool)> {
+        self.as_view_mut().reprogram_next(lpn, max_reprograms)
+    }
+    /// Advance the IPS window; see [`BlockMut::advance_group`].
+    pub fn advance_group(&mut self) -> Result<u32> {
+        self.as_view_mut().advance_group()
+    }
+    /// Invalidate a page slot.
+    pub fn invalidate(&mut self, pib: u32) -> Result<()> {
+        self.as_view_mut().invalidate(pib)
+    }
+    /// Erase the block.
+    pub fn erase(&mut self) -> Result<()> {
+        self.as_view_mut().erase()
+    }
+}
+
+impl<'a> BlockRef<'a> {
     // --- accessors -------------------------------------------------
 
     /// Current mode.
     pub fn mode(&self) -> BlockMode {
-        self.mode
+        self.meta.mode
     }
     /// Valid page count.
     pub fn valid_count(&self) -> u32 {
-        self.valid_count
+        self.meta.valid_count
     }
     /// Written (programmed) page count, valid or not.
     pub fn written_count(&self) -> u32 {
-        self.written_count
+        self.meta.written_count
     }
     /// Invalid (written but superseded) page count.
     pub fn invalid_count(&self) -> u32 {
-        self.written_count - self.valid_count
+        self.meta.written_count - self.meta.valid_count
     }
     /// Lifetime erases.
     pub fn erase_count(&self) -> u32 {
-        self.erase_count
-    }
-    /// Seed the lifetime erase count before any traffic (fleet wear
-    /// heterogeneity: a pre-aged device starts with uneven wear, which
-    /// perturbs the min-erase allocator). Only legal on a pristine,
-    /// fully erased block.
-    pub fn pre_age(&mut self, erases: u32) -> Result<()> {
-        if !self.is_erased() || self.erase_count != 0 {
-            return Err(Error::invariant("pre_age of a used block"));
-        }
-        self.erase_count = erases;
-        Ok(())
+        self.meta.erase_count
     }
     /// Is the block completely erased?
     pub fn is_erased(&self) -> bool {
-        self.written_count == 0
-            && self.write_wl == 0
-            && self.write_bit == 0
+        self.meta.written_count == 0
+            && self.meta.write_wl == 0
+            && self.meta.write_bit == 0
             && self.wls.iter().all(|w| w.is_erased())
     }
     /// Word-line state (for audits).
@@ -133,11 +418,11 @@ impl Block {
     }
     /// IPS active layer group index.
     pub fn active_group(&self) -> u32 {
-        self.active_group
+        self.meta.active_group
     }
     /// Number of layer groups in this block.
     pub fn group_count(&self) -> u32 {
-        self.n_wls / self.group_wls
+        self.meta.n_wls / self.meta.group_wls
     }
 
     /// Page validity.
@@ -152,7 +437,9 @@ impl Block {
         self.wls[wl as usize].pages() > bit
     }
 
-    /// LPN stored at a page slot (panics if never programmed).
+    /// LPN stored at a page slot (`None` if never programmed or
+    /// invalidated — absent vector slot and `NO_LPN` sentinel read
+    /// identically).
     pub fn lpn_at(&self, pib: u32) -> Option<Lpn> {
         let v = *self.p2l.get(pib as usize)?;
         if v == NO_LPN {
@@ -169,30 +456,20 @@ impl Block {
     /// reprogrammed (an SLC page reads fast until its word line holds
     /// ≥ 2 bits per cell).
     pub fn page_kind(&self, pib: u32) -> PageKind {
-        match self.mode {
+        match self.meta.mode {
             BlockMode::Slc => PageKind::Slc,
             BlockMode::Tlc => PageKind::Tlc,
             BlockMode::Ips => self.wls[(pib / 3) as usize].kind(),
         }
     }
 
-    /// Iterate valid page slots (ascending).
-    pub fn valid_pages(&self) -> impl Iterator<Item = u32> + '_ {
+    /// Iterate valid page slots (ascending). Takes the (Copy) view by
+    /// value so the iterator borrows only the underlying arrays.
+    pub fn valid_pages(self) -> impl Iterator<Item = u32> + 'a {
         self.valid
             .iter()
             .enumerate()
             .flat_map(|(w, &bits)| BitIter { bits, base: w as u32 * 64 })
-    }
-
-    // --- mode management -------------------------------------------
-
-    /// Assign a mode; only legal while erased.
-    pub fn set_mode(&mut self, mode: BlockMode) -> Result<()> {
-        if !self.is_erased() {
-            return Err(Error::Flash("mode change on non-erased block".into()));
-        }
-        self.mode = mode;
-        Ok(())
     }
 
     // --- SLC window / capacity queries ------------------------------
@@ -202,11 +479,12 @@ impl Block {
     /// `Slc` blocks: the rest of the block. `Ips` blocks: the erased
     /// remainder of the active layer group. `Tlc` blocks: 0.
     pub fn slc_free_wls(&self) -> u32 {
-        match self.mode {
-            BlockMode::Slc => self.n_wls - self.write_wl,
+        let m = self.meta;
+        match m.mode {
+            BlockMode::Slc => m.n_wls - m.write_wl,
             BlockMode::Ips => {
-                let group_end = (self.active_group + 1) * self.group_wls;
-                group_end.saturating_sub(self.write_wl.max(self.active_group * self.group_wls))
+                let group_end = (m.active_group + 1) * m.group_wls;
+                group_end.saturating_sub(m.write_wl.max(m.active_group * m.group_wls))
             }
             BlockMode::Tlc => 0,
         }
@@ -216,24 +494,26 @@ impl Block {
     /// yet full TLC (i.e. reprogram work remaining, in units of word
     /// lines; each needs up to 2 reprogram operations).
     pub fn reprogrammable_wls(&self) -> u32 {
-        if self.mode != BlockMode::Ips {
+        let m = self.meta;
+        if m.mode != BlockMode::Ips {
             return 0;
         }
-        let group_start = self.active_group * self.group_wls;
-        let group_end = group_start + self.group_wls;
-        (group_start.max(self.reprog_wl)..group_end.min(self.write_wl))
+        let group_start = m.active_group * m.group_wls;
+        let group_end = group_start + m.group_wls;
+        (group_start.max(m.reprog_wl)..group_end.min(m.write_wl))
             .filter(|&wl| !self.wls[wl as usize].is_full() && !self.wls[wl as usize].is_erased())
             .count() as u32
     }
 
     /// IPS: individual reprogram operations remaining in the active group.
     pub fn reprogram_ops_remaining(&self) -> u32 {
-        if self.mode != BlockMode::Ips {
+        let m = self.meta;
+        if m.mode != BlockMode::Ips {
             return 0;
         }
-        let group_start = self.active_group * self.group_wls;
-        let group_end = group_start + self.group_wls;
-        (group_start..group_end.min(self.write_wl))
+        let group_start = m.active_group * m.group_wls;
+        let group_end = group_start + m.group_wls;
+        (group_start..group_end.min(m.write_wl))
             .map(|wl| 3u32.saturating_sub(self.wls[wl as usize].pages() as u32))
             .sum()
     }
@@ -241,10 +521,11 @@ impl Block {
     /// Free one-shot TLC word lines (for `Tlc` blocks; only whole
     /// erased word lines count).
     pub fn tlc_free_wls(&self) -> u32 {
-        match self.mode {
+        let m = self.meta;
+        match m.mode {
             BlockMode::Tlc => {
-                let partial = if self.write_bit > 0 { 1 } else { 0 };
-                self.n_wls - self.write_wl - partial
+                let partial = if m.write_bit > 0 { 1 } else { 0 };
+                m.n_wls - m.write_wl - partial
             }
             _ => 0,
         }
@@ -252,10 +533,9 @@ impl Block {
 
     /// Free page slots for page-granular TLC programming.
     pub fn tlc_free_pages(&self) -> u32 {
-        match self.mode {
-            BlockMode::Tlc => {
-                (self.n_wls - self.write_wl) * 3 - self.write_bit as u32
-            }
+        let m = self.meta;
+        match m.mode {
+            BlockMode::Tlc => (m.n_wls - m.write_wl) * 3 - m.write_bit as u32,
             _ => 0,
         }
     }
@@ -263,12 +543,13 @@ impl Block {
     /// IPS: the word line the next reprogram operation will target
     /// (programmed but not full, inside the active group), if any.
     pub fn next_reprogram_wl(&self) -> Option<u32> {
-        if self.mode != BlockMode::Ips {
+        let m = self.meta;
+        if m.mode != BlockMode::Ips {
             return None;
         }
-        let group_start = self.active_group * self.group_wls;
-        let group_end = group_start + self.group_wls;
-        (group_start.max(self.reprog_wl)..group_end.min(self.write_wl)).find(|&wl| {
+        let group_start = m.active_group * m.group_wls;
+        let group_end = group_start + m.group_wls;
+        (group_start.max(m.reprog_wl)..group_end.min(m.write_wl)).find(|&wl| {
             let s = self.wls[wl as usize];
             !s.is_erased() && !s.is_full()
         })
@@ -276,23 +557,68 @@ impl Block {
 
     /// Does the block have another layer group after the active one?
     pub fn has_next_group(&self) -> bool {
-        self.mode == BlockMode::Ips && self.active_group + 1 < self.group_count()
+        self.meta.mode == BlockMode::Ips && self.meta.active_group + 1 < self.group_count()
+    }
+}
+
+impl<'a> BlockMut<'a> {
+    /// Reborrow immutably (for read checks inside mutations).
+    pub fn as_ref(&self) -> BlockRef<'_> {
+        BlockRef {
+            meta: self.meta,
+            wls: self.wls,
+            valid: self.valid,
+            p2l: match &self.p2l {
+                P2lMut::Lazy(v) => v.as_slice(),
+                P2lMut::Fixed(s) => s,
+            },
+        }
+    }
+
+    /// Seed the lifetime erase count before any traffic (fleet wear
+    /// heterogeneity: a pre-aged device starts with uneven wear, which
+    /// perturbs the min-erase allocator). Only legal on a pristine,
+    /// fully erased block.
+    pub fn pre_age(&mut self, erases: u32) -> Result<()> {
+        if !self.as_ref().is_erased() || self.meta.erase_count != 0 {
+            return Err(Error::invariant("pre_age of a used block"));
+        }
+        self.meta.erase_count = erases;
+        Ok(())
+    }
+
+    // --- mode management -------------------------------------------
+
+    /// Assign a mode; only legal while erased.
+    pub fn set_mode(&mut self, mode: BlockMode) -> Result<()> {
+        if !self.as_ref().is_erased() {
+            return Err(Error::Flash("mode change on non-erased block".into()));
+        }
+        self.meta.mode = mode;
+        Ok(())
     }
 
     // --- programming -----------------------------------------------
 
-    fn ensure_p2l(&mut self) {
-        if self.p2l.is_empty() {
-            self.p2l = vec![NO_LPN; self.wls.len() * 3];
+    /// Store an LPN back-pointer. Inline layout: allocate the lazy
+    /// vector on first use. Arena layout: the slice is preallocated.
+    fn p2l_set(&mut self, pib: u32, lpn: u32) {
+        match &mut self.p2l {
+            P2lMut::Lazy(v) => {
+                if v.is_empty() {
+                    **v = vec![NO_LPN; self.wls.len() * 3];
+                }
+                v[pib as usize] = lpn;
+            }
+            P2lMut::Fixed(s) => s[pib as usize] = lpn,
         }
     }
 
     fn mark_written(&mut self, pib: u32, lpn: Lpn) {
-        self.ensure_p2l();
-        self.p2l[pib as usize] = lpn.0 as u32;
+        self.p2l_set(pib, lpn.0 as u32);
         self.valid[(pib / 64) as usize] |= 1 << (pib % 64);
-        self.valid_count += 1;
-        self.written_count += 1;
+        self.meta.valid_count += 1;
+        self.meta.written_count += 1;
     }
 
     /// Program one SLC page at the write pointer; returns the page slot.
@@ -300,28 +626,28 @@ impl Block {
     /// Legal on `Slc` blocks anywhere, on `Ips` blocks only inside the
     /// active layer group.
     pub fn program_slc(&mut self, lpn: Lpn) -> Result<u32> {
-        match self.mode {
+        match self.meta.mode {
             BlockMode::Tlc => {
                 return Err(Error::Flash("SLC program on TLC block".into()));
             }
             BlockMode::Ips => {
-                let group_start = self.active_group * self.group_wls;
-                let group_end = group_start + self.group_wls;
-                if self.write_wl < group_start || self.write_wl >= group_end {
+                let group_start = self.meta.active_group * self.meta.group_wls;
+                let group_end = group_start + self.meta.group_wls;
+                if self.meta.write_wl < group_start || self.meta.write_wl >= group_end {
                     return Err(Error::Flash(format!(
                         "IPS SLC program outside active group (wl {} not in [{},{}))",
-                        self.write_wl, group_start, group_end
+                        self.meta.write_wl, group_start, group_end
                     )));
                 }
             }
             BlockMode::Slc => {}
         }
-        if self.write_wl >= self.n_wls {
+        if self.meta.write_wl >= self.meta.n_wls {
             return Err(Error::Flash("SLC program past end of block".into()));
         }
-        let wl = self.write_wl;
+        let wl = self.meta.write_wl;
         self.wls[wl as usize] = self.wls[wl as usize].program_slc()?;
-        self.write_wl += 1;
+        self.meta.write_wl += 1;
         let pib = wl * 3;
         self.mark_written(pib, lpn);
         Ok(pib)
@@ -332,23 +658,23 @@ impl Block {
     /// needed — they are simply never valid). Returns the page slots
     /// actually used.
     pub fn program_tlc_oneshot(&mut self, lpns: &[Lpn]) -> Result<Vec<u32>> {
-        if self.mode != BlockMode::Tlc {
+        if self.meta.mode != BlockMode::Tlc {
             return Err(Error::Flash("one-shot TLC program on non-TLC block".into()));
         }
         if lpns.is_empty() || lpns.len() > 3 {
             return Err(Error::Flash("one-shot program needs 1..=3 pages".into()));
         }
-        if self.write_wl >= self.n_wls {
+        if self.meta.write_wl >= self.meta.n_wls {
             return Err(Error::Flash("TLC program past end of block".into()));
         }
-        if self.write_bit != 0 {
+        if self.meta.write_bit != 0 {
             return Err(Error::Flash(
                 "one-shot program on a partially page-programmed word line".into(),
             ));
         }
-        let wl = self.write_wl;
+        let wl = self.meta.write_wl;
         self.wls[wl as usize] = self.wls[wl as usize].program_tlc_oneshot()?;
-        self.write_wl += 1;
+        self.meta.write_wl += 1;
         let mut slots = Vec::with_capacity(lpns.len());
         for (i, &lpn) in lpns.iter().enumerate() {
             let pib = wl * 3 + i as u32;
@@ -356,7 +682,7 @@ impl Block {
             slots.push(pib);
         }
         // wasted slots still count as written capacity
-        self.written_count += (3 - lpns.len()) as u32;
+        self.meta.written_count += (3 - lpns.len()) as u32;
         Ok(slots)
     }
 
@@ -365,19 +691,19 @@ impl Block {
     /// This is the host-write path's TLC programming model (paper
     /// Table I: "3 ms for TLC write" per page). Returns the page slot.
     pub fn program_tlc_page(&mut self, lpn: Lpn) -> Result<u32> {
-        if self.mode != BlockMode::Tlc {
+        if self.meta.mode != BlockMode::Tlc {
             return Err(Error::Flash("page-granular TLC program on non-TLC block".into()));
         }
-        if self.write_wl >= self.n_wls {
+        if self.meta.write_wl >= self.meta.n_wls {
             return Err(Error::Flash("TLC program past end of block".into()));
         }
-        let wl = self.write_wl;
+        let wl = self.meta.write_wl;
         self.wls[wl as usize] = self.wls[wl as usize].program_incremental()?;
-        let pib = wl * 3 + self.write_bit as u32;
-        self.write_bit += 1;
-        if self.write_bit == 3 {
-            self.write_bit = 0;
-            self.write_wl += 1;
+        let pib = wl * 3 + self.meta.write_bit as u32;
+        self.meta.write_bit += 1;
+        if self.meta.write_bit == 3 {
+            self.meta.write_bit = 0;
+            self.meta.write_wl += 1;
         }
         self.mark_written(pib, lpn);
         Ok(pib)
@@ -387,17 +713,17 @@ impl Block {
     /// or MSB) to the next not-yet-full word line in the active group,
     /// sequentially. Returns `(page_slot, wordline_now_full)`.
     pub fn reprogram_next(&mut self, lpn: Lpn, max_reprograms: u32) -> Result<(u32, bool)> {
-        if self.mode != BlockMode::Ips {
+        if self.meta.mode != BlockMode::Ips {
             return Err(Error::Flash("reprogram on non-IPS block".into()));
         }
-        let group_start = self.active_group * self.group_wls;
-        let group_end = group_start + self.group_wls;
+        let group_start = self.meta.active_group * self.meta.group_wls;
+        let group_end = group_start + self.meta.group_wls;
         // advance the reprogram pointer past full word lines
-        let mut wl = self.reprog_wl.max(group_start);
+        let mut wl = self.meta.reprog_wl.max(group_start);
         while wl < group_end && (self.wls[wl as usize].is_full()) {
             wl += 1;
         }
-        if wl >= group_end || wl >= self.write_wl {
+        if wl >= group_end || wl >= self.meta.write_wl {
             return Err(Error::Flash("no reprogrammable word line in active group".into()));
         }
         let state = self.wls[wl as usize];
@@ -409,7 +735,7 @@ impl Block {
         let pib = wl * 3 + bit as u32;
         self.mark_written(pib, lpn);
         let full = self.wls[wl as usize].is_full();
-        self.reprog_wl = if full { wl + 1 } else { wl };
+        self.meta.reprog_wl = if full { wl + 1 } else { wl };
         Ok((pib, full))
     }
 
@@ -417,64 +743,73 @@ impl Block {
     /// one is fully reprogrammed (paper Fig. 6a Step 3). Returns the new
     /// group index.
     pub fn advance_group(&mut self) -> Result<u32> {
-        if self.mode != BlockMode::Ips {
+        if self.meta.mode != BlockMode::Ips {
             return Err(Error::Flash("advance_group on non-IPS block".into()));
         }
-        let group_start = self.active_group * self.group_wls;
-        let group_end = group_start + self.group_wls;
-        let all_full =
-            (group_start..group_end).all(|wl| self.wls[wl as usize].is_full());
+        let group_start = self.meta.active_group * self.meta.group_wls;
+        let group_end = group_start + self.meta.group_wls;
+        let all_full = (group_start..group_end).all(|wl| self.wls[wl as usize].is_full());
         if !all_full {
             return Err(Error::Flash(
                 "cannot advance: active group not fully reprogrammed".into(),
             ));
         }
-        if !self.has_next_group() {
+        if !self.as_ref().has_next_group() {
             return Err(Error::Flash("no next layer group".into()));
         }
-        self.active_group += 1;
-        self.write_wl = self.active_group * self.group_wls;
-        self.reprog_wl = self.write_wl;
-        Ok(self.active_group)
+        self.meta.active_group += 1;
+        self.meta.write_wl = self.meta.active_group * self.meta.group_wls;
+        self.meta.reprog_wl = self.meta.write_wl;
+        Ok(self.meta.active_group)
     }
 
     // --- invalidation / erase ---------------------------------------
 
     /// Invalidate a page slot (its LPN was overwritten or migrated).
     pub fn invalidate(&mut self, pib: u32) -> Result<()> {
-        if !self.is_valid(pib) {
+        if !self.as_ref().is_valid(pib) {
             return Err(Error::invariant(format!("double invalidate of page {pib}")));
         }
         self.valid[(pib / 64) as usize] &= !(1 << (pib % 64));
-        self.valid_count -= 1;
-        if !self.p2l.is_empty() {
-            self.p2l[pib as usize] = NO_LPN;
+        self.meta.valid_count -= 1;
+        match &mut self.p2l {
+            P2lMut::Lazy(v) => {
+                if !v.is_empty() {
+                    v[pib as usize] = NO_LPN;
+                }
+            }
+            P2lMut::Fixed(s) => s[pib as usize] = NO_LPN,
         }
         Ok(())
     }
 
     /// Erase the block. Only legal when no valid pages remain.
     pub fn erase(&mut self) -> Result<()> {
-        if self.valid_count != 0 {
+        if self.meta.valid_count != 0 {
             return Err(Error::invariant(format!(
                 "erase of block with {} valid pages",
-                self.valid_count
+                self.meta.valid_count
             )));
         }
-        for wl in &mut self.wls {
+        for wl in self.wls.iter_mut() {
             *wl = wl.erase();
         }
-        for w in &mut self.valid {
+        for w in self.valid.iter_mut() {
             *w = 0;
         }
-        self.p2l.clear();
-        self.p2l.shrink_to_fit();
-        self.written_count = 0;
-        self.write_wl = 0;
-        self.write_bit = 0;
-        self.active_group = 0;
-        self.reprog_wl = 0;
-        self.erase_count += 1;
+        match &mut self.p2l {
+            P2lMut::Lazy(v) => {
+                v.clear();
+                v.shrink_to_fit();
+            }
+            P2lMut::Fixed(s) => s.fill(NO_LPN),
+        }
+        self.meta.written_count = 0;
+        self.meta.write_wl = 0;
+        self.meta.write_bit = 0;
+        self.meta.active_group = 0;
+        self.meta.reprog_wl = 0;
+        self.meta.erase_count += 1;
         Ok(())
     }
 }
@@ -686,6 +1021,109 @@ mod tests {
                 }
                 if b.valid_count() > b.written_count() {
                     return Err("valid > written".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: an arena-backed block and an inline block stay in
+    /// observable lockstep (results, errors, and full page state)
+    /// under random op sequences — the SoA layout differential.
+    #[test]
+    fn soa_matches_inline_under_random_ops() {
+        #[derive(Clone, Debug)]
+        enum Op {
+            Slc,
+            TlcPage,
+            Oneshot,
+            Reprog,
+            InvalidateFirst,
+            Advance,
+            Erase,
+            SetMode(BlockMode),
+        }
+        let gen = vec_of(
+            one_of(vec![
+                Op::Slc,
+                Op::TlcPage,
+                Op::Oneshot,
+                Op::Reprog,
+                Op::InvalidateFirst,
+                Op::Advance,
+                Op::Erase,
+                Op::SetMode(BlockMode::Slc),
+                Op::SetMode(BlockMode::Ips),
+                Op::SetMode(BlockMode::Tlc),
+            ]),
+            0,
+            96,
+        );
+        prop::check("soa matches inline", 256, gen, |ops| {
+            let g = presets::small().geometry;
+            let mut inline = Block::new(&g, 2);
+            let mut meta = Block::meta_only(&g, 2);
+            let mut arena = PlaneArena::new(&g, 1);
+            let mut lpn = 0u64;
+            for op in ops {
+                lpn += 1;
+                let mut soa = arena.block_mut(&mut meta.meta, 0);
+                let (a, b): (Result<u64>, Result<u64>) = match op {
+                    Op::Slc => (
+                        inline.program_slc(Lpn(lpn)).map(u64::from),
+                        soa.program_slc(Lpn(lpn)).map(u64::from),
+                    ),
+                    Op::TlcPage => (
+                        inline.program_tlc_page(Lpn(lpn)).map(u64::from),
+                        soa.program_tlc_page(Lpn(lpn)).map(u64::from),
+                    ),
+                    Op::Oneshot => {
+                        let ls = [Lpn(lpn), Lpn(lpn + 1)];
+                        (
+                            inline.program_tlc_oneshot(&ls).map(|v| v.len() as u64),
+                            soa.program_tlc_oneshot(&ls).map(|v| v.len() as u64),
+                        )
+                    }
+                    Op::Reprog => (
+                        inline.reprogram_next(Lpn(lpn), 2).map(|(p, f)| p as u64 * 2 + f as u64),
+                        soa.reprogram_next(Lpn(lpn), 2).map(|(p, f)| p as u64 * 2 + f as u64),
+                    ),
+                    Op::InvalidateFirst => match inline.valid_pages().next() {
+                        Some(p) => (
+                            inline.invalidate(p).map(|_| 0),
+                            soa.invalidate(p).map(|_| 0),
+                        ),
+                        None => continue,
+                    },
+                    Op::Advance => (
+                        inline.advance_group().map(u64::from),
+                        soa.advance_group().map(u64::from),
+                    ),
+                    Op::Erase => (inline.erase().map(|_| 0), soa.erase().map(|_| 0)),
+                    Op::SetMode(m) => {
+                        (inline.set_mode(m).map(|_| 0), soa.set_mode(m).map(|_| 0))
+                    }
+                };
+                match (&a, &b) {
+                    (Ok(x), Ok(y)) if x == y => {}
+                    (Err(_), Err(_)) => {}
+                    _ => return Err(format!("divergent results: {a:?} vs {b:?}")),
+                }
+                let iv = inline.as_view();
+                let av = arena.block_ref(&meta.meta, 0);
+                if (iv.valid_count(), iv.written_count(), iv.erase_count())
+                    != (av.valid_count(), av.written_count(), av.erase_count())
+                {
+                    return Err("counter divergence".into());
+                }
+                for pib in 0..g.pages_per_block {
+                    if iv.is_valid(pib) != av.is_valid(pib)
+                        || iv.is_written(pib) != av.is_written(pib)
+                        || iv.lpn_at(pib) != av.lpn_at(pib)
+                        || iv.page_kind(pib) != av.page_kind(pib)
+                    {
+                        return Err(format!("page {pib} state divergence"));
+                    }
                 }
             }
             Ok(())

@@ -25,7 +25,7 @@ pub mod geometry;
 pub mod interconnect;
 
 pub use array::{FlashArray, FlashCounters, FlashOp};
-pub use block::{Block, BlockMode};
+pub use block::{Block, BlockMeta, BlockMode, BlockMut, BlockRef, PlaneArena, NO_LPN};
 pub use cell::{PageKind, WlState};
 pub use geometry::{BlockAddr, Lpn, PageAddr, PlaneId, Ppa};
 pub use interconnect::{Completion, Interconnect, OpClass};

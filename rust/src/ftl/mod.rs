@@ -150,7 +150,12 @@ impl Ftl {
         let high = ((g.blocks_per_plane as f64 * cfg.cache.gc_high_watermark) as usize)
             .max(low + 1);
         let vindex = if cfg.sim.victim_index {
-            Some(VictimIndex::new(n_planes, g.blocks_per_plane, g.pages_per_block))
+            Some(VictimIndex::new(
+                n_planes,
+                g.blocks_per_plane,
+                g.pages_per_block,
+                cfg.sim.flat_index,
+            ))
         } else {
             None
         };
@@ -425,8 +430,13 @@ impl Ftl {
     }
 
     /// Index-backed pick: the max bucket's first-in-list block; the
-    /// tenant-aware tie-break walks only that bucket, in the exact
-    /// closed-list order the scan used.
+    /// tenant-aware tie-break walks only that bucket. The walk replaces
+    /// its pick on `(debt, position)` — strictly greater debt, or equal
+    /// debt at a smaller list position — which resolves to "maximal
+    /// debt, ties toward minimal position" regardless of bucket
+    /// iteration order. For the in-order tree oracle that is exactly
+    /// the historical strictly-greater walk; the unordered flat backend
+    /// needs the explicit position key to stay byte-identical.
     fn pick_victim_indexed(&mut self, plane: PlaneId) -> Option<usize> {
         let (pos, block, max_inv) = self.vindex.as_mut().expect("indexed mode").peek_max(plane)?;
         if self.victim_policy == VictimPolicy::Greedy || !self.track_owners {
@@ -440,7 +450,7 @@ impl Ftl {
                 continue; // the greedy pick itself
             }
             let debt = self.victim_debt(BlockAddr { plane, block: b2 });
-            if debt > pick_debt {
+            if debt > pick_debt || (debt == pick_debt && p2 < pick) {
                 pick = p2;
                 pick_debt = debt;
             }
@@ -649,7 +659,7 @@ impl Ftl {
     /// Serve a host read. Unmapped LPNs are served from the controller
     /// (deterministic zero-fill) with no flash access.
     pub fn host_read(&mut self, lpn: Lpn, now: Nanos) -> Result<Completion> {
-        self.ledger.host_reads += 1;
+        self.ledger.host_read_event();
         match self.map.get(lpn) {
             Some(ppa) => self.array.read(ppa, now),
             None => Ok(Completion::instant(now)),

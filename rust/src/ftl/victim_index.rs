@@ -8,26 +8,44 @@
 //! [`VictimIndex`] replaces the scan with per-plane **invalid-count
 //! buckets** maintained incrementally:
 //!
-//! * [`VictimIndex::insert`] on block close — O(log closed);
+//! * [`VictimIndex::insert`] on block close;
 //! * [`VictimIndex::note_invalidate`] on every page invalidation that
-//!   hits a closed block — moves the block up one bucket, O(log closed);
-//! * [`VictimIndex::peek_max`] — the greedy victim, O(1) amortized
-//!   (the max-bucket hint only decays across pops, and every decay was
-//!   paid for by the insert/invalidate that raised it);
+//!   hits a closed block — moves the block up one bucket;
+//! * [`VictimIndex::peek_max`] — the greedy victim, amortized O(1)
+//!   bucket lookup (the max-bucket hint only decays across pops, and
+//!   every decay was paid for by the insert/invalidate that raised it);
 //! * [`VictimIndex::remove`] / [`VictimIndex::reposition`] mirror the
 //!   closed list's `swap_remove` so tie order stays **byte-identical**
 //!   to the historical scan.
 //!
+//! Two storage backends share that API (selected by `sim.flat_index`):
+//!
+//! * **Flat** (default): each bucket is a plain `Vec<u32>` of block
+//!   ids, with intrusive per-block `(bucket, slot)` back-pointers.
+//!   Insert is a push, remove is a `swap_remove` (repairing the moved
+//!   block's slot), and — because buckets do not key on list position —
+//!   [`VictimIndex::reposition`] is a single array store with **zero**
+//!   bucket mutation. `peek_max` scans one contiguous bucket for the
+//!   minimal list position. No tree rebalancing, no per-node heap
+//!   allocation, cache-line-friendly scans.
+//! * **Tree** (oracle, `sim.flat_index = false`): per-bucket
+//!   `BTreeSet<(closed-list position, block)>` whose in-order iteration
+//!   *is* closed-list order — the PR 4 structure, retained for
+//!   differential testing.
+//!
 //! Tie order is the load-bearing subtlety: the old scan picked the
 //! *first* block at the maximal invalid count in closed-list order, and
-//! the tenant-aware tie-break re-scanned the ties in that same order.
-//! Buckets therefore store `(closed-list position, block)` pairs in a
-//! `BTreeSet`, whose in-order iteration *is* closed-list order; when
-//! `swap_remove` moves the list's last element into a hole, the moved
-//! block is re-keyed with [`VictimIndex::reposition`]. The property
-//! suite (`tests/prop_victim_index.rs`) drives random
+//! the tenant-aware tie-break walks the ties replacing its pick only on
+//! strictly greater debt. Starting from the minimal-position block,
+//! that rule resolves to "maximal debt, ties toward minimal list
+//! position" — a property of the *set* of ties, not of iteration order
+//! — so the flat backend may return ties in arbitrary bucket order as
+//! long as the caller compares `(debt, position)` explicitly (which
+//! [`super::Ftl::pop_victim`] does). The property suite
+//! (`tests/prop_victim_index.rs`) drives random
 //! write/invalidate/close/erase sequences against the linear-scan
-//! oracle and shrinks any divergence.
+//! oracle — and the flat backend in lockstep against the tree — and
+//! shrinks any divergence.
 
 use crate::flash::{BlockAddr, PlaneId};
 use crate::{Error, Result};
@@ -36,15 +54,21 @@ use std::collections::BTreeSet;
 /// Sentinel for "block not in the closed list".
 const NONE: u32 = u32::MAX;
 
-/// Per-plane state: positions, current buckets, and the bucket sets.
+/// Per-plane state: positions, current buckets, and one of the two
+/// bucket stores (the other stays empty).
 struct PlaneIndex {
     /// Closed-list position per block (`NONE` = not closed).
     pos: Vec<u32>,
     /// Invalid-count bucket per block (`NONE` = not closed).
     bucket_of: Vec<u32>,
-    /// `(closed-list position, block)` per invalid count; in-order
-    /// iteration reproduces the scan's tie order exactly.
-    buckets: Vec<BTreeSet<(u32, u32)>>,
+    /// Tree backend: `(closed-list position, block)` per invalid count;
+    /// in-order iteration reproduces the scan's tie order exactly.
+    tree: Vec<BTreeSet<(u32, u32)>>,
+    /// Flat backend: bare block ids per invalid count; unordered.
+    flat: Vec<Vec<u32>>,
+    /// Flat backend: slot of each block inside its bucket (`NONE` =
+    /// not closed). The intrusive back-pointer that makes removal O(1).
+    slot_of: Vec<u32>,
     /// Upper bound on the highest non-empty GC-eligible bucket (≥ 1).
     /// Decays lazily in [`PlaneIndex::peek`]; raised eagerly on
     /// insert/invalidate, so the decay is amortized O(1).
@@ -52,39 +76,86 @@ struct PlaneIndex {
 }
 
 impl PlaneIndex {
-    fn new(blocks_per_plane: u32, pages_per_block: u32) -> PlaneIndex {
+    fn new(blocks_per_plane: u32, pages_per_block: u32, use_flat: bool) -> PlaneIndex {
+        let n = blocks_per_plane as usize;
+        let buckets = pages_per_block as usize + 1;
         PlaneIndex {
-            pos: vec![NONE; blocks_per_plane as usize],
-            bucket_of: vec![NONE; blocks_per_plane as usize],
-            buckets: (0..=pages_per_block).map(|_| BTreeSet::new()).collect(),
+            pos: vec![NONE; n],
+            bucket_of: vec![NONE; n],
+            tree: if use_flat { Vec::new() } else { vec![BTreeSet::new(); buckets] },
+            flat: if use_flat { vec![Vec::new(); buckets] } else { Vec::new() },
+            slot_of: if use_flat { vec![NONE; n] } else { Vec::new() },
             max_hint: 0,
         }
     }
 
-    fn peek(&mut self) -> Option<(u32, u32, u32)> {
+    fn peek(&mut self, use_flat: bool) -> Option<(u32, u32, u32)> {
         while self.max_hint >= 1 {
-            if let Some(&(pos, block)) = self.buckets[self.max_hint as usize].iter().next() {
-                return Some((pos, block, self.max_hint));
+            let inv = self.max_hint;
+            if use_flat {
+                // Contiguous min-position scan of the one max bucket.
+                let bucket = &self.flat[inv as usize];
+                if let Some(&first) = bucket.first() {
+                    let mut best = (self.pos[first as usize], first);
+                    for &b in &bucket[1..] {
+                        let p = self.pos[b as usize];
+                        if p < best.0 {
+                            best = (p, b);
+                        }
+                    }
+                    return Some((best.0, best.1, inv));
+                }
+            } else if let Some(&(pos, block)) = self.tree[inv as usize].iter().next() {
+                return Some((pos, block, inv));
             }
             self.max_hint -= 1;
         }
         None
+    }
+
+    /// Flat-backend removal from the current bucket: `swap_remove`,
+    /// repairing the displaced block's slot back-pointer.
+    fn flat_unlink(&mut self, block: u32) {
+        let b = block as usize;
+        let bucket = &mut self.flat[self.bucket_of[b] as usize];
+        let slot = self.slot_of[b] as usize;
+        debug_assert_eq!(bucket[slot], block, "slot back-pointer desynced");
+        bucket.swap_remove(slot);
+        if let Some(&moved) = bucket.get(slot) {
+            self.slot_of[moved as usize] = slot as u32;
+        }
+        self.slot_of[b] = NONE;
+    }
+
+    /// Flat-backend insertion into bucket `inv`: a push.
+    fn flat_link(&mut self, block: u32, inv: u32) {
+        self.slot_of[block as usize] = self.flat[inv as usize].len() as u32;
+        self.flat[inv as usize].push(block);
     }
 }
 
 /// The per-plane invalid-count bucket index (see the module docs).
 pub struct VictimIndex {
     planes: Vec<PlaneIndex>,
+    use_flat: bool,
 }
 
 impl VictimIndex {
     /// Index covering `planes × blocks_per_plane` blocks with invalid
-    /// counts in `[0, pages_per_block]`.
-    pub fn new(planes: u32, blocks_per_plane: u32, pages_per_block: u32) -> VictimIndex {
+    /// counts in `[0, pages_per_block]`. `use_flat` selects the flat
+    /// vec-bucket backend (`sim.flat_index`, the default) over the
+    /// `BTreeSet` oracle.
+    pub fn new(
+        planes: u32,
+        blocks_per_plane: u32,
+        pages_per_block: u32,
+        use_flat: bool,
+    ) -> VictimIndex {
         VictimIndex {
             planes: (0..planes)
-                .map(|_| PlaneIndex::new(blocks_per_plane, pages_per_block))
+                .map(|_| PlaneIndex::new(blocks_per_plane, pages_per_block, use_flat))
                 .collect(),
+            use_flat,
         }
     }
 
@@ -96,7 +167,11 @@ impl VictimIndex {
         debug_assert_eq!(p.pos[b], NONE, "block {b} closed twice");
         p.pos[b] = pos as u32;
         p.bucket_of[b] = invalid;
-        p.buckets[invalid as usize].insert((pos as u32, addr.block));
+        if self.use_flat {
+            p.flat_link(addr.block, invalid);
+        } else {
+            p.tree[invalid as usize].insert((pos as u32, addr.block));
+        }
         if invalid >= 1 {
             p.max_hint = p.max_hint.max(invalid);
         }
@@ -113,12 +188,19 @@ impl VictimIndex {
         if cur == NONE {
             return;
         }
-        let pos = p.pos[b];
         let next = cur + 1;
-        debug_assert!((next as usize) < p.buckets.len(), "invalid > pages_per_block");
-        p.buckets[cur as usize].remove(&(pos, block));
-        p.buckets[next as usize].insert((pos, block));
-        p.bucket_of[b] = next;
+        if self.use_flat {
+            debug_assert!((next as usize) < p.flat.len(), "invalid > pages_per_block");
+            p.flat_unlink(block);
+            p.bucket_of[b] = next;
+            p.flat_link(block, next);
+        } else {
+            debug_assert!((next as usize) < p.tree.len(), "invalid > pages_per_block");
+            let pos = p.pos[b];
+            p.tree[cur as usize].remove(&(pos, block));
+            p.tree[next as usize].insert((pos, block));
+            p.bucket_of[b] = next;
+        }
         p.max_hint = p.max_hint.max(next);
     }
 
@@ -126,13 +208,22 @@ impl VictimIndex {
     /// of the first-in-list block at the maximal non-zero invalid
     /// count, or `None` when no closed block is GC-eligible.
     pub fn peek_max(&mut self, plane: PlaneId) -> Option<(u32, u32, u32)> {
-        self.planes[plane.0 as usize].peek()
+        let use_flat = self.use_flat;
+        self.planes[plane.0 as usize].peek(use_flat)
     }
 
-    /// Iterate every closed block at invalid count `inv` in closed-list
-    /// order (the tenant-aware tie-break walks these).
-    pub fn ties(&self, plane: PlaneId, inv: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
-        self.planes[plane.0 as usize].buckets[inv as usize].iter().copied()
+    /// Iterate every closed block at invalid count `inv` as
+    /// `(closed-list position, block)`. The tree backend yields
+    /// closed-list order; the flat backend yields arbitrary bucket
+    /// order — callers breaking ties must compare `(debt, position)`
+    /// explicitly rather than rely on iteration order.
+    pub fn ties(&self, plane: PlaneId, inv: u32) -> TiesIter<'_> {
+        let p = &self.planes[plane.0 as usize];
+        if self.use_flat {
+            TiesIter::Flat { blocks: p.flat[inv as usize].iter(), pos: &p.pos }
+        } else {
+            TiesIter::Tree(p.tree[inv as usize].iter())
+        }
     }
 
     /// A block left the closed list (popped as a victim).
@@ -143,13 +234,19 @@ impl VictimIndex {
         if cur == NONE {
             return;
         }
-        p.buckets[cur as usize].remove(&(p.pos[b], addr.block));
+        if self.use_flat {
+            p.flat_unlink(addr.block);
+        } else {
+            p.tree[cur as usize].remove(&(p.pos[b], addr.block));
+        }
         p.pos[b] = NONE;
         p.bucket_of[b] = NONE;
     }
 
     /// The closed list's `swap_remove` moved `addr` to `new_pos`;
-    /// re-key its bucket entry so tie order keeps tracking the list.
+    /// update its position so tie order keeps tracking the list. The
+    /// flat backend's buckets do not key on position, so this is a
+    /// single array store; the tree oracle re-keys its set entry.
     pub fn reposition(&mut self, addr: BlockAddr, new_pos: usize) {
         let p = &mut self.planes[addr.plane.0 as usize];
         let b = addr.block as usize;
@@ -157,16 +254,19 @@ impl VictimIndex {
         if cur == NONE || p.pos[b] == new_pos as u32 {
             return;
         }
-        let set = &mut p.buckets[cur as usize];
-        set.remove(&(p.pos[b], addr.block));
-        set.insert((new_pos as u32, addr.block));
+        if !self.use_flat {
+            let set = &mut p.tree[cur as usize];
+            set.remove(&(p.pos[b], addr.block));
+            set.insert((new_pos as u32, addr.block));
+        }
         p.pos[b] = new_pos as u32;
     }
 
     /// Full-consistency audit against a fresh rescan of the closed
     /// list: every closed block is present at its exact position and
-    /// bucket (`inv(block)`), and nothing else is indexed. Slow; used
-    /// by [`super::Ftl::audit`] and the property suite.
+    /// bucket (`inv(block)`), the intrusive back-pointers agree, and
+    /// nothing else is indexed. Slow; used by [`super::Ftl::audit`] and
+    /// the property suite.
     pub fn audit<F: Fn(u32) -> u32>(
         &self,
         plane: PlaneId,
@@ -174,7 +274,11 @@ impl VictimIndex {
         inv: F,
     ) -> Result<()> {
         let p = &self.planes[plane.0 as usize];
-        let total: usize = p.buckets.iter().map(|s| s.len()).sum();
+        let total: usize = if self.use_flat {
+            p.flat.iter().map(|v| v.len()).sum()
+        } else {
+            p.tree.iter().map(|s| s.len()).sum()
+        };
         if total != closed.len() {
             return Err(Error::invariant(format!(
                 "plane {}: index holds {total} blocks, closed list {}",
@@ -196,7 +300,13 @@ impl VictimIndex {
                     plane.0, p.bucket_of[b as usize]
                 )));
             }
-            if !p.buckets[want as usize].contains(&(i as u32, b)) {
+            let present = if self.use_flat {
+                let slot = p.slot_of[b as usize];
+                slot != NONE && p.flat[want as usize].get(slot as usize) == Some(&b)
+            } else {
+                p.tree[want as usize].contains(&(i as u32, b))
+            };
+            if !present {
                 return Err(Error::invariant(format!(
                     "plane {} block {b}: missing from bucket {want}",
                     plane.0
@@ -204,6 +314,27 @@ impl VictimIndex {
             }
         }
         Ok(())
+    }
+}
+
+/// Backend-agnostic tie iterator (see [`VictimIndex::ties`]).
+pub enum TiesIter<'a> {
+    /// Tree oracle: in-order `(pos, block)` pairs.
+    Tree(std::collections::btree_set::Iter<'a, (u32, u32)>),
+    /// Flat backend: bucket slots joined with the position array.
+    Flat { blocks: std::slice::Iter<'a, u32>, pos: &'a [u32] },
+}
+
+impl Iterator for TiesIter<'_> {
+    type Item = (u32, u32);
+
+    fn next(&mut self) -> Option<(u32, u32)> {
+        match self {
+            TiesIter::Tree(it) => it.next().copied(),
+            TiesIter::Flat { blocks, pos } => {
+                blocks.next().map(|&b| (pos[b as usize], b))
+            }
+        }
     }
 }
 
@@ -215,61 +346,99 @@ mod tests {
         BlockAddr { plane: PlaneId(plane), block }
     }
 
-    #[test]
-    fn insert_peek_remove_roundtrip() {
-        let mut ix = VictimIndex::new(2, 8, 12);
-        assert_eq!(ix.peek_max(PlaneId(0)), None);
-        ix.insert(addr(0, 3), 0, 2);
-        ix.insert(addr(0, 5), 1, 4);
-        ix.insert(addr(0, 1), 2, 0); // closed but not eligible
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 5, 4)));
-        assert_eq!(ix.peek_max(PlaneId(1)), None, "planes are independent");
-        ix.remove(addr(0, 5));
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 3, 2)));
-        ix.remove(addr(0, 3));
-        assert_eq!(ix.peek_max(PlaneId(0)), None, "bucket-0 blocks never qualify");
-        ix.audit(PlaneId(0), &[1], |_| 0).unwrap();
+    /// Run a scenario against both backends.
+    fn for_both(f: impl Fn(VictimIndex)) {
+        f(VictimIndex::new(2, 8, 12, false));
+        f(VictimIndex::new(2, 8, 12, true));
     }
 
     #[test]
-    fn invalidate_moves_buckets_and_ties_stay_in_list_order() {
-        let mut ix = VictimIndex::new(1, 8, 12);
-        ix.insert(addr(0, 2), 0, 1);
-        ix.insert(addr(0, 6), 1, 1);
-        // a tie at 1: the first-in-list block (pos 0) wins
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 2, 1)));
+    fn insert_peek_remove_roundtrip() {
+        for_both(|mut ix| {
+            assert_eq!(ix.peek_max(PlaneId(0)), None);
+            ix.insert(addr(0, 3), 0, 2);
+            ix.insert(addr(0, 5), 1, 4);
+            ix.insert(addr(0, 1), 2, 0); // closed but not eligible
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 5, 4)));
+            assert_eq!(ix.peek_max(PlaneId(1)), None, "planes are independent");
+            ix.remove(addr(0, 5));
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 3, 2)));
+            ix.remove(addr(0, 3));
+            assert_eq!(ix.peek_max(PlaneId(0)), None, "bucket-0 blocks never qualify");
+            ix.audit(PlaneId(0), &[1], |_| 0).unwrap();
+        });
+    }
+
+    #[test]
+    fn invalidate_moves_buckets_and_ties_cover_the_bucket() {
+        for_both(|mut ix| {
+            ix.insert(addr(0, 2), 0, 1);
+            ix.insert(addr(0, 6), 1, 1);
+            // a tie at 1: the first-in-list block (pos 0) wins
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 2, 1)));
+            let mut ties: Vec<(u32, u32)> = ix.ties(PlaneId(0), 1).collect();
+            ties.sort_unstable();
+            assert_eq!(ties, vec![(0, 2), (1, 6)], "ties carry exact positions");
+            // block 6 gains an invalid page and takes the lead
+            ix.note_invalidate(PlaneId(0), 6);
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
+            // invalidations of unindexed blocks are inert
+            ix.note_invalidate(PlaneId(0), 7);
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
+            ix.audit(PlaneId(0), &[2, 6], |b| if b == 6 { 2 } else { 1 }).unwrap();
+        });
+    }
+
+    #[test]
+    fn tree_ties_iterate_in_list_order() {
+        // Pinned separately from the shared scenarios: in-list order is
+        // a tree-backend guarantee (the flat backend is unordered).
+        let mut ix = VictimIndex::new(1, 8, 12, false);
+        ix.insert(addr(0, 6), 0, 1);
+        ix.insert(addr(0, 2), 1, 1);
         let ties: Vec<(u32, u32)> = ix.ties(PlaneId(0), 1).collect();
-        assert_eq!(ties, vec![(0, 2), (1, 6)]);
-        // block 6 gains an invalid page and takes the lead
-        ix.note_invalidate(PlaneId(0), 6);
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
-        // invalidations of unindexed blocks are inert
-        ix.note_invalidate(PlaneId(0), 7);
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((1, 6, 2)));
-        ix.audit(PlaneId(0), &[2, 6], |b| if b == 6 { 2 } else { 1 }).unwrap();
+        assert_eq!(ties, vec![(0, 6), (1, 2)]);
     }
 
     #[test]
     fn reposition_mirrors_swap_remove() {
-        let mut ix = VictimIndex::new(1, 8, 12);
-        ix.insert(addr(0, 2), 0, 3);
-        ix.insert(addr(0, 6), 1, 3);
-        ix.insert(addr(0, 4), 2, 3);
-        // pop the pos-0 block the way Ftl does: swap_remove(0) moves
-        // the last block (4) into position 0
-        ix.remove(addr(0, 2));
-        ix.reposition(addr(0, 4), 0);
-        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 4, 3)), "moved block leads the tie");
-        ix.audit(PlaneId(0), &[4, 6], |_| 3).unwrap();
+        for_both(|mut ix| {
+            ix.insert(addr(0, 2), 0, 3);
+            ix.insert(addr(0, 6), 1, 3);
+            ix.insert(addr(0, 4), 2, 3);
+            // pop the pos-0 block the way Ftl does: swap_remove(0) moves
+            // the last block (4) into position 0
+            ix.remove(addr(0, 2));
+            ix.reposition(addr(0, 4), 0);
+            assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 4, 3)), "moved block leads the tie");
+            ix.audit(PlaneId(0), &[4, 6], |_| 3).unwrap();
+        });
+    }
+
+    #[test]
+    fn flat_swap_remove_repairs_slots() {
+        // Force the swap_remove path: three blocks in one bucket,
+        // unlink the slot-0 block, then keep mutating the block whose
+        // slot moved — any stale back-pointer trips the audit.
+        let mut ix = VictimIndex::new(1, 8, 12, true);
+        ix.insert(addr(0, 1), 0, 2);
+        ix.insert(addr(0, 3), 1, 2);
+        ix.insert(addr(0, 5), 2, 2);
+        ix.remove(addr(0, 1)); // bucket [1,3,5] -> [5,3]; 5's slot moved
+        ix.reposition(addr(0, 5), 0);
+        ix.note_invalidate(PlaneId(0), 5); // unlink via repaired slot
+        assert_eq!(ix.peek_max(PlaneId(0)), Some((0, 5, 3)));
+        ix.audit(PlaneId(0), &[5, 3], |b| if b == 5 { 3 } else { 2 }).unwrap();
     }
 
     #[test]
     fn audit_catches_divergence() {
-        let mut ix = VictimIndex::new(1, 8, 12);
-        ix.insert(addr(0, 2), 0, 1);
-        assert!(ix.audit(PlaneId(0), &[2], |_| 1).is_ok());
-        assert!(ix.audit(PlaneId(0), &[2], |_| 2).is_err(), "stale bucket detected");
-        assert!(ix.audit(PlaneId(0), &[2, 3], |_| 1).is_err(), "missing block detected");
-        assert!(ix.audit(PlaneId(0), &[], |_| 1).is_err(), "extra block detected");
+        for_both(|mut ix| {
+            ix.insert(addr(0, 2), 0, 1);
+            assert!(ix.audit(PlaneId(0), &[2], |_| 1).is_ok());
+            assert!(ix.audit(PlaneId(0), &[2], |_| 2).is_err(), "stale bucket detected");
+            assert!(ix.audit(PlaneId(0), &[2, 3], |_| 1).is_err(), "missing block detected");
+            assert!(ix.audit(PlaneId(0), &[], |_| 1).is_err(), "extra block detected");
+        });
     }
 }

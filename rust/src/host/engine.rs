@@ -25,7 +25,10 @@ use crate::cache::{self, CachePartitioner, CachePolicy};
 use crate::config::{AttributionMode, Config, FaultKind, Nanos};
 use crate::flash::{Lpn, PlaneId};
 use crate::ftl::{Ftl, MoveCounters, VictimPolicy};
-use crate::metrics::{BandwidthTimeline, BlkStats, LatencyStats, Ledger, PhaseStats, TenantStats};
+use crate::metrics::{
+    BandwidthTimeline, BlkStats, LatencyStats, Ledger, PhaseStats, TenantStats, SCOPE_PAGE,
+    SCOPE_REQUEST,
+};
 use crate::trace::scenario::Scenario;
 use crate::trace::OpKind;
 use crate::Result;
@@ -310,6 +313,19 @@ impl MultiTenantSimulator {
         let blk_cfg = self.cfg.blk;
         let mut blk_total = BlkStats::default();
         let mut writes_since_flush = vec![0u32; self.queues.len()];
+        // attribution backend (§Perf): scoped incremental deltas pushed
+        // by the ledger's event methods (the default) vs the historical
+        // full-struct snapshot/diff per window (the oracle). Both are
+        // byte-identical by the `scope == diff` property.
+        let inc = self.cfg.sim.incremental_attribution;
+        // dispatch scratch (§Perf): with batched dispatch the per-
+        // iteration ready vector and the per-bio plan are reused across
+        // the whole run (zero steady-state allocations, asserted by the
+        // counting-allocator test); the oracle path reallocates them
+        // every iteration like the historical loop did.
+        let batched = self.cfg.sim.batched_dispatch;
+        let mut ready_scratch: Vec<Option<HeadInfo>> = Vec::with_capacity(self.queues.len());
+        let mut plan_buf = blk::Plan::default();
 
         loop {
             // fire the scheduled fault once the clock crosses its
@@ -321,13 +337,20 @@ impl MultiTenantSimulator {
                 match self.cfg.fault.kind {
                     FaultKind::PlaneLoss => {
                         let plane = PlaneId(self.cfg.fault.plane);
-                        let bg_before = self.ftl.ledger;
+                        let bg_before = (!inc).then(|| self.ftl.ledger);
+                        if inc {
+                            self.ftl.ledger.scope_reset(SCOPE_REQUEST);
+                        }
                         let end = self.ftl.retire_plane(plane, self.now)?;
                         self.policy.retire_plane(&mut self.ftl, plane)?;
                         last_end = last_end.max(end);
                         // salvage migrations are device-initiated
                         // background work, like idle reclamation
-                        self.part.charge_background(&self.ftl.ledger.diff(&bg_before));
+                        let bg = match bg_before {
+                            Some(b) => self.ftl.ledger.diff(&b),
+                            None => self.ftl.ledger.scope_take(SCOPE_REQUEST),
+                        };
+                        self.part.charge_background(&bg);
                         if owner_attr {
                             let _ = self.absorb_owner_events(migr_ns, false);
                         }
@@ -362,11 +385,20 @@ impl MultiTenantSimulator {
                     0
                 };
                 let qos = &mut self.qos;
-                let ready: Vec<Option<HeadInfo>> = self
-                    .queues
-                    .iter()
-                    .enumerate()
-                    .map(|(ti, q)| {
+                // fill the ready mask in one pass over the queues; the
+                // buffer is the run-long scratch under batched dispatch
+                // and a fresh per-iteration vector under the oracle —
+                // identical contents either way
+                let mut ready_fresh: Vec<Option<HeadInfo>>;
+                let ready: &mut Vec<Option<HeadInfo>> = if batched {
+                    ready_scratch.clear();
+                    &mut ready_scratch
+                } else {
+                    ready_fresh = Vec::with_capacity(self.queues.len());
+                    &mut ready_fresh
+                };
+                for (ti, q) in self.queues.iter().enumerate() {
+                    let slot = (|| {
                         let head = q.head().filter(|op| op.at <= now);
                         // live starvation signal for the SLO mode: how
                         // long has this tenant's head been waiting?
@@ -388,12 +420,16 @@ impl MultiTenantSimulator {
                                 None
                             }
                         }
-                    })
-                    .collect();
-                if let Some(i) = self.sched.pick(&ready) {
+                    })();
+                    ready.push(slot);
+                }
+                if let Some(i) = self.sched.pick(&ready[..]) {
                     let op = self.queues[i].pop().expect("picked head exists");
                     let issue = self.now.max(op.at);
-                    let before = self.ftl.ledger;
+                    let before = (!inc).then(|| self.ftl.ledger);
+                    if inc {
+                        self.ftl.ledger.scope_reset(SCOPE_REQUEST);
+                    }
                     self.ftl.set_tenant(Some(i as u16));
                     let first_lpn = (op.offset / page) % lpn_limit;
                     let n_pages = (op.len as u64).div_ceil(page).max(1);
@@ -415,7 +451,14 @@ impl MultiTenantSimulator {
                         if blk_cfg.fua && bio.kind == BioKind::Write {
                             bio.fua = true;
                         }
-                        let plan = blk::plan(&bio, &blk_cfg, page);
+                        // plan into the run-long scratch under batched
+                        // dispatch; the oracle allocates per bio
+                        if batched {
+                            blk::plan_into(&bio, &blk_cfg, page, &mut plan_buf);
+                        } else {
+                            plan_buf = blk::plan(&bio, &blk_cfg, page);
+                        }
+                        let plan = &plan_buf;
                         bstats.bios = 1;
                         bstats.splits = plan.splits;
                         bstats.merges = plan.merges;
@@ -446,15 +489,21 @@ impl MultiTenantSimulator {
                                     self.ftl.ledger.host_page();
                                     let c = if self.part.enabled() {
                                         let grant = self.part.grant(i, contended);
-                                        let page_before = self.ftl.ledger;
+                                        let page_before = (!inc).then(|| self.ftl.ledger);
+                                        if inc {
+                                            self.ftl.ledger.scope_reset(SCOPE_PAGE);
+                                        }
                                         let c = self.policy.host_write_page_gated(
                                             &mut self.ftl,
                                             lpn,
                                             issue_t,
                                             grant,
                                         )?;
-                                        self.part
-                                            .charge(i, &self.ftl.ledger.diff(&page_before));
+                                        let pd = match page_before {
+                                            Some(b) => self.ftl.ledger.diff(&b),
+                                            None => self.ftl.ledger.scope_take(SCOPE_PAGE),
+                                        };
+                                        self.part.charge(i, &pd);
                                         if owner_attr {
                                             let u = self.absorb_owner_events(migr_ns, true);
                                             unowned_moves.add(&u);
@@ -525,7 +574,10 @@ impl MultiTenantSimulator {
                                 // cache admission decided per page: the
                                 // partitioner sees every allocation
                                 let grant = self.part.grant(i, contended);
-                                let page_before = self.ftl.ledger;
+                                let page_before = (!inc).then(|| self.ftl.ledger);
+                                if inc {
+                                    self.ftl.ledger.scope_reset(SCOPE_PAGE);
+                                }
                                 let c = self.policy.host_write_page_gated(
                                     &mut self.ftl,
                                     lpn,
@@ -533,7 +585,11 @@ impl MultiTenantSimulator {
                                     grant,
                                 )?;
                                 req_phases.add(&c);
-                                self.part.charge(i, &self.ftl.ledger.diff(&page_before));
+                                let pd = match page_before {
+                                    Some(b) => self.ftl.ledger.diff(&b),
+                                    None => self.ftl.ledger.scope_take(SCOPE_PAGE),
+                                };
+                                self.part.charge(i, &pd);
                                 if owner_attr {
                                     // drain per page so the next page's
                                     // grant sees releases this page's
@@ -567,7 +623,10 @@ impl MultiTenantSimulator {
                     }
                     self.ftl.set_tenant(None);
                     let lat = req_end - op.at; // includes queueing in the SQ
-                    let mut diff = self.ftl.ledger.diff(&before);
+                    let mut diff = match before {
+                        Some(b) => self.ftl.ledger.diff(&b),
+                        None => self.ftl.ledger.scope_take(SCOPE_REQUEST),
+                    };
                     if owner_attr {
                         // exact releases + owner-charged relocations; the
                         // dispatcher keeps only the unowned remainder of
@@ -646,7 +705,10 @@ impl MultiTenantSimulator {
                             let quiesce = self.now.max(last_end);
                             if next > quiesce.saturating_add(idle_threshold) {
                                 let start = quiesce.saturating_add(idle_threshold);
-                                let bg_before = self.ftl.ledger;
+                                let bg_before = (!inc).then(|| self.ftl.ledger);
+                                if inc {
+                                    self.ftl.ledger.scope_reset(SCOPE_REQUEST);
+                                }
                                 // per-tenant eviction first: a tenant over
                                 // its reserved slice reclaims its own
                                 // blocks before generic idle work runs
@@ -666,8 +728,11 @@ impl MultiTenantSimulator {
                                 self.policy.idle_work(&mut self.ftl, start, next)?;
                                 // background reclamation recycles cache
                                 // capacity owned by no tenant...
-                                self.part
-                                    .charge_background(&self.ftl.ledger.diff(&bg_before));
+                                let bg = match bg_before {
+                                    Some(b) => self.ftl.ledger.diff(&b),
+                                    None => self.ftl.ledger.scope_take(SCOPE_REQUEST),
+                                };
+                                self.part.charge_background(&bg);
                                 // ...unless the owner table knows better:
                                 // exact releases + owned-move metrics
                                 // (ledger attribution stays background)

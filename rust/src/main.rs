@@ -180,7 +180,7 @@ fn cli() -> Command {
                 .opt("workload", Some('w'), "NAME", "workload", Some("HM_0")),
         )
         .subcommand(
-            Command::new("perf", "perf harness: scan-vs-index or lump-vs-interconnect")
+            Command::new("perf", "perf harness: structures, scan-vs-index, lump-vs-interconnect")
                 .opt("preset", Some('p'), "P", "small|medium|large|table1", Some("large"))
                 .opt("scenario", None, "X", "bursty|daily|both", Some("both"))
                 .opt("scheme", None, "S", "tlc-only|baseline|ips|ips-agc|coop|all", Some("all"))
@@ -195,8 +195,8 @@ fn cli() -> Command {
                     "compare",
                     None,
                     "C",
-                    "victim-index (BENCH_PR4) | interconnect (BENCH_PR5)",
-                    Some("victim-index"),
+                    "structures (BENCH_PR9) | victim-index (BENCH_PR4) | interconnect (BENCH_PR5)",
+                    Some("structures"),
                 )
                 .opt(
                     "out",
@@ -837,14 +837,17 @@ fn cmd_perf(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         "both" => vec![Scenario::Bursty, Scenario::Daily],
         s => vec![Scenario::parse(s)?],
     };
-    match p.get("compare").unwrap_or("victim-index") {
+    match p.get("compare").unwrap_or("structures") {
+        "structures" | "hot-path" => {
+            return cmd_perf_structures(p, &preset, &base, &schemes, &scenarios, volume_mult)
+        }
         "victim-index" | "index" => {}
         "interconnect" | "timing" => {
             return cmd_perf_interconnect(p, &preset, &base, &schemes, &scenarios, volume_mult)
         }
         other => {
             return Err(ips::Error::config(format!(
-                "unknown perf comparison {other:?} (want victim-index|interconnect)"
+                "unknown perf comparison {other:?} (want structures|victim-index|interconnect)"
             )))
         }
     }
@@ -981,6 +984,134 @@ fn cmd_perf_interconnect(
     };
     std::fs::write(out, perf::timing_json(&cells))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `ips perf` (default) / `--compare structures`: the hot-path
+/// data-structure pass — flat bucket indices, SoA plane arenas,
+/// incremental attribution, batched dispatch — against its four
+/// oracles (BENCH_PR9.json), plus the blocks-per-plane × channel-count
+/// scaling sweep on the IPS scheme.
+fn cmd_perf_structures(
+    p: &ips::util::cli::Parsed,
+    preset: &str,
+    base: &Config,
+    schemes: &[Scheme],
+    scenarios: &[Scenario],
+    volume_mult: f64,
+) -> ips::Result<()> {
+    use ips::coordinator::perf;
+    println!(
+        "perf: preset={preset} ({} planes x {} blocks/plane), volume x{volume_mult} of \
+         logical, {} scheme(s) x {} scenario(s), oracle vs flat/SoA/incremental/batched",
+        base.geometry.planes(),
+        base.geometry.blocks_per_plane,
+        schemes.len(),
+        scenarios.len()
+    );
+    let mut table = TextTable::new(&[
+        "preset",
+        "scheme",
+        "scenario",
+        "host_pages",
+        "oracle_kops",
+        "new_kops",
+        "speedup",
+        "identical",
+    ]);
+    let mut cells = Vec::new();
+    for &scheme in schemes {
+        for &scen in scenarios {
+            let c = perf::run_struct_cell(preset, base, scheme, scen, volume_mult)?;
+            println!(
+                "  {:<9} {:<6}  oracle {:>8.1}ms  new {:>8.1}ms  speedup {:>6.2}x  {}",
+                c.scheme,
+                c.scenario,
+                c.oracle_wall.as_secs_f64() * 1e3,
+                c.new_wall.as_secs_f64() * 1e3,
+                c.speedup(),
+                if c.identical { "ok" } else { "DIVERGED" }
+            );
+            table.row(vec![
+                c.preset.clone(),
+                c.scheme.into(),
+                c.scenario.into(),
+                c.host_pages.to_string(),
+                format!("{:.1}", c.ops_oracle() / 1e3),
+                format!("{:.1}", c.ops_new() / 1e3),
+                format!("{:.2}x", c.speedup()),
+                c.identical.to_string(),
+            ]);
+            cells.push(c);
+        }
+    }
+    println!("\n== perf: hot-path structures vs oracles ==");
+    print!("{}", table.render());
+    if let Some(best) = cells
+        .iter()
+        .filter(|c| c.scenario == "bursty")
+        .max_by(|a, b| a.speedup().partial_cmp(&b.speedup()).unwrap_or(std::cmp::Ordering::Equal))
+    {
+        println!(
+            "GC-heavy bursty headline: {} at {:.2}x host-pages/sec over the oracles",
+            best.scheme,
+            best.speedup()
+        );
+    }
+    // scaling sweep: where do the O(blocks)/O(planes) oracle costs
+    // bite? Grid is relative to the preset's geometry so every preset
+    // sweeps the same shape; IPS bursty is the paper's headline cell.
+    let g = &base.geometry;
+    let blocks: Vec<u32> = [1u32, 2, 4].iter().map(|m| g.blocks_per_plane * m).collect();
+    let chans: Vec<u32> = [1u32, 2].iter().map(|m| g.channels * m).collect();
+    // still past the overwrite cliff, but keeps the 4x/2x grid points
+    // tractable on the large preset
+    let sweep_mult = volume_mult.min(1.5);
+    println!(
+        "\nscaling sweep: blocks/plane {blocks:?} x channels {chans:?} (ips, bursty, \
+         volume x{sweep_mult})"
+    );
+    let sweep = perf::run_scaling_sweep(
+        base,
+        Scheme::Ips,
+        Scenario::Bursty,
+        sweep_mult,
+        &blocks,
+        &chans,
+    )?;
+    let mut st = TextTable::new(&[
+        "blocks/plane",
+        "channels",
+        "host_pages",
+        "oracle_kops",
+        "new_kops",
+        "speedup",
+        "identical",
+    ]);
+    for pt in &sweep {
+        st.row(vec![
+            pt.blocks_per_plane.to_string(),
+            pt.channels.to_string(),
+            pt.host_pages.to_string(),
+            format!("{:.1}", pt.ops_oracle() / 1e3),
+            format!("{:.1}", pt.ops_new() / 1e3),
+            format!("{:.2}x", pt.speedup()),
+            pt.identical.to_string(),
+        ]);
+    }
+    print!("{}", st.render());
+    let out = match p.get("out") {
+        Some("auto") | None => "BENCH_PR9.json",
+        Some(o) => o,
+    };
+    std::fs::write(out, perf::structures_json(&cells, &sweep))?;
+    println!("wrote {out}");
+    if cells.iter().any(|c| !c.identical) || sweep.iter().any(|s| !s.identical) {
+        return Err(ips::Error::invariant(
+            "oracle and new-structure runs diverged — a hot-path structure changed \
+             simulation results",
+        ));
+    }
     Ok(())
 }
 

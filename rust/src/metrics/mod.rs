@@ -20,7 +20,7 @@ pub use bandwidth::BandwidthTimeline;
 pub use blk::BlkStats;
 pub use latency::{LatencyStats, PhaseStats};
 pub use tenant::TenantStats;
-pub use wa::{Attribution, Ledger};
+pub use wa::{Attribution, Ledger, SCOPE_PAGE, SCOPE_REQUEST};
 
 use crate::config::Nanos;
 

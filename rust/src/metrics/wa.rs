@@ -27,8 +27,25 @@ pub enum Attribution {
     CoopReprogram,
 }
 
+/// Attribution-scope levels (§Perf). The engines bracket work in up to
+/// two nested windows: an outer request/background window and an inner
+/// per-page window. Every counting event feeds both accumulators, so
+/// taking a scope is O(1) regardless of how many snapshots the
+/// historical diff path would have copied.
+pub const SCOPE_REQUEST: usize = 0;
+/// Inner per-page scope level (nests inside [`SCOPE_REQUEST`]).
+pub const SCOPE_PAGE: usize = 1;
+
+/// Number of counters a scope tracks (the 9 public fields, in
+/// declaration order).
+const NFIELDS: usize = 9;
+
 /// Attributed program counters (pages).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+///
+/// Equality, [`Ledger::diff`], and [`Ledger::merge`] cover the nine
+/// public counters only; the private scope accumulators are engine
+/// plumbing and never participate in comparisons or serialization.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Ledger {
     /// Host pages received (WA denominator).
     pub host_pages: u64,
@@ -48,26 +65,113 @@ pub struct Ledger {
     pub coop_reprogram_writes: u64,
     /// Host read requests served (for context).
     pub host_reads: u64,
+    /// Incremental per-scope deltas, indexed `[level][field]` with
+    /// fields in declaration order. Always maintained (two adds per
+    /// event); whether the engine *consumes* them or keeps taking
+    /// snapshot diffs is `sim.incremental_attribution`.
+    scopes: [[u64; NFIELDS]; 2],
 }
+
+impl PartialEq for Ledger {
+    fn eq(&self, o: &Ledger) -> bool {
+        self.host_pages == o.host_pages
+            && self.slc_cache_writes == o.slc_cache_writes
+            && self.tlc_direct_writes == o.tlc_direct_writes
+            && self.reprogram_host_writes == o.reprogram_host_writes
+            && self.slc2tlc_migrations == o.slc2tlc_migrations
+            && self.gc_migrations == o.gc_migrations
+            && self.agc_reprogram_writes == o.agc_reprogram_writes
+            && self.coop_reprogram_writes == o.coop_reprogram_writes
+            && self.host_reads == o.host_reads
+    }
+}
+
+impl Eq for Ledger {}
 
 impl Ledger {
     /// Record a host page arrival (denominator).
     #[inline]
     pub fn host_page(&mut self) {
         self.host_pages += 1;
+        self.bump(0);
     }
 
     /// Record an attributed page program.
     #[inline]
     pub fn program(&mut self, a: Attribution) {
-        match a {
-            Attribution::SlcCacheWrite => self.slc_cache_writes += 1,
-            Attribution::TlcDirectWrite => self.tlc_direct_writes += 1,
-            Attribution::ReprogramHost => self.reprogram_host_writes += 1,
-            Attribution::Slc2Tlc => self.slc2tlc_migrations += 1,
-            Attribution::GcMigration => self.gc_migrations += 1,
-            Attribution::AgcReprogram => self.agc_reprogram_writes += 1,
-            Attribution::CoopReprogram => self.coop_reprogram_writes += 1,
+        let i = match a {
+            Attribution::SlcCacheWrite => {
+                self.slc_cache_writes += 1;
+                1
+            }
+            Attribution::TlcDirectWrite => {
+                self.tlc_direct_writes += 1;
+                2
+            }
+            Attribution::ReprogramHost => {
+                self.reprogram_host_writes += 1;
+                3
+            }
+            Attribution::Slc2Tlc => {
+                self.slc2tlc_migrations += 1;
+                4
+            }
+            Attribution::GcMigration => {
+                self.gc_migrations += 1;
+                5
+            }
+            Attribution::AgcReprogram => {
+                self.agc_reprogram_writes += 1;
+                6
+            }
+            Attribution::CoopReprogram => {
+                self.coop_reprogram_writes += 1;
+                7
+            }
+        };
+        self.bump(i);
+    }
+
+    /// Record a host read served. The FTL routes its read counter
+    /// through here so read attribution reaches the scopes too.
+    #[inline]
+    pub fn host_read_event(&mut self) {
+        self.host_reads += 1;
+        self.bump(8);
+    }
+
+    #[inline]
+    fn bump(&mut self, i: usize) {
+        self.scopes[SCOPE_REQUEST][i] += 1;
+        self.scopes[SCOPE_PAGE][i] += 1;
+    }
+
+    /// Open (re-arm) scope `level`: zero its accumulator so the next
+    /// [`Ledger::scope_take`] returns exactly the events from here on.
+    #[inline]
+    pub fn scope_reset(&mut self, level: usize) {
+        self.scopes[level] = [0; NFIELDS];
+    }
+
+    /// Close scope `level`: the events recorded since its last reset,
+    /// as a plain ledger (scopes zeroed), leaving the level re-armed.
+    /// Byte-identical to `self.diff(&snapshot_at_reset)` — the
+    /// differential tests and the perf harness pin this.
+    #[inline]
+    pub fn scope_take(&mut self, level: usize) -> Ledger {
+        let s = self.scopes[level];
+        self.scopes[level] = [0; NFIELDS];
+        Ledger {
+            host_pages: s[0],
+            slc_cache_writes: s[1],
+            tlc_direct_writes: s[2],
+            reprogram_host_writes: s[3],
+            slc2tlc_migrations: s[4],
+            gc_migrations: s[5],
+            agc_reprogram_writes: s[6],
+            coop_reprogram_writes: s[7],
+            host_reads: s[8],
+            scopes: [[0; NFIELDS]; 2],
         }
     }
 
@@ -130,6 +234,7 @@ impl Ledger {
             agc_reprogram_writes: self.agc_reprogram_writes - earlier.agc_reprogram_writes,
             coop_reprogram_writes: self.coop_reprogram_writes - earlier.coop_reprogram_writes,
             host_reads: self.host_reads - earlier.host_reads,
+            scopes: [[0; NFIELDS]; 2],
         }
     }
 
@@ -224,6 +329,73 @@ mod tests {
         let mut m = a;
         m.merge(&d);
         assert_eq!(m, b);
+    }
+
+    #[test]
+    fn scope_take_equals_snapshot_diff() {
+        // Property: for any event stream with arbitrary scope resets,
+        // taking a scope yields exactly the snapshot diff since its
+        // reset — the incremental path's byte-identity contract.
+        let attr_of = |i: usize| match i % 7 {
+            0 => Attribution::SlcCacheWrite,
+            1 => Attribution::TlcDirectWrite,
+            2 => Attribution::ReprogramHost,
+            3 => Attribution::Slc2Tlc,
+            4 => Attribution::GcMigration,
+            5 => Attribution::AgcReprogram,
+            _ => Attribution::CoopReprogram,
+        };
+        prop::check("scope == diff", 128, vec_of(usize_in(0, 9), 0, 96), |ops| {
+            let mut l = Ledger::default();
+            l.scope_reset(SCOPE_REQUEST);
+            let mut snap = l;
+            for &op in ops {
+                match op {
+                    0..=6 => l.program(attr_of(op)),
+                    7 => l.host_page(),
+                    8 => l.host_read_event(),
+                    _ => {
+                        // close + reopen the window both ways
+                        let inc = l.scope_take(SCOPE_REQUEST);
+                        let dif = l.diff(&snap);
+                        if inc != dif {
+                            return Err(format!("scope {inc:?} != diff {dif:?}"));
+                        }
+                        snap = l;
+                    }
+                }
+            }
+            let inc = l.scope_take(SCOPE_REQUEST);
+            let dif = l.diff(&snap);
+            if inc != dif {
+                return Err(format!("final scope {inc:?} != diff {dif:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn page_scope_nests_inside_request_scope() {
+        let mut l = Ledger::default();
+        l.scope_reset(SCOPE_REQUEST);
+        l.scope_reset(SCOPE_PAGE);
+        l.host_page();
+        l.program(Attribution::SlcCacheWrite);
+        let page1 = l.scope_take(SCOPE_PAGE);
+        assert_eq!(page1.host_pages, 1);
+        assert_eq!(page1.slc_cache_writes, 1);
+        l.host_page();
+        l.program(Attribution::GcMigration);
+        l.program(Attribution::TlcDirectWrite);
+        let page2 = l.scope_take(SCOPE_PAGE);
+        assert_eq!(page2.gc_migrations, 1, "inner scope restarts at its reset");
+        let req = l.scope_take(SCOPE_REQUEST);
+        assert_eq!(req.host_pages, 2, "outer scope spans both pages");
+        assert_eq!(req.total_programs(), 3);
+        // equality ignores scope state: a taken ledger is plain data
+        let mut copy = req;
+        copy.scope_reset(SCOPE_PAGE);
+        assert_eq!(copy, req);
     }
 
     #[test]

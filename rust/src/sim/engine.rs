@@ -219,6 +219,11 @@ impl Simulator {
         let mut host_bytes = 0u64;
         let mut host_bytes_read = 0u64;
         let mut writes_since_flush = 0u32;
+        // planner scratch (§Perf): reused across every bio of the
+        // replay under batched dispatch (zero steady-state allocations
+        // once grown); the oracle path allocates per bio as before
+        let batched = self.cfg.sim.batched_dispatch;
+        let mut plan_buf = blk::Plan::default();
 
         for bio in bios {
             let bio = bio?;
@@ -230,7 +235,12 @@ impl Simulator {
                     self.policy.idle_work(&mut self.ftl, start, arrival)?;
                 }
             }
-            let plan = blk::plan(&bio, &blk_cfg, page);
+            if batched {
+                blk::plan_into(&bio, &blk_cfg, page, &mut plan_buf);
+            } else {
+                plan_buf = blk::plan(&bio, &blk_cfg, page);
+            }
+            let plan = &plan_buf;
             match plan.kind {
                 BioKind::Write if plan.pages.is_empty() => {
                     // zero-length payload: no pages to program, no

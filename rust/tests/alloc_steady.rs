@@ -1,0 +1,93 @@
+//! Counting-allocator assertion for the batched-dispatch scratch
+//! (§Perf pass #2): once the planner scratch has grown to the largest
+//! bio seen, the steady-state dispatch loop — `blk::plan_into` per bio
+//! — performs **zero** heap allocations. This is the property the
+//! engines' run-long `plan_buf` relies on; `plan()` allocating per bio
+//! is exactly the churn the satellite removed.
+//!
+//! The file holds a single test: the counter is a process-global and
+//! parallel sibling tests would pollute the delta.
+
+use ips::blk::{plan, plan_into, Bio, Plan, Segment};
+use ips::config::BlkConfig;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Allocation-counting wrapper around the system allocator.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+const PAGE: u64 = 4096;
+
+#[test]
+fn steady_state_planning_allocates_nothing() {
+    let cfg = BlkConfig { sector_bytes: 512, merge_window: 4, rmw: true, ..Default::default() };
+
+    // a varied steady-state workload: aligned full pages, spanning
+    // segments, sub-page RMW pieces, scatter-gather, flushes — all no
+    // larger than the warmup bio below
+    let bios: Vec<Bio> = vec![
+        Bio::write(0, vec![Segment { sector: 8, n_sectors: 8 }], false),
+        Bio::write(0, vec![Segment { sector: 6, n_sectors: 12 }], false),
+        Bio::write(
+            0,
+            vec![Segment { sector: 0, n_sectors: 4 }, Segment { sector: 4, n_sectors: 4 }],
+            true,
+        ),
+        Bio::write(0, vec![Segment { sector: 2, n_sectors: 3 }], false),
+        Bio::read(0, vec![Segment { sector: 16, n_sectors: 24 }]),
+        Bio::flush(0),
+    ];
+    // warmup: the largest shape the loop will see grows the scratch to
+    // its high-water capacity
+    let warm = Bio::write(0, vec![Segment { sector: 0, n_sectors: 48 }], false);
+
+    let mut buf = Plan::default();
+    plan_into(&warm, &cfg, PAGE, &mut buf);
+    for b in &bios {
+        plan_into(b, &cfg, PAGE, &mut buf);
+    }
+
+    // steady state: many passes over the workload, zero allocations
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..64 {
+        for b in &bios {
+            plan_into(b, &cfg, PAGE, &mut buf);
+            std::hint::black_box(&buf);
+        }
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "steady-state plan_into allocated {delta} times");
+
+    // the allocate-per-bio oracle really does churn — the counter works
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for b in &bios {
+        std::hint::black_box(plan(b, &cfg, PAGE));
+    }
+    assert!(
+        ALLOCS.load(Ordering::SeqCst) > before,
+        "plan() should allocate per bio; did the counter break?"
+    );
+}

@@ -1,0 +1,209 @@
+//! Differential guarantee for the hot-path data-structure pass (§Perf
+//! pass #2): with `sim.flat_index` / `sim.soa_blocks` /
+//! `sim.incremental_attribution` / `sim.batched_dispatch` on vs off,
+//! every scheme must produce **byte identical** run summaries — ledger
+//! counters, latency statistics (counts, means, percentiles, raw
+//! samples), WA, simulated end time — on bursty and daily scenarios,
+//! single- and multi-tenant. All four are pure layout/bookkeeping
+//! changes; any divergence is a bug. Each knob is also toggled alone
+//! so a regression localizes to one structure.
+
+use ips::config::{presets, AttributionMode, Config, MixKind, SchedKind, Scheme, MS, SEC};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::metrics::RunSummary;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+
+/// The four §Perf knobs, as a mask for per-knob localization.
+const KNOBS: [&str; 4] =
+    ["flat_index", "soa_blocks", "incremental_attribution", "batched_dispatch"];
+
+fn set_knob(c: &mut Config, name: &str, on: bool) {
+    match name {
+        "flat_index" => c.sim.flat_index = on,
+        "soa_blocks" => c.sim.soa_blocks = on,
+        "incremental_attribution" => c.sim.incremental_attribution = on,
+        "batched_dispatch" => c.sim.batched_dispatch = on,
+        other => panic!("unknown knob {other}"),
+    }
+}
+
+fn single_cfg(scheme: Scheme, on: &[&str]) -> Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.sim.verify = true; // audits arenas/indices against fresh rescans
+    c.sim.latency_samples = 4096;
+    for k in KNOBS {
+        set_knob(&mut c, k, on.contains(&k));
+    }
+    c
+}
+
+fn run_single(scheme: Scheme, scen: Scenario, on: &[&str]) -> RunSummary {
+    let mut sim = Simulator::new(single_cfg(scheme, on)).unwrap();
+    let trace = match scen {
+        // 4× the cache: over the cliff, GC-heavy
+        Scenario::Bursty => scenario::sequential_fill("seq", 4 << 20, sim.logical_bytes()),
+        // idle gaps drive reclamation / AGC / coop background pipelines
+        Scenario::Daily => scenario::daily_streams(3, 1 << 20, 60 * SEC, sim.logical_bytes()),
+    };
+    sim.run(&trace, scen).unwrap()
+}
+
+fn assert_summaries_match(a: &RunSummary, b: &RunSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.write_latency.count(), b.write_latency.count(), "{label}: write count");
+    assert_eq!(
+        a.write_latency.mean().to_bits(),
+        b.write_latency.mean().to_bits(),
+        "{label}: mean write latency"
+    );
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            a.write_latency.percentile(q),
+            b.write_latency.percentile(q),
+            "{label}: p{q} write latency"
+        );
+    }
+    assert_eq!(a.write_latency.raw_us(), b.write_latency.raw_us(), "{label}: raw samples");
+    assert_eq!(a.read_latency.count(), b.read_latency.count(), "{label}: read count");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA");
+}
+
+#[test]
+fn five_schemes_bursty_identical_all_knobs() {
+    for scheme in Scheme::all() {
+        let new = run_single(scheme, Scenario::Bursty, &KNOBS);
+        let oracle = run_single(scheme, Scenario::Bursty, &[]);
+        assert_summaries_match(&new, &oracle, &format!("{scheme:?}/bursty"));
+    }
+}
+
+#[test]
+fn five_schemes_daily_identical_all_knobs() {
+    for scheme in Scheme::all() {
+        let new = run_single(scheme, Scenario::Daily, &KNOBS);
+        let oracle = run_single(scheme, Scenario::Daily, &[]);
+        assert_summaries_match(&new, &oracle, &format!("{scheme:?}/daily"));
+    }
+}
+
+#[test]
+fn each_knob_alone_is_identical() {
+    // one knob at a time against the all-off oracle, on the scheme that
+    // exercises every structure (reprogram chain + cache + GC)
+    let oracle = run_single(Scheme::Ips, Scenario::Bursty, &[]);
+    for k in KNOBS {
+        let one = run_single(Scheme::Ips, Scenario::Bursty, &[k]);
+        assert_summaries_match(&one, &oracle, &format!("ips/bursty/{k}"));
+    }
+}
+
+// --- multi-tenant ---------------------------------------------------
+
+fn mt_cfg(scheme: Scheme, tenants: u32, attr: AttributionMode, on: bool) -> Config {
+    let mut cfg = presets::small();
+    cfg.cache.scheme = scheme;
+    cfg.cache.slc_cache_bytes = 1 << 20;
+    cfg.cache.idle_threshold = MS;
+    cfg.host.tenants = tenants;
+    cfg.host.scheduler = SchedKind::RoundRobin;
+    cfg.host.mix = MixKind::AggressorVictims;
+    cfg.host.attribution = attr;
+    if attr == AttributionMode::Owner {
+        // exercise the partitioner's flat argmax eviction path on top
+        // of the tenant-aware victims
+        cfg.cache.partition.enabled = true;
+        cfg.cache.partition.reserved_frac = 0.5;
+    }
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000;
+    for k in KNOBS {
+        set_knob(&mut cfg, k, on);
+    }
+    cfg
+}
+
+fn assert_mt_match(a: &MultiTenantSummary, b: &MultiTenantSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: device ledger diverged");
+    assert_eq!(a.background, b.background, "{label}: background ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.ledger, y.ledger, "{label}/{}: tenant ledger", x.name);
+        assert_eq!(
+            x.write_latency.count(),
+            y.write_latency.count(),
+            "{label}/{}: write count",
+            x.name
+        );
+        assert_eq!(x.p99_write_latency(), y.p99_write_latency(), "{label}/{}: p99", x.name);
+        assert_eq!(
+            x.migrated_pages_owned, y.migrated_pages_owned,
+            "{label}/{}: owned moves",
+            x.name
+        );
+    }
+}
+
+#[test]
+fn multi_tenant_proportional_identical_all_knobs() {
+    for scen in [Scenario::Bursty, Scenario::Daily] {
+        for scheme in [Scheme::Baseline, Scheme::Ips] {
+            let a = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Proportional, true),
+                scen,
+            )
+            .unwrap();
+            let b = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Proportional, false),
+                scen,
+            )
+            .unwrap();
+            assert_mt_match(&a, &b, &format!("{scheme:?}/{scen:?}/proportional"));
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_owner_attribution_identical_all_knobs() {
+    // owner attribution turns on the TenantAware victim policy and the
+    // partitioner eviction hook — the flat index tie-break and the SoA
+    // owner scans both sit on this path
+    for scen in [Scenario::Bursty, Scenario::Daily] {
+        for scheme in [Scheme::Coop, Scheme::IpsAgc] {
+            let a = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Owner, true),
+                scen,
+            )
+            .unwrap();
+            let b = MultiTenantSimulator::run_once(
+                mt_cfg(scheme, 4, AttributionMode::Owner, false),
+                scen,
+            )
+            .unwrap();
+            assert_mt_match(&a, &b, &format!("{scheme:?}/{scen:?}/owner"));
+        }
+    }
+}
+
+#[test]
+fn single_tenant_owner_identical_all_knobs() {
+    let a = MultiTenantSimulator::run_once(
+        mt_cfg(Scheme::TlcOnly, 1, AttributionMode::Owner, true),
+        Scenario::Daily,
+    )
+    .unwrap();
+    let b = MultiTenantSimulator::run_once(
+        mt_cfg(Scheme::TlcOnly, 1, AttributionMode::Owner, false),
+        Scenario::Daily,
+    )
+    .unwrap();
+    assert_mt_match(&a, &b, "tlc-only/daily/owner/single-tenant");
+}

@@ -141,6 +141,75 @@ fn occupancies_sum_to_at_most_capacity_and_reserved_is_never_cross_evicted() {
     });
 }
 
+/// Lockstep flat-vs-tree differential (§Perf pass #2): the same script
+/// drives one partitioner on the flat argmax backend and one on the
+/// BTree-index oracle; every grant decision and every occupancy
+/// observable must match at every step.
+#[test]
+fn flat_argmax_matches_tree_backend() {
+    prop::check("partitioner flat == tree", 256, PartitionGen, |script| {
+        let n = script.weights.len();
+        let mk = |flat: bool| {
+            let mut cfg = presets::small();
+            cfg.cache.partition.enabled = true;
+            cfg.cache.partition.reserved_frac = script.reserved_pct as f64 / 100.0;
+            cfg.cache.partition.by_weight = script.by_weight;
+            cfg.sim.flat_index = flat;
+            CachePartitioner::new(&cfg, &script.weights, script.capacity)
+        };
+        let mut pf = mk(true);
+        let mut pt = mk(false);
+        for (step, &(traw, ev)) in script.ops.iter().enumerate() {
+            let t = traw as usize % n;
+            let contended = step % 2 == 0;
+            let mut diff = Ledger::default();
+            match ev {
+                0 => {
+                    let gf = pf.grant(t, contended);
+                    let gt = pt.grant(t, contended);
+                    if gf != gt {
+                        return Err(format!("step {step}: grant diverged: {gf:?} vs {gt:?}"));
+                    }
+                    match gf {
+                        CacheGrant::Slc => diff.program(Attribution::SlcCacheWrite),
+                        CacheGrant::Reprogram => diff.program(Attribution::ReprogramHost),
+                        CacheGrant::Tlc => diff.program(Attribution::TlcDirectWrite),
+                    }
+                }
+                1 => diff.program(Attribution::ReprogramHost),
+                2 => {
+                    diff.slc2tlc_migrations = (step % 3) as u64 + 1;
+                    pf.charge_background(&diff);
+                    pt.charge_background(&diff);
+                    diff = Ledger::default();
+                }
+                _ => diff.program(Attribution::AgcReprogram),
+            }
+            pf.charge(t, &diff);
+            pt.charge(t, &diff);
+            if pf.total_occupancy() != pt.total_occupancy() {
+                return Err(format!(
+                    "step {step}: total occupancy diverged: {} vs {}",
+                    pf.total_occupancy(),
+                    pt.total_occupancy()
+                ));
+            }
+            for v in 0..n {
+                if pf.occupancy(v) != pt.occupancy(v) || pf.reserved(v) != pt.reserved(v) {
+                    return Err(format!(
+                        "step {step}: tenant {v} diverged: occ {}/{} reserved {}/{}",
+                        pf.occupancy(v),
+                        pt.occupancy(v),
+                        pf.reserved(v),
+                        pt.reserved(v)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// A generated token-bucket exercise: weights, a config, and a script
 /// of (tenant, dt, bytes, kind) events.
 #[derive(Clone, Debug)]

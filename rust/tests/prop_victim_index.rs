@@ -35,11 +35,18 @@ struct Pair {
     tenants: usize,
 }
 
-fn build_pair(tenants: usize, policy: VictimPolicy) -> Pair {
-    let mk = |use_index: bool| {
+/// Pair builder with per-side knob configurators: side `a` is the
+/// implementation under test, side `b` the oracle.
+fn build_pair_with(
+    tenants: usize,
+    policy: VictimPolicy,
+    set_a: fn(&mut ips::config::Config),
+    set_b: fn(&mut ips::config::Config),
+) -> Pair {
+    let mk = |set: fn(&mut ips::config::Config)| {
         let mut cfg = presets::small();
         cfg.cache.scheme = Scheme::TlcOnly;
-        cfg.sim.victim_index = use_index;
+        set(&mut cfg);
         let mut f = Ftl::new(&cfg).unwrap();
         if tenants > 0 {
             f.set_tenant_count(tenants);
@@ -48,7 +55,33 @@ fn build_pair(tenants: usize, policy: VictimPolicy) -> Pair {
         }
         f
     };
-    Pair { a: mk(true), b: mk(false), cache_lpns: Vec::new(), next_cache: 0, tenants }
+    Pair { a: mk(set_a), b: mk(set_b), cache_lpns: Vec::new(), next_cache: 0, tenants }
+}
+
+fn build_pair(tenants: usize, policy: VictimPolicy) -> Pair {
+    build_pair_with(
+        tenants,
+        policy,
+        |c| c.sim.victim_index = true,
+        |c| c.sim.victim_index = false,
+    )
+}
+
+/// Both sides on the bucket index: `a` flat vectors, `b` the BTreeSet
+/// backend — the PR9 flat-layout lockstep.
+fn build_flat_pair(tenants: usize, policy: VictimPolicy) -> Pair {
+    build_pair_with(
+        tenants,
+        policy,
+        |c| {
+            c.sim.victim_index = true;
+            c.sim.flat_index = true;
+        },
+        |c| {
+            c.sim.victim_index = true;
+            c.sim.flat_index = false;
+        },
+    )
 }
 
 /// Apply one op to both FTLs; `Err` on any observable divergence.
@@ -208,19 +241,28 @@ fn final_checks(p: &mut Pair) -> Result<(), String> {
     Ok(())
 }
 
-fn run_property(name: &'static str, tenants: usize, policy: VictimPolicy) {
+fn run_property_on(
+    name: &'static str,
+    tenants: usize,
+    policy: VictimPolicy,
+    build: fn(usize, VictimPolicy) -> Pair,
+) {
     prop::check(
         name,
         48,
         vec_of(tuple2(u64_up_to(4), u64_up_to(1 << 16)), 0, 96),
         |ops| {
-            let mut pair = build_pair(tenants, policy);
+            let mut pair = build(tenants, policy);
             for &op in ops {
                 step(&mut pair, op)?;
             }
             final_checks(&mut pair)
         },
     );
+}
+
+fn run_property(name: &'static str, tenants: usize, policy: VictimPolicy) {
+    run_property_on(name, tenants, policy, build_pair);
 }
 
 #[test]
@@ -243,4 +285,34 @@ fn index_matches_scan_single_tenant_aware() {
 #[test]
 fn index_matches_scan_four_tenants_aware() {
     run_property("victim index == scan (4 tenants, tenant-aware)", 4, VictimPolicy::TenantAware);
+}
+
+#[test]
+fn flat_matches_tree_untracked_greedy() {
+    run_property_on(
+        "flat buckets == BTreeSet buckets (no tenants, greedy)",
+        0,
+        VictimPolicy::Greedy,
+        build_flat_pair,
+    );
+}
+
+#[test]
+fn flat_matches_tree_single_tenant_greedy() {
+    run_property_on(
+        "flat buckets == BTreeSet buckets (1 tenant, greedy)",
+        1,
+        VictimPolicy::Greedy,
+        build_flat_pair,
+    );
+}
+
+#[test]
+fn flat_matches_tree_four_tenants_aware() {
+    run_property_on(
+        "flat buckets == BTreeSet buckets (4 tenants, tenant-aware)",
+        4,
+        VictimPolicy::TenantAware,
+        build_flat_pair,
+    );
 }
