@@ -72,6 +72,35 @@ fn main() {
         });
     }
 
+    // materialized-trace oracle vs zero-materialization sources on the
+    // same fleet shape (the streaming-workloads tentpole): identical
+    // deterministic cells, different generation path. VmHWM is
+    // process-monotone, so the peak-RSS lines below record the
+    // high-water *at that point in the run*, not a strict A/B — the
+    // 1000-device CI step is where the memory gap is visible.
+    {
+        let mut m = spec(4, 2);
+        m.base.sim.streaming_traces = false;
+        let s = spec(4, 2);
+        let jobs = s.devices as u64 * s.schemes.len() as u64;
+        h.bench("fleet/materialized-traces-4dev", Some(jobs), || {
+            let (cells, _, stats) = run_population_streaming(&m).unwrap();
+            black_box((cells.len(), stats.peak_resident_runs));
+        });
+        h.bench("fleet/streaming-traces-4dev", Some(jobs), || {
+            let (cells, _, stats) = run_population_streaming(&s).unwrap();
+            black_box((cells.len(), stats.peak_resident_runs));
+        });
+        for (label, sp) in [("materialized", &m), ("streaming", &s)] {
+            let (_, _, stats) = run_population_streaming(sp).unwrap();
+            println!(
+                "fleet/{label}-traces-4dev: wall {:.3} s, peak RSS {} KiB (VmHWM)",
+                stats.wall_clock.as_secs_f64(),
+                stats.peak_rss_kb
+            );
+        }
+    }
+
     if std::env::var("IPS_BENCH_SMOKE").as_deref() == Ok("1") {
         if let Some(json) = json {
             golden::check_and_report("fig_fleet", &json);

@@ -631,6 +631,13 @@ pub struct SimConfig {
     /// historical per-iteration allocation path, retained as the
     /// byte-identical oracle.
     pub batched_dispatch: bool,
+    /// Workload generation: `true` (default) feeds the engines from
+    /// pull-based streaming [`crate::trace::source::OpSource`]s through
+    /// bounded submission-queue windows, so per-device trace memory is
+    /// O(queue window) instead of O(trace); `false` materializes every
+    /// trace up front and replays it — the historical path, retained
+    /// as the byte-identical differential oracle.
+    pub streaming_traces: bool,
     /// Latency-histogram resolution: sub-buckets per power-of-two band
     /// in the log-linear collectors (power of two in 2..=256; worst-case
     /// relative quantile error is `1 / hist_sub_buckets`).
@@ -662,6 +669,7 @@ impl Default for SimConfig {
             soa_blocks: true,
             incremental_attribution: true,
             batched_dispatch: true,
+            streaming_traces: true,
             hist_sub_buckets: 64,
             logical_frac: 0.80,
             pre_age_erases: 0,
@@ -711,7 +719,11 @@ impl FaultKind {
 /// The trigger is a *fraction of the workload's arrival horizon* rather
 /// than an absolute time, so the same schedule is meaningful across
 /// scenarios and device scales; the engine computes the absolute
-/// trigger from its materialized traces before replay starts.
+/// trigger from the workload span before replay starts — a scan of the
+/// materialized traces on the oracle path, or the streaming sources'
+/// analytically-known [`crate::trace::source::OpSource::horizon`]s
+/// when `sim.streaming_traces` is on (both paths place the trigger at
+/// the same nanosecond; the differential suite pins it).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultConfig {
     /// What breaks.
@@ -995,6 +1007,7 @@ impl Config {
             incremental_attribution: v
                 .bool_or("sim.incremental_attribution", s.incremental_attribution),
             batched_dispatch: v.bool_or("sim.batched_dispatch", s.batched_dispatch),
+            streaming_traces: v.bool_or("sim.streaming_traces", s.streaming_traces),
             hist_sub_buckets: v.u64_or("sim.hist_sub_buckets", s.hist_sub_buckets as u64) as u32,
             logical_frac: v.f64_or("sim.logical_frac", s.logical_frac),
             pre_age_erases: v.u64_or("sim.pre_age_erases", s.pre_age_erases as u64) as u32,
@@ -1138,6 +1151,14 @@ mod tests {
         assert!(!cfg.sim.soa_blocks, "inline-vector oracle selectable");
         assert!(!cfg.sim.incremental_attribution, "snapshot/diff oracle selectable");
         assert!(!cfg.sim.batched_dispatch, "allocating dispatch oracle selectable");
+    }
+
+    #[test]
+    fn streaming_traces_default_on_and_toml_selects_oracle() {
+        assert!(presets::small().sim.streaming_traces, "streaming sources are the default");
+        let cfg =
+            Config::from_toml_str("[sim]\nstreaming_traces = false", presets::small()).unwrap();
+        assert!(!cfg.sim.streaming_traces, "materialized-trace oracle selectable");
     }
 
     #[test]

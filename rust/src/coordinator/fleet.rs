@@ -855,6 +855,11 @@ fn merge_cell_into(out: &mut Vec<PopulationSummary>, c: PopulationSummary) {
 }
 
 /// Memory accounting from a streaming population sweep.
+///
+/// `wall_clock` and `peak_rss_kb` are *measurements* (the rack-scale
+/// datapoint `ips fleet` prints and `BENCH_PR10.json` records): they
+/// vary run to run and are deliberately excluded from the
+/// deterministic table/JSON/CSV outputs the golden gates compare.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamStats {
     /// Peak number of `DeviceRun`s resident at once across all workers
@@ -863,6 +868,13 @@ pub struct StreamStats {
     pub peak_resident_runs: usize,
     /// Total device runs executed.
     pub runs: usize,
+    /// Wall-clock time of the whole sweep (fan-out through fold).
+    pub wall_clock: std::time::Duration,
+    /// Process peak RSS in KiB after the sweep (`VmHWM`, Linux procfs;
+    /// 0 where unavailable). With `sim.streaming_traces` on, device
+    /// workloads are never materialized, so this tracks simulator
+    /// state, not trace vectors.
+    pub peak_rss_kb: u64,
 }
 
 /// Per-device CSV header for the streaming sweep's row stream.
@@ -907,6 +919,7 @@ fn device_csv_row(r: &DeviceRun) -> String {
 pub fn run_population_streaming(
     spec: &PopulationSpec,
 ) -> Result<(Vec<PopulationSummary>, String, StreamStats)> {
+    let wall0 = std::time::Instant::now();
     let profiles = spec.profiles();
     let mut jobs = Vec::with_capacity(spec.schemes.len() * spec.mixes.len() * profiles.len());
     for &scheme in &spec.schemes {
@@ -978,7 +991,12 @@ pub fn run_population_streaming(
     for (_, row) in rows {
         csv.push_str(&row);
     }
-    let stats = StreamStats { peak_resident_runs: peak.load(Ordering::SeqCst), runs: n };
+    let stats = StreamStats {
+        peak_resident_runs: peak.load(Ordering::SeqCst),
+        runs: n,
+        wall_clock: wall0.elapsed(),
+        peak_rss_kb: crate::util::mem::peak_rss_kb().unwrap_or(0),
+    };
     Ok((cells, csv, stats))
 }
 

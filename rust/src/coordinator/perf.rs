@@ -30,6 +30,7 @@
 //! the committed perf trajectory is the *file format plus harness*, and
 //! CI's `perf-smoke` job regenerates and uploads the numbers per run.
 
+use super::fleet;
 use crate::config::{presets, Config, Scheme, SEC};
 use crate::metrics::RunSummary;
 use crate::sim::Simulator;
@@ -521,6 +522,37 @@ pub fn structures_json(cells: &[StructCell], sweep: &[ScalePoint]) -> String {
     out
 }
 
+/// Serialize a fleet sweep's wall-clock/peak-RSS datapoint as the
+/// `BENCH_PR10.json` trajectory record — the rack-scale number ROADMAP
+/// open item 1 calls for. The shape fields (`devices`, axes, threads,
+/// `streaming_traces`) are deterministic; `wall_s`, `runs_per_s`, and
+/// `peak_rss_kb` are measurements, which is why this record lives
+/// beside the bench artifacts and never inside the golden-gated
+/// table/JSON/CSV outputs.
+pub fn fleet_stream_json(spec: &fleet::PopulationSpec, stats: &fleet::StreamStats) -> String {
+    let wall_s = stats.wall_clock.as_secs_f64();
+    let runs_per_s = if wall_s > 0.0 { stats.runs as f64 / wall_s } else { 0.0 };
+    format!(
+        "{{\"bench\":\"BENCH_PR10\",\"unit\":\"device runs per wall-clock second\",\
+         \"devices\":{},\"runs\":{},\"schemes\":{},\"mixes\":{},\"tenants\":{},\
+         \"scenario\":\"{}\",\"fault_rate\":{:.3},\"threads\":{},\"streaming_traces\":{},\
+         \"peak_resident_runs\":{},\"wall_s\":{:.3},\"runs_per_s\":{:.1},\"peak_rss_kb\":{}}}\n",
+        spec.devices,
+        stats.runs,
+        spec.schemes.len(),
+        spec.mixes.len(),
+        spec.base.host.tenants,
+        spec.scenario.name(),
+        spec.fault_rate,
+        spec.threads,
+        spec.base.sim.streaming_traces,
+        stats.peak_resident_runs,
+        wall_s,
+        runs_per_s,
+        stats.peak_rss_kb,
+    )
+}
+
 /// Serialize cells as the `BENCH_PR4.json` perf-trajectory record.
 /// Deterministic field order; wall-clock values are measurements.
 pub fn perf_json(cells: &[PerfCell]) -> String {
@@ -561,6 +593,35 @@ mod tests {
         assert!(preset_by_name("medium").is_ok());
         assert!(preset_by_name("large").is_ok());
         assert!(preset_by_name("wat").is_err());
+    }
+
+    #[test]
+    fn fleet_stream_json_records_the_datapoint() {
+        use crate::config::MixKind;
+        let spec = fleet::PopulationSpec {
+            base: presets::small(),
+            devices: 3,
+            schemes: vec![Scheme::Ips],
+            mixes: vec![MixKind::AggressorVictims],
+            scenario: Scenario::Bursty,
+            fault_rate: 0.5,
+            seed: 1,
+            threads: 2,
+        };
+        let stats = fleet::StreamStats {
+            peak_resident_runs: 2,
+            runs: 3,
+            wall_clock: Duration::from_millis(1500),
+            peak_rss_kb: 2048,
+        };
+        let json = fleet_stream_json(&spec, &stats);
+        assert!(json.contains("\"bench\":\"BENCH_PR10\""));
+        assert!(json.contains("\"devices\":3"));
+        assert!(json.contains("\"streaming_traces\":true"));
+        assert!(json.contains("\"wall_s\":1.500"));
+        assert!(json.contains("\"runs_per_s\":2.0"));
+        assert!(json.contains("\"peak_rss_kb\":2048"));
+        assert!(json.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -175,14 +175,49 @@ impl MultiTenantSimulator {
         let mut policy = cache::build(&cfg);
         policy.init(&mut ftl)?;
         let logical = ftl.map.lpn_limit() * cfg.geometry.page_bytes as u64;
-        let (specs, traces) = tenant::build_mix(&cfg, logical, cfg.sim.seed)?;
+        // Fault trigger: a fraction of the arrival horizon, resolved
+        // here before replay starts — so the same `at_frac` schedules
+        // proportionally across scenarios/scales. Streaming sources
+        // report their span analytically (closed form, or an
+        // O(1)-memory arrival replay); the oracle path scans the
+        // materialized traces. Both place the trigger at the same
+        // nanosecond (differential-tested).
+        let (specs, queues, fault_at) = if cfg.sim.streaming_traces {
+            let (specs, sources) = tenant::build_mix_sources(&cfg, logical, cfg.sim.seed)?;
+            let mut sources = sources;
+            let fault_at = if cfg.fault.kind != FaultKind::None {
+                let horizon = sources.iter_mut().map(|s| s.horizon()).max().unwrap_or(0);
+                Some((horizon as f64 * cfg.fault.at_frac) as Nanos)
+            } else {
+                None
+            };
+            let queues: Vec<SubmissionQueue> = specs
+                .iter()
+                .zip(sources)
+                .map(|(s, src)| SubmissionQueue::from_source(s.id, cfg.host.queue_depth, src))
+                .collect();
+            (specs, queues, fault_at)
+        } else {
+            let (specs, traces) = tenant::build_mix(&cfg, logical, cfg.sim.seed)?;
+            let fault_at = if cfg.fault.kind != FaultKind::None {
+                let horizon = traces
+                    .iter()
+                    .flat_map(|t| t.ops.iter().map(|o| o.at))
+                    .max()
+                    .unwrap_or(0);
+                Some((horizon as f64 * cfg.fault.at_frac) as Nanos)
+            } else {
+                None
+            };
+            let queues: Vec<SubmissionQueue> = specs
+                .iter()
+                .zip(&traces)
+                .map(|(s, t)| SubmissionQueue::new(s.id, cfg.host.queue_depth, t))
+                .collect();
+            (specs, queues, fault_at)
+        };
         let weights: Vec<f64> = specs.iter().map(|s| s.weight).collect();
         let sched = sched::build(cfg.host.scheduler, &weights);
-        let queues: Vec<SubmissionQueue> = specs
-            .iter()
-            .zip(&traces)
-            .map(|(s, t)| SubmissionQueue::new(s.id, cfg.host.queue_depth, t))
-            .collect();
         let stats: Vec<TenantStats> = specs
             .iter()
             .map(|s: &TenantSpec| {
@@ -198,19 +233,6 @@ impl MultiTenantSimulator {
             .collect();
         let part = CachePartitioner::new(&cfg, &weights, policy.slc_capacity_pages(&ftl));
         let qos = QosGate::new(&cfg.host.qos, &weights);
-        // Fault trigger: a fraction of the arrival horizon, resolved
-        // here while the traces are fully materialized — so the same
-        // `at_frac` schedules proportionally across scenarios/scales.
-        let fault_at = if cfg.fault.kind != FaultKind::None {
-            let horizon = traces
-                .iter()
-                .flat_map(|t| t.ops.iter().map(|o| o.at))
-                .max()
-                .unwrap_or(0);
-            Some((horizon as f64 * cfg.fault.at_frac) as Nanos)
-        } else {
-            None
-        };
         Ok(MultiTenantSimulator {
             cfg,
             ftl,
@@ -278,6 +300,18 @@ impl MultiTenantSimulator {
     /// Tenant count.
     pub fn tenants(&self) -> usize {
         self.queues.len()
+    }
+    /// High-water mark of buffered trace ops across all queues. On the
+    /// streaming path this is the engine's *entire* workload residency
+    /// — no materialized `Trace` exists anywhere — so it must stay
+    /// ≤ [`Self::resident_op_bound`] (asserted by the acceptance test).
+    pub fn peak_resident_ops(&self) -> usize {
+        self.queues.iter().map(|q| q.peak_buffered()).sum()
+    }
+    /// Σ queue window capacities (queue depth × tenants): the bound
+    /// [`Self::peak_resident_ops`] may never exceed.
+    pub fn resident_op_bound(&self) -> usize {
+        self.queues.iter().map(|q| q.window_cap()).sum()
     }
 
     /// Drive every queue dry under `scenario`; returns the summary.

@@ -1,41 +1,101 @@
-//! NVMe-style per-tenant submission queue.
+//! NVMe-style per-tenant submission queue, windowed over a streaming
+//! source.
 //!
-//! A queue holds one tenant's remaining trace in arrival order. At any
+//! A queue is a bounded window (at most `depth` buffered requests)
+//! pulled on demand from an [`OpSource`] (§Streaming workloads). At any
 //! front-end time `now`, the head is *ready* when it has arrived; the
 //! `depth` bound models the NVMe submission-queue depth — the engine
-//! caps each tenant at `depth` outstanding commands, so a tenant
-//! whose window is full is skipped by the scheduler until one of its
-//! requests completes.
+//! caps each tenant at `depth` outstanding commands, so a tenant whose
+//! window is full is skipped by the scheduler until one of its
+//! requests completes. Because the engine never looks past the head,
+//! the window is also the queue's entire memory footprint: the
+//! workload behind it stays un-materialized, which is what makes
+//! per-device trace memory O(queue window) instead of O(trace).
+//!
+//! Invariants:
+//! * the window holds the next ≤ `depth` ops of the source, in arrival
+//!   order; it is non-empty unless the source is exhausted (refilled at
+//!   construction and after every `pop`);
+//! * `arrived`/`resident` track the window's arrived prefix
+//!   incrementally (satellite: no O(backlog) rescan) — valid because
+//!   the engine clock is monotone, which `resident_bytes` debug-asserts;
+//! * `peak_buffered` is the high-water window occupancy, the bound the
+//!   streaming acceptance test asserts (`≤ depth × tenants` fleet-wide).
 
 use super::TenantId;
 use crate::config::Nanos;
+use crate::trace::source::{MaterializedSource, OpSource};
 use crate::trace::{Trace, TraceOp};
 use std::collections::VecDeque;
 
-/// One tenant's submission queue.
-#[derive(Clone, Debug)]
+/// One tenant's submission queue: a bounded window over a source.
 pub struct SubmissionQueue {
     /// Owning tenant.
     pub tenant: TenantId,
-    /// Queue depth (max outstanding commands for this tenant).
+    /// Queue depth (max outstanding commands for this tenant; also the
+    /// window capacity).
     pub depth: usize,
-    ops: VecDeque<TraceOp>,
+    source: Box<dyn OpSource>,
+    window: VecDeque<TraceOp>,
+    /// Length of the window prefix known to have arrived by `frontier`.
+    arrived: usize,
+    /// Bytes in that arrived prefix (the incremental resident count).
+    resident: u64,
+    /// Latest `now` ever passed to [`resident_bytes`] (monotone).
+    frontier: Nanos,
+    peak_buffered: usize,
 }
 
 impl SubmissionQueue {
-    /// Build a queue over `trace` (ops must be arrival-sorted; [`Trace`]
-    /// generators produce them that way).
+    /// Build a queue over a materialized `trace` (ops must be
+    /// arrival-sorted; [`Trace`] generators produce them that way).
+    /// This is the oracle feed: same windowed queue, materialized
+    /// source behind it.
     pub fn new(tenant: TenantId, depth: usize, trace: &Trace) -> SubmissionQueue {
-        debug_assert!(
-            trace.ops.windows(2).all(|w| w[0].at <= w[1].at),
-            "trace must be arrival-sorted"
-        );
-        SubmissionQueue { tenant, depth: depth.max(1), ops: trace.ops.iter().copied().collect() }
+        SubmissionQueue::from_source(tenant, depth, Box::new(MaterializedSource::new(trace.clone())))
+    }
+
+    /// Build a queue windowed over any streaming `source`.
+    pub fn from_source(
+        tenant: TenantId,
+        depth: usize,
+        source: Box<dyn OpSource>,
+    ) -> SubmissionQueue {
+        let depth = depth.max(1);
+        let mut q = SubmissionQueue {
+            tenant,
+            depth,
+            source,
+            window: VecDeque::with_capacity(depth),
+            arrived: 0,
+            resident: 0,
+            frontier: 0,
+            peak_buffered: 0,
+        };
+        q.refill();
+        q
+    }
+
+    /// Top the window back up to `depth` from the source.
+    fn refill(&mut self) {
+        while self.window.len() < self.depth {
+            match self.source.next_op() {
+                Some(op) => {
+                    debug_assert!(
+                        self.window.back().is_none_or(|b| b.at <= op.at),
+                        "source must be arrival-sorted"
+                    );
+                    self.window.push_back(op);
+                }
+                None => break,
+            }
+        }
+        self.peak_buffered = self.peak_buffered.max(self.window.len());
     }
 
     /// The head request, if the queue is non-empty.
     pub fn head(&self) -> Option<&TraceOp> {
-        self.ops.front()
+        self.window.front()
     }
 
     /// Is the head request ready (arrived) at `now`?
@@ -44,19 +104,33 @@ impl SubmissionQueue {
     }
 
     /// Bytes resident in the queue window at `now` (arrived requests,
-    /// capped at `depth`) — a backlog diagnostic.
-    pub fn resident_bytes(&self, now: Nanos) -> u64 {
-        self.ops
-            .iter()
-            .take(self.depth)
-            .take_while(|op| op.at <= now)
-            .map(|op| op.len as u64)
-            .sum()
+    /// capped at `depth`) — a backlog diagnostic. Maintained
+    /// incrementally: the arrived frontier only advances, so `now` must
+    /// be monotone across calls (the engine clock is).
+    pub fn resident_bytes(&mut self, now: Nanos) -> u64 {
+        debug_assert!(now >= self.frontier, "engine time must be monotone");
+        self.frontier = self.frontier.max(now);
+        while self.arrived < self.window.len() {
+            let op = self.window[self.arrived];
+            if op.at > now {
+                break; // window is arrival-sorted: nothing later has arrived either
+            }
+            self.resident += op.len as u64;
+            self.arrived += 1;
+        }
+        self.resident
     }
 
-    /// Pop the head request.
+    /// Pop the head request and pull the window's replacement from the
+    /// source.
     pub fn pop(&mut self) -> Option<TraceOp> {
-        self.ops.pop_front()
+        let op = self.window.pop_front()?;
+        if self.arrived > 0 {
+            self.arrived -= 1;
+            self.resident -= op.len as u64;
+        }
+        self.refill();
+        Some(op)
     }
 
     /// Arrival time of the next (head) request.
@@ -64,20 +138,33 @@ impl SubmissionQueue {
         self.head().map(|op| op.at)
     }
 
-    /// Requests left.
+    /// Requests buffered in the window (≤ `depth`; the source behind it
+    /// may hold arbitrarily more).
     pub fn backlog(&self) -> usize {
-        self.ops.len()
+        self.window.len()
     }
 
-    /// Fully drained?
+    /// Fully drained? (The window is refilled eagerly, so an empty
+    /// window means the source is exhausted too.)
     pub fn is_empty(&self) -> bool {
-        self.ops.is_empty()
+        self.window.is_empty()
+    }
+
+    /// High-water mark of buffered requests (≤ `depth`).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// The window capacity (the bound `peak_buffered` must obey).
+    pub fn window_cap(&self) -> usize {
+        self.depth
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::source::SeqFillSource;
     use crate::trace::OpKind;
 
     fn q(depth: usize, ats: &[u64]) -> SubmissionQueue {
@@ -106,11 +193,46 @@ mod tests {
 
     #[test]
     fn resident_bytes_respects_depth_and_arrivals() {
-        let sq = q(2, &[0, 0, 0, 50]);
+        let mut sq = q(2, &[0, 0, 0, 50]);
         // depth caps at 2 even though 3 ops have arrived at t=0
         assert_eq!(sq.resident_bytes(0), 2 * 4096);
-        let sq = q(8, &[0, 0, 0, 50]);
+        let mut sq = q(8, &[0, 0, 0, 50]);
         assert_eq!(sq.resident_bytes(0), 3 * 4096);
         assert_eq!(sq.resident_bytes(50), 4 * 4096);
+    }
+
+    #[test]
+    fn resident_count_stays_incremental_across_pops() {
+        let mut sq = q(2, &[0, 0, 0, 50]);
+        assert_eq!(sq.resident_bytes(0), 2 * 4096);
+        // popping an arrived op both shrinks the resident set and pulls
+        // the third t=0 op into the window, where the frontier finds it
+        sq.pop();
+        assert_eq!(sq.resident_bytes(0), 2 * 4096);
+        sq.pop();
+        assert_eq!(sq.resident_bytes(10), 4096);
+        sq.pop();
+        assert_eq!(sq.resident_bytes(49), 0);
+        assert_eq!(sq.resident_bytes(50), 4096);
+    }
+
+    #[test]
+    fn window_stays_bounded_over_a_streaming_source() {
+        // 256 ops behind a depth-4 window: the queue never buffers more
+        // than 4, yet drains the whole workload in source order
+        let src = SeqFillSource::new("w", 256 * 32 * 1024, 1 << 20);
+        let mut sq = SubmissionQueue::from_source(TenantId(1), 4, Box::new(src));
+        let mut n = 0u64;
+        let mut last = 0;
+        while let Some(op) = sq.pop() {
+            assert!(op.at >= last);
+            last = op.at;
+            n += 1;
+            assert!(sq.backlog() <= 4);
+        }
+        assert_eq!(n, 256);
+        assert!(sq.is_empty());
+        assert_eq!(sq.peak_buffered(), 4);
+        assert_eq!(sq.window_cap(), 4);
     }
 }

@@ -19,6 +19,7 @@
 use super::TenantId;
 use crate::config::{Config, MixKind, Nanos};
 use crate::trace::scenario::BURSTY_WRITE_BYTES;
+use crate::trace::source::OpSource;
 use crate::trace::{OpKind, Trace, TraceOp};
 use crate::util::rng::{mix64, Rng};
 use crate::{Error, Result};
@@ -218,6 +219,272 @@ fn victim_trace(
     Trace { name, ops }
 }
 
+// --- streaming sources (§Streaming workloads) ------------------------
+//
+// Twins of `stream` / `victim_trace`, emitting the same ops one at a
+// time so `MultiTenantSimulator` never materializes a tenant trace.
+// `build_mix` stays untouched as the byte-identical oracle; the
+// lockstep property suite pins `build_mix_sources` against it for
+// every mix kind.
+
+/// Streaming twin of [`stream`]: pure arithmetic, closed-form horizon.
+pub struct StreamSource {
+    name: String,
+    region_start: u64,
+    wrap: u64,
+    req: u32,
+    t0: Nanos,
+    gap: Nanos,
+    n: u64,
+    i: u64,
+}
+
+impl StreamSource {
+    fn new(name: &str, region: Region, volume: u64, req_bytes: u32, t0: Nanos, gap: Nanos) -> StreamSource {
+        let req = (req_bytes as u64).min(region.len) as u32;
+        let n = (volume / req as u64).max(1);
+        let wrap = region.len - region.len % req as u64;
+        StreamSource {
+            name: name.to_string(),
+            region_start: region.start,
+            wrap,
+            req,
+            t0,
+            gap: gap.max(1),
+            n,
+            i: 0,
+        }
+    }
+}
+
+impl OpSource for StreamSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.i >= self.n {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        Some(TraceOp {
+            at: self.t0 + i * self.gap,
+            kind: OpKind::Write,
+            offset: self.region_start + (i * self.req as u64) % self.wrap,
+            len: self.req,
+        })
+    }
+    fn horizon(&mut self) -> Nanos {
+        self.t0 + (self.n - 1) * self.gap
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Streaming twin of [`victim_trace`]: same jittered RNG walk carried
+/// as incremental state. The horizon is resolved eagerly at
+/// construction by replaying the arrival walk with a clone of the RNG
+/// (n ≤ 5000, O(1) memory) — the op stream itself is untouched.
+pub struct VictimSource {
+    name: String,
+    rng: Rng,
+    at: Nanos,
+    i: u64,
+    n: u64,
+    req: u32,
+    wrap: u64,
+    region_start: u64,
+    write_prefix: u64,
+    victim_gap: Nanos,
+    horizon: Nanos,
+}
+
+impl VictimSource {
+    fn new(
+        cfg: &Config,
+        reg: Region,
+        tenant: usize,
+        agg_volume: u64,
+        seed: u64,
+        tail: OpKind,
+    ) -> VictimSource {
+        let h = &cfg.host;
+        let req = (h.victim_req_bytes as u64).min(reg.len) as u32;
+        let busy = busy_estimate(cfg, agg_volume).max(h.victim_gap);
+        let n = (busy / h.victim_gap).clamp(64, 5000);
+        let rng = Rng::new(mix64(seed, tenant as u64));
+        let at = (tenant as u64 * h.victim_gap) / (h.tenants as u64).max(1);
+        let write_prefix = match tail {
+            OpKind::Write => n,
+            OpKind::Read => (n / 4).max(1),
+        };
+        // arrival-walk replay: op n-1 lands after n-1 jittered steps
+        let mut probe_rng = rng.clone();
+        let mut horizon = at;
+        for _ in 1..n {
+            let jitter = 0.5 + probe_rng.f64();
+            horizon += ((h.victim_gap as f64 * jitter) as Nanos).max(1);
+        }
+        let name = match tail {
+            OpKind::Write => format!("victim-{tenant}"),
+            OpKind::Read => format!("reader-{tenant}"),
+        };
+        VictimSource {
+            name,
+            rng,
+            at,
+            i: 0,
+            n,
+            req,
+            wrap: reg.len - reg.len % req as u64,
+            region_start: reg.start,
+            write_prefix,
+            victim_gap: h.victim_gap,
+            horizon,
+        }
+    }
+}
+
+impl OpSource for VictimSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.i >= self.n {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        let kind = if i < self.write_prefix { OpKind::Write } else { OpKind::Read };
+        let idx = match kind {
+            OpKind::Write => i,
+            OpKind::Read => i % self.write_prefix,
+        };
+        let op = TraceOp {
+            at: self.at,
+            kind,
+            offset: self.region_start + (idx * self.req as u64) % self.wrap,
+            len: self.req,
+        };
+        // jittered pacing: mean `victim_gap`, never zero — drawn after
+        // every op (including the last) to mirror the materialized walk
+        let jitter = 0.5 + self.rng.f64();
+        self.at += ((self.victim_gap as f64 * jitter) as Nanos).max(1);
+        Some(op)
+    }
+    fn horizon(&mut self) -> Nanos {
+        self.horizon
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Streaming twin of [`build_mix`]: same specs, but each tenant gets a
+/// pull-based source instead of a materialized trace. Deterministic in
+/// `seed` exactly like `build_mix` — per (mix, tenant), the source's
+/// op stream is byte-identical to the oracle trace.
+pub fn build_mix_sources(
+    cfg: &Config,
+    logical_bytes: u64,
+    seed: u64,
+) -> Result<(Vec<TenantSpec>, Vec<Box<dyn OpSource>>)> {
+    let h = &cfg.host;
+    let regs = regions(cfg, logical_bytes)?;
+    let n = h.tenants as usize;
+    let cache = cfg.cache.slc_cache_bytes.max(cfg.geometry.page_bytes as u64);
+    let agg_volume = ((cache as f64) * h.aggressor_cache_mult) as u64;
+    let mut specs = Vec::with_capacity(n);
+    let mut sources: Vec<Box<dyn OpSource>> = Vec::with_capacity(n);
+
+    match h.mix {
+        MixKind::AggressorVictims => {
+            for (i, &reg) in regs.iter().enumerate() {
+                if i == 0 {
+                    specs.push(TenantSpec {
+                        id: TenantId(0),
+                        name: "aggressor".into(),
+                        weight: h.aggressor_weight,
+                    });
+                    sources.push(Box::new(StreamSource::new(
+                        "aggressor",
+                        reg,
+                        agg_volume,
+                        BURSTY_WRITE_BYTES,
+                        0,
+                        1,
+                    )));
+                } else {
+                    specs.push(TenantSpec {
+                        id: TenantId(i as u16),
+                        name: format!("victim-{i}"),
+                        weight: 1.0,
+                    });
+                    sources.push(Box::new(VictimSource::new(
+                        cfg,
+                        reg,
+                        i,
+                        agg_volume,
+                        seed,
+                        OpKind::Write,
+                    )));
+                }
+            }
+        }
+        MixKind::Uniform => {
+            let volume = (agg_volume / n as u64).max(BURSTY_WRITE_BYTES as u64);
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("tenant-{i}"),
+                    weight: 1.0,
+                });
+                let ops = volume / BURSTY_WRITE_BYTES as u64;
+                let gap = (busy_estimate(cfg, agg_volume) / ops.max(1)).max(1);
+                sources.push(Box::new(StreamSource::new(
+                    &format!("tenant-{i}"),
+                    reg,
+                    volume,
+                    BURSTY_WRITE_BYTES,
+                    i as u64,
+                    gap,
+                )));
+            }
+        }
+        MixKind::ReadHeavy => {
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("reader-{i}"),
+                    weight: 1.0,
+                });
+                sources.push(Box::new(VictimSource::new(
+                    cfg,
+                    reg,
+                    i,
+                    agg_volume,
+                    seed,
+                    OpKind::Read,
+                )));
+            }
+        }
+        MixKind::WriteHeavy => {
+            let volume = (agg_volume / n as u64).max(BURSTY_WRITE_BYTES as u64);
+            for (i, &reg) in regs.iter().enumerate() {
+                specs.push(TenantSpec {
+                    id: TenantId(i as u16),
+                    name: format!("writer-{i}"),
+                    weight: 1.0,
+                });
+                sources.push(Box::new(StreamSource::new(
+                    &format!("writer-{i}"),
+                    reg,
+                    volume,
+                    BURSTY_WRITE_BYTES,
+                    i as u64,
+                    1,
+                )));
+            }
+        }
+    }
+    Ok((specs, sources))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +565,30 @@ mod tests {
         for t in &traces {
             let reads = t.ops.iter().filter(|o| o.kind == OpKind::Read).count();
             assert!(reads * 2 > t.ops.len(), "reads dominate: {}/{}", reads, t.ops.len());
+        }
+    }
+
+    #[test]
+    fn sources_match_traces_for_every_mix() {
+        for mix in MixKind::all() {
+            let c = cfg(mix);
+            let (specs_t, traces) = build_mix(&c, LOGICAL, 7).unwrap();
+            let (specs_s, sources) = build_mix_sources(&c, LOGICAL, 7).unwrap();
+            assert_eq!(specs_t.len(), specs_s.len());
+            for ((st, ss), (trace, mut src)) in
+                specs_t.iter().zip(&specs_s).zip(traces.into_iter().zip(sources))
+            {
+                assert_eq!(st.name, ss.name, "{mix:?}: spec name");
+                assert_eq!(st.weight.to_bits(), ss.weight.to_bits(), "{mix:?}: weight");
+                let materialized_horizon =
+                    trace.ops.iter().map(|o| o.at).max().unwrap_or(0);
+                assert_eq!(src.horizon(), materialized_horizon, "{mix:?}/{}: horizon", st.name);
+                let mut got = Vec::new();
+                while let Some(op) = src.next_op() {
+                    got.push(op);
+                }
+                assert_eq!(got, trace.ops, "{mix:?}/{}: op stream diverged", st.name);
+            }
         }
     }
 

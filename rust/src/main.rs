@@ -144,6 +144,13 @@ fn cli() -> Command {
                 )
                 .opt("json", None, "FILE", "write the fleet rollup as JSON", None)
                 .opt("csv", None, "FILE", "write the fleet rollup as CSV", None)
+                .opt(
+                    "bench-out",
+                    None,
+                    "FILE",
+                    "wall-clock/peak-RSS datapoint JSON (\"none\" to skip)",
+                    Some("BENCH_PR10.json"),
+                )
                 .flag("per-device", None, "also print the per-device breakdown (CSV rows)"),
         )
         .subcommand(blk_opts(
@@ -604,6 +611,7 @@ fn cmd_multitenant(p: &ips::util::cli::Parsed) -> ips::Result<()> {
 }
 
 fn cmd_fleet(p: &ips::util::cli::Parsed) -> ips::Result<()> {
+    use ips::coordinator::perf;
     let mut opts = ExpOptions::default();
     opts.scale = p.get_u64("scale").map_err(ips::Error::config)? as u32;
     opts.seed = p.get_u64("seed").map_err(ips::Error::config)?;
@@ -663,6 +671,25 @@ fn cmd_fleet(p: &ips::util::cli::Parsed) -> ips::Result<()> {
         "streamed {} device runs (peak resident: {})",
         stats.runs, stats.peak_resident_runs
     );
+    // the rack-scale datapoint: measurements, printed (and recorded in
+    // BENCH_PR10.json) but never part of the deterministic outputs
+    let wall_s = stats.wall_clock.as_secs_f64();
+    println!(
+        "fleet wall-clock: {:.3} s ({:.1} device runs/s)",
+        wall_s,
+        if wall_s > 0.0 { stats.runs as f64 / wall_s } else { 0.0 }
+    );
+    match stats.peak_rss_kb {
+        0 => println!("peak RSS: unavailable (no procfs VmHWM)"),
+        kb => println!("peak RSS: {:.1} MiB ({kb} KiB VmHWM)", kb as f64 / 1024.0),
+    }
+    match p.get("bench-out").unwrap_or("BENCH_PR10.json") {
+        "none" => {}
+        out => {
+            std::fs::write(out, perf::fleet_stream_json(&spec, &stats))?;
+            println!("wrote {out}");
+        }
+    }
     if p.flag("per-device") {
         println!("\n== per-device breakdown ==");
         print!("{device_csv}");

@@ -27,7 +27,8 @@ use crate::flash::Lpn;
 use crate::ftl::Ftl;
 use crate::metrics::{BandwidthTimeline, BlkStats, LatencyStats, PhaseStats, RunSummary};
 use crate::trace::scenario::Scenario;
-use crate::trace::{OpKind, Trace};
+use crate::trace::source::OpSource;
+use crate::trace::{OpKind, Trace, TraceOp};
 use crate::Result;
 
 /// A configured simulator instance (one scheme over one fresh SSD).
@@ -115,6 +116,42 @@ impl Simulator {
             });
             return self.run_bios(&name, bios, scenario);
         }
+        self.run_ops(&trace.name, trace.ops.iter().copied(), scenario)
+    }
+
+    /// Replay a pull-based [`OpSource`] — the streaming twin of
+    /// [`Simulator::run`], converged on the iterator shape `run_bios`
+    /// already has: ops are consumed one at a time, so a day-scale
+    /// synthetic workload ([`crate::trace::source::SynthSource`]) holds
+    /// O(1) trace memory. Routes through the exact dispatch body `run`
+    /// uses (and through [`Simulator::run_bios`] under the block front
+    /// end), so streamed-vs-materialized equality reduces to the
+    /// sources themselves — pinned by the lockstep property suite and
+    /// the `sim.streaming_traces` differential tests.
+    pub fn run_source<S: OpSource>(&mut self, source: S, scenario: Scenario) -> Result<RunSummary> {
+        let name = source.name().to_string();
+        if self.cfg.blk.enabled {
+            let sector = self.cfg.blk.sector_bytes;
+            let fua = self.cfg.blk.fua;
+            let bios = source.ops().map(move |op| {
+                let mut b = Bio::from_op(&op, sector);
+                if fua && b.kind == BioKind::Write {
+                    b.fua = true;
+                }
+                Ok(b)
+            });
+            return self.run_bios(&name, bios, scenario);
+        }
+        self.run_ops(&name, source.ops(), scenario)
+    }
+
+    /// Shared page-front-end replay body: `run` feeds it a materialized
+    /// trace's ops, `run_source` feeds it a streaming source — both by
+    /// value through one iterator, so the two paths cannot diverge.
+    fn run_ops<I>(&mut self, name: &str, ops: I, scenario: Scenario) -> Result<RunSummary>
+    where
+        I: IntoIterator<Item = TraceOp>,
+    {
         let wall0 = std::time::Instant::now();
         let idle_threshold = self.cfg.cache.idle_threshold;
         let page = self.cfg.geometry.page_bytes as u64;
@@ -122,7 +159,7 @@ impl Simulator {
         let mut host_bytes = 0u64;
         let mut host_bytes_read = 0u64;
 
-        for op in &trace.ops {
+        for op in ops {
             let arrival = op.at;
             // idle window before this arrival?
             if scenario == Scenario::Daily {
@@ -178,7 +215,7 @@ impl Simulator {
 
         Ok(RunSummary {
             scheme: self.policy.name().to_string(),
-            workload: trace.name.clone(),
+            workload: name.to_string(),
             scenario: scenario.name().to_string(),
             seed: self.cfg.sim.seed,
             write_latency: self.write_latency.clone(),

@@ -12,6 +12,7 @@
 pub mod msr;
 pub mod profiles;
 pub mod scenario;
+pub mod source;
 pub mod synth;
 
 use crate::config::Nanos;

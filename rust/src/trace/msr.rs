@@ -19,6 +19,7 @@
 //!   [`parse`] would have put it; larger disorder is reported as an
 //!   error instead of silently emitting a time-travelling request.
 
+use super::source::OpSource;
 use super::{OpKind, Trace, TraceOp};
 use crate::blk::Bio;
 use crate::{Error, Result};
@@ -246,6 +247,62 @@ impl<R: BufRead> Iterator for MsrStream<R> {
                 None
             }
         }
+    }
+}
+
+/// [`OpSource`] adapter over an [`MsrStream`] (§Streaming workloads):
+/// the CSV replay already pulls one request at a time; this wraps its
+/// fallible items so the bounded submission-queue window and the
+/// engines can consume it like any other source. A parse error ends
+/// the stream early and is parked for [`MsrSource::take_err`] — the
+/// caller decides whether a truncated replay is acceptable.
+///
+/// `horizon()` is the **high-water arrival seen so far**: an MSR file
+/// carries no analytic span, so exact `at_frac` fault placement on a
+/// CSV replay needs a materialized pre-scan ([`parse`]) instead. The
+/// `ips replay` path schedules no faults, so the limitation is
+/// documentation, not a trap.
+pub struct MsrSource<R: BufRead + Send> {
+    name: String,
+    inner: MsrStream<R>,
+    err: Option<Error>,
+    high_water: u64,
+}
+
+impl<R: BufRead + Send> MsrSource<R> {
+    /// Wrap a stream under a workload name.
+    pub fn new(name: &str, inner: MsrStream<R>) -> MsrSource<R> {
+        MsrSource { name: name.to_string(), inner, err: None, high_water: 0 }
+    }
+
+    /// The error that ended the stream early, if any (one-shot).
+    pub fn take_err(&mut self) -> Option<Error> {
+        self.err.take()
+    }
+}
+
+impl<R: BufRead + Send> OpSource for MsrSource<R> {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.err.is_some() {
+            return None;
+        }
+        match self.inner.next() {
+            Some(Ok(op)) => {
+                self.high_water = self.high_water.max(op.at);
+                Some(op)
+            }
+            Some(Err(e)) => {
+                self.err = Some(e);
+                None
+            }
+            None => None,
+        }
+    }
+    fn horizon(&mut self) -> u64 {
+        self.high_water
+    }
+    fn name(&self) -> &str {
+        &self.name
     }
 }
 
@@ -482,6 +539,21 @@ mod tests {
         assert_eq!(n_big, 200_000);
         assert!(peak_small <= 64 && peak_big <= 64);
         assert_eq!(peak_small, peak_big, "buffer high-water mark does not grow with length");
+    }
+
+    #[test]
+    fn msr_source_matches_stream_and_tracks_high_water() {
+        let expect: Vec<_> =
+            MsrStream::new(SAMPLE.as_bytes()).collect::<Result<Vec<_>>>().unwrap();
+        let mut src = MsrSource::new("sample", MsrStream::new(SAMPLE.as_bytes()));
+        let mut got = Vec::new();
+        while let Some(op) = src.next_op() {
+            got.push(op);
+        }
+        assert_eq!(got, expect);
+        assert!(src.take_err().is_none());
+        assert_eq!(src.horizon(), expect.iter().map(|o| o.at).max().unwrap());
+        assert_eq!(src.name(), "sample");
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Pull-based streaming workload sources (§Streaming workloads).
+//!
+//! An [`OpSource`] is a deterministic, arrival-sorted iterator of
+//! [`TraceOp`]s with the same single-seed RNG discipline as the
+//! materializing generators it twins: same seed → byte-identical op
+//! sequence, but O(1) memory instead of O(trace). The bounded
+//! [`crate::host::SubmissionQueue`] window pulls from a source on
+//! `pop`, so a day-scale workload never exists as a `Vec` anywhere —
+//! the property the fleet's 1000-device peak-RSS datapoint measures.
+//!
+//! Implementations:
+//! * [`SynthSource`] — incremental-burst twin of
+//!   [`synth::generate_scaled`] (one op of state instead of a push
+//!   loop; allocation-free per op).
+//! * [`SeqFillSource`] — arithmetic twin of
+//!   [`scenario::sequential_fill`].
+//! * [`bursty_source`] — streaming twin of [`scenario::to_bursty`]:
+//!   counts the daily stream's write volume in an O(1)-memory pre-pass
+//!   instead of materializing-then-rewriting.
+//! * [`DailyStreamsSource`] — arithmetic twin of
+//!   [`scenario::daily_streams`].
+//! * [`MaterializedSource`] — wraps an existing [`Trace`] (backward
+//!   compat, and the differential oracle's feed).
+//! * `MsrSource` (in [`super::msr`]) — adapter over the constant-memory
+//!   CSV replay.
+//!
+//! The tenant-mix sources ([`crate::host::tenant::build_mix_sources`])
+//! live next to the generators they twin.
+//!
+//! **Horizon.** Engines need the workload's span without scanning a
+//! `Vec`: the fault trigger is `at_frac × horizon`. Arithmetic sources
+//! know it in closed form; RNG sources replay a fresh clone of
+//! themselves in O(1) memory and cache the answer; a materialized
+//! trace scans once at construction. The contract is exact: `horizon()`
+//! equals the maximum arrival the source will ever emit (0 if empty) —
+//! the lockstep property suite pins it against the materialized max.
+
+use super::profiles::Profile;
+use super::scenario::BURSTY_WRITE_BYTES;
+use super::synth::{self, SizeMix};
+use super::{OpKind, Trace, TraceOp};
+use crate::config::{Nanos, MS, US};
+use crate::util::rng::{Rng, Zipf};
+
+/// A pull-based, deterministic stream of trace operations.
+///
+/// Contract:
+/// * arrivals are non-decreasing in emission order (the bounded queue
+///   and both engines rely on it);
+/// * the sequence is a pure function of construction parameters
+///   (re-constructing replays byte-identically);
+/// * after the first `None`, every later call returns `None`.
+pub trait OpSource: Send {
+    /// Next operation, or `None` when the workload is exhausted.
+    fn next_op(&mut self) -> Option<TraceOp>;
+
+    /// Maximum arrival time this source will ever emit (0 if empty).
+    ///
+    /// Takes `&mut self` so RNG-driven sources can lazily replay a
+    /// fresh clone of themselves (O(1) memory) and cache the answer;
+    /// calling it does not disturb the op stream.
+    fn horizon(&mut self) -> Nanos;
+
+    /// Workload name (for summaries and reports).
+    fn name(&self) -> &str;
+
+    /// Drain into a materialized [`Trace`] — the bridge back to the
+    /// historical API, used by the lockstep tests and oracle plumbing.
+    fn collect_trace(mut self) -> Trace
+    where
+        Self: Sized,
+    {
+        let name = self.name().to_string();
+        let mut ops = Vec::new();
+        while let Some(op) = self.next_op() {
+            ops.push(op);
+        }
+        Trace { name, ops }
+    }
+
+    /// Adapt into a plain `Iterator<Item = TraceOp>` (the shape
+    /// `run_bios`-style consumers already take).
+    fn ops(self) -> OpIter<Self>
+    where
+        Self: Sized,
+    {
+        OpIter(self)
+    }
+}
+
+/// Iterator adapter over an [`OpSource`] (see [`OpSource::ops`]).
+pub struct OpIter<S: OpSource>(pub S);
+
+impl<S: OpSource> Iterator for OpIter<S> {
+    type Item = TraceOp;
+    fn next(&mut self) -> Option<TraceOp> {
+        self.0.next_op()
+    }
+}
+
+// --- materialized ----------------------------------------------------
+
+/// An already-built [`Trace`] as a source: backward compatibility for
+/// callers that hold a `Vec`, and the feed the differential oracle
+/// path uses (`sim.streaming_traces = false` differs only in *source
+/// type*, never in queue or engine code).
+pub struct MaterializedSource {
+    trace: Trace,
+    pos: usize,
+    horizon: Nanos,
+}
+
+impl MaterializedSource {
+    /// Wrap a trace. Must be arrival-sorted (all generators are).
+    pub fn new(trace: Trace) -> MaterializedSource {
+        debug_assert!(
+            trace.ops.windows(2).all(|w| w[0].at <= w[1].at),
+            "trace must be arrival-sorted"
+        );
+        // same scan the multi-tenant engine historically did to place
+        // the fault trigger
+        let horizon = trace.ops.iter().map(|o| o.at).max().unwrap_or(0);
+        MaterializedSource { trace, pos: 0, horizon }
+    }
+}
+
+impl OpSource for MaterializedSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        let op = self.trace.ops.get(self.pos).copied()?;
+        self.pos += 1;
+        Some(op)
+    }
+    fn horizon(&mut self) -> Nanos {
+        self.horizon
+    }
+    fn name(&self) -> &str {
+        &self.trace.name
+    }
+}
+
+// --- synthetic daily generator ---------------------------------------
+
+/// Streaming twin of [`synth::generate_scaled`]: the same single-seed
+/// RNG walk (burst length → per-op write/size/offset draws → gap
+/// draws, in exactly that order) carried as incremental state — one
+/// pending burst counter instead of a `Vec` push loop. Byte-identical
+/// to the materialized generator per (profile, seed, scale), pinned by
+/// the lockstep property suite.
+pub struct SynthSource {
+    profile: Profile,
+    seed: u64,
+    footprint_limit: u64,
+    volume_scale: f64,
+    // live generator state (twins of `generate_scaled`'s locals)
+    rng: Rng,
+    zipf: Zipf,
+    sizes: SizeMix,
+    target_bytes: u64,
+    ws: u64,
+    ws_pages: u64,
+    t: Nanos,
+    written: u64,
+    seq_w: u64,
+    seq_r: u64,
+    burst_left: u64,
+    done: bool,
+    horizon: Option<Nanos>,
+}
+
+impl SynthSource {
+    /// Full-volume source (twin of [`synth::generate`]).
+    pub fn new(profile: &Profile, seed: u64, footprint_limit: u64) -> SynthSource {
+        SynthSource::new_scaled(profile, seed, footprint_limit, 1.0)
+    }
+
+    /// Volume-scaled source (twin of [`synth::generate_scaled`]). The
+    /// setup mirrors the generator's prologue draw for draw: the two
+    /// `below(ws_pages)` calls seed the sequential heads.
+    pub fn new_scaled(
+        profile: &Profile,
+        seed: u64,
+        footprint_limit: u64,
+        volume_scale: f64,
+    ) -> SynthSource {
+        let mut rng = Rng::new(seed ^ synth::fxhash(profile.name));
+        let target_bytes = ((profile.total_write_bytes as f64) * volume_scale) as u64;
+        let ws_scaled = ((profile.working_set_bytes as f64) * volume_scale) as u64;
+        let ws = ws_scaled.min(footprint_limit).max(1 << 20);
+        let ws_pages = ws / 4096;
+        let zipf = Zipf::new(ws_pages.max(2), profile.update_theta);
+        let sizes = SizeMix::new(profile.size_mix);
+        let seq_w = rng.below(ws_pages) * 4096;
+        let seq_r = rng.below(ws_pages) * 4096;
+        SynthSource {
+            profile: profile.clone(),
+            seed,
+            footprint_limit,
+            volume_scale,
+            rng,
+            zipf,
+            sizes,
+            target_bytes,
+            ws,
+            ws_pages,
+            t: 0,
+            written: 0,
+            seq_w,
+            seq_r,
+            burst_left: 0,
+            done: false,
+            horizon: None,
+        }
+    }
+
+    fn page_of_rank(&self, rank: u64) -> u64 {
+        rank.wrapping_mul(0x9E3779B97F4A7C15) % self.ws_pages
+    }
+}
+
+impl OpSource for SynthSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.done {
+            return None;
+        }
+        if self.burst_left == 0 {
+            // top of the materialized `while written < target` loop
+            if self.written >= self.target_bytes {
+                self.done = true;
+                return None;
+            }
+            self.burst_left = (self.rng.exp(self.profile.burst_len_mean).ceil() as u64).max(1);
+        }
+        // one iteration of the materialized inner loop, same draw order
+        let is_write = self.rng.chance(self.profile.write_ratio);
+        let len = self.sizes.sample(&mut self.rng);
+        let offset = if is_write {
+            if self.rng.chance(self.profile.seq_prob) {
+                let o = self.seq_w;
+                self.seq_w = (self.seq_w + len as u64) % self.ws;
+                o
+            } else {
+                let rank = self.zipf.sample(&mut self.rng);
+                let o = self.page_of_rank(rank) * 4096;
+                self.seq_w = (o + len as u64) % self.ws;
+                o
+            }
+        } else if self.rng.chance(self.profile.seq_prob) {
+            let o = self.seq_r;
+            self.seq_r = (self.seq_r + len as u64) % self.ws;
+            o
+        } else {
+            self.rng.below(self.ws_pages) * 4096
+        };
+        let offset = offset.min(self.footprint_limit.saturating_sub(len as u64));
+        let op = TraceOp {
+            at: self.t,
+            kind: if is_write { OpKind::Write } else { OpKind::Read },
+            offset,
+            len,
+        };
+        self.burst_left -= 1;
+        if is_write {
+            self.written += len as u64;
+            if self.written >= self.target_bytes {
+                // the materialized loop `break`s here: this op's
+                // intra-burst gap draw is skipped, the trailing idle
+                // gap still runs (keeps the RNG walk aligned even
+                // though no later op observes it)
+                self.t += (self.rng.exp(self.profile.idle_gap_ms) * MS as f64) as Nanos;
+                self.done = true;
+                return Some(op);
+            }
+        }
+        self.t += (self.rng.exp(self.profile.intra_gap_us) * US as f64) as Nanos;
+        if self.burst_left == 0 {
+            // idle gap to the next burst
+            self.t += (self.rng.exp(self.profile.idle_gap_ms) * MS as f64) as Nanos;
+        }
+        Some(op)
+    }
+
+    fn horizon(&mut self) -> Nanos {
+        if let Some(h) = self.horizon {
+            return h;
+        }
+        // arrivals are non-decreasing, so the span is the last arrival:
+        // replay a fresh clone of this source (O(1) memory) and cache
+        let mut probe = SynthSource::new_scaled(
+            &self.profile,
+            self.seed,
+            self.footprint_limit,
+            self.volume_scale,
+        );
+        let mut h: Nanos = 0;
+        while let Some(op) = probe.next_op() {
+            h = op.at;
+        }
+        self.horizon = Some(h);
+        h
+    }
+
+    fn name(&self) -> &str {
+        self.profile.name
+    }
+}
+
+// --- scenario transforms ---------------------------------------------
+
+/// Arithmetic twin of [`scenario::sequential_fill`]: back-to-back
+/// 32 KiB sequential writes, arrivals 1 ns apart, wrapping at the
+/// footprint. Closed-form horizon.
+pub struct SeqFillSource {
+    name: String,
+    n: u64,
+    i: u64,
+    wrap: u64,
+}
+
+impl SeqFillSource {
+    /// `total_bytes` of sequential 32 KiB writes wrapping at
+    /// `footprint_limit` (same arithmetic as `sequential_fill`).
+    pub fn new(name: &str, total_bytes: u64, footprint_limit: u64) -> SeqFillSource {
+        let n = total_bytes / BURSTY_WRITE_BYTES as u64;
+        let wrap = footprint_limit.max(BURSTY_WRITE_BYTES as u64);
+        let wrap = wrap - wrap % BURSTY_WRITE_BYTES as u64;
+        SeqFillSource { name: name.to_string(), n, i: 0, wrap }
+    }
+}
+
+impl OpSource for SeqFillSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.i >= self.n {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        Some(TraceOp {
+            at: i, // 1 ns apart: ordered, but never idle
+            kind: OpKind::Write,
+            offset: (i * BURSTY_WRITE_BYTES as u64) % self.wrap,
+            len: BURSTY_WRITE_BYTES,
+        })
+    }
+    fn horizon(&mut self) -> Nanos {
+        self.n.saturating_sub(1)
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Streaming twin of [`scenario::to_bursty`]: the bursty rewrite is a
+/// pure function of the daily stream's total write volume, so instead
+/// of materializing the daily trace and rewriting it, drain the daily
+/// *source* in an O(1)-memory counting pre-pass and emit the same
+/// `"{name}(bursty)"` sequential fill.
+pub fn bursty_source<S: OpSource>(mut daily: S, footprint_limit: u64) -> SeqFillSource {
+    let name = format!("{}(bursty)", daily.name());
+    let mut total = 0u64;
+    while let Some(op) = daily.next_op() {
+        if op.kind == OpKind::Write {
+            total += op.len as u64;
+        }
+    }
+    SeqFillSource::new(&name, total, footprint_limit)
+}
+
+/// Arithmetic twin of [`scenario::daily_streams`] (the Fig. 4
+/// motivation workload): `streams` dense write streams separated by
+/// `idle_gap`, rolling offset, closed-form horizon.
+pub struct DailyStreamsSource {
+    name: String,
+    streams: u64,
+    per_stream: u64,
+    idle_gap: Nanos,
+    wrap: u64,
+    s: u64,
+    i: u64,
+    offset: u64,
+}
+
+impl DailyStreamsSource {
+    /// Same parameters and arithmetic as `daily_streams`.
+    pub fn new(
+        streams: u32,
+        stream_bytes: u64,
+        idle_gap: Nanos,
+        footprint_limit: u64,
+    ) -> DailyStreamsSource {
+        let per_stream = stream_bytes / BURSTY_WRITE_BYTES as u64;
+        let wrap = footprint_limit.max(BURSTY_WRITE_BYTES as u64);
+        let wrap = wrap - wrap % BURSTY_WRITE_BYTES as u64;
+        DailyStreamsSource {
+            name: format!("streams{streams}x{}", stream_bytes >> 30),
+            streams: streams as u64,
+            per_stream,
+            idle_gap,
+            wrap,
+            s: 0,
+            i: 0,
+            offset: 0,
+        }
+    }
+}
+
+impl OpSource for DailyStreamsSource {
+    fn next_op(&mut self) -> Option<TraceOp> {
+        if self.per_stream == 0 || self.s >= self.streams {
+            return None;
+        }
+        let stream_start = self.s * self.idle_gap + self.s * self.per_stream;
+        let op = TraceOp {
+            at: stream_start + self.i,
+            kind: OpKind::Write,
+            offset: self.offset,
+            len: BURSTY_WRITE_BYTES,
+        };
+        self.offset = (self.offset + BURSTY_WRITE_BYTES as u64) % self.wrap;
+        self.i += 1;
+        if self.i == self.per_stream {
+            self.i = 0;
+            self.s += 1;
+        }
+        Some(op)
+    }
+    fn horizon(&mut self) -> Nanos {
+        if self.per_stream == 0 || self.streams == 0 {
+            return 0;
+        }
+        let s = self.streams - 1;
+        s * self.idle_gap + s * self.per_stream + (self.per_stream - 1)
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SEC;
+    use crate::trace::{profiles, scenario};
+
+    fn assert_lockstep(streamed: Trace, materialized: Trace, label: &str) {
+        assert_eq!(streamed.name, materialized.name, "{label}: name");
+        assert_eq!(streamed.ops.len(), materialized.ops.len(), "{label}: op count");
+        for (i, (a, b)) in streamed.ops.iter().zip(&materialized.ops).enumerate() {
+            assert_eq!(a, b, "{label}: op {i} diverged");
+        }
+    }
+
+    #[test]
+    fn synth_source_matches_generate_scaled() {
+        let p = profiles::by_name("HM_0").unwrap();
+        let mut src = SynthSource::new_scaled(p, 7, 1 << 30, 0.002);
+        let h = src.horizon();
+        let streamed = src.collect_trace();
+        let materialized = synth::generate_scaled(p, 7, 1 << 30, 0.002);
+        assert!(!streamed.ops.is_empty());
+        assert_eq!(h, materialized.ops.iter().map(|o| o.at).max().unwrap());
+        assert_lockstep(streamed, materialized, "HM_0");
+    }
+
+    #[test]
+    fn synth_source_arrivals_non_decreasing() {
+        let p = profiles::by_name("PRXY_0").unwrap();
+        let mut src = SynthSource::new_scaled(p, 3, 1 << 28, 0.001);
+        let mut last = 0;
+        while let Some(op) = src.next_op() {
+            assert!(op.at >= last, "arrivals must be sorted");
+            last = op.at;
+        }
+        assert!(src.next_op().is_none(), "fused after exhaustion");
+    }
+
+    #[test]
+    fn seq_fill_source_matches_sequential_fill() {
+        let mut src = SeqFillSource::new("x", 1 << 20, 256 << 10);
+        assert_eq!(src.horizon(), (1 << 20) / 32768 - 1);
+        let t = scenario::sequential_fill("x", 1 << 20, 256 << 10);
+        assert_lockstep(src.collect_trace(), t, "seq-fill");
+    }
+
+    #[test]
+    fn bursty_source_matches_to_bursty() {
+        let p = profiles::by_name("USR_0").unwrap();
+        let daily = synth::generate_scaled(p, 11, 1 << 28, 0.001);
+        let expect = scenario::to_bursty(&daily, 1 << 26);
+        let src = bursty_source(SynthSource::new_scaled(p, 11, 1 << 28, 0.001), 1 << 26);
+        assert_lockstep(src.collect_trace(), expect, "bursty");
+    }
+
+    #[test]
+    fn daily_streams_source_matches_daily_streams() {
+        let mut src = DailyStreamsSource::new(5, 1 << 20, 600 * SEC, 1 << 30);
+        let t = scenario::daily_streams(5, 1 << 20, 600 * SEC, 1 << 30);
+        assert_eq!(src.horizon(), t.ops.iter().map(|o| o.at).max().unwrap());
+        assert_lockstep(src.collect_trace(), t, "daily-streams");
+    }
+
+    #[test]
+    fn materialized_source_round_trips() {
+        let t = scenario::sequential_fill("rt", 1 << 19, 1 << 20);
+        let mut src = MaterializedSource::new(t.clone());
+        assert_eq!(src.horizon(), t.ops.last().unwrap().at);
+        assert_lockstep(src.collect_trace(), t, "materialized");
+    }
+
+    #[test]
+    fn empty_sources_have_zero_horizon() {
+        let mut m = MaterializedSource::new(Trace { name: "e".into(), ops: vec![] });
+        assert_eq!(m.horizon(), 0);
+        assert!(m.next_op().is_none());
+        let mut s = SeqFillSource::new("e", 0, 1 << 20);
+        assert_eq!(s.horizon(), 0);
+        assert!(s.next_op().is_none());
+    }
+}

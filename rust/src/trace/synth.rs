@@ -14,6 +14,46 @@ use crate::blk::{Bio, Segment};
 use crate::config::{Nanos, MS, US};
 use crate::util::rng::{Rng, Zipf};
 
+/// Request-size sampler precomputed once per trace/source.
+///
+/// The generator's inner loop used to rebuild a `weights: Vec<f64>`
+/// from `profile.size_mix` for *every request* just to call
+/// [`Rng::weighted`]. This table hoists the weights (they are
+/// `'static`) and their sum out of the loop, making the draw
+/// allocation-free — which is also what lets the streaming
+/// [`super::source::SynthSource`] emit ops with zero steady-state
+/// allocations (pinned by `tests/alloc_synth_steady.rs`).
+///
+/// Sampling deliberately replicates `Rng::weighted`'s subtraction scan
+/// (same operations, same float order) rather than comparing against a
+/// true cumulative-sum table: prefix sums round differently, and the
+/// draw must stay bit-identical to the historical per-op path.
+#[derive(Clone, Debug)]
+pub struct SizeMix {
+    mix: &'static [(u32, f64)],
+    total: f64,
+}
+
+impl SizeMix {
+    /// Build the table from a profile's size mix.
+    pub fn new(mix: &'static [(u32, f64)]) -> SizeMix {
+        SizeMix { mix, total: mix.iter().map(|(_, w)| *w).sum() }
+    }
+
+    /// Draw one request size. Consumes exactly one `rng.f64()`, like
+    /// the `Rng::weighted` call it replaces.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let mut x = rng.f64() * self.total;
+        for &(len, w) in self.mix {
+            if x < w {
+                return len;
+            }
+            x -= w;
+        }
+        self.mix[self.mix.len() - 1].0
+    }
+}
+
 /// Generate a daily-use trace for `profile`, targeting its
 /// `total_write_bytes`. `footprint_limit` bounds offsets (the logical
 /// device size); pass `u64::MAX` for unbounded.
@@ -38,6 +78,7 @@ pub fn generate_scaled(
     let ws = ws_scaled.min(footprint_limit).max(1 << 20);
     let ws_pages = ws / 4096;
     let zipf = Zipf::new(ws_pages.max(2), profile.update_theta);
+    let sizes = SizeMix::new(profile.size_mix);
     // scatter the hot ranks around the working set deterministically
     let page_of_rank = |rank: u64| -> u64 { rank.wrapping_mul(0x9E3779B97F4A7C15) % ws_pages };
 
@@ -51,10 +92,7 @@ pub fn generate_scaled(
         let burst_len = (rng.exp(profile.burst_len_mean).ceil() as u64).max(1);
         for _ in 0..burst_len {
             let is_write = rng.chance(profile.write_ratio);
-            let len = {
-                let weights: Vec<f64> = profile.size_mix.iter().map(|(_, w)| *w).collect();
-                profile.size_mix[rng.weighted(&weights)].0
-            };
+            let len = sizes.sample(&mut rng);
             let offset = if is_write {
                 if rng.chance(profile.seq_prob) {
                     let o = seq_w;
@@ -214,7 +252,11 @@ pub fn bio_burst_storm(
     out
 }
 
-fn fxhash(s: &str) -> u64 {
+/// FNV-1a of a workload name — folded into the seed so every named
+/// stream draws from an independent deterministic sequence. Shared
+/// with the streaming [`super::source::SynthSource`], which must mix
+/// its seed identically to stay byte-equal to [`generate_scaled`].
+pub(crate) fn fxhash(s: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in s.bytes() {
         h ^= b as u64;

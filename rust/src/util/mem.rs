@@ -1,0 +1,38 @@
+//! Process memory introspection (hand-rolled, Linux procfs).
+//!
+//! The fleet's rack-scale datapoint pairs wall clock with peak
+//! resident set: `VmHWM` from `/proc/self/status` is the kernel's
+//! high-water RSS for this process, which on the streaming path is
+//! dominated by the simulators themselves rather than materialized
+//! trace vectors. Like wall clock, it is a *measurement* — `ips fleet`
+//! prints it and `BENCH_PR10.json` records it, and it is deliberately
+//! excluded from every deterministic table/JSON/CSV output the golden
+//! gates compare.
+
+/// Peak resident-set size of this process in KiB (`VmHWM`), or `None`
+/// off Linux or when procfs is unavailable.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_reports_on_linux() {
+        if cfg!(target_os = "linux") {
+            let kb = peak_rss_kb().expect("VmHWM in /proc/self/status");
+            assert!(kb > 0, "a running process has resident memory");
+        } else {
+            // elsewhere the probe degrades to None, never panics
+            let _ = peak_rss_kb();
+        }
+    }
+}

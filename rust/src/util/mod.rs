@@ -21,12 +21,15 @@
 //!   CI job (bootstraps missing snapshots, `IPS_GOLDEN_UPDATE=1` to
 //!   bless intentional changes).
 //! * [`logging`] — leveled stderr logger honouring `IPS_LOG`.
+//! * [`mem`] — hand-rolled `/proc/self/status` peak-RSS probe for the
+//!   fleet's wall-clock/peak-RSS datapoint.
 
 pub mod bench;
 pub mod cli;
 pub mod fmt;
 pub mod golden;
 pub mod logging;
+pub mod mem;
 pub mod prop;
 pub mod rng;
 pub mod toml;

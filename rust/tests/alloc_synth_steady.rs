@@ -1,0 +1,85 @@
+//! Counting-allocator assertion for the streaming workload path
+//! (§Streaming workloads): once a [`SynthSource`] and its bounded
+//! [`SubmissionQueue`] window are constructed, the steady-state
+//! generate → buffer → pop loop performs **zero** heap allocations.
+//! This pins both satellites at once: the per-op `weights: Vec<f64>`
+//! churn the hoisted `SizeMix` table removed, and the zero-allocation
+//! refill discipline of the windowed queue.
+//!
+//! The file holds a single test: the counter is a process-global and
+//! parallel sibling tests would pollute the delta.
+
+use ips::host::{SubmissionQueue, TenantId};
+use ips::trace::source::{OpSource, SynthSource};
+use ips::trace::{profiles, synth};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Allocation-counting wrapper around the system allocator.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+#[test]
+fn steady_state_streaming_allocates_nothing() {
+    let p = &profiles::ALL[0];
+    let limit = 1u64 << 30;
+
+    // --- bare source: op generation itself is allocation-free --------
+    let mut src = SynthSource::new_scaled(p, 42, limit, 2e-3);
+    for _ in 0..64 {
+        // warmup: crosses at least one burst boundary
+        std::hint::black_box(src.next_op());
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..2000 {
+        let op = src.next_op().expect("source drained during steady state");
+        std::hint::black_box(op);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "steady-state next_op allocated {delta} times");
+
+    // --- windowed queue: refill + pop + resident count, still zero ---
+    let src = SynthSource::new_scaled(p, 43, limit, 2e-3);
+    let mut q = SubmissionQueue::from_source(TenantId(0), 8, Box::new(src));
+    for _ in 0..32 {
+        q.pop();
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..2000 {
+        let now = q.next_arrival().expect("queue drained during steady state");
+        std::hint::black_box(q.resident_bytes(now));
+        std::hint::black_box(q.pop());
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "steady-state queue loop allocated {delta} times");
+
+    // --- the materializing oracle really does churn — counter works --
+    let before = ALLOCS.load(Ordering::SeqCst);
+    std::hint::black_box(synth::generate_scaled(p, 42, limit, 1e-4));
+    assert!(
+        ALLOCS.load(Ordering::SeqCst) > before,
+        "generate_scaled should materialize a trace; did the counter break?"
+    );
+}

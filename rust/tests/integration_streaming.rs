@@ -1,0 +1,218 @@
+//! Differential guarantee for the streaming workload path
+//! (§Streaming workloads): with `sim.streaming_traces` on vs off,
+//! every scheme must produce **byte identical** summaries — ledger
+//! counters, latency statistics, WA, simulated end time, fault
+//! outcome — on bursty and daily scenarios, single- and multi-tenant,
+//! with fault injection armed so the `at_frac` trigger computed from
+//! the sources' analytic horizons lands on the same nanosecond as the
+//! historical materialized-trace scan. Streaming is a pure
+//! generation/queueing change; any divergence is a bug.
+//!
+//! The file also pins the tentpole's memory claim: on the streaming
+//! path no materialized trace ever exists, so the peak number of ops
+//! resident in the host at once is bounded by queue window × tenants
+//! even when the workload is orders of magnitude larger.
+
+use ips::config::{presets, Config, FaultKind, MixKind, SchedKind, Scheme, MS};
+use ips::host::{MultiTenantSimulator, MultiTenantSummary};
+use ips::metrics::RunSummary;
+use ips::sim::Simulator;
+use ips::trace::scenario::{self, Scenario};
+use ips::trace::source::{bursty_source, SynthSource};
+use ips::trace::{profiles, synth};
+
+// --- single-tenant: Simulator::run vs Simulator::run_source ---------
+
+fn single_cfg(scheme: Scheme) -> Config {
+    let mut c = presets::small();
+    c.cache.scheme = scheme;
+    c.cache.slc_cache_bytes = 1 << 20;
+    c.cache.idle_threshold = 10 * MS;
+    c.sim.verify = true;
+    c.sim.latency_samples = 4096;
+    c
+}
+
+fn assert_summaries_match(a: &RunSummary, b: &RunSummary, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.write_latency.count(), b.write_latency.count(), "{label}: write count");
+    assert_eq!(
+        a.write_latency.mean().to_bits(),
+        b.write_latency.mean().to_bits(),
+        "{label}: mean write latency"
+    );
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            a.write_latency.percentile(q),
+            b.write_latency.percentile(q),
+            "{label}: p{q} write latency"
+        );
+    }
+    assert_eq!(a.write_latency.raw_us(), b.write_latency.raw_us(), "{label}: raw samples");
+    assert_eq!(a.read_latency.count(), b.read_latency.count(), "{label}: read count");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA");
+}
+
+/// Daily: a materialized synthetic day replayed with `run` vs the
+/// never-materialized `SynthSource` fed straight into `run_source`.
+#[test]
+fn five_schemes_daily_run_source_identical() {
+    let p = &profiles::ALL[0];
+    for scheme in Scheme::all() {
+        let mut a = Simulator::new(single_cfg(scheme)).unwrap();
+        let trace = synth::generate_scaled(p, 7, a.logical_bytes(), 4e-3);
+        let oracle = a.run(&trace, Scenario::Daily).unwrap();
+
+        let mut b = Simulator::new(single_cfg(scheme)).unwrap();
+        let src = SynthSource::new_scaled(p, 7, b.logical_bytes(), 4e-3);
+        let streamed = b.run_source(src, Scenario::Daily).unwrap();
+
+        assert_summaries_match(&streamed, &oracle, &format!("{scheme:?}/daily"));
+    }
+}
+
+/// Bursty: materialize-then-`to_bursty` vs the streaming bursty
+/// rewrite (`bursty_source`'s O(1)-memory counting pre-pass).
+#[test]
+fn five_schemes_bursty_run_source_identical() {
+    let p = &profiles::ALL[1];
+    for scheme in Scheme::all() {
+        let mut a = Simulator::new(single_cfg(scheme)).unwrap();
+        let daily = synth::generate_scaled(p, 11, a.logical_bytes(), 4e-3);
+        let trace = scenario::to_bursty(&daily, a.logical_bytes());
+        let oracle = a.run(&trace, Scenario::Bursty).unwrap();
+
+        let mut b = Simulator::new(single_cfg(scheme)).unwrap();
+        let limit = b.logical_bytes();
+        let src = bursty_source(SynthSource::new_scaled(p, 11, limit, 4e-3), limit);
+        let streamed = b.run_source(src, Scenario::Bursty).unwrap();
+
+        assert_summaries_match(&streamed, &oracle, &format!("{scheme:?}/bursty"));
+    }
+}
+
+// --- multi-tenant: sim.streaming_traces on vs off -------------------
+
+fn mt_cfg(scheme: Scheme, fault: FaultKind, streaming: bool) -> Config {
+    let mut cfg = presets::small();
+    cfg.cache.scheme = scheme;
+    cfg.cache.slc_cache_bytes = 1 << 20;
+    cfg.cache.idle_threshold = MS;
+    cfg.host.tenants = 3;
+    cfg.host.scheduler = SchedKind::RoundRobin;
+    cfg.host.mix = MixKind::AggressorVictims;
+    // arm the fault so the trigger time — at_frac × workload horizon —
+    // must agree between the streamed sources' analytic horizons and
+    // the oracle's scan of the materialized traces
+    cfg.fault.kind = fault;
+    cfg.fault.at_frac = 0.5;
+    cfg.sim.verify = true;
+    cfg.sim.latency_samples = 100_000;
+    cfg.sim.streaming_traces = streaming;
+    cfg
+}
+
+fn assert_mt_match(a: &MultiTenantSummary, b: &MultiTenantSummary, label: &str) {
+    assert_eq!(a.fault, b.fault, "{label}: fault outcome diverged");
+    assert_eq!(a.ledger, b.ledger, "{label}: device ledger diverged");
+    assert_eq!(a.background, b.background, "{label}: background ledger diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{label}: simulated end diverged");
+    assert_eq!(a.host_bytes_written, b.host_bytes_written, "{label}: volume diverged");
+    assert_eq!(a.wa().to_bits(), b.wa().to_bits(), "{label}: WA diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.ledger, y.ledger, "{label}/{}: tenant ledger", x.name);
+        assert_eq!(
+            x.write_latency.count(),
+            y.write_latency.count(),
+            "{label}/{}: write count",
+            x.name
+        );
+        assert_eq!(
+            x.read_latency.count(),
+            y.read_latency.count(),
+            "{label}/{}: read count",
+            x.name
+        );
+        assert_eq!(x.p99_write_latency(), y.p99_write_latency(), "{label}/{}: p99", x.name);
+        assert_eq!(
+            x.migrated_pages_owned, y.migrated_pages_owned,
+            "{label}/{}: owned moves",
+            x.name
+        );
+    }
+}
+
+/// Five schemes × both scenarios, plane-loss armed at half the
+/// horizon: streaming on vs off must be byte identical, fault timing
+/// included. Daily exercises the idle-window reclamation path (idle
+/// gaps come from the bounded queues' `next_arrival`, not a
+/// materialized trace scan).
+#[test]
+fn multi_tenant_streaming_identical_with_plane_loss() {
+    for scen in [Scenario::Bursty, Scenario::Daily] {
+        for scheme in Scheme::all() {
+            let a =
+                MultiTenantSimulator::run_once(mt_cfg(scheme, FaultKind::PlaneLoss, true), scen)
+                    .unwrap();
+            let b =
+                MultiTenantSimulator::run_once(mt_cfg(scheme, FaultKind::PlaneLoss, false), scen)
+                    .unwrap();
+            assert_mt_match(&a, &b, &format!("{scheme:?}/{scen:?}/plane-loss"));
+        }
+    }
+}
+
+/// The other fault flavour — a latency slowdown whose onset is also
+/// horizon-derived — plus the healthy no-fault case.
+#[test]
+fn multi_tenant_streaming_identical_slowdown_and_healthy() {
+    for fault in [FaultKind::Slowdown, FaultKind::None] {
+        let a = MultiTenantSimulator::run_once(
+            mt_cfg(Scheme::Ips, fault, true),
+            Scenario::Bursty,
+        )
+        .unwrap();
+        let b = MultiTenantSimulator::run_once(
+            mt_cfg(Scheme::Ips, fault, false),
+            Scenario::Bursty,
+        )
+        .unwrap();
+        assert_mt_match(&a, &b, &format!("ips/bursty/{fault:?}"));
+    }
+}
+
+// --- bounded residency (the tentpole's acceptance bar) --------------
+
+/// On the streaming path the host never holds a materialized trace:
+/// the peak number of ops buffered at once stays within queue window ×
+/// tenants even though the workload itself is hundreds of times
+/// larger.
+#[test]
+fn streaming_peak_resident_ops_is_window_bounded() {
+    let mut cfg = mt_cfg(Scheme::Ips, FaultKind::None, true);
+    cfg.host.queue_depth = 8;
+    cfg.cache.slc_cache_bytes = 4 << 20;
+    cfg.host.aggressor_cache_mult = 4.0; // aggressor alone issues >> 8×3 ops
+    let mut sim = MultiTenantSimulator::new(cfg).unwrap();
+    let summary = sim.run(Scenario::Bursty).unwrap();
+
+    let bound = sim.resident_op_bound();
+    assert_eq!(bound, 8 * 3, "window bound should be depth × tenants");
+    assert!(
+        sim.peak_resident_ops() <= bound,
+        "peak resident ops {} exceeded the window bound {bound}",
+        sim.peak_resident_ops()
+    );
+    let total_requests: u64 = summary
+        .tenants
+        .iter()
+        .map(|t| t.write_latency.count() + t.read_latency.count())
+        .sum();
+    assert!(
+        total_requests > 4 * bound as u64,
+        "workload too small to make the bound meaningful ({total_requests} requests)"
+    );
+}

@@ -1,0 +1,221 @@
+//! Lockstep property suite for the streaming workload sources
+//! (§Streaming workloads): every [`OpSource`] must emit the **byte
+//! identical** op sequence its historical materializing generator
+//! produces — same count, same `TraceOp`s, same order — and report a
+//! `horizon()` equal to the materialized maximum arrival, across
+//! profiles × seeds × scales (with shrinking), tenant mixes, and the
+//! bursty rewrite. The bounded submission-queue window is pinned
+//! against a straightforward O(backlog) recomputation of
+//! `resident_bytes` so the incremental count cannot drift.
+
+use ips::config::{presets, MixKind, Nanos};
+use ips::host::{tenant, SubmissionQueue, TenantId};
+use ips::trace::source::{bursty_source, MaterializedSource, OpSource, SynthSource};
+use ips::trace::{profiles, scenario, synth, OpKind, Trace, TraceOp};
+use ips::util::prop;
+
+fn drain<S: OpSource>(mut src: S) -> (Vec<TraceOp>, Nanos) {
+    let h = src.horizon();
+    let mut ops = Vec::new();
+    while let Some(op) = src.next_op() {
+        ops.push(op);
+    }
+    (ops, h)
+}
+
+fn max_at(ops: &[TraceOp]) -> Nanos {
+    ops.iter().map(|o| o.at).max().unwrap_or(0)
+}
+
+fn lockstep(streamed: &[TraceOp], materialized: &[TraceOp]) -> Result<(), String> {
+    if streamed.len() != materialized.len() {
+        return Err(format!(
+            "op count diverged: streamed {} vs materialized {}",
+            streamed.len(),
+            materialized.len()
+        ));
+    }
+    for (i, (a, b)) in streamed.iter().zip(materialized).enumerate() {
+        if a != b {
+            return Err(format!("op {i} diverged: streamed {a:?} vs materialized {b:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// `SynthSource` vs `generate_scaled`: same ops, same horizon, for
+/// every profile at random seeds and volume scales.
+#[test]
+fn synth_source_lockstep_across_profiles_seeds_scales() {
+    let profile_idx = prop::one_of((0..profiles::ALL.len()).collect());
+    let seeds = prop::u64_up_to(u64::MAX - 1);
+    // small volume fractions keep each case fast; the shape of the RNG
+    // walk (burst loop, break-on-target, gap draws) is scale-invariant
+    let scales = prop::one_of(vec![5e-4, 1e-3, 2e-3]);
+    prop::check(
+        "synth source lockstep",
+        24,
+        prop::tuple2(prop::tuple2(profile_idx, seeds), scales),
+        |&((pi, seed), scale)| {
+            let p = &profiles::ALL[pi];
+            let limit = 1u64 << 30;
+            let (streamed, horizon) = drain(SynthSource::new_scaled(p, seed, limit, scale));
+            let t = synth::generate_scaled(p, seed, limit, scale);
+            lockstep(&streamed, &t.ops)?;
+            if horizon != max_at(&t.ops) {
+                return Err(format!(
+                    "horizon {horizon} != materialized max arrival {}",
+                    max_at(&t.ops)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The streaming bursty rewrite vs materialize-then-`to_bursty`.
+#[test]
+fn bursty_source_lockstep() {
+    let profile_idx = prop::one_of((0..profiles::ALL.len()).collect());
+    prop::check(
+        "bursty rewrite lockstep",
+        12,
+        prop::tuple2(profile_idx, prop::u64_up_to(1 << 40)),
+        |&(pi, seed)| {
+            let p = &profiles::ALL[pi];
+            let daily = synth::generate_scaled(p, seed, 1 << 28, 1e-3);
+            let expect = scenario::to_bursty(&daily, 1 << 26);
+            let src = bursty_source(SynthSource::new_scaled(p, seed, 1 << 28, 1e-3), 1 << 26);
+            let (streamed, horizon) = drain(src);
+            lockstep(&streamed, &expect.ops)?;
+            if horizon != max_at(&expect.ops) {
+                return Err(format!("bursty horizon {horizon} diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `build_mix_sources` vs `build_mix`: per mix × tenant count × seed,
+/// every tenant's source streams its oracle trace byte for byte and
+/// knows the same horizon.
+#[test]
+fn tenant_mix_sources_lockstep() {
+    let mixes = prop::one_of(MixKind::all().to_vec());
+    let tenants = prop::usize_in(1, 6);
+    prop::check(
+        "tenant mix sources lockstep",
+        24,
+        prop::tuple2(prop::tuple2(mixes, tenants), prop::u64_up_to(1 << 40)),
+        |&((mix, n), seed)| {
+            let mut cfg = presets::small();
+            cfg.host.mix = mix;
+            cfg.host.tenants = n as u32;
+            let logical = 48u64 << 20;
+            let (specs_t, traces) =
+                tenant::build_mix(&cfg, logical, seed).map_err(|e| e.to_string())?;
+            let (specs_s, sources) =
+                tenant::build_mix_sources(&cfg, logical, seed).map_err(|e| e.to_string())?;
+            if specs_t.len() != specs_s.len() {
+                return Err("spec count diverged".into());
+            }
+            for ((st, ss), (trace, mut src)) in
+                specs_t.iter().zip(&specs_s).zip(traces.into_iter().zip(sources))
+            {
+                if st.name != ss.name || st.weight.to_bits() != ss.weight.to_bits() {
+                    return Err(format!("{mix:?}: spec {} diverged", st.name));
+                }
+                let h = src.horizon();
+                let mut got = Vec::new();
+                while let Some(op) = src.next_op() {
+                    got.push(op);
+                }
+                lockstep(&got, &trace.ops).map_err(|e| format!("{mix:?}/{}: {e}", st.name))?;
+                if h != max_at(&trace.ops) {
+                    return Err(format!("{mix:?}/{}: horizon {h} diverged", st.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The bounded queue window drains any source in exact order, never
+/// buffers more than `depth`, and its incremental `resident_bytes`
+/// matches a from-scratch O(backlog) recomputation at every probe —
+/// the satellite's no-rescan count can't drift from the old semantics.
+#[test]
+fn queue_window_resident_bytes_matches_scan_oracle() {
+    // arrival gaps (ns) build an arrival-sorted trace; depth varies
+    let gaps = prop::vec_of(prop::u64_up_to(300), 1, 64);
+    let depths = prop::usize_in(1, 12);
+    prop::check(
+        "queue resident-bytes oracle",
+        48,
+        prop::tuple2(gaps, depths),
+        |(gaps, depth)| {
+            let depth = *depth;
+            let mut at = 0u64;
+            let ops: Vec<TraceOp> = gaps
+                .iter()
+                .enumerate()
+                .map(|(i, &g)| {
+                    at += g;
+                    TraceOp {
+                        at,
+                        kind: OpKind::Write,
+                        offset: (i as u64) * 4096,
+                        len: 4096 * (1 + (i as u32 % 3)),
+                    }
+                })
+                .collect();
+            let trace = Trace { name: "prop".into(), ops: ops.clone() };
+            let mut q = SubmissionQueue::from_source(
+                TenantId(0),
+                depth,
+                Box::new(MaterializedSource::new(trace)),
+            );
+            // replay: walk time forward, popping ready heads, probing
+            // the incremental count against the historical scan of the
+            // *remaining* op list at every step
+            let mut remaining: std::collections::VecDeque<TraceOp> = ops.into();
+            let mut now = 0u64;
+            let mut popped = 0usize;
+            loop {
+                let scan: u64 = remaining
+                    .iter()
+                    .take(depth)
+                    .take_while(|op| op.at <= now)
+                    .map(|op| op.len as u64)
+                    .sum();
+                let inc = q.resident_bytes(now);
+                if inc != scan {
+                    return Err(format!(
+                        "resident_bytes diverged at now={now} (popped {popped}): \
+                         incremental {inc} vs scan {scan}"
+                    ));
+                }
+                if q.backlog() > depth.max(1) {
+                    return Err(format!("window exceeded depth: {}", q.backlog()));
+                }
+                if q.head_ready(now) {
+                    let op = q.pop().ok_or("ready head missing")?;
+                    let expect = remaining.pop_front().ok_or("oracle drained early")?;
+                    if op != expect {
+                        return Err(format!("pop order diverged: {op:?} vs {expect:?}"));
+                    }
+                    popped += 1;
+                } else {
+                    match q.next_arrival() {
+                        Some(next) => now = now.max(next),
+                        None => break,
+                    }
+                }
+            }
+            if !remaining.is_empty() {
+                return Err("queue drained before the oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
